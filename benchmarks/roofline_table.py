@@ -1,0 +1,88 @@
+"""Generate the §Dry-run / §Roofline markdown tables from runs/dryrun JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--dir runs/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def fmt(x, nd=2):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) >= 1000 or abs(x) < 0.01:
+            return f"{x:.{nd}e}"
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def load(dir_):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        rl = r.get("roofline", {})
+        t = rl.get("terms_s", {})
+        coll = rl.get("collective_bytes", {})
+        if r.get("skipped"):
+            rows.append(
+                (r["arch"], r["shape"], "SKIP", "-", "-", "-", "-", "-", "-",
+                 r.get("note", "")[:60])
+            )
+            continue
+        if not r.get("ok"):
+            rows.append(
+                (r["arch"], r["shape"], "FAIL", "-", "-", "-", "-", "-", "-",
+                 r.get("error", "")[:60])
+            )
+            continue
+        rows.append((
+            r["arch"], r["shape"], r.get("step", ""),
+            fmt(t.get("compute")), fmt(t.get("memory")), fmt(t.get("collective")),
+            rl.get("dominant", "-"),
+            fmt(rl.get("useful_flops_ratio")),
+            fmt((r.get("bytes_per_device") or 0) / 1e9, 1) + "GB"
+            + ("" if r.get("fits_hbm") else "(!)"),
+            r.get("note", "")[:40],
+        ))
+    rows.sort(key=lambda x: (x[0], SHAPE_ORDER.get(x[1], 9)))
+    hdr = (
+        "| arch | shape | step | compute_s | memory_s | coll_s | dominant "
+        "| 6ND/HLO | bytes/dev | note |"
+    )
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for row in rows:
+        lines.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    meshes = [args.mesh] if args.mesh else ["16x16", "2x16x16"]
+    for m in meshes:
+        print(f"\n### mesh {m}\n")
+        print(table(recs, m))
+
+
+if __name__ == "__main__":
+    main()

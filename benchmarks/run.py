@@ -1,0 +1,221 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+
+  PYTHONPATH=src python -m benchmarks.run                # quick mode
+  REPRO_BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run   # paper-scale sim
+
+Tables:
+  table1  — Co-PLMs vs Standalone/FedLoRA/FedAP/FedCoLLM/FedMKT (Rouge-L/EM)
+  table2  — ablations: w/o DST, w/o SAML
+  fig3    — communication overhead (% params transmitted), analytic at the
+            paper's FULL model sizes + measured at reduced scale
+  kernels — Pallas kernels vs jnp oracles (us_per_call)
+  roofline— summary of runs/dryrun (dominant terms; full tables via
+            benchmarks.roofline_table)
+"""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "") not in ("", "0")
+
+
+def _cfg():
+    from repro.core.cotuning import CoTuneConfig
+
+    if FULL:
+        return CoTuneConfig(
+            rounds=2, dst_steps=4, saml_steps=8, distill_steps=40,
+            pretrain_steps=80, batch_size=8, seq_len=48,
+            samples_per_client=256, n_eval=48,
+        )
+    # "quick" still needs enough SFT for nonzero Rouge-L (the claims are
+    # about relative ordering — see EXPERIMENTS.md §Paper-validation)
+    return CoTuneConfig(
+        rounds=1, dst_steps=3, saml_steps=5, distill_steps=16, pretrain_steps=50,
+        batch_size=8, seq_len=40, samples_per_client=160, n_eval=24,
+    )
+
+
+def _avg(metrics):
+    rs = [v["rouge_l"] for v in metrics.values()]
+    es = [v["em"] for v in metrics.values()]
+    return sum(rs) / len(rs), sum(es) / len(es)
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+def table1_cotuning():
+    """Table 1: heterogeneous-device comparison on the synthetic QA task."""
+    from repro.configs import get_arch
+    from repro.core import baselines as B
+    from repro.core.cotuning import CoPLMs
+    from repro.core.world import World
+
+    cfg = _cfg()
+    slms = [
+        get_arch("paper-bloom-1.1b"),
+        get_arch("paper-llama2-1.3b"),
+        get_arch("paper-qwen2.5-1.5b"),
+    ]
+    if not FULL:
+        slms = slms[:2]
+    world = World.build(slms, get_arch("paper-gptj-6b"), cfg)
+
+    t0 = time.time()
+    res = B.run_standalone(world)
+    r, e = _avg(res["metrics"])
+    _row("table1/standalone", (time.time() - t0) * 1e6, f"rouge={r:.1f};em={e:.1f}")
+
+    for name, fn in (("fedcollm", B.run_fedcollm), ("fedmkt", B.run_fedmkt)):
+        t0 = time.time()
+        res = fn(world)
+        r, e = _avg(res["metrics"])
+        _row(f"table1/{name}", (time.time() - t0) * 1e6, f"rouge={r:.1f};em={e:.1f}")
+
+    # homogeneous-device methods (FedLoRA / FedAP): same arch + tokenizer
+    homo = World.build([slms[1]] * len(slms), get_arch("paper-gptj-6b"), cfg,
+                       hetero_tokenizers=False)
+    for name, fn in (("fedlora", B.run_fedlora), ("fedap", B.run_fedap)):
+        t0 = time.time()
+        res = fn(homo)
+        r, e = _avg(res["metrics"])
+        _row(f"table1/{name}(homo)", (time.time() - t0) * 1e6, f"rouge={r:.1f};em={e:.1f}")
+
+    t0 = time.time()
+    system = CoPLMs.build(slms, get_arch("paper-gptj-6b"), get_arch("paper-dpm"), cfg)
+    system.train()
+    r, e = _avg(system.evaluate())
+    _row("table1/co-plms", (time.time() - t0) * 1e6, f"rouge={r:.1f};em={e:.1f}")
+    return system
+
+
+def table2_ablation():
+    """Table 2: Co-PLMs vs w/o DST vs w/o SAML."""
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.core.cotuning import CoPLMs
+
+    base_cfg = _cfg()
+    slms = [get_arch("paper-bloom-1.1b"), get_arch("paper-llama2-1.3b")]
+    for name, kw in (
+        ("full", {}),
+        ("wo_dst", {"use_dst": False}),
+        ("wo_saml", {"use_server_saml": False}),
+    ):
+        cfg = dataclasses.replace(base_cfg, **kw)
+        t0 = time.time()
+        system = CoPLMs.build(slms, get_arch("paper-gptj-6b"), get_arch("paper-dpm"), cfg)
+        system.train()
+        r, e = _avg(system.evaluate())
+        _row(f"table2/{name}", (time.time() - t0) * 1e6, f"rouge={r:.1f};em={e:.1f}")
+
+
+def fig3_comm_overhead():
+    """Fig. 3: % of device-model params transmitted per round — analytic at
+    the paper's FULL model sizes (this is a size computation, no training)."""
+    from repro.common.module import abstract, param_count
+    from repro.configs import get_arch
+    from repro.core.adapters import adapter_specs
+    from repro.core.lora import lora_specs
+    from repro.models.transformer import model_specs
+
+    t0 = time.time()
+    dpm = get_arch("paper-dpm")
+    n_dpm_lora = param_count(abstract(lora_specs(model_specs(dpm), rank=8)))
+    for arch in ("paper-bloom-1.1b", "paper-llama2-1.3b", "paper-qwen2.5-1.5b"):
+        cfg = get_arch(arch)
+        n_slm = param_count(abstract(model_specs(cfg)))
+        n_slm_lora = param_count(abstract(lora_specs(model_specs(cfg), rank=8)))
+        n_adapters = param_count(abstract(adapter_specs(cfg)))
+        # FedMKT transmits SELECTIVE (top-K) logits: 1000 samples x 48
+        # positions x (K values + K indices), both directions, counted as
+        # param-equivalents
+        n_logits = 1000 * 48 * 2 * 32 * 2
+        us = (time.time() - t0) * 1e6
+        _row(f"fig3/co-plms/{arch}", us, f"{100 * n_dpm_lora / n_slm:.4f}%")
+        _row(f"fig3/fedlora/{arch}", us, f"{100 * n_slm_lora / n_slm:.4f}%")
+        _row(f"fig3/fedap/{arch}", us, f"{100 * n_adapters / n_slm:.4f}%")
+        _row(f"fig3/fedmkt/{arch}", us, f"{100 * n_logits / n_slm:.4f}%")
+
+
+def bench_kernels():
+    """Pallas kernels (interpret mode on CPU) vs jnp oracles."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.RandomState(0)
+
+    def timeit(fn, *args, n=3):
+        jax.block_until_ready(fn(*args))  # compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.time() - t0) / n * 1e6
+
+    x = jnp.asarray(rng.randn(512, 8192), jnp.float32)
+    us_k = timeit(lambda a: ops.topk_pool(a, 32)[0], x)
+    us_r = timeit(lambda a: ref.ref_topk_pool(a, 32)[0], x)
+    _row("kernels/topk_pool", us_k, f"ref_us={us_r:.0f}")
+
+    q = jnp.asarray(rng.randn(1, 4, 512, 64), jnp.float32)
+    us_k = timeit(lambda a: ops.flash_attention(a, a, a), q)
+    us_r = timeit(lambda a: ref.ref_flash_attention(a, a, a), q)
+    _row("kernels/flash_attention", us_k, f"ref_us={us_r:.0f}")
+
+    xx = jnp.asarray(rng.randn(512, 1024), jnp.float32)
+    w = jnp.asarray(rng.randn(1024, 1024), jnp.float32)
+    a = jnp.asarray(rng.randn(1024, 16), jnp.float32)
+    b = jnp.asarray(rng.randn(16, 1024), jnp.float32)
+    us_k = timeit(lambda: ops.lora_matmul(xx, w, a, b))
+    us_r = timeit(lambda: ref.ref_lora_matmul(xx, w, a, b))
+    _row("kernels/lora_matmul", us_k, f"ref_us={us_r:.0f}")
+
+
+def roofline_summary():
+    """Summary row per mesh from the dry-run sweep."""
+    import glob
+
+    t0 = time.time()
+    for mesh in ("16x16", "2x16x16"):
+        n_ok = n_fail = n_skip = 0
+        doms = {}
+        for p in glob.glob(f"runs/dryrun/*__{mesh}__*.json"):
+            with open(p) as f:
+                r = json.load(f)
+            if r.get("skipped"):
+                n_skip += 1
+            elif r.get("ok"):
+                n_ok += 1
+                d = r.get("roofline", {}).get("dominant")
+                doms[d] = doms.get(d, 0) + 1
+            else:
+                n_fail += 1
+        us = (time.time() - t0) * 1e6
+        _row(
+            f"roofline/{mesh}", us,
+            f"ok={n_ok};skip={n_skip};fail={n_fail};dominant={doms}",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_kernels()
+    fig3_comm_overhead()
+    roofline_summary()
+    table2_ablation()
+    table1_cotuning()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Co-PLMs Algorithm 1 end-to-end on a simulated cloud-edge consortium:
+1 server (GPT-J-6B family, reduced) + 3 heterogeneous edge devices
+(Bloom / Sheared-LLaMA / Qwen2.5 families, reduced) with heterogeneous
+tokenizers and Dirichlet-skewed domain shards.
+
+  PYTHONPATH=src python examples/cotune_cluster.py [--rounds 2] [--lam 0.1]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_arch
+from repro.core.cotuning import CoPLMs, CoTuneConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--lam", type=float, default=1.0, help="Dirichlet DDS")
+    ap.add_argument("--saml-steps", type=int, default=6)
+    ap.add_argument("--dst-steps", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = CoTuneConfig(
+        rounds=args.rounds, dst_steps=args.dst_steps, saml_steps=args.saml_steps,
+        distill_steps=20, pretrain_steps=40, batch_size=8, seq_len=48,
+        samples_per_client=192, n_eval=32, lam=args.lam,
+    )
+    slms = [
+        get_arch("paper-bloom-1.1b"),
+        get_arch("paper-llama2-1.3b"),
+        get_arch("paper-qwen2.5-1.5b"),
+    ]
+    print("building consortium (distilling DPM from the server LLM)...")
+    system = CoPLMs.build(slms, get_arch("paper-gptj-6b"), get_arch("paper-dpm"), cfg)
+    print("eval BEFORE co-tuning:", system.evaluate())
+    for t in range(cfg.rounds):
+        m = system.round(t)
+        print(f"round {t}: " + ", ".join(f"{k}={v:.3f}" for k, v in m.items()))
+    print("eval AFTER co-tuning:", system.evaluate())
+    print("comm fraction (Fig.3 metric):", system.comm_fraction())
+
+
+if __name__ == "__main__":
+    main()

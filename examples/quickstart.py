@@ -1,0 +1,65 @@
+"""Quickstart: build a reduced model from the zoo, train it briefly on the
+synthetic QA corpus, and generate.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch gemma-2b]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+from repro.core.evalqa import evaluate_qa, greedy_generate
+from repro.data.pipeline import QADataset, make_batches
+from repro.data.synthetic import generate_corpus
+from repro.data.tokenizer import build_tokenizer
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    corpus = generate_corpus(200, seed=0)
+    tok = build_tokenizer("qs", [s.text for s in corpus], budget=1024)
+    cfg = dataclasses.replace(get_arch(args.arch).reduced(), vocab_size=tok.vocab_size)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = AdamW(learning_rate=1e-3, weight_decay=0.01)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(p, batch)
+        p2, s2 = opt.update(grads, s, p)
+        return p2, s2, loss
+
+    ds = QADataset(corpus[:160], tok, seq_len=48)
+    for i, batch in enumerate(make_batches(ds, 8, epochs=100)):
+        if i >= args.steps:
+            break
+        jb = {k: jnp.asarray(v) for k, v in batch.items() if k != "sample_idx"}
+        params, state, loss = step(params, state, jb)
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {float(loss):.3f}")
+
+    m = evaluate_qa(model, params, tok, corpus[160:180], max_new=8)
+    print("eval:", m)
+    outs = greedy_generate(
+        model, params, tok,
+        [f"question : {s.question} answer :" for s in corpus[160:163]],
+        max_new=8,
+    )
+    for s, o in zip(corpus[160:163], outs):
+        print(f"Q: {s.question}\n   pred={o!r} gold={s.answer!r}")
+
+
+if __name__ == "__main__":
+    main()

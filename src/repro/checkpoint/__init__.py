@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import save_tree, load_tree, save_round, latest_round

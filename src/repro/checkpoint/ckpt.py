@@ -1,0 +1,93 @@
+"""Flat-npz checkpointing for nested param trees (no orbax offline).
+
+Trees are flattened to path-keyed arrays; dtypes/shapes round-trip exactly.
+Federated rounds are stored as round_{t:05d}/ directories with per-role
+files (server LLM, server DPM, device SLM/DPM/adapters), so a co-tuning run
+can resume mid-round.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else k))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> PyTree:
+    tree: Dict = {}
+    for path, arr in flat.items():
+        keys = path.split(_SEP)
+        node = tree
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = jnp.asarray(arr)
+    return tree
+
+
+_DTYPE_KEY = "%dtype"
+
+
+def save_tree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    enc: Dict[str, np.ndarray] = {}
+    for k, v in flat.items():
+        # ml_dtypes (bfloat16, fp8) are not npz-serializable: store the raw
+        # bits + a dtype sidecar entry.
+        if v.dtype.kind == "V" or str(v.dtype) in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            enc[k] = v.view(np.uint8 if v.dtype.itemsize == 1 else np.uint16)
+            enc[k + _DTYPE_KEY] = np.asarray(str(v.dtype))
+        else:
+            enc[k] = v
+    np.savez(path, **enc)
+
+
+def load_tree(path: str) -> PyTree:
+    if not path.endswith(".npz"):
+        path += ".npz"
+    with np.load(path) as data:
+        flat: Dict[str, np.ndarray] = {}
+        for k in data.files:
+            if k.endswith(_DTYPE_KEY):
+                continue
+            arr = data[k]
+            dk = k + _DTYPE_KEY
+            if dk in data.files:
+                arr = arr.view(jnp.dtype(str(data[dk])))
+            flat[k] = arr
+        return _unflatten(flat)
+
+
+def save_round(root: str, round_idx: int, role_trees: Dict[str, PyTree]) -> str:
+    d = os.path.join(root, f"round_{round_idx:05d}")
+    os.makedirs(d, exist_ok=True)
+    for role, tree in role_trees.items():
+        save_tree(os.path.join(d, f"{role}.npz"), tree)
+    return d
+
+
+def latest_round(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    rounds = [
+        int(m.group(1))
+        for name in os.listdir(root)
+        if (m := re.match(r"round_(\d+)$", name))
+    ]
+    return max(rounds) if rounds else None

@@ -1,0 +1,7 @@
+from repro.common.module import ParamSpec, materialize, axes_of, merge_trees
+from repro.common.sharding import (
+    axis_rules,
+    logical_constraint,
+    logical_to_spec,
+    sharding_for_tree,
+)

@@ -1,0 +1,165 @@
+"""Minimal functional parameter-tree module system.
+
+No flax in this environment, so models are written as pure functions over
+nested-dict pytrees. Each model's ``init_specs(cfg)`` returns a nested dict of
+:class:`ParamSpec` leaves; :func:`materialize` turns that into concrete
+arrays, and :func:`axes_of` returns the parallel tree of logical sharding
+axes consumed by ``repro.common.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter: shape + initializer + logical axes."""
+
+    shape: Tuple[int, ...]
+    init: Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"ParamSpec rank mismatch: shape {self.shape} vs axes {self.axes}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def fanin_init(axis: int = 0):
+    """LeCun-normal over the given fan-in axis (default first)."""
+
+    def init(key, shape, dtype):
+        fan_in = shape[axis]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+def zeros_init():
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init():
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+
+    return init
+
+
+def constant_init(value: float):
+    def init(key, shape, dtype):
+        return jnp.full(shape, value, dtype)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Tree materialization
+# ---------------------------------------------------------------------------
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def materialize(specs: PyTree, key: jax.Array, dtype=jnp.bfloat16) -> PyTree:
+    """Instantiate every ParamSpec leaf with a derived PRNG key."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [
+        spec.init(k, spec.shape, dtype) if _is_spec(spec) else spec
+        for spec, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(specs: PyTree, dtype=jnp.bfloat16) -> PyTree:
+    """ShapeDtypeStruct tree matching :func:`materialize` (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype) if _is_spec(s) else s,
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def axes_of(specs: PyTree) -> PyTree:
+    """Parallel tree of logical-axes tuples."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def stack_specs(spec_tree: PyTree, n: int, axis_name: Optional[str] = "layers") -> PyTree:
+    """Prepend a stacking dim (for scan-over-layers parameter stacks)."""
+
+    def stack(s: ParamSpec) -> ParamSpec:
+        def init(key, shape, dtype):
+            keys = jax.random.split(key, n)
+            return jnp.stack([s.init(k, s.shape, dtype) for k in keys])
+
+        return ParamSpec((n,) + s.shape, init, (axis_name,) + s.axes)
+
+    return jax.tree.map(stack, spec_tree, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Generic tree helpers
+# ---------------------------------------------------------------------------
+
+def merge_trees(base: Dict, override: Dict) -> Dict:
+    """Recursive dict merge; override leaves win."""
+    out = dict(base)
+    for k, v in override.items():
+        if k in out and isinstance(out[k], dict) and isinstance(v, dict):
+            out[k] = merge_trees(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_paths(tree: PyTree):
+    """Yield ('a/b/c', leaf) pairs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        yield name, leaf
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

@@ -1,0 +1,191 @@
+"""Logical-axis sharding engine.
+
+Models annotate every parameter dim and key activations with *logical* axis
+names ("batch", "heads", "ffn", "vocab", "experts", ...). A rule table maps
+logical axes to physical mesh axes. The mapping is divisibility-checked per
+tensor: if a dim does not divide evenly over the requested mesh axes we walk
+a fallback chain and ultimately replicate, so every (arch x mesh) pair lowers
+without uneven-sharding padding waste.
+
+Rules are installed with the :func:`axis_rules` context manager; when no
+rules/mesh are active (CPU unit tests) all constraint helpers are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+# logical axis -> preferred mesh axes, then fallbacks (each entry may be a
+# single mesh axis, a tuple of mesh axes (product-sharded), or None).
+RuleTable = Dict[str, Sequence[MeshAxes]]
+
+# Default rule table for the production meshes (pod, data, model)/(data, model).
+# Order within each entry = fallback chain.
+DEFAULT_RULES: RuleTable = {
+    "batch": [("pod", "data"), ("data",), None],
+    "seq": [None],
+    "embed_d": [None],  # embedding-table d_model: never sharded (see layers.py)
+    # decode-time KV-cache length: shard over model axis when kv_heads can't
+    "cache_seq": [("model",), None],
+    "d_model": [None],
+    "ffn": [("model",), None],
+    "heads": [("model",), None],
+    "kv_heads": [("model",), None],
+    "head_dim": [None],
+    "qk_dim": [None],
+    "vocab": [("model",), None],
+    "experts": [("model",), None],
+    "expert_ffn": [None],
+    "layers": [None],
+    "conv": [None],
+    "state": [None],
+    # mLSTM value/feature dim (matrix memory columns are shardable)
+    "feature": [("model",), None],
+    "lora_rank": [None],
+    "adapter": [None],
+    "frames": [None],
+    # distributed two-stage top-k (core/pooling.py): vocab shard axis
+    "vocab_shards": [("model",), None],
+    # LASP-style chunk axis for sequence-parallel recurrent scans
+    "seq_chunks": [("model",), None],
+}
+
+# FSDP/ZeRO-3 rule table for PARAMETER/OPTIMIZER trees only: weights are
+# additionally sharded over the data (+pod) axes along d_model; XLA inserts
+# the per-layer all-gather (scan step granularity). Activations keep
+# DEFAULT_RULES. Decode paths use DEFAULT_RULES for params too (per-step
+# all-gathers would dominate decode latency).
+PARAM_RULES: RuleTable = dict(
+    DEFAULT_RULES,
+    d_model=[("pod", "data"), ("data",), None],
+)
+
+_local = threading.local()
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@contextlib.contextmanager
+def axis_rules(
+    mesh: Mesh,
+    rules: Optional[RuleTable] = None,
+    param_rules: Optional[RuleTable] = None,
+):
+    """Install (mesh, activation rules, param rules) for the helpers below.
+    ``param_rules`` is set only for FSDP training steps — layers that manage
+    weight gathers explicitly (shard_map MoE) consult it."""
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = (mesh, rules or DEFAULT_RULES, param_rules)
+    try:
+        yield
+    finally:
+        _local.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_local, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def current_rules() -> Optional[RuleTable]:
+    ctx = getattr(_local, "ctx", None)
+    return ctx[1] if ctx else None
+
+
+def current_param_rules() -> Optional[RuleTable]:
+    ctx = getattr(_local, "ctx", None)
+    return ctx[2] if ctx and len(ctx) > 2 else None
+
+
+def _resolve_axis(
+    logical: Optional[str],
+    dim: int,
+    mesh_sizes: Dict[str, int],
+    rules: RuleTable,
+    used: set,
+) -> MeshAxes:
+    """Pick the first rule entry that divides `dim` and reuses no mesh axis."""
+    if logical is None:
+        return None
+    chain = rules.get(logical, [None])
+    for cand in chain:
+        if cand is None:
+            return None
+        axes = (cand,) if isinstance(cand, str) else tuple(cand)
+        if any(a not in mesh_sizes for a in axes):
+            continue
+        if any(a in used for a in axes):
+            continue
+        size = int(np.prod([mesh_sizes[a] for a in axes]))
+        if dim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def logical_to_spec(
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    mesh: Mesh,
+    rules: Optional[RuleTable] = None,
+) -> P:
+    """Logical axes tuple -> PartitionSpec, divisibility-checked."""
+    rules = rules or DEFAULT_RULES
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    entries = []
+    for dim, logical in zip(shape, axes):
+        resolved = _resolve_axis(logical, dim, sizes, rules, used)
+        if resolved is not None:
+            for a in (resolved,) if isinstance(resolved, str) else resolved:
+                used.add(a)
+        entries.append(resolved)
+    # trim trailing Nones for cleanliness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def sharding_for_tree(
+    shapes_tree: Any,
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: Optional[RuleTable] = None,
+):
+    """NamedSharding tree for a params tree (shapes from ShapeDtypeStruct or arrays).
+
+    ``axes_tree`` has tuple-of-logical-axis-name leaves (tuples are normally
+    pytree *nodes*, so the two trees are flattened independently and zipped).
+    """
+    shape_leaves, treedef = jax.tree.flatten(shapes_tree)
+    axes_leaves, _ = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)
+    if len(shape_leaves) != len(axes_leaves):
+        raise ValueError(
+            f"tree mismatch: {len(shape_leaves)} params vs {len(axes_leaves)} axes"
+        )
+    out = [
+        NamedSharding(mesh, logical_to_spec(tuple(x.shape), axes, mesh, rules))
+        for x, axes in zip(shape_leaves, axes_leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def logical_constraint(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without active rules."""
+    ctx = getattr(_local, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx[0], ctx[1]
+    spec = logical_to_spec(tuple(x.shape), axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

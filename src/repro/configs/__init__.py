@@ -1,0 +1,25 @@
+from repro.configs.base import (
+    ARCH_REGISTRY,
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_arch,
+    list_archs,
+    register_arch,
+    shape_applicable,
+)
+
+# import all architecture modules so the registry is populated
+from repro.configs import (  # noqa: F401
+    gemma_2b,
+    xlstm_1_3b,
+    qwen2_1_5b,
+    deepseek_v3_671b,
+    qwen2_5_3b,
+    qwen2_vl_2b,
+    qwen2_72b,
+    whisper_medium,
+    phi3_5_moe_42b_a6_6b,
+    jamba_1_5_large_398b,
+    paper_models,
+)

@@ -1,0 +1,203 @@
+"""Architecture + input-shape config system.
+
+Every assigned architecture is a :class:`ModelConfig`. The layer stack is
+described by an optional unrolled ``prefix_pattern`` followed by a repeating
+``unit_pattern`` scanned ``(num_layers - len(prefix)) / len(unit)`` times —
+this keeps compile time bounded (scan-over-layers) while expressing
+heterogeneous stacks (Jamba 1:7 interleave, xLSTM 7:1, DeepSeek first-k-dense).
+
+Block grammar: "<mixer>" or "<mixer>+<mlp>" where
+  mixer in {attn, swa, mla, mlstm, slstm, mamba, cross_attn_block}
+  mlp   in {mlp, moe, none}   (default: cfg-level mlp unless mixer is lstm-like)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+ARCH_REGISTRY: Dict[str, Callable[[], "ModelConfig"]] = {}
+
+
+def register_arch(name: str):
+    def deco(fn):
+        ARCH_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_arch(name: str) -> "ModelConfig":
+    if name not in ARCH_REGISTRY:
+        # import the module lazily: repro.configs.<name with - -> _>
+        import importlib
+
+        importlib.import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return ARCH_REGISTRY[name]()
+
+
+def list_archs():
+    return sorted(ARCH_REGISTRY)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    source: str  # citation
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # layer stack
+    prefix_pattern: Tuple[str, ...] = ()
+    unit_pattern: Tuple[str, ...] = ("attn+mlp",)
+
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    pos_type: str = "rope"  # rope | mrope | learned | none
+    max_position: int = 65_536  # learned-pos table size
+    window: int = 0  # sliding-window size for "swa" blocks
+    logit_softcap: float = 0.0
+
+    # mlp
+    mlp_type: str = "swiglu"  # swiglu | geglu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    d_ff_moe: int = 0
+    router_aux_weight: float = 0.01
+    capacity_factor: float = 1.25
+
+    # MLA (DeepSeek)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    # multi-token prediction (DeepSeek MTP)
+    mtp_depth: int = 0
+
+    # xLSTM
+    mlstm_seq_parallel: bool = False  # LASP-style chunk-axis sharding (§Perf B3)
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    lstm_num_heads: int = 4
+    mlstm_chunk: int = 128
+
+    # Mamba (Jamba)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # encoder-decoder (Whisper)
+    encoder_layers: int = 0
+    encoder_seq_ratio: float = 0.0  # encoder frames = ratio * decoder seq
+
+    # modality stub
+    vision_embeds: bool = False  # qwen2-vl: patch embeds scattered into stream
+    audio_embeds: bool = False  # whisper: precomputed frame embeds
+
+    dtype: str = "bfloat16"
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def unit_repeats(self) -> int:
+        body = self.num_layers - len(self.prefix_pattern)
+        if body % len(self.unit_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: {body} body layers not divisible by unit "
+                f"{len(self.unit_pattern)}"
+            )
+        return body // len(self.unit_pattern)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if every mixer is O(1)-state or windowed (long_500k eligible)."""
+        blocks = self.prefix_pattern + self.unit_pattern
+        mixers = {b.split("+")[0] for b in blocks}
+        return mixers.issubset({"swa", "mlstm", "slstm", "mamba"}) or (
+            self.family in ("ssm", "hybrid")
+        )
+
+    def block_parts(self, block: str) -> Tuple[str, str]:
+        """'attn+moe' -> ('attn', 'moe'); bare mixers get default mlp."""
+        if "+" in block:
+            mixer, mlp = block.split("+", 1)
+        else:
+            mixer = block
+            mlp = "none" if mixer in ("mlstm", "slstm") else "mlp"
+        return mixer, mlp
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test variant: 1 unit of layers, d_model<=256, <=4 experts."""
+        small: Dict = dict(
+            num_layers=len(self.prefix_pattern) + len(self.unit_pattern),
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=64,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            lstm_num_heads=min(self.lstm_num_heads, 2),
+            mlstm_chunk=32,
+        )
+        if self.num_experts:
+            small.update(
+                num_experts=min(self.num_experts, 4),
+                top_k=min(self.top_k, 2),
+                d_ff_moe=min(self.d_ff_moe, 256) if self.d_ff_moe else 0,
+            )
+        if self.q_lora_rank:
+            small.update(q_lora_rank=64)
+        if self.kv_lora_rank:
+            small.update(kv_lora_rank=64, qk_rope_dim=16, qk_nope_dim=32, v_head_dim=32)
+        if self.encoder_layers:
+            small.update(encoder_layers=2)
+        if self.window:
+            small.update(window=64)
+        small.update(overrides)
+        small["name"] = self.name + "-smoke"
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped). See DESIGN.md §4 for the skip ledger."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch; long_500k requires sub-quadratic"
+    if cfg.is_encoder_decoder and shape.name == "long_500k":
+        return False, "enc-dec decoder is full attention; no 500k positions"
+    return True, ""

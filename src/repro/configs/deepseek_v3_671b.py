@@ -1,0 +1,36 @@
+"""deepseek-v3-671b [moe] — DeepSeek-V3 (arXiv:2412.19437).
+
+61L, d_model 7168, 128 heads via MLA (q_lora 1536, kv_lora 512, qk_nope 128,
+qk_rope 64, v 128), first 3 layers dense (d_ff 18432), remaining 58 MoE with
+1 shared + 256 routed experts top-8 (sigmoid scores), expert d_ff 2048,
+vocab 129280, MTP depth 1.
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("deepseek-v3-671b")
+def deepseek_v3_671b() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        source="arXiv:2412.19437",
+        num_layers=61,
+        d_model=7168,
+        num_heads=128,
+        num_kv_heads=128,
+        d_ff=18432,  # the 3 dense prefix layers
+        vocab_size=129_280,
+        prefix_pattern=("mla+mlp",) * 3,
+        unit_pattern=("mla+moe",),
+        num_experts=256,
+        top_k=8,
+        num_shared_experts=1,
+        d_ff_moe=2048,
+        router_aux_weight=0.0001,
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_rope_dim=64,
+        qk_nope_dim=128,
+        v_head_dim=128,
+        mtp_depth=1,
+    )

@@ -1,0 +1,21 @@
+"""demo-100m — the end-to-end CPU training driver's model (~100M params
+at the toy-tokenizer vocab): llama-style dense decoder.
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("demo-100m")
+def demo_100m() -> ModelConfig:
+    return ModelConfig(
+        name="demo-100m",
+        family="dense",
+        source="repro end-to-end driver",
+        num_layers=16,
+        d_model=640,
+        num_heads=10,
+        num_kv_heads=2,
+        d_ff=2560,
+        vocab_size=2048,
+        unit_pattern=("attn+mlp",),
+        tie_embeddings=True,
+    )

@@ -1,0 +1,42 @@
+"""gemma-2b [dense] — Gemma: Open Models (arXiv:2403.08295).
+
+18L, d_model 2048, 8 heads with MQA (kv=1), head_dim 256, GeGLU d_ff 16384,
+vocab 256000, tied embeddings with sqrt(d_model) input scaling.
+
+``sliding_variant()`` swaps full attention for sliding-window (window 4096,
+per the Gemma-2 family design) — used only to exercise long_500k, recorded
+as a variant in EXPERIMENTS.md.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("gemma-2b")
+def gemma_2b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b",
+        family="dense",
+        source="arXiv:2403.08295",
+        num_layers=18,
+        d_model=2048,
+        num_heads=8,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=256_000,
+        unit_pattern=("attn+mlp",),
+        mlp_type="geglu",
+        tie_embeddings=True,
+        rope_theta=10_000.0,
+    )
+
+
+def sliding_variant(cfg: ModelConfig, window: int = 4096) -> ModelConfig:
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-swa",
+        unit_pattern=tuple(b.replace("attn", "swa") for b in cfg.unit_pattern),
+        prefix_pattern=tuple(b.replace("attn", "swa") for b in cfg.prefix_pattern),
+        window=window,
+    )

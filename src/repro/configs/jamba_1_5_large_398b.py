@@ -1,0 +1,40 @@
+"""jamba-1.5-large-398b [hybrid] — Jamba (arXiv:2403.19887).
+
+72L, d_model 8192, 64 heads GQA kv=8 on the attention layers, Mamba
+elsewhere (1 attention per 8-layer block), MoE 16 experts top-2 on every
+other layer with expert d_ff 24576 (16*3*8192*24576*36 ≈ 348B expert params
+→ ~398B total, matching the model card). Sub-quadratic: runs long_500k.
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("jamba-1.5-large-398b")
+def jamba_1_5_large() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        source="arXiv:2403.19887",
+        num_layers=72,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=24576,
+        vocab_size=65_536,
+        unit_pattern=(
+            "mamba+mlp",
+            "mamba+moe",
+            "mamba+mlp",
+            "mamba+moe",
+            "attn+mlp",
+            "mamba+moe",
+            "mamba+mlp",
+            "mamba+moe",
+        ),
+        num_experts=16,
+        top_k=2,
+        d_ff_moe=24576,
+        pos_type="none",  # Jamba uses no positional encoding on attn layers
+        mamba_d_state=16,
+        mamba_d_conv=4,
+        mamba_expand=2,
+    )

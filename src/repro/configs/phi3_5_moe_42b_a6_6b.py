@@ -1,0 +1,26 @@
+"""phi3.5-moe-42b-a6.6b [moe] — [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L, d_model 4096, 32 heads GQA kv=8, 16 experts top-2 (softmax routing),
+expert d_ff 6400, vocab 32064.
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("phi3.5-moe-42b-a6.6b")
+def phi3_5_moe() -> ModelConfig:
+    return ModelConfig(
+        name="phi3.5-moe-42b-a6.6b",
+        family="moe",
+        source="hf:microsoft/Phi-3.5-MoE-instruct",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=6400,
+        vocab_size=32_064,
+        unit_pattern=("attn+moe",),
+        num_experts=16,
+        top_k=2,
+        d_ff_moe=6400,
+        rope_theta=10_000.0,
+    )

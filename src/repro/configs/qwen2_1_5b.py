@@ -1,0 +1,25 @@
+"""qwen2-1.5b [dense] — Qwen2 Technical Report (arXiv:2407.10671).
+
+28L, d_model 1536, 12 heads GQA kv=2, SwiGLU d_ff 8960, vocab 151936,
+QKV bias, rope theta 1e6, tied embeddings (<=1.5B Qwen2 ties).
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("qwen2-1.5b")
+def qwen2_1_5b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b",
+        family="dense",
+        source="arXiv:2407.10671",
+        num_layers=28,
+        d_model=1536,
+        num_heads=12,
+        num_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151_936,
+        unit_pattern=("attn+mlp",),
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )

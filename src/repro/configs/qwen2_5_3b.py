@@ -1,0 +1,25 @@
+"""qwen2.5-3b [dense] — Qwen2.5 family [hf:Qwen/Qwen2.5-0.5B card].
+
+36L, d_model 2048, 16 heads GQA kv=2, SwiGLU d_ff 11008, vocab 151936,
+QKV bias, tied embeddings.
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("qwen2.5-3b")
+def qwen2_5_3b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-3b",
+        family="dense",
+        source="hf:Qwen/Qwen2.5-0.5B",
+        num_layers=36,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=2,
+        d_ff=11008,
+        vocab_size=151_936,
+        unit_pattern=("attn+mlp",),
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,24 @@
+"""qwen2-72b [dense] — Qwen2 Technical Report (arXiv:2407.10671).
+
+80L, d_model 8192, 64 heads GQA kv=8, SwiGLU d_ff 29568, vocab 152064,
+QKV bias, rope theta 1e6.
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("qwen2-72b")
+def qwen2_72b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-72b",
+        family="dense",
+        source="arXiv:2407.10671",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=29568,
+        vocab_size=152_064,
+        unit_pattern=("attn+mlp",),
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+    )

@@ -1,0 +1,29 @@
+"""qwen2-vl-2b [vlm] — Qwen2-VL (arXiv:2409.12191). Language backbone only.
+
+28L, d_model 1536, 12 heads GQA kv=2, SwiGLU d_ff 8960, vocab 151936,
+QKV bias, M-RoPE (temporal/height/width sections). The ViT vision encoder is
+a STUB per the carve-out: input_specs provides precomputed patch embeddings
+(B, S, d_model) + a scatter mask + (3, B, S) M-RoPE position ids.
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("qwen2-vl-2b")
+def qwen2_vl_2b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        family="vlm",
+        source="arXiv:2409.12191",
+        num_layers=28,
+        d_model=1536,
+        num_heads=12,
+        num_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151_936,
+        unit_pattern=("attn+mlp",),
+        qkv_bias=True,
+        pos_type="mrope",
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        vision_embeds=True,
+    )

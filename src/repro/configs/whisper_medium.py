@@ -1,0 +1,31 @@
+"""whisper-medium [audio] — Whisper (arXiv:2212.04356). Transformer backbone.
+
+Encoder-decoder, 24L each, d_model 1024, 16 heads (MHA, kv=16), GeLU MLP
+d_ff 4096, vocab 51865, LayerNorm, learned decoder positions. The
+mel-spectrogram + conv frontend is a STUB per the carve-out: input_specs
+provides precomputed frame embeddings (B, seq/4, d_model).
+"""
+from repro.configs.base import ModelConfig, register_arch
+
+
+@register_arch("whisper-medium")
+def whisper_medium() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        family="audio",
+        source="arXiv:2212.04356",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=4096,
+        vocab_size=51_865,
+        unit_pattern=("xdec+mlp",),
+        encoder_layers=24,
+        qkv_bias=True,
+        pos_type="learned",
+        max_position=40_960,
+        mlp_type="gelu",
+        norm_eps=1e-5,
+        audio_embeds=True,
+    )

@@ -1,0 +1,4 @@
+"""Co-PLMs core: DPM distillation, DST adapters, SAML mutual learning,
+LoRA exchange, and the Algorithm-1 co-tuning orchestrator."""
+from repro.core.lora import lora_specs, apply_lora, init_lora, average_lora
+from repro.core.adapters import adapter_specs

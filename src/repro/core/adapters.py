@@ -1,0 +1,75 @@
+"""Domain adapters for DST — Co-PLMs §4.2.
+
+Every Transformer layer of the DPM gets a domain-aware adapter: a two-layer
+MLP with GeLU (paper's stated choice) applied to that layer's hidden
+representation, residually. The adapter tree mirrors the model's block
+structure ("units"/"prefix" entries gain an "adapter" sub-dict), so merging
+it into the parameter tree makes `transformer.block_apply` pick it up — no
+special-cased forward.
+
+During DST only this tree is trainable (Eq. 5); it is NEVER uploaded to the
+server — domain adapters are what keeps each device's domain bias local.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec, fanin_init, zeros_init, materialize, stack_specs
+from repro.configs.base import ModelConfig
+
+Params = Dict
+
+
+def _one_adapter(d: int, bottleneck: int) -> Params:
+    return {
+        "w1": ParamSpec((d, bottleneck), fanin_init(0), ("d_model", "adapter")),
+        "b1": ParamSpec((bottleneck,), zeros_init(), ("adapter",)),
+        "w2": ParamSpec((bottleneck, d), zeros_init(), ("adapter", "d_model")),
+        "b2": ParamSpec((d,), zeros_init(), ("d_model",)),
+    }
+
+
+def adapter_specs(cfg: ModelConfig, bottleneck: int = 64) -> Params:
+    """ParamSpec tree shaped to merge into the model's params."""
+    out: Params = {}
+    if cfg.prefix_pattern:
+        out["prefix"] = {
+            f"l{i}": {"adapter": _one_adapter(cfg.d_model, bottleneck)}
+            for i in range(len(cfg.prefix_pattern))
+        }
+    unit = {
+        f"b{i}": {"adapter": _one_adapter(cfg.d_model, bottleneck)}
+        for i in range(len(cfg.unit_pattern))
+    }
+    out["units"] = stack_specs(unit, cfg.unit_repeats)
+    return out
+
+
+def init_adapters(cfg: ModelConfig, key: jax.Array, bottleneck: int = 64,
+                  dtype=jnp.float32) -> Params:
+    return materialize(adapter_specs(cfg, bottleneck), key, dtype)
+
+
+def apply_adapter(p: Params, h: jax.Array) -> jax.Array:
+    """Residual two-layer GeLU MLP (Co-PLMs' domain adapter)."""
+    z = h @ p["w1"].astype(h.dtype) + p["b1"].astype(h.dtype)
+    z = jax.nn.gelu(z, approximate=True)
+    return h + z @ p["w2"].astype(h.dtype) + p["b2"].astype(h.dtype)
+
+
+def merge_adapters(params: Params, adapters: Params) -> Params:
+    """Deep-merge the adapter tree into a model param tree."""
+
+    def merge(a: Params, b: Params) -> Params:
+        out = dict(a)
+        for k, v in b.items():
+            if k in out and isinstance(out[k], dict) and isinstance(v, dict):
+                out[k] = merge(out[k], v)
+            else:
+                out[k] = v
+        return out
+
+    return merge(params, adapters)

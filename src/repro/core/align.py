@@ -1,0 +1,153 @@
+"""Bidirectional token alignment — Co-PLMs §4.3 (after FedMKT).
+
+Two host-side artifacts, both built with minimum-edit-distance dynamic
+programming and cached:
+
+1. **Sequence alignment** (per text): DP over the two tokenizations of the
+   same text with substitution cost = normalized character edit distance
+   between the token strings. Backtrace yields, for every position of
+   sequence A, the aligned position of sequence B ('utilize' <- 'util'+
+   'ize' maps both B positions to the single A position). The device-side
+   op is just a gather of the other model's logits at these positions.
+
+2. **Vocab map** (per tokenizer pair, built once): every piece of vocab A
+   maps to the piece of vocab B with minimum edit distance (exact match
+   fast-path). Used to move top-K token *ids* across vocabularies before
+   pooled KL.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import ToyTokenizer
+
+
+@functools.lru_cache(maxsize=65536)
+def _edit(a: str, b: str) -> int:
+    """Levenshtein distance (iterative DP, cached)."""
+    if a == b:
+        return 0
+    la, lb = len(a), len(b)
+    prev = list(range(lb + 1))
+    for i in range(1, la + 1):
+        cur = [i] + [0] * lb
+        ca = a[i - 1]
+        for j in range(1, lb + 1):
+            cur[j] = min(
+                prev[j] + 1,
+                cur[j - 1] + 1,
+                prev[j - 1] + (ca != b[j - 1]),
+            )
+        prev = cur
+    return prev[lb]
+
+
+def _sub_cost(a: str, b: str) -> float:
+    return _edit(a, b) / max(len(a), len(b), 1)
+
+
+def align_positions(tokens_a: Sequence[str], tokens_b: Sequence[str]) -> np.ndarray:
+    """For each position i of A return the aligned position j of B.
+
+    Needleman-Wunsch-style DP with gap cost 1 and substitution cost =
+    normalized string edit distance; the backtrace pairs positions, and
+    unpaired A positions inherit the nearest previous pairing.
+    """
+    la, lb = len(tokens_a), len(tokens_b)
+    if la == 0 or lb == 0:
+        return np.zeros(la, np.int32)
+    gap = 1.0
+    dp = np.zeros((la + 1, lb + 1), np.float32)
+    dp[:, 0] = np.arange(la + 1) * gap
+    dp[0, :] = np.arange(lb + 1) * gap
+    for i in range(1, la + 1):
+        for j in range(1, lb + 1):
+            dp[i, j] = min(
+                dp[i - 1, j - 1] + _sub_cost(tokens_a[i - 1], tokens_b[j - 1]),
+                dp[i - 1, j] + gap,
+                dp[i, j - 1] + gap,
+            )
+    # backtrace
+    out = np.full(la, -1, np.int32)
+    i, j = la, lb
+    while i > 0 and j > 0:
+        sub = dp[i - 1, j - 1] + _sub_cost(tokens_a[i - 1], tokens_b[j - 1])
+        if abs(dp[i, j] - sub) < 1e-6:
+            out[i - 1] = j - 1
+            i, j = i - 1, j - 1
+        elif abs(dp[i, j] - (dp[i - 1, j] + gap)) < 1e-6:
+            i -= 1
+        else:
+            j -= 1
+    # fill unpaired positions with nearest previous alignment
+    last = 0
+    for t in range(la):
+        if out[t] < 0:
+            out[t] = last
+        last = out[t]
+    return out
+
+
+def build_vocab_map(src: ToyTokenizer, dst: ToyTokenizer) -> np.ndarray:
+    """id in src vocab -> id of the closest piece in dst vocab.
+
+    Exact-match fast path; otherwise min edit distance among dst pieces that
+    share the first character (cheap blocking heuristic), falling back to a
+    global scan.
+    """
+    by_first: Dict[str, List[int]] = {}
+    for idx, piece in enumerate(dst.pieces):
+        by_first.setdefault(piece[:1], []).append(idx)
+    out = np.zeros(src.vocab_size, np.int32)
+    for i, piece in enumerate(src.pieces):
+        j = dst.index.get(piece)
+        if j is not None:
+            out[i] = j
+            continue
+        cands = by_first.get(piece[:1]) or range(dst.vocab_size)
+        best, best_d = 0, 1e9
+        for c in cands:
+            d = _sub_cost(piece, dst.pieces[c])
+            if d < best_d:
+                best, best_d = c, d
+                if d == 0:
+                    break
+        out[i] = best
+    return out
+
+
+class TokenAligner:
+    """Caches per-(text, direction) position alignments + the vocab maps
+    for one tokenizer pair."""
+
+    def __init__(self, tok_a: ToyTokenizer, tok_b: ToyTokenizer):
+        self.tok_a, self.tok_b = tok_a, tok_b
+        self.vocab_a2b = build_vocab_map(tok_a, tok_b)
+        self.vocab_b2a = build_vocab_map(tok_b, tok_a)
+        self._cache: Dict[Tuple[str, str], np.ndarray] = {}
+
+    def positions(self, text: str, direction: str = "a2b") -> np.ndarray:
+        key = (text, direction)
+        if key not in self._cache:
+            pa = self.tok_a.encode_pieces(text)
+            pb = self.tok_b.encode_pieces(text)
+            if direction == "a2b":
+                self._cache[key] = align_positions(pa, pb)
+            else:
+                self._cache[key] = align_positions(pb, pa)
+        return self._cache[key]
+
+    def batch_positions(
+        self, texts: Sequence[str], seq_len: int, direction: str = "a2b"
+    ) -> np.ndarray:
+        """(B, seq_len) gather indices, clipped/padded."""
+        out = np.zeros((len(texts), seq_len), np.int32)
+        for r, text in enumerate(texts):
+            pos = self.positions(text, direction)[:seq_len]
+            out[r, : len(pos)] = np.minimum(pos, seq_len - 1)
+            if len(pos) < seq_len and len(pos) > 0:
+                out[r, len(pos):] = out[r, len(pos) - 1]
+        return out

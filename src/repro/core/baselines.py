@@ -1,0 +1,360 @@
+"""The five baselines of Co-PLMs Table 1, over a shared World.
+
+- Standalone: per-participant SFT, no collaboration.
+- FedLoRA  [Zhang et al. '23]: homogeneous SLMs; local LoRA SFT; FedAvg of
+  LoRA matrices. No server LLM participation.
+- FedAP    [Houlsby et al. '19 adapters, FL'd]: local adapter-only SFT;
+  FedAvg of adapters. No server LLM participation.
+- FedCoLLM [Fan et al. '24]: a shared proxy SLM (server tokenizer) trained
+  with LoRA on each device, FedAvg'd, then server-side mutual KD with the
+  LLM; devices additionally distill from the updated proxy (full-vocab KL
+  through token alignment — no pooling, no domain adapters).
+- FedMKT   [Fan et al. '25]: proxy-free; devices exchange logits with the
+  server LLM through token alignment; bidirectional selective KD + SFT.
+
+Each returns {participant: {rouge_l, em}} plus a comm fraction, mirroring
+Table 1 / Fig. 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import saml as S
+from repro.core.adapters import init_adapters, merge_adapters
+from repro.core.align import TokenAligner
+from repro.core.evalqa import evaluate_qa
+from repro.core.lora import apply_lora, average_lora, init_lora, lora_param_fraction
+from repro.core.pooling import masked_mean
+from repro.core.world import World
+from repro.data.pipeline import QADataset
+from repro.models.transformer import cross_entropy
+from repro.optim.adamw import AdamW
+
+Params = Dict
+
+
+def _batches(world: World, samples, tok, rng, n_steps):
+    ds = QADataset(samples, tok, world.cfg.seq_len)
+    for _ in range(n_steps):
+        idx = rng.randint(0, len(samples), world.cfg.batch_size)
+        enc = [ds.encode_sample(samples[i]) for i in idx]
+        yield idx, {k: jnp.asarray(np.stack([e[k] for e in enc])) for k in enc[0]}
+
+
+def _eval_all(world: World, slm_params: List[Params], llm_params=None):
+    out = {}
+    for i, m in enumerate(world.slms):
+        out[f"device-{i + 1}"] = evaluate_qa(
+            m, slm_params[i], world.device_toks[i], world.eval_samples
+        )
+    if llm_params is not None:
+        out["server"] = evaluate_qa(
+            world.llm, llm_params, world.server_tok, world.eval_samples
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+def run_standalone(world: World) -> Dict:
+    from repro.core.cotuning import sft
+
+    cfg = world.cfg
+    p = world.copy_params()
+    steps = cfg.rounds * (cfg.dst_steps + cfg.saml_steps)
+    for i, m in enumerate(world.slms):
+        ds = QADataset(world.shards[i], world.device_toks[i], cfg.seq_len)
+        p["slms"][i] = sft(m, p["slms"][i], ds, steps, cfg, seed=101 + i)
+    ds = QADataset(world.server_samples, world.server_tok, cfg.seq_len)
+    p["llm"] = sft(world.llm, p["llm"], ds, steps, cfg, seed=100)
+    res = _eval_all(world, p["slms"], p["llm"])
+    return {"metrics": res, "comm_fraction": {f"device-{i+1}": 0.0 for i in range(len(world.slms))}}
+
+
+# ---------------------------------------------------------------------------
+def _lora_sft_step(model, opt, lora_alpha):
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(lora, opt_state, base, batch):
+        def loss_fn(l):
+            logits, _ = model.logits(apply_lora(base, l, lora_alpha), batch)
+            return cross_entropy(logits, batch["targets"], batch["loss_mask"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(lora)
+        new_lora, new_opt = opt.update(grads, opt_state, lora)
+        return new_lora, new_opt, loss
+
+    return step
+
+
+def run_fedlora(world: World) -> Dict:
+    """Homogeneous setting: every device uses slms[0]'s architecture+tokenizer
+    (the caller builds a homogeneous World for Table 1's upper half)."""
+    cfg = world.cfg
+    p = world.copy_params()
+    opt = AdamW(learning_rate=cfg.lr)
+    rng = np.random.RandomState(cfg.seed + 5)
+    key = jax.random.key(cfg.seed + 5)
+    loras = []
+    for i, m in enumerate(world.slms):
+        key, k = jax.random.split(key)
+        loras.append(init_lora(m.specs(), k, cfg.lora_rank))
+    steps = [_lora_sft_step(m, opt, cfg.lora_alpha) for m in world.slms]
+    local_steps = cfg.dst_steps + cfg.saml_steps
+    for t in range(cfg.rounds):
+        for i, m in enumerate(world.slms):
+            st = opt.init(loras[i])
+            for _, batch in _batches(world, world.shards[i], world.device_toks[i], rng, local_steps):
+                loras[i], st, _ = steps[i](loras[i], st, p["slms"][i], batch)
+        avg = average_lora(loras)
+        loras = [jax.tree.map(jnp.copy, avg) for _ in loras]
+    merged = [
+        apply_lora(p["slms"][i], loras[i], cfg.lora_alpha)
+        for i in range(len(world.slms))
+    ]
+    res = _eval_all(world, merged)
+    comm = {
+        f"device-{i+1}": lora_param_fraction(loras[i], p["slms"][i])
+        for i in range(len(world.slms))
+    }
+    return {"metrics": res, "comm_fraction": comm}
+
+
+# ---------------------------------------------------------------------------
+def run_fedap(world: World) -> Dict:
+    cfg = world.cfg
+    p = world.copy_params()
+    opt = AdamW(learning_rate=cfg.lr)
+    rng = np.random.RandomState(cfg.seed + 6)
+    key = jax.random.key(cfg.seed + 6)
+    adapters = []
+    for m in world.slms:
+        key, k = jax.random.split(key)
+        adapters.append(init_adapters(m.cfg, k))
+
+    def make_step(model):
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def step(ad, opt_state, base, batch):
+            def loss_fn(a):
+                logits, _ = model.logits(merge_adapters(base, a), batch)
+                return cross_entropy(logits, batch["targets"], batch["loss_mask"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(ad)
+            new_ad, new_opt = opt.update(grads, opt_state, ad)
+            return new_ad, new_opt, loss
+
+        return step
+
+    steps = [make_step(m) for m in world.slms]
+    local_steps = cfg.dst_steps + cfg.saml_steps
+    for t in range(cfg.rounds):
+        for i in range(len(world.slms)):
+            st = opt.init(adapters[i])
+            for _, batch in _batches(world, world.shards[i], world.device_toks[i], rng, local_steps):
+                adapters[i], st, _ = steps[i](adapters[i], st, p["slms"][i], batch)
+        avg = average_lora(adapters)  # plain tree mean
+        adapters = [jax.tree.map(jnp.copy, avg) for _ in adapters]
+    merged = [merge_adapters(p["slms"][i], adapters[i]) for i in range(len(world.slms))]
+    res = _eval_all(world, merged)
+    comm = {
+        f"device-{i+1}": lora_param_fraction(adapters[i], p["slms"][i])
+        for i in range(len(world.slms))
+    }
+    return {"metrics": res, "comm_fraction": comm}
+
+
+# ---------------------------------------------------------------------------
+def _kd_step(model, opt, lora_alpha, direction_k: int = 0):
+    """LoRA SFT + full-vocab KL to a fixed teacher-logit tensor (aligned)."""
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(lora, opt_state, base, batch, teacher_logits, vocab_map, kd_weight):
+        def loss_fn(l):
+            logits, _ = model.logits(apply_lora(base, l, lora_alpha), batch)
+            ce = cross_entropy(logits, batch["targets"], batch["loss_mask"])
+            # teacher logits already gathered at aligned positions, in
+            # teacher vocab; move student logits onto teacher support by
+            # scattering student logits through the vocab map.
+            logq = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            logq_t = jnp.take_along_axis(
+                logq,
+                jnp.broadcast_to(
+                    vocab_map[None, None, :], teacher_logits.shape
+                ),
+                axis=-1,
+            )
+            logp = jax.nn.log_softmax(teacher_logits.astype(jnp.float32), axis=-1)
+            kl = jnp.sum(jnp.exp(logp) * (logp - logq_t), axis=-1)
+            kd = masked_mean(kl, batch["loss_mask"])
+            return (1 - kd_weight) * ce + kd_weight * kd
+
+        loss, grads = jax.value_and_grad(loss_fn)(lora)
+        new_lora, new_opt = opt.update(grads, opt_state, lora)
+        return new_lora, new_opt, loss
+
+    return step
+
+
+def run_fedcollm(world: World, proxy_cfg=None) -> Dict:
+    """Shared proxy SLM + server mutual KD (no DST, no pooling)."""
+    from repro.configs import get_arch
+    from repro.core.cotuning import _sized
+    from repro.models.model import build_model
+
+    cfg = world.cfg
+    p = world.copy_params()
+    opt = AdamW(learning_rate=cfg.lr)
+    rng = np.random.RandomState(cfg.seed + 7)
+    key = jax.random.key(cfg.seed + 7)
+    proxy_cfg = proxy_cfg or get_arch("paper-dpm")
+    proxy = build_model(_sized(proxy_cfg, world.server_tok))
+    key, k = jax.random.split(key)
+    proxy_base = proxy.init(k)
+    key, k = jax.random.split(key)
+    proxy_lora = init_lora(proxy.specs(), k, cfg.lora_rank)
+    slm_loras = []
+    for m in world.slms:
+        key, k = jax.random.split(key)
+        slm_loras.append(init_lora(m.specs(), k, cfg.lora_rank))
+    aligners = [TokenAligner(world.server_tok, t) for t in world.device_toks]
+
+    proxy_step = _lora_sft_step(proxy, opt, cfg.lora_alpha)
+    slm_steps = [_kd_step(m, opt, cfg.lora_alpha) for m in world.slms]
+    srv_saml = S.make_saml_step(proxy, world.llm, opt, S.SamlConfig(top_k=cfg.saml.top_k))
+    llm_lora = init_lora(world.llm.specs(), jax.random.key(cfg.seed + 8), cfg.lora_rank)
+
+    local_steps = cfg.dst_steps + cfg.saml_steps
+    for t in range(cfg.rounds):
+        uploads = []
+        for i, m in enumerate(world.slms):
+            # proxy LoRA SFT on device data (server tokenization)
+            lora_i = jax.tree.map(jnp.copy, proxy_lora)
+            st = opt.init(lora_i)
+            ds_p = QADataset(world.shards[i], world.server_tok, cfg.seq_len)
+            for idx, batch in _batches(world, world.shards[i], world.server_tok, rng, local_steps):
+                lora_i, st, _ = proxy_step(lora_i, st, proxy_base, batch)
+            uploads.append(lora_i)
+            # device SLM distills from the current proxy
+            st = opt.init(slm_loras[i])
+            proxy_params = apply_lora(proxy_base, lora_i, cfg.lora_alpha)
+            for idx, batch in _batches(world, world.shards[i], world.device_toks[i], rng, local_steps // 2 + 1):
+                samples = [world.shards[i][j] for j in idx]
+                enc_p = [ds_p.encode_sample(s) for s in samples]
+                batch_p = {k2: jnp.asarray(np.stack([e[k2] for e in enc_p])) for k2 in enc_p[0]}
+                t_logits, _ = jax.jit(proxy.logits)(proxy_params, batch_p)
+                pos = jnp.asarray(
+                    np.minimum(
+                        aligners[i].batch_positions([s.text for s in samples], cfg.seq_len, "b2a") + 1,
+                        cfg.seq_len - 1,
+                    )
+                )
+                t_al = jnp.take_along_axis(t_logits, pos[..., None], axis=1)
+                slm_loras[i], st, _ = slm_steps[i](
+                    slm_loras[i], st, p["slms"][i], batch, t_al,
+                    jnp.asarray(aligners[i].vocab_a2b), 0.5,
+                )
+        proxy_lora = average_lora(uploads)
+        # server mutual KD between proxy and LLM (identity alignment)
+        loras = {"p": proxy_lora, "l": llm_lora}
+        st = opt.init(loras)
+        ds_s = QADataset(world.server_samples, world.server_tok, cfg.seq_len)
+        for idx, batch in _batches(world, world.server_samples, world.server_tok, rng, cfg.saml_steps):
+            pos = jnp.broadcast_to(
+                jnp.arange(cfg.seq_len)[None], (cfg.batch_size, cfg.seq_len)
+            )
+            ident = jnp.arange(world.server_tok.vocab_size, dtype=jnp.int32)
+            align = {"pos_p2l": pos, "pos_l2p": pos, "vm_l2p": ident, "vm_p2l": ident}
+            loras, st, _ = srv_saml(loras, st, proxy_base, p["llm"], {}, batch, batch, align)
+        proxy_lora, llm_lora = loras["p"], loras["l"]
+
+    merged = [
+        apply_lora(p["slms"][i], slm_loras[i], cfg.lora_alpha)
+        for i in range(len(world.slms))
+    ]
+    res = _eval_all(world, merged, apply_lora(p["llm"], llm_lora, cfg.lora_alpha))
+    comm = {
+        f"device-{i+1}": lora_param_fraction(uploads[i], p["slms"][i])
+        + lora_param_fraction(proxy_lora, p["slms"][i])
+        for i in range(len(world.slms))
+    }
+    return {"metrics": res, "comm_fraction": comm}
+
+
+# ---------------------------------------------------------------------------
+def run_fedmkt(world: World) -> Dict:
+    """Proxy-free logit exchange: devices <-> server LLM, token-aligned."""
+    cfg = world.cfg
+    p = world.copy_params()
+    opt = AdamW(learning_rate=cfg.lr)
+    rng = np.random.RandomState(cfg.seed + 9)
+    key = jax.random.key(cfg.seed + 9)
+    slm_loras, llm_lora = [], init_lora(world.llm.specs(), key, cfg.lora_rank)
+    for m in world.slms:
+        key, k = jax.random.split(key)
+        slm_loras.append(init_lora(m.specs(), k, cfg.lora_rank))
+    aligners = [TokenAligner(world.server_tok, t) for t in world.device_toks]
+    slm_steps = [_kd_step(m, opt, cfg.lora_alpha) for m in world.slms]
+    llm_step = _kd_step(world.llm, opt, cfg.lora_alpha)
+    comm_bytes = 0.0
+
+    local_steps = cfg.dst_steps + cfg.saml_steps
+    for t in range(cfg.rounds):
+        for i, m in enumerate(world.slms):
+            ds_s = QADataset(world.shards[i], world.server_tok, cfg.seq_len)
+            # --- device -> server: SLM logits teach the LLM
+            st_l = opt.init(llm_lora)
+            for idx, batch in _batches(world, world.shards[i], world.device_toks[i], rng, local_steps // 2 + 1):
+                samples = [world.shards[i][j] for j in idx]
+                slm_params = apply_lora(p["slms"][i], slm_loras[i], cfg.lora_alpha)
+                s_logits, _ = jax.jit(m.logits)(slm_params, batch)
+                comm_bytes += s_logits.size * 2
+                enc_s = [ds_s.encode_sample(s) for s in samples]
+                batch_s = {k2: jnp.asarray(np.stack([e[k2] for e in enc_s])) for k2 in enc_s[0]}
+                pos = jnp.asarray(
+                    np.minimum(
+                        aligners[i].batch_positions([s.text for s in samples], cfg.seq_len, "a2b") + 1,
+                        cfg.seq_len - 1,
+                    )
+                )
+                s_al = jnp.take_along_axis(s_logits, pos[..., None], axis=1)
+                llm_lora, st_l, _ = llm_step(
+                    llm_lora, st_l, p["llm"], batch_s, s_al,
+                    jnp.asarray(aligners[i].vocab_b2a), 0.3,
+                )
+            # --- server -> device: LLM logits teach the SLM
+            st_s = opt.init(slm_loras[i])
+            llm_params = apply_lora(p["llm"], llm_lora, cfg.lora_alpha)
+            for idx, batch in _batches(world, world.shards[i], world.device_toks[i], rng, local_steps // 2 + 1):
+                samples = [world.shards[i][j] for j in idx]
+                enc_s = [ds_s.encode_sample(s) for s in samples]
+                batch_s = {k2: jnp.asarray(np.stack([e[k2] for e in enc_s])) for k2 in enc_s[0]}
+                t_logits, _ = jax.jit(world.llm.logits)(llm_params, batch_s)
+                comm_bytes += t_logits.size * 2
+                pos = jnp.asarray(
+                    np.minimum(
+                        aligners[i].batch_positions([s.text for s in samples], cfg.seq_len, "b2a") + 1,
+                        cfg.seq_len - 1,
+                    )
+                )
+                t_al = jnp.take_along_axis(t_logits, pos[..., None], axis=1)
+                slm_loras[i], st_s, _ = slm_steps[i](
+                    slm_loras[i], st_s, p["slms"][i], batch, t_al,
+                    jnp.asarray(aligners[i].vocab_a2b), 0.5,
+                )
+    merged = [
+        apply_lora(p["slms"][i], slm_loras[i], cfg.lora_alpha)
+        for i in range(len(world.slms))
+    ]
+    res = _eval_all(world, merged, apply_lora(p["llm"], llm_lora, cfg.lora_alpha))
+    # FedMKT transmits logits; express as param-equivalent fraction
+    comm = {}
+    from repro.common.module import param_count
+
+    for i in range(len(world.slms)):
+        n_dev = param_count(p["slms"][i])
+        comm[f"device-{i+1}"] = (comm_bytes / 2 / max(len(world.slms), 1)) / n_dev
+    return {"metrics": res, "comm_fraction": comm}

@@ -1,0 +1,86 @@
+"""DPM initialization by knowledge distillation — Co-PLMs §4.1 (MiniLLM).
+
+MiniLLM's objective is the *reverse* KL, KL(q_student || p_teacher),
+optimized with policy-gradient over student generations. At CPU scale we
+keep the objective and drop the sampling machinery: token-level reverse KL
+on teacher-forced data plus a CE anchor (the single-step policy-gradient
+estimate of sequence-level reverse KL under teacher forcing). DESIGN.md §5
+records the approximation. Teacher and DPM share the server tokenizer, so
+no alignment is needed here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pooling import masked_mean
+from repro.models.model import Model
+from repro.models.transformer import cross_entropy
+
+Params = Dict
+
+
+def reverse_kl(student_logits: jax.Array, teacher_logits: jax.Array,
+               mask: jax.Array) -> jax.Array:
+    """KL(q_student || p_teacher), masked mean over positions."""
+    logq = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    logp = jax.nn.log_softmax(
+        jax.lax.stop_gradient(teacher_logits).astype(jnp.float32), axis=-1
+    )
+    kl = jnp.sum(jnp.exp(logq) * (logq - logp), axis=-1)
+    return masked_mean(kl, mask)
+
+
+def distill_loss(
+    student: Model, teacher: Model, s_params: Params, t_params: Params,
+    batch: Dict, ce_weight: float = 0.3,
+) -> Tuple[jax.Array, Dict]:
+    s_logits, _ = student.logits(s_params, batch)
+    t_logits, _ = teacher.logits(t_params, batch)
+    rkl = reverse_kl(s_logits, t_logits, batch["loss_mask"])
+    ce = cross_entropy(s_logits, batch["targets"], batch["loss_mask"])
+    loss = (1 - ce_weight) * rkl + ce_weight * ce
+    return loss, {"rkl": rkl, "ce": ce, "loss": loss}
+
+
+def make_distill_step(student: Model, teacher: Model, optimizer):
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(s_params, opt_state, t_params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: distill_loss(student, teacher, p, t_params, batch),
+            has_aux=True,
+        )(s_params)
+        new_params, new_opt = optimizer.update(grads, opt_state, s_params)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def distill_dpm(
+    student: Model,
+    teacher: Model,
+    t_params: Params,
+    batches,
+    *,
+    key: jax.Array,
+    steps: int = 50,
+    lr: float = 3e-4,
+) -> Params:
+    """f_kd(M) — Eq. (4): initialize the DPM from the server LLM."""
+    from repro.optim.adamw import AdamW
+
+    opt = AdamW(learning_rate=lr, weight_decay=0.01)
+    s_params = student.init(key)
+    opt_state = opt.init(s_params)
+    step_fn = make_distill_step(student, teacher, opt)
+    it = iter(batches)
+    for i in range(steps):
+        try:
+            batch = next(it)
+        except StopIteration:
+            break
+        s_params, opt_state, _ = step_fn(s_params, opt_state, t_params, batch)
+    return s_params

@@ -1,0 +1,100 @@
+"""QA evaluation: greedy decoding + Rouge-L / Exact-Match (Co-PLMs §5.1).
+
+Decoding re-runs the full-sequence forward per generated token (no cache) —
+O(n^2) but trivially correct, and the eval models are the reduced CPU
+variants. The production decode path (serve_step + cache) is exercised by
+launch/serve.py and the dry-runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import QASample
+from repro.data.tokenizer import ToyTokenizer
+from repro.models.model import Model
+
+Params = Dict
+
+
+def rouge_l(pred: str, ref: str) -> float:
+    """LCS-based Rouge-L F1 on whitespace tokens."""
+    p, r = pred.split(), ref.split()
+    if not p or not r:
+        return 0.0
+    lp, lr = len(p), len(r)
+    dp = np.zeros((lp + 1, lr + 1), np.int32)
+    for i in range(1, lp + 1):
+        for j in range(1, lr + 1):
+            dp[i, j] = (
+                dp[i - 1, j - 1] + 1 if p[i - 1] == r[j - 1]
+                else max(dp[i - 1, j], dp[i, j - 1])
+            )
+    lcs = dp[lp, lr]
+    if lcs == 0:
+        return 0.0
+    prec, rec = lcs / lp, lcs / lr
+    return 2 * prec * rec / (prec + rec)
+
+
+def exact_match(pred: str, ref: str) -> float:
+    return float(pred.strip().lower() == ref.strip().lower())
+
+
+def greedy_generate(
+    model: Model,
+    params: Params,
+    tok: ToyTokenizer,
+    prompts: Sequence[str],
+    max_new: int = 12,
+    max_len: int = 64,
+) -> List[str]:
+    """Batched greedy decode by repeated full-sequence forward."""
+    enc = [tok.encode(p, bos=True)[: max_len - max_new] for p in prompts]
+    width = max(len(e) for e in enc)
+    b = len(enc)
+    tokens = np.full((b, width + max_new), tok.pad_id, np.int32)
+    lens = np.asarray([len(e) for e in enc])
+    for i, e in enumerate(enc):
+        tokens[i, : len(e)] = e
+    tokens = jnp.asarray(tokens)
+
+    @jax.jit
+    def next_token(toks):
+        logits, _ = model.logits(params, {"tokens": toks})
+        return jnp.argmax(logits, axis=-1)  # (B,S)
+
+    done = np.zeros(b, bool)
+    for step in range(max_new):
+        preds = np.asarray(next_token(tokens))
+        cur = lens + step
+        nxt = preds[np.arange(b), cur - 1]
+        nxt = np.where(done, tok.pad_id, nxt)
+        done |= nxt == tok.eos_id
+        tokens = tokens.at[jnp.arange(b), cur].set(jnp.asarray(nxt))
+        if done.all():
+            break
+    out = []
+    arr = np.asarray(tokens)
+    for i in range(b):
+        gen = arr[i, lens[i] : lens[i] + max_new]
+        gen = gen[(gen != tok.pad_id) & (gen != tok.eos_id)]
+        out.append(tok.decode(gen))
+    return out
+
+
+def evaluate_qa(
+    model: Model,
+    params: Params,
+    tok: ToyTokenizer,
+    samples: Sequence[QASample],
+    max_new: int = 12,
+) -> Dict[str, float]:
+    prompts = [f"question : {s.question} answer :" for s in samples]
+    preds = greedy_generate(model, params, tok, prompts, max_new=max_new)
+    rl = float(np.mean([rouge_l(p, s.answer) for p, s in zip(preds, samples)]))
+    em = float(np.mean([exact_match(p, s.answer) for p, s in zip(preds, samples)]))
+    return {"rouge_l": 100 * rl, "em": 100 * em}

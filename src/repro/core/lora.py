@@ -1,0 +1,136 @@
+"""LoRA (Hu et al., ICLR'22) over ParamSpec trees — Co-PLMs Eq. (2)-(3).
+
+LoRA params live in a *separate* tree mirroring the targeted subtree of the
+base model; :func:`apply_lora` produces the merged parameter tree that model
+forwards consume unchanged (W* = W0 + (alpha/r) * A @ B). Only the LoRA tree
+is trained / uploaded / aggregated in the co-tuning loop — that is the whole
+communication story of the paper (Fig. 3). The runtime-fused alternative
+(y = xW + (xA)B without materializing the delta) is `kernels/lora_matmul`.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.module import ParamSpec, materialize, normal_init, zeros_init
+
+Params = Dict
+
+# default targets: the attention + mlp projection matrices (>=2D weights)
+DEFAULT_TARGETS = (
+    r".*attn/w[qkvo]$",
+    r".*attn/wd?q$",
+    r".*(mlp|shared)/(gate|up|down)/w$",
+    r".*mixer/(wq|wk|wv|up|down)$",
+)
+
+
+def _iter_specs(tree: Params, prefix: str = ""):
+    if isinstance(tree, ParamSpec):
+        yield prefix, tree
+        return
+    for k, v in tree.items():
+        yield from _iter_specs(v, f"{prefix}/{k}" if prefix else k)
+
+
+def _matches(path: str, targets: Sequence[str]) -> bool:
+    return any(re.match(t, path) for t in targets)
+
+
+def _set_path(tree: Params, path: str, value) -> None:
+    keys = path.split("/")
+    for k in keys[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[keys[-1]] = value
+
+
+def lora_specs(
+    model_specs: Params,
+    rank: int = 8,
+    targets: Sequence[str] = DEFAULT_TARGETS,
+) -> Params:
+    """Build the LoRA ParamSpec tree for every matching >=2D param.
+
+    For a target of shape (d0, d1, ..., dn) the factorization is
+    A (d0, r) x B (r, d1*...*dn), reshaped back on merge. Stacked (scanned)
+    params keep their leading 'layers' axis on both factors.
+    """
+    out: Params = {}
+    for path, spec in _iter_specs(model_specs):
+        if len(spec.shape) < 2 or not _matches(path, targets):
+            continue
+        stacked = spec.axes and spec.axes[0] == "layers"
+        if stacked:
+            n, d0, rest = spec.shape[0], spec.shape[1], spec.shape[2:]
+            a_shape, b_shape = (n, d0, rank), (n, rank, int(np.prod(rest)))
+            a_axes = ("layers", spec.axes[1], "lora_rank")
+            b_axes = ("layers", "lora_rank", None)
+        else:
+            d0, rest = spec.shape[0], spec.shape[1:]
+            if not rest:
+                continue
+            a_shape, b_shape = (d0, rank), (rank, int(np.prod(rest)))
+            a_axes = (spec.axes[0], "lora_rank")
+            b_axes = ("lora_rank", None)
+        _set_path(
+            out,
+            path,
+            {
+                "a": ParamSpec(a_shape, normal_init(1.0 / rank), a_axes),
+                "b": ParamSpec(b_shape, zeros_init(), b_axes),
+            },
+        )
+    return out
+
+
+def init_lora(model_specs: Params, key: jax.Array, rank: int = 8,
+              targets: Sequence[str] = DEFAULT_TARGETS, dtype=jnp.float32) -> Params:
+    return materialize(lora_specs(model_specs, rank, targets), key, dtype)
+
+
+def _is_lora_leaf(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {"a", "b"}
+
+
+def apply_lora(base: Params, lora: Params, alpha: float = 16.0) -> Params:
+    """Merged params: W* = W0 + (alpha/r) * (A @ B).reshape(W0.shape)."""
+
+    def merge(sub_base: Params, sub_lora: Params) -> Params:
+        out = {}
+        for k, v in sub_base.items():
+            if k in sub_lora:
+                lv = sub_lora[k]
+                if _is_lora_leaf(lv):
+                    a, b = lv["a"], lv["b"]
+                    r = a.shape[-1]
+                    if a.ndim == 3:  # stacked: (n,d0,r) x (n,r,prod)
+                        delta = jnp.einsum("ndr,nrp->ndp", a, b)
+                    else:
+                        delta = a @ b
+                    delta = delta.reshape(v.shape) * (alpha / r)
+                    out[k] = (v.astype(jnp.float32) + delta.astype(jnp.float32)).astype(
+                        v.dtype
+                    )
+                else:
+                    out[k] = merge(v, lv)
+            else:
+                out[k] = v
+        return out
+
+    return merge(base, lora)
+
+
+def average_lora(trees: Sequence[Params]) -> Params:
+    """FedAvg of LoRA trees (Algorithm 1 line 12)."""
+    return jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
+
+
+def lora_param_fraction(lora: Params, base: Params) -> float:
+    """Fraction of transmitted params vs total model params (Fig. 3 metric)."""
+    n_l = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(lora))
+    n_b = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(base))
+    return n_l / max(n_b, 1)

@@ -1,0 +1,145 @@
+"""Output-logits pooling — Co-PLMs §4.3 Eq. (6).
+
+Each vocab-sized logit vector is reduced to K+1 dims: its top-K components
+plus ONE aggregate of the tail. We aggregate with logsumexp so the pooled
+softmax is exactly the coarsened distribution (all tail mass in one slot) —
+the unique mass-preserving choice, which keeps the pooled KL finite (no
+divergence singularities) and a lower bound of the full KL (log-sum
+inequality). See DESIGN.md §5.
+
+For cross-model KL the support must be shared: pooling is computed **on the
+teacher's top-K token ids**, moved through the vocab map when the
+vocabularies differ, and both models' tails absorb everything else.
+
+`kernels/topk_pool` is the Pallas TPU kernel of the same op; this module is
+the jnp reference used by the CPU-scale experiments.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_diff_exp(lse_all: jax.Array, lse_sel: jax.Array) -> jax.Array:
+    """log(exp(lse_all) - exp(lse_sel)), stable; both inputs fp32."""
+    delta = lse_sel - lse_all  # <= 0
+    return lse_all + jnp.log1p(-jnp.exp(jnp.minimum(delta, -1e-7)))
+
+
+def distributed_top_k(y: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Two-stage top-k over a (possibly vocab-sharded) last dim.
+
+    Stage 1 takes a per-shard top-k (shard-local under the 'vocab_shards'
+    constraint); stage 2 merges the n_shards*k candidates. Under a TP mesh
+    this avoids all-gathering the FULL (B,S,V) logits that a plain
+    lax.top_k forces (§Perf C1 — 450GB/device of all-gather in the SAML
+    pair step); without a mesh it degrades to exactly lax.top_k.
+    """
+    from repro.common.sharding import current_mesh, logical_constraint
+
+    mesh = current_mesh()
+    v = y.shape[-1]
+    n = 1
+    if mesh is not None and "model" in mesh.axis_names:
+        n = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    if n <= 1 or v % n != 0 or v // n < k:
+        return jax.lax.top_k(y.astype(jnp.float32), k)
+    from jax.sharding import PartitionSpec as P
+
+    vloc = v // n
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = 1
+    for a in batch_axes:
+        nb *= sizes[a]
+    if y.shape[0] % nb != 0:
+        batch_axes = ()
+    yr = y.reshape(*y.shape[:-1], n, vloc)
+
+    # stage 1 INSIDE shard_map: XLA's sort partitioner otherwise replicates
+    # the whole (B,S,n,vloc) operand (422GB of all-gather measured on the
+    # SAML pair step — §Perf C3)
+    def local_topk(ylocal):
+        col = jax.lax.axis_index("model")
+        vv, ii = jax.lax.top_k(ylocal.astype(jnp.float32), k)
+        return vv, (ii + (col * vloc).astype(jnp.int32))
+
+    spec_in = P(batch_axes if batch_axes else None, *([None] * (y.ndim - 2)), "model", None)
+    spec_out = P(batch_axes if batch_axes else None, *([None] * (y.ndim - 2)), "model", None)
+    v1, i1 = jax.shard_map(
+        local_topk, mesh=mesh, in_specs=(spec_in,), out_specs=(spec_out, spec_out),
+    )(yr)
+    v1 = v1.reshape(*y.shape[:-1], n * k)  # (.., n*k) — tiny gather
+    i1 = i1.reshape(*y.shape[:-1], n * k)
+    v2, pos = jax.lax.top_k(v1, k)  # merge tiny candidate set
+    return v2, jnp.take_along_axis(i1, pos, axis=-1)
+
+
+def pool_logits(y: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """y (..., V) -> (pooled (..., K+1) log-space, indices (..., K))."""
+    yf = y.astype(jnp.float32)
+    topv, topi = jax.lax.top_k(yf, k)
+    lse_all = jax.nn.logsumexp(yf, axis=-1)
+    lse_sel = jax.nn.logsumexp(topv, axis=-1)
+    tail = _log_diff_exp(lse_all, lse_sel)
+    return jnp.concatenate([topv, tail[..., None]], axis=-1), topi
+
+
+def pool_on_support(y: jax.Array, support: jax.Array) -> jax.Array:
+    """Pool y (..., V) on given token ids support (..., K) -> (..., K+1).
+
+    Selected = y at the support ids; tail = logsumexp of everything else.
+    Duplicate support entries (possible after a vocab map) slightly
+    over-count selected mass for the tail; _log_diff_exp's clamp keeps the
+    degenerate all-mass case finite. Recorded as an approximation.
+
+    Under a TP mesh the gather + logsumexp run SHARD-LOCALLY over the
+    vocab shards and combine over a tiny (.., n_shards, K) tensor — a plain
+    take_along_axis over the sharded vocab dim forced XLA to all-gather the
+    full (B,S,V) logits, 4x per SAML step (§Perf C2).
+    """
+    from repro.common.sharding import current_mesh, logical_constraint
+
+    yf = y.astype(jnp.float32)
+    v = y.shape[-1]
+    mesh = current_mesh()
+    n = 1
+    if mesh is not None and "model" in mesh.axis_names:
+        n = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    if n > 1 and v % n == 0:
+        vloc = v // n
+        yr = yf.reshape(*y.shape[:-1], n, vloc)
+        yr = logical_constraint(
+            yr, ("batch",) + (None,) * (y.ndim - 2) + ("vocab_shards", None)
+        )
+        offs = (jnp.arange(n, dtype=support.dtype) * vloc)
+        ids_loc = support[..., None, :] - offs[..., :, None]  # (.., n, K)
+        valid = (ids_loc >= 0) & (ids_loc < vloc)
+        sel_nk = jnp.take_along_axis(yr, jnp.clip(ids_loc, 0, vloc - 1), axis=-1)
+        sel_nk = jnp.where(valid, sel_nk, -jnp.inf)
+        sel = jnp.max(sel_nk, axis=-2)  # each id lives in exactly one shard
+        lse_loc = jax.nn.logsumexp(yr, axis=-1)  # (.., n) shard-local
+        lse_all = jax.nn.logsumexp(lse_loc, axis=-1)
+    else:
+        sel = jnp.take_along_axis(yf, support, axis=-1)  # (..., K)
+        lse_all = jax.nn.logsumexp(yf, axis=-1)
+    lse_sel = jax.nn.logsumexp(sel, axis=-1)
+    tail = _log_diff_exp(lse_all, jnp.minimum(lse_sel, lse_all - 1e-6))
+    return jnp.concatenate([sel, tail[..., None]], axis=-1)
+
+
+def pooled_kl(p_logits: jax.Array, q_logits: jax.Array) -> jax.Array:
+    """KL(softmax(p) || softmax(q)) over the pooled K+1 slots, mean over
+    leading dims. Eq. (7)."""
+    logp = jax.nn.log_softmax(p_logits.astype(jnp.float32), axis=-1)
+    logq = jax.nn.log_softmax(q_logits.astype(jnp.float32), axis=-1)
+    kl = jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)
+    return kl
+
+
+def masked_mean(x: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    if mask is None:
+        return jnp.mean(x)
+    return jnp.sum(x * mask) / jnp.clip(jnp.sum(mask), 1.0)

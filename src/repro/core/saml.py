@@ -1,0 +1,143 @@
+"""Structure-Agnostic Mutual Learning — Co-PLMs §4.3, Eqs. (7)-(9).
+
+One SAML pair = (DPM, language model) trained jointly on the same device
+data. Per step:
+
+1. forward both models on their own tokenizations of the same texts;
+2. align positions across tokenizers (host-precomputed gather indices);
+3. pick the teacher's top-K token ids, map them through the vocab map,
+   pool both models' logits on that shared support (+ tail logsumexp);
+4. bidirectional pooled KL (each direction stops gradients through its
+   teacher) mixed with the SFT loss by alpha / beta;
+5. gradients flow ONLY into the two LoRA trees (and nothing else).
+
+The pair step is a single jit program — on the production mesh both models
+live on the same device grid with independent sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import merge_adapters
+from repro.core.lora import apply_lora
+from repro.core.pooling import masked_mean, pool_on_support, pooled_kl
+from repro.models.model import Model
+from repro.models.transformer import cross_entropy
+
+Params = Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SamlConfig:
+    alpha: float = 0.5  # Eq. 8: knowledge weight for the DPM loss
+    beta: float = 0.5  # Eq. 9: knowledge weight for the LM loss
+    top_k: int = 32  # logits-pooling K
+    lora_alpha: float = 16.0
+
+
+def _kt_direction(
+    logits_teacher: jax.Array,  # (B,St,Vt) — will be stop-gradient'ed
+    logits_student: jax.Array,  # (B,Ss,Vs)
+    pos_s2t: jax.Array,  # (B,Ss) aligned teacher position per student pos
+    vocab_t2s: jax.Array,  # (Vt,) teacher id -> student id
+    mask_student: jax.Array,  # (B,Ss)
+    k: int,
+) -> jax.Array:
+    """Pooled KL(teacher || student) at aligned positions (one direction)."""
+    from repro.core.pooling import distributed_top_k
+
+    yt = jax.lax.stop_gradient(logits_teacher)
+    # teacher logits gathered at each student position's aligned teacher pos
+    yt_al = jnp.take_along_axis(yt, pos_s2t[..., None], axis=1)  # (B,Ss,Vt)
+    _, ids_t = distributed_top_k(yt_al, k)  # teacher support (sharded topk)
+    ids_s = vocab_t2s[ids_t]  # moved into student vocab
+    pooled_t = pool_on_support(yt_al, ids_t)
+    pooled_s = pool_on_support(logits_student, ids_s)
+    kl = pooled_kl(pooled_t, pooled_s)  # (B,Ss)
+    return masked_mean(kl, mask_student)
+
+
+def saml_pair_losses(
+    model_p: Model,
+    model_l: Model,
+    base_p: Params,
+    base_l: Params,
+    lora_p: Params,
+    lora_l: Params,
+    adapters_p: Params,
+    batch_p: Dict,
+    batch_l: Dict,
+    align: Dict,  # {"pos_p2l","pos_l2p" (B,S), "vm_l2p","vm_p2l" (V,)}
+    cfg: SamlConfig,
+) -> Tuple[jax.Array, Dict]:
+    """Total SAML loss (dpm + lm) and metrics. Differentiate w.r.t.
+    (lora_p, lora_l) only."""
+    params_p = apply_lora(merge_adapters(base_p, adapters_p), lora_p, cfg.lora_alpha)
+    params_l = apply_lora(base_l, lora_l, cfg.lora_alpha)
+    logits_p, _ = model_p.logits(params_p, batch_p)
+    logits_l, _ = model_l.logits(params_l, batch_l)
+
+    # Eq. 8 — DPM student, LM teacher
+    kt_p = _kt_direction(
+        logits_l, logits_p, align["pos_p2l"], align["vm_l2p"],
+        batch_p["loss_mask"], cfg.top_k,
+    )
+    sft_p = cross_entropy(logits_p, batch_p["targets"], batch_p["loss_mask"])
+    loss_p = cfg.alpha * kt_p + (1 - cfg.alpha) * sft_p
+
+    # Eq. 9 — LM student, DPM teacher
+    kt_l = _kt_direction(
+        logits_p, logits_l, align["pos_l2p"], align["vm_p2l"],
+        batch_l["loss_mask"], cfg.top_k,
+    )
+    sft_l = cross_entropy(logits_l, batch_l["targets"], batch_l["loss_mask"])
+    loss_l = cfg.beta * kt_l + (1 - cfg.beta) * sft_l
+
+    total = loss_p + loss_l
+    metrics = {
+        "kt_dpm": kt_p, "sft_dpm": sft_p, "loss_dpm": loss_p,
+        "kt_lm": kt_l, "sft_lm": sft_l, "loss_lm": loss_l,
+    }
+    return total, metrics
+
+
+def make_saml_step(model_p: Model, model_l: Model, optimizer, cfg: SamlConfig):
+    """jit'd SAML pair step: updates both LoRA trees with one program."""
+
+    def loss_fn(loras, base_p, base_l, adapters_p, batch_p, batch_l, align):
+        return saml_pair_losses(
+            model_p, model_l, base_p, base_l, loras["p"], loras["l"],
+            adapters_p, batch_p, batch_l, align, cfg,
+        )
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(loras, opt_state, base_p, base_l, adapters_p, batch_p, batch_l, align):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            loras, base_p, base_l, adapters_p, batch_p, batch_l, align
+        )
+        new_loras, new_opt = optimizer.update(grads, opt_state, loras)
+        return new_loras, new_opt, metrics
+
+    return step
+
+
+def make_dst_step(model_p: Model, optimizer, lora_alpha: float = 16.0):
+    """jit'd DST step (Eq. 5): trains ONLY the domain adapters via SFT."""
+
+    def loss_fn(adapters, base_p, lora_p, batch):
+        params = apply_lora(merge_adapters(base_p, adapters), lora_p, lora_alpha)
+        logits, _ = model_p.logits(params, batch)
+        return cross_entropy(logits, batch["targets"], batch["loss_mask"])
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(adapters, opt_state, base_p, lora_p, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(adapters, base_p, lora_p, batch)
+        new_adapters, new_opt = optimizer.update(grads, opt_state, adapters)
+        return new_adapters, new_opt, loss
+
+    return step

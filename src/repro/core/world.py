@@ -1,0 +1,96 @@
+"""Shared experimental world for Co-PLMs vs the five baselines (§5.1).
+
+Everything that must be HELD FIXED across methods — corpus, tokenizers,
+Dirichlet shards, 'pretrained' model parameters, eval set — is built once
+here and deep-copied into each method's run, so Table-1-style comparisons
+differ only in the collaborative-training algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.cotuning import CoTuneConfig, _sized, sft
+from repro.data.partition import dirichlet_partition, uniform_sample
+from repro.data.pipeline import QADataset
+from repro.data.synthetic import QASample, generate_corpus
+from repro.data.tokenizer import ToyTokenizer, build_tokenizer
+from repro.models.model import Model, build_model
+
+Params = Dict
+
+
+@dataclasses.dataclass
+class World:
+    cfg: CoTuneConfig
+    corpus: List[QASample]
+    server_tok: ToyTokenizer
+    device_toks: List[ToyTokenizer]
+    shards: List[List[QASample]]
+    server_samples: List[QASample]
+    eval_samples: List[QASample]
+    llm: Model
+    llm_params: Params
+    slms: List[Model]
+    slm_params: List[Params]
+
+    @staticmethod
+    def build(
+        slm_cfgs: Sequence[ModelConfig],
+        llm_cfg: ModelConfig,
+        cfg: CoTuneConfig,
+        *,
+        hetero_tokenizers: bool = True,
+    ) -> "World":
+        rng = jax.random.key(cfg.seed)
+        corpus = generate_corpus(400, seed=cfg.seed)
+        texts = [s.text for s in corpus]
+        server_tok = build_tokenizer("server", texts, max_piece=12, budget=1024)
+        variants = [
+            build_tokenizer("edge-a", texts, max_piece=4, budget=512),
+            build_tokenizer("edge-b", texts, max_piece=7, budget=768),
+            build_tokenizer("edge-c", texts, max_piece=10, budget=640),
+        ]
+        n = len(slm_cfgs)
+        device_toks = [
+            variants[i % len(variants)] if hetero_tokenizers else server_tok
+            for i in range(n)
+        ]
+        shards = dirichlet_partition(
+            corpus, n, cfg.lam, seed=cfg.seed, samples_per_device=cfg.samples_per_client
+        )
+        server_samples = uniform_sample(corpus, cfg.samples_per_client, cfg.seed + 1)
+        eval_samples = uniform_sample(corpus, cfg.n_eval, cfg.seed + 2)
+
+        k, rng = jax.random.split(rng)
+        llm = build_model(_sized(llm_cfg, server_tok))
+        llm_params = sft(
+            llm, llm.init(k), QADataset(server_samples, server_tok, cfg.seq_len),
+            cfg.pretrain_steps, cfg, seed=11,
+        )
+        slms, slm_params = [], []
+        for i, scfg in enumerate(slm_cfgs):
+            k, rng = jax.random.split(rng)
+            m = build_model(_sized(scfg, device_toks[i]))
+            p = sft(
+                m, m.init(k), QADataset(shards[i], device_toks[i], cfg.seq_len),
+                cfg.pretrain_steps, cfg, seed=13 + i,
+            )
+            slms.append(m)
+            slm_params.append(p)
+        return World(
+            cfg=cfg, corpus=corpus, server_tok=server_tok, device_toks=device_toks,
+            shards=shards, server_samples=server_samples, eval_samples=eval_samples,
+            llm=llm, llm_params=llm_params, slms=slms, slm_params=slm_params,
+        )
+
+    def copy_params(self) -> Dict:
+        cp = lambda t: jax.tree.map(jnp.copy, t)
+        return {
+            "llm": cp(self.llm_params),
+            "slms": [cp(p) for p in self.slm_params],
+        }

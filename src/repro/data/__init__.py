@@ -1,0 +1,4 @@
+from repro.data.tokenizer import ToyTokenizer, build_tokenizer
+from repro.data.synthetic import DOMAINS, generate_corpus, QASample
+from repro.data.partition import dirichlet_partition
+from repro.data.pipeline import QADataset, make_batches

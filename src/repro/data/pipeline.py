@@ -1,0 +1,65 @@
+"""Tokenize/pack/batch pipeline for the QA task.
+
+Loss is masked to the answer span (instruction-tuning convention). Each
+batch also carries the raw sample indices so SAML can align the *same*
+underlying text across two tokenizers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Sequence
+
+import numpy as np
+
+from repro.data.synthetic import QASample
+from repro.data.tokenizer import ToyTokenizer
+
+
+@dataclasses.dataclass
+class QADataset:
+    samples: List[QASample]
+    tokenizer: ToyTokenizer
+    seq_len: int = 64
+
+    def encode_sample(self, s: QASample) -> Dict[str, np.ndarray]:
+        tok = self.tokenizer
+        prompt = tok.encode(f"question : {s.question} answer :", bos=True)
+        answer = tok.encode(" " + s.answer, eos=True)
+        ids = (prompt + answer)[: self.seq_len + 1]
+        mask = ([0.0] * len(prompt) + [1.0] * len(answer))[: self.seq_len + 1]
+        pad = self.seq_len + 1 - len(ids)
+        ids = ids + [tok.pad_id] * pad
+        mask = mask + [0.0] * pad
+        ids_arr = np.asarray(ids, np.int32)
+        return {
+            "tokens": ids_arr[:-1],
+            "targets": ids_arr[1:],
+            "loss_mask": np.asarray(mask[1:], np.float32),
+        }
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+
+def make_batches(
+    ds: QADataset,
+    batch_size: int,
+    *,
+    seed: int = 0,
+    epochs: int = 1,
+    drop_last: bool = True,
+) -> Iterator[Dict[str, np.ndarray]]:
+    rng = np.random.RandomState(seed)
+    n = len(ds.samples)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for start in range(0, n - (batch_size - 1 if drop_last else 0), batch_size):
+            idx = order[start : start + batch_size]
+            if len(idx) < batch_size and drop_last:
+                break
+            enc = [ds.encode_sample(ds.samples[i]) for i in idx]
+            batch = {
+                k: np.stack([e[k] for e in enc]) for k in enc[0]
+            }
+            batch["sample_idx"] = np.asarray(idx, np.int32)
+            yield batch

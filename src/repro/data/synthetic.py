@@ -1,0 +1,107 @@
+"""Synthetic multi-domain QA corpus (SNI/MMLU stand-in — DESIGN.md §5).
+
+Eight domains with disjoint entity tables and templates. Each domain has a
+*learnable* deterministic mapping (entity -> answer) so that (a) standalone
+SFT can fit it, (b) domain skew matters (Dirichlet partition), and (c)
+cross-domain knowledge transfer through the DPM is measurable — the same
+statistics the paper's SNI/MMLU experiments manipulate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Sequence
+
+DOMAINS = (
+    "arithmetic",
+    "geography",
+    "chemistry",
+    "history",
+    "grammar",
+    "astronomy",
+    "economics",
+    "biology",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QASample:
+    domain: str
+    question: str
+    answer: str
+
+    @property
+    def text(self) -> str:
+        return f"question : {self.question} answer : {self.answer}"
+
+
+_NAMES = [
+    "velor", "quint", "marzen", "tolva", "brimak", "suvand", "ketrio", "palzor",
+    "endira", "wostel", "yarrun", "cablix", "dorvan", "fenwick", "galtor", "hexley",
+    "ivonne", "jaspar", "korvin", "lumet", "mirelda", "norvell", "ostred", "pintor",
+]
+_UNITS = ["grams", "meters", "liters", "volts", "watts", "pascals"]
+
+
+def _entity(rng: random.Random) -> str:
+    return rng.choice(_NAMES) + rng.choice(["ia", "or", "um", "an", "ese", "ix"])
+
+
+def _domain_table(domain: str, n: int = 64) -> Dict[str, str]:
+    """Deterministic per-domain fact table."""
+    rng = random.Random(hash(domain) % (2**31))
+    table = {}
+    for _ in range(n):
+        e = _entity(rng)
+        if domain == "arithmetic":
+            a, b = rng.randint(2, 60), rng.randint(2, 60)
+            table[f"{a} plus {b}"] = str(a + b)
+        elif domain == "geography":
+            table[f"the capital of {e}"] = _entity(rng)
+        elif domain == "chemistry":
+            table[f"the symbol of element {e}"] = e[:2]
+        elif domain == "history":
+            table[f"the year of the {e} treaty"] = str(rng.randint(1400, 1990))
+        elif domain == "grammar":
+            verb = rng.choice(["utilize", "traverse", "calibrate", "synthesize", "moderate"])
+            table[f"the past tense of {verb}"] = verb + "d" if verb.endswith("e") else verb + "ed"
+        elif domain == "astronomy":
+            table[f"the moon count of planet {e}"] = str(rng.randint(0, 90))
+        elif domain == "economics":
+            table[f"the currency of {e}"] = _entity(rng) + " coin"
+        elif domain == "biology":
+            table[f"the genus of the {e} fern"] = _entity(rng)
+    return table
+
+
+_TABLES: Dict[str, Dict[str, str]] = {d: _domain_table(d) for d in DOMAINS}
+
+_TEMPLATES = [
+    "what is {k} ?",
+    "tell me {k} .",
+    "please state {k} .",
+    "do you know {k} ?",
+]
+
+
+def generate_domain(domain: str, n: int, seed: int = 0) -> List[QASample]:
+    rng = random.Random(seed * 977 + hash(domain) % 1000)
+    table = _TABLES[domain]
+    keys = list(table)
+    out = []
+    for _ in range(n):
+        k = rng.choice(keys)
+        q = rng.choice(_TEMPLATES).format(k=k)
+        out.append(QASample(domain, q, table[k]))
+    return out
+
+
+def generate_corpus(
+    n_per_domain: int = 200, seed: int = 0, domains: Sequence[str] = DOMAINS
+) -> List[QASample]:
+    out: List[QASample] = []
+    for d in domains:
+        out.extend(generate_domain(d, n_per_domain, seed))
+    rng = random.Random(seed)
+    rng.shuffle(out)
+    return out

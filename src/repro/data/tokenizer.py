@@ -1,0 +1,103 @@
+"""Toy heterogeneous tokenizers.
+
+The paper's SAML needs *different* tokenizers on different models (the
+Qwen-vs-Llama 'utilize' vs 'util'+'ize' example). Offline we cannot ship
+real BPE vocabularies, so we build greedy longest-match subword tokenizers
+whose vocabularies are trained on the synthetic corpus with different piece
+length limits / piece budgets — producing exactly the segmentation
+mismatches bidirectional token alignment must fix.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Sequence
+
+PAD, BOS, EOS, SEP = "<pad>", "<bos>", "<eos>", "<sep>"
+SPECIALS = [PAD, BOS, EOS, SEP]
+
+
+class ToyTokenizer:
+    def __init__(self, name: str, pieces: Sequence[str]):
+        self.name = name
+        self.pieces: List[str] = SPECIALS + sorted(set(pieces) - set(SPECIALS))
+        self.index: Dict[str, int] = {p: i for i, p in enumerate(self.pieces)}
+        self._max_len = max(len(p) for p in self.pieces)
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.pieces)
+
+    @property
+    def pad_id(self) -> int:
+        return self.index[PAD]
+
+    @property
+    def bos_id(self) -> int:
+        return self.index[BOS]
+
+    @property
+    def eos_id(self) -> int:
+        return self.index[EOS]
+
+    @property
+    def sep_id(self) -> int:
+        return self.index[SEP]
+
+    def encode_pieces(self, text: str) -> List[str]:
+        """Greedy longest-match over words ('_' marks word starts)."""
+        out: List[str] = []
+        for word in text.strip().split():
+            chunk = "_" + word.lower()
+            i = 0
+            while i < len(chunk):
+                for l in range(min(self._max_len, len(chunk) - i), 0, -1):
+                    cand = chunk[i : i + l]
+                    if cand in self.index:
+                        out.append(cand)
+                        i += l
+                        break
+                else:  # unknown char -> skip (byte-fallback stand-in)
+                    i += 1
+        return out
+
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> List[int]:
+        ids = [self.index[p] for p in self.encode_pieces(text)]
+        if bos:
+            ids = [self.bos_id] + ids
+        if eos:
+            ids = ids + [self.eos_id]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        pieces = [self.pieces[i] for i in ids if self.pieces[i] not in SPECIALS]
+        return "".join(pieces).replace("_", " ").strip()
+
+    def piece(self, idx: int) -> str:
+        return self.pieces[idx]
+
+
+def build_tokenizer(
+    name: str,
+    corpus: Sequence[str],
+    *,
+    max_piece: int = 12,
+    budget: int = 2048,
+) -> ToyTokenizer:
+    """Train a subword vocab: chars + frequent substrings up to max_piece.
+
+    Different (max_piece, budget) settings yield different segmentations of
+    the same text — the heterogeneity SAML's token alignment handles.
+    """
+    counts: collections.Counter = collections.Counter()
+    chars: set = set("_")
+    for text in corpus:
+        for word in text.strip().split():
+            chunk = "_" + word.lower()
+            chars.update(chunk)
+            for i in range(len(chunk)):
+                for l in range(2, min(max_piece, len(chunk) - i) + 1):
+                    counts[chunk[i : i + l]] += 1
+    # prefer frequent-long pieces (freq * len scoring, BPE-ish)
+    scored = sorted(counts.items(), key=lambda kv: -kv[1] * (len(kv[0]) ** 1.5))
+    pieces = list(chars) + [p for p, _ in scored[: budget - len(chars)]]
+    return ToyTokenizer(name, pieces)

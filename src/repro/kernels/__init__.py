@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical ops, with jnp oracles in ref.py
+and jit wrappers in ops.py. Validated in interpret mode on CPU; TPU is the
+compile target (BlockSpec VMEM tiling)."""

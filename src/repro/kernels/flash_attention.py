@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (prefill/train path).
+
+Grid = (batch*heads, q_blocks, k_blocks); k is the innermost sequential dim
+so VMEM scratch carries the online-softmax state (m, l, acc) per q block.
+Causal masking is applied per (q_blk, k_blk) tile; fully-masked future tiles
+still traverse the grid (Mosaic grid is dense) but contribute nothing — the
+XLA fallback in models/layers.py uses the same organisation with a static
+triangular skip, and the two are allclose-tested against each other.
+
+Block sizes (128, 128) align with the MXU (128x128 systolic array); the
+working set per step is q(128xD) + k/v(128xD) + scores(128x128) fp32
+< 1 MiB for D <= 256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLK = 128
+K_BLK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, Q_BLK, D)
+    k_ref,  # (1, K_BLK, D)
+    v_ref,  # (1, K_BLK, D)
+    o_ref,  # (1, Q_BLK, D)
+    m_scr,  # (Q_BLK, 1) f32
+    l_scr,  # (Q_BLK, 1) f32
+    acc_scr,  # (Q_BLK, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    n_k: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T  # (Q_BLK, K_BLK)
+    if causal:
+        iq = qi * Q_BLK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        jk = kj * K_BLK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(jk <= iq, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    assert k.shape == v.shape == (b, h, s, d), "caller repeats GQA KV heads"
+    scale = 1.0 / math.sqrt(d)
+    q_blk, k_blk = min(Q_BLK, s), min(K_BLK, s)
+    n_k = pl.cdiv(s, k_blk)
+    grid = (b * h, pl.cdiv(s, q_blk), n_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, n_k=n_k
+    )
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_blk, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, k_blk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, k_blk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,102 @@
+"""Pallas TPU fused frozen-weight + LoRA matmul: y = x W0 + s (x A) B.
+
+Co-PLMs keeps W0 frozen and trains only (A, B); merging W* = W0 + sAB per
+step doubles weight traffic. This kernel streams W0 tiles once and carries
+the rank-r intermediate (x A) in VMEM scratch, so the LoRA path adds only
+O(r(m+n)) work per tile — the arithmetic-intensity argument is in
+EXPERIMENTS.md §Perf.
+
+Grid = (m_blocks, n_blocks, k_blocks), k innermost; scratch: f32 accumulator
+(M_BLK x N_BLK) and xa accumulator (M_BLK x r). The B-tile product is added
+at the last k step. All matmul tile dims are multiples of 128 (MXU-aligned)
+except the rank dim (r <= 64, zero-padded by Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+M_BLK = 256
+N_BLK = 256
+K_BLK = 512
+
+
+def _lora_mm_kernel(
+    x_ref,  # (M_BLK, K_BLK)
+    w_ref,  # (K_BLK, N_BLK)
+    a_ref,  # (K_BLK, R)
+    b_ref,  # (R, N_BLK)
+    o_ref,  # (M_BLK, N_BLK)
+    acc_scr,  # (M_BLK, N_BLK) f32
+    xa_scr,  # (M_BLK, R) f32
+    *,
+    scale: float,
+    n_k: int,
+    k_dim: int,
+):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+        xa_scr[...] = jnp.zeros(xa_scr.shape, jnp.float32)
+
+    # zero the k-padding of the last tile on BOTH operands (block padding
+    # is undefined memory; 0 * garbage would still poison the accumulator)
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    kcol = kk * x.shape[1] + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(kcol < k_dim, x, 0.0)
+    krow_w = kk * w.shape[0] + jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
+    w = jnp.where(krow_w < k_dim, w, 0.0)
+    krow_a = kk * a.shape[0] + jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    a = jnp.where(krow_a < k_dim, a, 0.0)
+    acc_scr[...] += x @ w
+    xa_scr[...] += x @ a
+
+    @pl.when(kk == n_k - 1)
+    def _finish():
+        y = acc_scr[...] + scale * (xa_scr[...] @ b_ref[...].astype(jnp.float32))
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def lora_matmul(
+    x: jax.Array,  # (M, K)
+    w: jax.Array,  # (K, N)
+    a: jax.Array,  # (K, R)
+    b: jax.Array,  # (R, N)
+    *,
+    scale: float = 2.0,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    r = a.shape[1]
+    assert k == k2 and a.shape == (k, r) and b.shape == (r, n)
+    m_blk, n_blk, k_blk = min(M_BLK, m), min(N_BLK, n), min(K_BLK, k)
+    n_k = pl.cdiv(k, k_blk)
+    grid = (pl.cdiv(m, m_blk), pl.cdiv(n, n_blk), n_k)
+    kernel = functools.partial(_lora_mm_kernel, scale=scale, n_k=n_k, k_dim=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_blk, k_blk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((k_blk, n_blk), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((k_blk, r), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((r, n_blk), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m_blk, n_blk), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m_blk, n_blk), jnp.float32),
+            pltpu.VMEM((m_blk, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b)

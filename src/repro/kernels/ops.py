@@ -1,0 +1,33 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on TPU set
+REPRO_PALLAS_INTERPRET=0 to compile with Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.lora_matmul import lora_matmul as _lora_mm
+from repro.kernels.topk_pool import topk_pool as _topk_pool
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "").strip() in ("0", "false"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def topk_pool(logits: jax.Array, k: int = 32) -> Tuple[jax.Array, jax.Array]:
+    return _topk_pool(logits, k, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    return _flash(q, k, v, causal=causal, interpret=_interpret())
+
+
+def lora_matmul(x, w, a, b, *, scale: float = 2.0):
+    return _lora_mm(x, w, a, b, scale=scale, interpret=_interpret())

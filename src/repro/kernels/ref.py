@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_topk_pool(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """(rows, V) -> pooled (rows, K+1) f32, indices (rows, K) i32."""
+    yf = logits.astype(jnp.float32)
+    topv, topi = jax.lax.top_k(yf, k)
+    lse_all = jax.nn.logsumexp(yf, axis=-1)
+    lse_sel = jax.nn.logsumexp(topv, axis=-1)
+    delta = jnp.minimum(lse_sel - lse_all, -1e-7)
+    tail = lse_all + jnp.log1p(-jnp.exp(delta))
+    return jnp.concatenate([topv, tail[..., None]], axis=-1), topi.astype(jnp.int32)
+
+
+def ref_flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """(B,H,S,D) standard softmax attention in fp32."""
+    b, h, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_lora_matmul(
+    x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *, scale: float = 2.0
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32) + scale * ((xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel for Co-PLMs output-logits pooling (§4.3, Eq. 6).
+
+Computes, per row of a (rows, V) logit matrix:
+  - top-K values and their vocab indices,
+  - streaming logsumexp of the full row,
+from which the (K+1)-slot pooled vector [top-K, logsumexp(tail)] is formed.
+
+TPU mapping: grid = (row_blocks, vocab_tiles); the vocab axis is the
+innermost (sequential) grid dim so VMEM scratch carries the running top-K
+and the streaming logsumexp across tiles. Per tile the candidate top-K is
+merged with the running top-K via lax.top_k on the concatenated buffer
+(2K wide — tiny). Block shapes keep the working set (ROW_BLK x VOCAB_TILE
+logits + scratch) well under VMEM: 256 x 2048 x 4B = 2 MiB.
+
+Rationale for logsumexp tail aggregation: DESIGN.md §1 (mass-preserving
+pooling; keeps pooled KL finite).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROW_BLK = 256
+VOCAB_TILE = 2048
+NEG_INF = -1e30
+
+
+def _merge_topk(run_vals, run_idx, cand_vals, cand_idx, k: int):
+    """Merge two (R, K)-ish candidate sets -> top-k of the union."""
+    vals = jnp.concatenate([run_vals, cand_vals], axis=-1)
+    idx = jnp.concatenate([run_idx, cand_idx], axis=-1)
+    top_vals, pos = jax.lax.top_k(vals, k)
+    top_idx = jnp.take_along_axis(idx, pos, axis=-1)
+    return top_vals, top_idx
+
+
+def _topk_pool_kernel(
+    x_ref,  # (ROW_BLK, VOCAB_TILE) logits tile
+    pooled_ref,  # (ROW_BLK, K+1) output
+    idx_ref,  # (ROW_BLK, K) output
+    run_vals,  # scratch (ROW_BLK, K) f32
+    run_idx,  # scratch (ROW_BLK, K) i32
+    run_lse,  # scratch (ROW_BLK, 1) f32
+    *,
+    k: int,
+    vocab: int,
+    n_tiles: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        run_vals[...] = jnp.full(run_vals.shape, NEG_INF, jnp.float32)
+        run_idx[...] = jnp.zeros(run_idx.shape, jnp.int32)
+        run_lse[...] = jnp.full(run_lse.shape, NEG_INF, jnp.float32)
+
+    tile = x_ref[...].astype(jnp.float32)
+    # mask padding columns of the last tile
+    col = j * VOCAB_TILE + jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    tile = jnp.where(col < vocab, tile, NEG_INF)
+
+    cand_vals, cand_pos = jax.lax.top_k(tile, k)
+    cand_idx = cand_pos + j * VOCAB_TILE
+    new_vals, new_idx = _merge_topk(
+        run_vals[...], run_idx[...], cand_vals, cand_idx, k
+    )
+    run_vals[...] = new_vals
+    run_idx[...] = new_idx
+
+    # streaming logsumexp over the full row
+    m_tile = jnp.max(tile, axis=-1, keepdims=True)
+    lse_tile = m_tile + jnp.log(
+        jnp.sum(jnp.exp(tile - m_tile), axis=-1, keepdims=True)
+    )
+    run_lse[...] = jnp.logaddexp(run_lse[...], lse_tile)
+
+    @pl.when(j == n_tiles - 1)
+    def _finish():
+        vals = run_vals[...]
+        lse_all = run_lse[...][:, 0]
+        m_sel = jnp.max(vals, axis=-1, keepdims=True)
+        lse_sel = (
+            m_sel + jnp.log(jnp.sum(jnp.exp(vals - m_sel), axis=-1, keepdims=True))
+        )[:, 0]
+        delta = jnp.minimum(lse_sel - lse_all, -1e-7)
+        tail = lse_all + jnp.log1p(-jnp.exp(delta))
+        pooled_ref[...] = jnp.concatenate([vals, tail[:, None]], axis=-1)
+        idx_ref[...] = run_idx[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_pool(
+    logits: jax.Array, k: int = 32, *, interpret: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """logits (rows, V) -> (pooled (rows, K+1) f32, indices (rows, K) i32)."""
+    rows, vocab = logits.shape
+    n_tiles = pl.cdiv(vocab, VOCAB_TILE)
+    row_blk = min(ROW_BLK, rows)
+    grid = (pl.cdiv(rows, row_blk), n_tiles)
+    kernel = functools.partial(
+        _topk_pool_kernel, k=k, vocab=vocab, n_tiles=n_tiles
+    )
+    pooled, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_blk, VOCAB_TILE), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((row_blk, k + 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_blk, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, k + 1), jnp.float32),
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((row_blk, k), jnp.float32),
+            pltpu.VMEM((row_blk, k), jnp.int32),
+            pltpu.VMEM((row_blk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return pooled, idx

@@ -1,0 +1,614 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, print memory/cost analysis, and emit roofline inputs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --out runs/dryrun
+  ... --multi-pod        # (2,16,16) pod/data/model instead of (16,16)
+  ... --step cotune      # the paper's SAML pair step (gptj-6b + dpm)
+
+Results are cached as one JSON per (arch, shape, mesh, step) so sweeps are
+resumable; EXPERIMENTS.md §Dry-run / §Roofline tables are generated from
+these files by benchmarks/roofline_table.py.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.module import abstract, axes_of, param_count
+from repro.common.sharding import (
+    DEFAULT_RULES,
+    PARAM_RULES,
+    axis_rules,
+    logical_to_spec,
+    sharding_for_tree,
+)
+from repro.configs import INPUT_SHAPES, get_arch, list_archs, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model, input_specs
+from repro.models.transformer import RuntimeFlags
+from repro.optim.adamw import AdamW
+from repro.roofline.analysis import (
+    HW_V5E,
+    collective_bytes,
+    count_active_params,
+    model_flops,
+    roofline_report,
+)
+
+ALL_ARCHS = (
+    "gemma-2b", "xlstm-1.3b", "qwen2-1.5b", "deepseek-v3-671b", "qwen2.5-3b",
+    "qwen2-vl-2b", "qwen2-72b", "whisper-medium", "phi3.5-moe-42b-a6.6b",
+    "jamba-1.5-large-398b",
+)
+
+
+def _in_shardings(tree_abstract, tree_axes, mesh, rules):
+    return sharding_for_tree(tree_abstract, tree_axes, mesh, rules)
+
+
+def _batch_shardings(specs: Dict, axes: Dict, mesh, rules):
+    out = {}
+    for k, sds in specs.items():
+        out[k] = NamedSharding(mesh, logical_to_spec(sds.shape, axes[k], mesh, rules))
+    return out
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_train_step(model, opt, microbatch: int = 1, grad_shardings=None):
+    def grad_fn(params, batch):
+        (l, m), g = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        if grad_shardings is not None:
+            # force per-microbatch grads into the FSDP param sharding: XLA
+            # then REDUCE-SCATTERS each microbatch instead of all-reducing
+            # full gradients and sharding late (§Perf A2 — was 798GB/device
+            # of all-reduce on deepseek train_4k)
+            g = jax.tree.map(jax.lax.with_sharding_constraint, g, grad_shardings)
+        return (l, m), g
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            full_b = batch["tokens"].shape[0]
+
+            def split_one(x):
+                if x.ndim >= 1 and x.shape[0] == full_b:
+                    return x.reshape((microbatch, full_b // microbatch) + x.shape[1:])
+                if x.ndim >= 2 and x.shape[1] == full_b:  # mrope_pos (3,B,S)
+                    y = x.reshape(
+                        (x.shape[0], microbatch, full_b // microbatch) + x.shape[2:]
+                    )
+                    return jnp.moveaxis(y, 1, 0)
+                return jnp.broadcast_to(x, (microbatch,) + x.shape)
+
+            split = jax.tree.map(split_one, batch)
+
+            def body(carry, mb):
+                (_, metrics), grads = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, carry, grads)
+                if grad_shardings is not None:  # §Perf A4: keep the f32
+                    # accumulator FSDP-sharded across scan iterations
+                    acc = jax.tree.map(
+                        jax.lax.with_sharding_constraint, acc, grad_shardings
+                    )
+                return acc, metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            if grad_shardings is not None:
+                zero = jax.tree.map(
+                    jax.lax.with_sharding_constraint, zero, grad_shardings
+                )
+            grads, metrics = jax.lax.scan(body, zero, split)
+            grads = jax.tree.map(lambda g: (g / microbatch).astype(jnp.bfloat16), grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(model):
+    def prefill_step(params, batch):
+        logits, aux = model.logits(params, batch)
+        return logits
+
+    return prefill_step
+
+
+def build_serve_step(model):
+    def serve_step(params, cache, batch):
+        return model.serve_step(params, cache, batch)
+
+    return serve_step
+
+
+def _maybe_swa(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[ModelConfig, str]:
+    """gemma's long_500k runs the sliding-window variant (DESIGN.md §4)."""
+    ok, why = shape_applicable(cfg, shape)
+    if ok:
+        return cfg, ""
+    if cfg.name == "gemma-2b" and shape.name == "long_500k":
+        from repro.configs.gemma_2b import sliding_variant
+
+        return sliding_variant(cfg), "ran sliding-window variant (window=4096)"
+    return cfg, f"SKIP: {why}"
+
+
+def _lower_compile(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    step_kind: str,
+    mesh,
+    rules,
+    param_rules,
+    flags: RuntimeFlags,
+    microbatch: int,
+    moment_dtype,
+):
+    """Lower+compile one step program; returns the compiled executable."""
+    model = build_model(cfg, flags)
+    opt = AdamW(learning_rate=1e-4, moment_dtype=moment_dtype, grad_clip=0.0)
+    p_rules = param_rules or (PARAM_RULES if step_kind == "train" else rules)
+    a_params = model.abstract_params()
+    p_shard = _in_shardings(a_params, model.param_axes(), mesh, p_rules)
+    b_specs, b_axes = input_specs(cfg, shape)
+    b_shard = _batch_shardings(b_specs, b_axes, mesh, rules)
+
+    with axis_rules(mesh, rules, p_rules if step_kind == "train" else None):
+        if step_kind == "train":
+            a_opt = jax.eval_shape(opt.init, a_params)
+            o_shard = type(a_opt)(step=_replicated(mesh), mu=p_shard, nu=p_shard)
+            fn = jax.jit(
+                build_train_step(model, opt, microbatch, grad_shardings=p_shard),
+                in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(a_params, a_opt, b_specs)
+        elif step_kind == "prefill":
+            fn = jax.jit(build_prefill_step(model), in_shardings=(p_shard, b_shard))
+            lowered = fn.lower(a_params, b_specs)
+        elif step_kind == "decode":
+            a_cache = model.cache_specs(shape.global_batch, shape.seq_len)
+            c_shard = _in_shardings(a_cache, model.cache_axes(), mesh, rules)
+            fn = jax.jit(
+                build_serve_step(model),
+                in_shardings=(p_shard, c_shard, b_shard),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(a_params, a_cache, b_specs)
+        else:
+            raise ValueError(step_kind)
+        return lowered.compile()
+
+
+def _cost_of(compiled) -> Tuple[float, float, Dict[str, int]]:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return flops, bytes_acc, coll
+
+
+def _probe_costs(
+    cfg: ModelConfig, shape, step_kind, mesh, rules, param_rules, flags,
+    moment_dtype,
+) -> Tuple[float, float, Dict[str, int]]:
+    """XLA cost_analysis counts scan bodies ONCE (trip count unknown to the
+    analysis), so the scanned-layers production program under-reports FLOPs
+    by ~unit_repeats x microbatch. We probe with UNROLLED layers at R=1 and
+    R=2 unit repeats and extrapolate linearly — exact for homogeneous
+    stacks: total(R) = probe(1) + (R-1) * (probe(2) - probe(1))."""
+    u = len(cfg.unit_pattern)
+    pre = len(cfg.prefix_pattern)
+    probe_flags = dataclasses.replace(flags, scan_units=False)
+
+    def probe(repeats: int, enc_layers: int):
+        c = dataclasses.replace(
+            cfg,
+            num_layers=pre + repeats * u,
+            encoder_layers=enc_layers,
+            mtp_depth=cfg.mtp_depth,
+        )
+        compiled = _lower_compile(
+            c, shape, step_kind, mesh, rules, param_rules, probe_flags, 1,
+            moment_dtype,
+        )
+        return _cost_of(compiled)
+
+    r = cfg.unit_repeats
+    enc = cfg.encoder_layers
+    f1, b1, c1 = probe(1, min(enc, 1) if enc else 0)
+    f2, b2, c2 = probe(2, min(enc, 2) if enc else 0)
+    # decoder and encoder trip counts advance together between the probes;
+    # exact when they are equal (whisper: 24/24), else approximate.
+    scale = r - 1
+    if enc:
+        scale = max(r - 1, enc - 1)
+    flops = f1 + scale * (f2 - f1)
+    bytes_acc = b1 + scale * (b2 - b1)
+    coll = {k: int(c1[k] + scale * (c2[k] - c1[k])) for k in c1}
+    return flops, bytes_acc, coll
+
+
+def lower_cotune(
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    flags: RuntimeFlags = RuntimeFlags(),
+    rules=None,
+    lora_rank: int = 8,
+    top_k: int = 32,
+) -> Dict[str, Any]:
+    """The paper's own step: one SAML pair update (DPM student + GPT-J-6B
+    teacher-and-student) — forward both models, align positions, pool logits
+    on the teacher's top-K support, bidirectional pooled KL, LoRA-only
+    AdamW update. This is the 'most representative of the paper's technique'
+    roofline row."""
+    from repro.common.module import abstract as _abstract
+    from repro.core.adapters import adapter_specs
+    from repro.core.lora import lora_specs
+    from repro.core.saml import SamlConfig, saml_pair_losses
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or DEFAULT_RULES
+    shape = INPUT_SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    cfg_l = get_arch("paper-gptj-6b")
+    cfg_p = get_arch("paper-dpm")
+    model_l, model_p = build_model(cfg_l, flags), build_model(cfg_p, flags)
+    scfg = SamlConfig(top_k=top_k)
+    opt = AdamW(learning_rate=1e-4, grad_clip=0.0)
+
+    rec: Dict[str, Any] = {
+        "arch": "cotune-gptj6b+dpm", "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256, "step": "cotune", "note": "",
+        "microbatch": 1,
+    }
+
+    def shard_params(model, rules_):
+        a = model.abstract_params()
+        return a, _in_shardings(a, model.param_axes(), mesh, rules_)
+
+    a_base_l, sh_base_l = shard_params(model_l, PARAM_RULES)
+    a_base_p, sh_base_p = shard_params(model_p, PARAM_RULES)
+    a_lora_l = _abstract(lora_specs(model_l.specs(), lora_rank), jnp.float32)
+    a_lora_p = _abstract(lora_specs(model_p.specs(), lora_rank), jnp.float32)
+    from repro.common.module import axes_of
+
+    sh_lora_l = _in_shardings(a_lora_l, axes_of(lora_specs(model_l.specs(), lora_rank)), mesh, PARAM_RULES)
+    sh_lora_p = _in_shardings(a_lora_p, axes_of(lora_specs(model_p.specs(), lora_rank)), mesh, PARAM_RULES)
+    a_ad = _abstract(adapter_specs(cfg_p), jnp.float32)
+    sh_ad = _in_shardings(a_ad, axes_of(adapter_specs(cfg_p)), mesh, PARAM_RULES)
+
+    def batch_for(cfg):
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+
+    bspec = NamedSharding(mesh, logical_to_spec((b, s), ("batch", None), mesh, rules))
+    sh_batch = {k: bspec for k in ("tokens", "targets", "loss_mask")}
+    a_align = {
+        "pos_p2l": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "pos_l2p": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "vm_l2p": jax.ShapeDtypeStruct((cfg_l.vocab_size,), jnp.int32),
+        "vm_p2l": jax.ShapeDtypeStruct((cfg_p.vocab_size,), jnp.int32),
+    }
+    rep = _replicated(mesh)
+    sh_align = {"pos_p2l": bspec, "pos_l2p": bspec, "vm_l2p": rep, "vm_p2l": rep}
+
+    def cotune_step(loras, opt_state, base_p, base_l, adapters, batch_p, batch_l, align):
+        def loss_fn(ls):
+            total, metrics = saml_pair_losses(
+                model_p, model_l, base_p, base_l, ls["p"], ls["l"], adapters,
+                batch_p, batch_l, align, scfg,
+            )
+            return total, metrics
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(loras)
+        new_loras, new_opt = opt.update(grads, opt_state, loras)
+        return new_loras, new_opt, metrics
+
+    a_loras = {"p": a_lora_p, "l": a_lora_l}
+    sh_loras = {"p": sh_lora_p, "l": sh_lora_l}
+    a_opt = jax.eval_shape(opt.init, a_loras)
+    sh_opt = type(a_opt)(step=rep, mu=sh_loras, nu=sh_loras)
+
+    t0 = time.time()
+    with axis_rules(mesh, rules):
+        fn = jax.jit(
+            cotune_step,
+            in_shardings=(
+                sh_loras, sh_opt, sh_base_p, sh_base_l, sh_ad,
+                sh_batch, sh_batch, sh_align,
+            ),
+            donate_argnums=(0, 1),
+        )
+        lowered = fn.lower(
+            a_loras, a_opt, a_base_p, a_base_l, a_ad,
+            batch_for(cfg_p), batch_for(cfg_l), a_align,
+        )
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    return rec, compiled, (cfg_p, cfg_l), shape
+
+
+def run_cotune(shape_name: str, multi_pod: bool, out_dir: str, force=False):
+    """Lower+compile the SAML pair step; cost accounting via a second,
+    UNROLLED compile (both stacks unrolled -> exact FLOPs, no scan
+    undercount); memory via the scanned production program."""
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    path = os.path.join(out_dir, f"cotune-pair__{shape_name}__{mesh_tag}__cotune.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("ok"):
+            return cached
+    try:
+        rec, compiled, cfgs, shape = lower_cotune(shape_name, multi_pod=multi_pod)
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            rec["bytes_per_device"] = int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            )
+            rec["fits_hbm"] = rec["bytes_per_device"] <= HW_V5E.hbm_bytes
+        t0 = time.time()
+        _, c_unrolled, _, _ = lower_cotune(
+            shape_name, multi_pod=multi_pod,
+            flags=RuntimeFlags(scan_units=False, remat="none"),
+        )
+        rec["probe_s"] = round(time.time() - t0, 2)
+        flops, bytes_acc, coll = _cost_of(c_unrolled)
+        rec["hlo_flops_per_device"] = flops
+        rec["hlo_bytes_per_device"] = bytes_acc
+        rec["collective_bytes_per_device"] = coll
+        from repro.models.transformer import model_specs as _specs
+
+        n_params = sum(param_count(abstract(_specs(c))) for c in cfgs)
+        n_tokens = shape.global_batch * shape.seq_len
+        rec["n_params"] = n_params
+        rec["roofline"] = roofline_report(
+            per_device_flops=flops,
+            per_device_bytes=bytes_acc,
+            per_device_coll_bytes=coll,
+            chips=rec["chips"],
+            model_flops_total=model_flops(n_params, n_tokens),
+            is_train=True,
+        )
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec = {
+            "arch": "cotune-gptj6b+dpm", "shape": shape_name, "mesh": mesh_tag,
+            "ok": False, "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc(limit=12),
+        }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def lower_pair(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    step_kind: Optional[str] = None,
+    flags: RuntimeFlags = RuntimeFlags(),
+    rules=None,
+    param_rules=None,
+    moment_dtype=None,
+    microbatch: Optional[int] = None,  # None -> 4 for train (fits-HBM default)
+    probe: bool = True,
+    cfg_overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh); return the result record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or DEFAULT_RULES
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_arch(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cfg, note = _maybe_swa(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "note": note,
+    }
+    if note.startswith("SKIP"):
+        rec["ok"] = False
+        rec["skipped"] = True
+        return rec
+
+    step_kind = step_kind or ("train" if shape.kind == "train" else shape.kind)
+    if microbatch is None:
+        microbatch = 4 if step_kind == "train" else 1
+    rec["step"] = step_kind
+    rec["microbatch"] = microbatch
+
+    if moment_dtype is None:
+        # >=40B-param configs: bf16 moments, else the optimizer alone
+        # exceeds HBM (recorded in EXPERIMENTS.md §Dry-run).
+        big = cfg.name.startswith(("deepseek", "jamba", "qwen2-72b", "phi3.5"))
+        moment_dtype = jnp.bfloat16 if big else jnp.float32
+    rec["moment_dtype"] = str(jnp.dtype(moment_dtype))
+
+    t0 = time.time()
+    compiled = _lower_compile(
+        cfg, shape, step_kind, mesh, rules, param_rules, flags, microbatch,
+        moment_dtype,
+    )
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    probe_cost = None
+    if probe:
+        t1 = time.time()
+        try:
+            probe_cost = _probe_costs(
+                cfg, shape, step_kind, mesh, rules, param_rules, flags,
+                moment_dtype,
+            )
+        except Exception as e:  # noqa: BLE001
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+        rec["probe_s"] = round(time.time() - t1, 2)
+
+    return finish_record(rec, cfg, shape, compiled, step_kind, probe_cost)
+
+
+def finish_record(rec, cfg, shape, compiled, step_kind, probe_cost=None) -> Dict[str, Any]:
+    chips = rec["chips"]
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        args_b = rec.get("argument_size_in_bytes", 0)
+        temp_b = rec.get("temp_size_in_bytes", 0)
+        rec["bytes_per_device"] = args_b + temp_b
+        rec["fits_hbm"] = rec["bytes_per_device"] <= HW_V5E.hbm_bytes
+
+    raw_flops, raw_bytes, raw_coll = _cost_of(compiled)
+    rec["raw_scanned_flops_per_device"] = raw_flops
+    rec["raw_scanned_bytes_per_device"] = raw_bytes
+    rec["raw_collective_bytes_per_device"] = raw_coll
+
+    if probe_cost is not None:
+        # probe totals are GLOBAL-batch, unrolled-layer quantities of the
+        # per-device partitioned program -> already per-device.
+        flops, bytes_acc, coll = probe_cost
+    else:
+        flops, bytes_acc, coll = raw_flops, raw_bytes, raw_coll
+    rec["hlo_flops_per_device"] = flops
+    rec["hlo_bytes_per_device"] = bytes_acc
+    rec["collective_bytes_per_device"] = coll
+
+    from repro.models.transformer import model_specs as _specs
+
+    n_params = param_count(abstract(_specs(cfg)))
+    n_active = count_active_params(cfg, n_params)
+    n_tokens = shape.global_batch * (shape.seq_len if step_kind != "decode" else 1)
+    mf = model_flops(n_active, n_tokens)
+    rec["n_params"] = n_params
+    rec["n_params_active"] = n_active
+    rec["roofline"] = roofline_report(
+        per_device_flops=flops,
+        per_device_bytes=bytes_acc,
+        per_device_coll_bytes=coll,
+        chips=chips,
+        model_flops_total=mf,
+        is_train=step_kind == "train",
+    )
+    rec["ok"] = True
+    return rec
+
+
+def run_one(arch, shape_name, multi_pod, out_dir, step_kind=None, force=False,
+            flags=None, tag=""):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    sk = step_kind or ("train" if INPUT_SHAPES[shape_name].kind == "train" else INPUT_SHAPES[shape_name].kind)
+    fname = f"{arch}__{shape_name}__{mesh_tag}__{sk}{tag}.json"
+    path = os.path.join(out_dir, fname)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("ok") or cached.get("skipped"):
+            return cached
+        # cached FAILURE: retry (the bug may have been fixed since)
+    try:
+        rec = lower_pair(
+            arch, shape_name, multi_pod=multi_pod, step_kind=step_kind,
+            flags=flags or RuntimeFlags(),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_tag, "ok": False,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc(limit=12),
+        }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--step", default=None, choices=[None, "train", "prefill", "decode"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.arch == "cotune":
+        for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+            rec = run_cotune(
+                args.shape if args.shape != "all" else "train_4k", mp, args.out,
+                args.force,
+            )
+            r = rec.get("roofline", {})
+            print(
+                f"[{'OK' if rec.get('ok') else 'FAIL'}] cotune x {rec.get('shape')} x "
+                f"{rec.get('mesh')}: compile={rec.get('compile_s', '-')}s "
+                f"dominant={r.get('dominant', '-')} terms={r.get('terms_s', {})} "
+                f"{rec.get('error', '')[:300]}"
+            )
+        return
+
+    archs = list(ALL_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.out, args.step, args.force)
+                tag = "OK" if rec.get("ok") else ("SKIP" if rec.get("skipped") else "FAIL")
+                n_ok += rec.get("ok", False) is True
+                n_skip += bool(rec.get("skipped"))
+                n_fail += not rec.get("ok") and not rec.get("skipped")
+                r = rec.get("roofline", {})
+                terms = r.get("terms_s", {})
+                print(
+                    f"[{tag}] {arch} x {shape} x {rec.get('mesh')}: "
+                    f"compile={rec.get('compile_s', '-')}s "
+                    f"bytes/dev={rec.get('bytes_per_device', '-')} "
+                    f"dominant={r.get('dominant', '-')} "
+                    f"terms={ {k: f'{v:.2e}' for k, v in terms.items()} } "
+                    f"{rec.get('error', '')[:200]}",
+                    flush=True,
+                )
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

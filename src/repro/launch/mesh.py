@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py sets
+XLA_FLAGS for 512 placeholder devices).
+
+Production target: TPU v5e, 256 chips/pod (16x16), 2 pods = 512 chips.
+Axes: 'data' (batch / FSDP), 'model' (tensor/expert parallel), 'pod'
+(data-parallel across pods; in the co-tuning mapping, edge-device replica
+groups live along 'data' and the cloud/edge split along 'pod').
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_debug_mesh():
+    """1-device mesh with production axis names (unit tests)."""
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )

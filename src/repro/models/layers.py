@@ -1,0 +1,484 @@
+"""Shared transformer layers: norms, embeddings, RoPE/M-RoPE, MLPs, attention.
+
+Everything is a (specs-builder, apply-fn) pair over ParamSpec/param dict
+trees. Attention supports GQA/MQA, causal/sliding/cross masks, decode with a
+KV cache, and M-RoPE (Qwen2-VL) positions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import (
+    ParamSpec,
+    fanin_init,
+    normal_init,
+    ones_init,
+    zeros_init,
+)
+from repro.common.sharding import logical_constraint
+from repro.configs.base import ModelConfig
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(d: int) -> Params:
+    return {"scale": ParamSpec((d,), ones_init(), ("d_model",))}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_specs(d: int) -> Params:
+    return {
+        "scale": ParamSpec((d,), ones_init(), ("d_model",)),
+        "bias": ParamSpec((d,), zeros_init(), ("d_model",)),
+    }
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def norm_specs(cfg: ModelConfig) -> Params:
+    if cfg.family == "audio":  # whisper uses LayerNorm
+        return layernorm_specs(cfg.d_model)
+    return rmsnorm_specs(cfg.d_model)
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if "bias" in p:
+        return layernorm(p, x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def linear_specs(
+    d_in: int,
+    d_out: int,
+    axes: Tuple[Optional[str], Optional[str]],
+    bias: bool = False,
+    init=None,
+) -> Params:
+    specs = {"w": ParamSpec((d_in, d_out), init or fanin_init(0), axes)}
+    if bias:
+        specs["b"] = ParamSpec((d_out,), zeros_init(), (axes[1],))
+    return specs
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> Params:
+    # 'embed_d' (not 'd_model'): embedding tables are exempt from FSDP —
+    # a (vocab x fsdp)-sharded table makes GSPMD replicate the token gather
+    # ("involuntary full rematerialization"); vocab sharding alone keeps the
+    # table ~100MB/device and the gather partitionable.
+    specs = {
+        "embedding": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), normal_init(0.02), ("vocab", "embed_d")
+        )
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size),
+            normal_init(0.02),
+            ("embed_d", "vocab"),
+        )
+    return specs
+
+
+def embed(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    h = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.tie_embeddings:  # gemma-style scaling
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def unembed(cfg: ModelConfig, p: Params, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = h @ p["embedding"].astype(h.dtype).T
+    else:
+        logits = h @ p["unembed"].astype(h.dtype)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(
+    positions: jax.Array, dim: int, theta: float, dtype=jnp.float32
+) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mrope_cos_sin(
+    positions: jax.Array, dim: int, theta: float, sections=(16, 24, 24)
+) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE. positions (3, B, S) = (t, h, w) ids.
+
+    The dim/2 rotary frequencies are split into three contiguous sections,
+    each driven by one positional component.
+    """
+    half = dim // 2
+    secs = list(sections)
+    scale = half / sum(secs)
+    secs = [int(s * scale) for s in secs]
+    secs[-1] = half - sum(secs[:-1])
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (3,B,S,half)
+    chunks = []
+    start = 0
+    for i, s in enumerate(secs):
+        chunks.append(angles[i, ..., start : start + s])
+        start += s
+    ang = jnp.concatenate(chunks, axis=-1)  # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "gate": linear_specs(d, f, ("d_model", "ffn")),
+            "up": linear_specs(d, f, ("d_model", "ffn")),
+            "down": linear_specs(f, d, ("ffn", "d_model")),
+        }
+    return {  # plain gelu MLP (whisper)
+        "up": linear_specs(d, f, ("d_model", "ffn"), bias=cfg.family == "audio"),
+        "down": linear_specs(f, d, ("ffn", "d_model"), bias=cfg.family == "audio"),
+    }
+
+
+def mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(linear(p["gate"], x), approximate=True) * linear(p["up"], x)
+    else:
+        h = jax.nn.gelu(linear(p["up"], x), approximate=True)
+    h = logical_constraint(h, ("batch", "seq", "ffn"))
+    return linear(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA, causal / sliding / cross, train + decode)
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    bias = cfg.qkv_bias
+    specs = {
+        "wq": ParamSpec((d, h, hd), fanin_init(0), ("d_model", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), fanin_init(0), ("d_model", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), fanin_init(0), ("d_model", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), fanin_init(0), ("heads", "head_dim", "d_model")),
+    }
+    if bias:
+        specs["bq"] = ParamSpec((h, hd), zeros_init(), ("heads", "head_dim"))
+        specs["bk"] = ParamSpec((kv, hd), zeros_init(), ("kv_heads", "head_dim"))
+        specs["bv"] = ParamSpec((kv, hd), zeros_init(), ("kv_heads", "head_dim"))
+    return specs
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, xq: jax.Array, xkv: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xkv.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xkv.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return q, k, v
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    b, s, kv, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, d)).reshape(
+        b, s, kv * n_rep, d
+    )
+
+
+def sdpa(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: Optional[jax.Array],
+    softcap: float = 0.0,
+) -> jax.Array:
+    """q (B,Sq,H,D), k/v (B,Sk,H,D), mask broadcastable to (B,H,Sq,Sk)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_sdpa(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    softcap: float = 0.0,
+    triangular_skip: bool = True,
+) -> jax.Array:
+    """Online-softmax attention, scanned over key chunks. O(S*chunk) memory.
+
+    This is the XLA fallback of the flash-attention pattern (the Pallas
+    kernel is the TPU path; dry-runs lower this). With ``triangular_skip``
+    and ``causal``, computation is organised as an unrolled loop over query
+    chunks whose key-scan covers only chunks <= the query chunk, so causal
+    FLOPs are ~S^2/2 instead of S^2.
+    """
+    b, s, h, d = q.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:  # pad sequence to a chunk multiple
+        pad = chunk - s % chunk
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = chunked_sdpa(
+            qp, kp, vp, causal=causal, window=window, chunk=chunk,
+            softcap=softcap, triangular_skip=triangular_skip,
+        )
+        return out[:, :s]
+    n = s // chunk
+    scale = 1.0 / math.sqrt(d)
+    kc = k.reshape(b, n, chunk, h, d)
+    vc = v.reshape(b, n, chunk, h, d)
+
+    def attend_block(qi: int, q_blk: jax.Array, n_k: int) -> jax.Array:
+        """q_blk (B,C,H,D) attends over key chunks [0, n_k)."""
+
+        @jax.checkpoint
+        def body(carry, inp):
+            m, l, acc = carry
+            kj, vj, jc = inp
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q_blk, kj).astype(jnp.float32) * scale
+            if softcap > 0:
+                sc = jnp.tanh(sc / softcap) * softcap
+            iq = qi * chunk + jnp.arange(chunk)[:, None]
+            jk = jc * chunk + jnp.arange(chunk)[None, :]
+            mask = jnp.ones((chunk, chunk), bool)
+            if causal:
+                mask &= jk <= iq
+            if window > 0:
+                mask &= jk > iq - window
+            sc = jnp.where(mask[None, None], sc, -1e30)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), vj
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, chunk, d), jnp.float32)
+        ks = kc[:, :n_k].swapaxes(0, 1)  # (n_k, B, C, H, D)
+        vs = vc[:, :n_k].swapaxes(0, 1)
+        jcs = jnp.arange(n_k)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, jcs))
+        out = acc / jnp.clip(l[..., None], 1e-30)
+        return out.swapaxes(1, 2).astype(q.dtype)  # (B,C,H,D)
+
+    if causal and triangular_skip and n > 1:
+        # Unrolled query-chunk loop with static triangular key bounds:
+        # exact ~S^2/2 FLOPs at the cost of O(n) program size.
+        outs = []
+        qcs = q.reshape(b, n, chunk, h, d)
+        for qi in range(n):
+            n_k = qi + 1
+            if window > 0:  # only the last ceil(window/chunk)+1 chunks matter
+                first = max(0, qi - (window + chunk - 1) // chunk)
+                # shift keys: attend over chunks [first, qi]
+                sub = attend_block_window(
+                    qcs[:, qi], kc[:, first : qi + 1], vc[:, first : qi + 1],
+                    qi, first, chunk, window, scale, softcap, b, h, d, q.dtype,
+                )
+                outs.append(sub)
+                continue
+            outs.append(attend_block(qi, qcs[:, qi], n_k))
+        return jnp.stack(outs, axis=1).reshape(b, s, h, d)
+    return attend_block(0, q, n) if n == 1 and causal else _full_scan(
+        attend_block, q, n, b, s, h, d, chunk
+    )
+
+
+def _full_scan(attend_block, q, n, b, s, h, d, chunk):
+    # non-causal (or non-skipping) path: every q chunk sees all key chunks
+    qcs = q.reshape(b, n, chunk, h, d)
+    outs = [attend_block(qi, qcs[:, qi], n) for qi in range(n)]
+    return jnp.stack(outs, axis=1).reshape(b, s, h, d)
+
+
+def attend_block_window(
+    q_blk, k_sub, v_sub, qi, first, chunk, window, scale, softcap, b, h, d, dtype
+):
+    """Windowed attention for one query chunk over key chunks [first, qi]."""
+    n_k = k_sub.shape[1]
+    kf = k_sub.reshape(b, n_k * chunk, -1, d)
+    vf = v_sub.reshape(b, n_k * chunk, -1, d)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q_blk, kf).astype(jnp.float32) * scale
+    if softcap > 0:
+        sc = jnp.tanh(sc / softcap) * softcap
+    iq = qi * chunk + jnp.arange(chunk)[:, None]
+    jk = first * chunk + jnp.arange(n_k * chunk)[None, :]
+    mask = (jk <= iq) & (jk > iq - window)
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(dtype), vf)
+    return out
+
+
+def causal_mask(sq: int, sk: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(sk)[None, :]
+    m = j <= i
+    if window > 0:
+        m &= j > i - window
+    return m[None, None]  # (1,1,Sq,Sk)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    window: int = 0,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(cfg, p, x, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    k = repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    v = repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    o = chunked_sdpa(
+        q, k, v, causal=causal, window=window, softcap=cfg.logit_softcap
+    )
+    o = logical_constraint(o, ("batch", "seq", "heads", "head_dim"))
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def cross_attention(
+    cfg: ModelConfig, p: Params, x: jax.Array, enc: jax.Array
+) -> jax.Array:
+    q, k, v = _project_qkv(cfg, p, x, enc)
+    k = repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    v = repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    o = sdpa(q, k, v, None)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ---- decode path -----------------------------------------------------------
+
+def attn_cache_specs(
+    cfg: ModelConfig, batch: int, max_len: int, window: int = 0
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """KV cache abstract shapes. Sliding-window blocks keep a ring buffer."""
+    s = min(window, max_len) if window > 0 else max_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shp = (batch, s, kv, hd)
+    dt = jnp.bfloat16
+    return {
+        "k": jax.ShapeDtypeStruct(shp, dt),
+        "v": jax.ShapeDtypeStruct(shp, dt),
+    }
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: Params,  # {"k": (B,S,KV,D), "v": ...}
+    pos: jax.Array,  # scalar int32: index of the new token
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Params]:
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    s_cache = cache["k"].shape[1]
+    slot = (pos % window) if window > 0 else pos  # window is static
+    slot = jnp.minimum(slot, s_cache - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    new_cache = {"k": k, "v": v}
+    kk = repeat_kv(k.astype(x.dtype), cfg.num_heads // cfg.num_kv_heads)
+    vv = repeat_kv(v.astype(x.dtype), cfg.num_heads // cfg.num_kv_heads)
+    # mask: valid cache entries only
+    j = jnp.arange(s_cache)[None, None, None, :]
+    if window > 0:
+        valid = (j >= 0) & (j < jnp.minimum(pos + 1, s_cache))
+    else:
+        valid = j <= pos
+    o = sdpa(q, kk, vv, valid)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_cache

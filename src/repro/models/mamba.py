@@ -1,0 +1,156 @@
+"""Mamba (S6) block for the Jamba hybrid (arXiv:2403.19887).
+
+TPU adaptation: the fused CUDA selective-scan becomes a chunked scan — the
+discretized (B, chunk, d_inner, d_state) tensors are materialized only
+inside a ``jax.checkpoint``-ed chunk body (recomputed in backward), with an
+associative scan within the chunk. Materializing the full (B, S, d_inner,
+d_state) tensor would be O(1e14) elements at Jamba train_4k scale.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec, constant_init, fanin_init, normal_init, zeros_init
+from repro.common.sharding import logical_constraint
+from repro.configs.base import ModelConfig
+
+Params = Dict
+
+_CHUNK = 64
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.d_model * cfg.mamba_expand
+
+
+def mamba_specs(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = _d_inner(cfg)
+    ns = cfg.mamba_d_state
+    dt_rank = max(d // 16, 1)
+    return {
+        # split u/z projections (same cross-shard-slice issue as xLSTM up)
+        "in_u": ParamSpec((d, di), fanin_init(0), ("d_model", "feature")),
+        "in_z": ParamSpec((d, di), fanin_init(0), ("d_model", "feature")),
+        "conv": ParamSpec((cfg.mamba_d_conv, di), normal_init(0.1), ("conv", "feature")),
+        "x_proj": ParamSpec((di, dt_rank + 2 * ns), fanin_init(0), ("feature", None)),
+        "dt_proj": ParamSpec((dt_rank, di), normal_init(0.02), (None, "feature")),
+        "dt_bias": ParamSpec((di,), constant_init(-2.0), ("feature",)),
+        # A_log init ~ log(arange(1, ns+1)) replicated over channels
+        "a_log": ParamSpec(
+            (di, ns),
+            lambda key, shape, dtype: jnp.broadcast_to(
+                jnp.log(jnp.arange(1, shape[1] + 1, dtype=jnp.float32)), shape
+            ).astype(jnp.float32),
+            ("feature", "state"),
+        ),
+        "d_skip": ParamSpec((di,), lambda k, s, d_: jnp.ones(s, jnp.float32), ("feature",)),
+        "out_proj": ParamSpec((di, d), fanin_init(0), ("feature", "d_model")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+
+
+def _ssm_inputs(cfg: ModelConfig, p: Params, x: jax.Array):
+    """x (B,S,d) -> (u, z, dt, Bmat, Cmat) with u post-conv."""
+    di = _d_inner(cfg)
+    ns = cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    u = x @ p["in_u"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    u = jax.nn.silu(_causal_conv(u, p["conv"]))
+    u = logical_constraint(u, ("batch", "seq", "feature"))
+    proj = u @ p["x_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"].astype(x.dtype)
+        + p["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)  # (B,S,di)
+    Bmat = proj[..., dt_rank : dt_rank + ns].astype(jnp.float32)  # (B,S,ns)
+    Cmat = proj[..., dt_rank + ns :].astype(jnp.float32)
+    return u, z, dt, Bmat, Cmat
+
+
+def mamba_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    di = _d_inner(cfg)
+    ns = cfg.mamba_d_state
+    u, z, dt, Bmat, Cmat = _ssm_inputs(cfg, p, x)
+    A = -jnp.exp(p["a_log"])  # (di,ns)
+
+    c = min(_CHUNK, s)
+    if s % c:
+        raise ValueError(f"seq {s} % chunk {c} != 0")
+    n = s // c
+
+    def ch(t):
+        return t.reshape(b, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    us, dts, Bs, Cs = map(ch, (u, dt, Bmat, Cmat))
+
+    @jax.checkpoint
+    def body(state, inp):
+        uc, dtc, Bc, Cc = inp  # (B,c,di), (B,c,di), (B,c,ns), (B,c,ns)
+        dA = jnp.exp(dtc[..., None] * A)  # (B,c,di,ns)
+        dBu = (dtc * uc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+        def comb(a, b_):
+            return (a[0] * b_[0], b_[0] * a[1] + b_[1])
+
+        dec, acc = jax.lax.associative_scan(comb, (dA, dBu), axis=1)
+        st = dec * state[:, None] + acc  # (B,c,di,ns)
+        y = jnp.einsum("bcds,bcs->bcd", st, Cc)
+        return st[:, -1], y
+
+    s0 = jnp.zeros((b, di, ns), jnp.float32)
+    _, ys = jax.lax.scan(body, s0, (us, dts, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int):
+    di = _d_inner(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.mamba_d_conv, di), jnp.bfloat16),
+    }
+
+
+def mamba_decode(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+) -> Tuple[jax.Array, Params]:
+    """Single-token recurrent step. x (B,1,d)."""
+    di = _d_inner(cfg)
+    ns = cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    u_pre = x @ p["in_u"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    conv_buf = jnp.concatenate(
+        [cache["conv"][:, 1:], u_pre.astype(cache["conv"].dtype)], axis=1
+    )
+    u = jax.nn.silu(
+        jnp.sum(conv_buf * p["conv"].astype(conv_buf.dtype)[None], axis=1)
+    )[:, None, :].astype(x.dtype)
+    proj = u @ p["x_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"].astype(x.dtype)
+        + p["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)[:, 0]  # (B,di)
+    Bm = proj[..., dt_rank : dt_rank + ns].astype(jnp.float32)[:, 0]
+    Cm = proj[..., dt_rank + ns :].astype(jnp.float32)[:, 0]
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt[..., None] * A)  # (B,di,ns)
+    dBu = (dt * u.astype(jnp.float32)[:, 0])[..., None] * Bm[:, None, :]
+    st = dA * cache["ssm"] + dBu
+    y = jnp.einsum("bds,bs->bd", st, Cm)[:, None, :].astype(x.dtype)
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype), {"ssm": st, "conv": conv_buf}

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries/keys/values are produced through low-rank latents; the decode-time
+KV cache stores only the compressed latent c_kv (kv_lora_rank) plus the
+shared decoupled RoPE key (qk_rope_dim) — the whole point of MLA. Decode
+uses the *absorbed* form (W_uk folded into the query, W_uv applied after the
+latent-space attention) so per-step FLOPs scale with kv_lora_rank, not with
+H * head_dim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec, fanin_init
+from repro.common.sharding import logical_constraint
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    causal_mask,
+    chunked_sdpa,
+    rmsnorm,
+    rmsnorm_specs,
+)
+
+Params = Dict
+
+
+def mla_specs(cfg: ModelConfig) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    specs: Params = {
+        "wdkv": ParamSpec((d, kvr + rope), fanin_init(0), ("d_model", None)),
+        "kv_norm": rmsnorm_specs(kvr),
+        "wuk": ParamSpec((kvr, h, nope), fanin_init(0), (None, "heads", "qk_dim")),
+        "wuv": ParamSpec((kvr, h, vd), fanin_init(0), (None, "heads", "head_dim")),
+        "wo": ParamSpec((h, vd, d), fanin_init(0), ("heads", "head_dim", "d_model")),
+    }
+    if qr:
+        specs["wdq"] = ParamSpec((d, qr), fanin_init(0), ("d_model", None))
+        specs["q_norm"] = rmsnorm_specs(qr)
+        specs["wuq"] = ParamSpec((qr, h, nope + rope), fanin_init(0), (None, "heads", "qk_dim"))
+    else:
+        specs["wq"] = ParamSpec((d, h, nope + rope), fanin_init(0), ("d_model", "heads", "qk_dim"))
+    return specs
+
+
+def _queries(cfg: ModelConfig, p: Params, x: jax.Array):
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], x @ p["wdq"].astype(x.dtype))
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    return q[..., :nope], q[..., nope : nope + rope]
+
+
+def _latents(cfg: ModelConfig, p: Params, x: jax.Array):
+    kvr = cfg.kv_lora_rank
+    dkv = x @ p["wdkv"].astype(x.dtype)
+    c_kv = rmsnorm(p["kv_norm"], dkv[..., :kvr])
+    k_rope = dkv[..., kvr:]  # (B,S,rope) shared across heads
+    return c_kv, k_rope
+
+
+def mla_attention(
+    cfg: ModelConfig, p: Params, x: jax.Array, cos: jax.Array, sin: jax.Array
+) -> jax.Array:
+    """Train/prefill: expanded form, causal."""
+    b, s, _ = x.shape
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(cfg, p, x)
+    c_kv, k_rope = _latents(cfg, p, x)
+
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]  # shared head
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuv"].astype(x.dtype))
+    q_nope = logical_constraint(q_nope, ("batch", "seq", "heads", "qk_dim"))
+    k_nope = logical_constraint(k_nope, ("batch", "seq", "heads", "qk_dim"))
+
+    # Fold the decoupled-RoPE component into a single concatenated qk dim so
+    # the memory-bounded chunked attention path applies unchanged. The
+    # concat scale matches 1/sqrt(nope+rope) because chunked_sdpa scales by
+    # 1/sqrt(last_dim).
+    h = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope))
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # pad v to the qk dim so chunked_sdpa's single head_dim suffices
+    o = chunked_sdpa(q_cat, k_cat, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rope - vd))), causal=True)
+    o = o[..., :vd]
+    o = logical_constraint(o, ("batch", "seq", "heads", "head_dim"))
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.bfloat16
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dt),
+    }
+
+
+def mla_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B,1,d)
+    cache: Params,
+    pos: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+) -> Tuple[jax.Array, Params]:
+    """Absorbed-form decode: attention runs in the kv_lora_rank latent space."""
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_nope, q_rope = _queries(cfg, p, x)
+    c_new, kr_new = _latents(cfg, p, x)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    # absorb W_uk into the query: (B,1,H,nope) x (kvr,H,nope) -> (B,1,H,kvr)
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wuk"].astype(x.dtype))
+    scale = 1.0 / math.sqrt(nope + rope)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_abs, c_kv.astype(x.dtype))
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope.astype(x.dtype))
+    ).astype(jnp.float32) * scale
+    valid = (jnp.arange(c_kv.shape[1]) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv.astype(x.dtype))
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx, p["wuv"].astype(x.dtype))
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype)), new_cache

@@ -1,0 +1,126 @@
+"""Public model API: build_model(cfg) -> Model bundle.
+
+Everything downstream (launcher, dry-run, co-tuning core, benchmarks) goes
+through this interface; architecture differences are fully described by the
+ModelConfig block pattern.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import abstract, axes_of, materialize
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.transformer import DEFAULT_FLAGS, RuntimeFlags
+
+Params = Dict
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    flags: RuntimeFlags
+
+    def specs(self) -> Params:
+        return T.model_specs(self.cfg)
+
+    def init(self, key: jax.Array, dtype=jnp.bfloat16) -> Params:
+        return materialize(self.specs(), key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16) -> Params:
+        return abstract(self.specs(), dtype)
+
+    def param_axes(self) -> Params:
+        return axes_of(self.specs())
+
+    # ---- training ----
+    def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        return T.train_loss(self.cfg, params, batch, self.flags)
+
+    def logits(self, params: Params, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        return T.logits_fn(self.cfg, params, batch, self.flags)
+
+    def hidden(self, params: Params, batch: Dict):
+        return T.forward_hidden(self.cfg, params, batch, self.flags)
+
+    # ---- serving ----
+    def cache_specs(self, batch: int, max_len: int) -> Params:
+        return T.cache_specs(self.cfg, batch, max_len)
+
+    def cache_axes(self) -> Params:
+        return T.cache_axes(self.cfg)
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return jax.tree.map(
+            lambda sds: jnp.zeros(sds.shape, sds.dtype),
+            self.cache_specs(batch, max_len),
+        )
+
+    def serve_step(self, params: Params, cache: Params, batch: Dict):
+        return T.serve_step(self.cfg, params, cache, batch, self.flags)
+
+    def encode(self, params: Params, audio_embeds: jax.Array) -> jax.Array:
+        return T.encode(self.cfg, params, audio_embeds, self.flags)
+
+
+def build_model(cfg: ModelConfig, flags: RuntimeFlags = DEFAULT_FLAGS) -> Model:
+    return Model(cfg, flags)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs for dry-runs (ShapeDtypeStruct only — no allocation)
+# ---------------------------------------------------------------------------
+
+def _train_inputs(cfg: ModelConfig, b: int, s: int):
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    axes = {
+        "tokens": ("batch", None),
+        "targets": ("batch", None),
+        "loss_mask": ("batch", None),
+    }
+    if cfg.vision_embeds:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        specs["vision_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        specs["mrope_pos"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        axes["vision_embeds"] = ("batch", None, None)
+        axes["vision_mask"] = ("batch", None)
+        axes["mrope_pos"] = (None, "batch", None)
+    if cfg.is_encoder_decoder:
+        f = max(s // 4, 8)
+        specs["audio_embeds"] = jax.ShapeDtypeStruct((b, f, cfg.d_model), jnp.bfloat16)
+        axes["audio_embeds"] = ("batch", None, None)
+    if cfg.mtp_depth:
+        specs["mtp_targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        axes["mtp_targets"] = ("batch", None)
+    return specs, axes
+
+
+def _decode_inputs(cfg: ModelConfig, b: int, s: int):
+    specs = {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    axes: Dict[str, Any] = {"token": ("batch",), "pos": ()}
+    if cfg.vision_embeds:
+        specs["mrope_pos"] = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+        axes["mrope_pos"] = (None, "batch", None)
+    if cfg.is_encoder_decoder:
+        f = max(min(s, 8192) // 4, 8)
+        specs["enc"] = jax.ShapeDtypeStruct((b, f, cfg.d_model), jnp.bfloat16)
+        axes["enc"] = ("batch", None, None)
+    return specs, axes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(abstract batch, logical axes) for the given input shape."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return _train_inputs(cfg, b, s)
+    return _decode_inputs(cfg, b, s)

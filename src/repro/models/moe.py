@@ -1,0 +1,285 @@
+"""Mixture-of-Experts layer with linear-memory scatter dispatch.
+
+Covers DeepSeek-V3 (256 routed + 1 shared, top-8, sigmoid scoring with
+normalized weights), Phi-3.5-MoE (16e top-2 softmax) and Jamba (16e top-2).
+
+Dispatch avoids the classic GShard (T, E, C) one-hot tensor — at DeepSeek
+scale (T = 1M tokens, E = 256) that tensor is O(1e13) elements and cannot
+even be lowered. Instead tokens are scatter-added into a per-expert
+capacity buffer (E*C, d) and gathered back, which is linear in T and C and
+static-shape under pjit. The buffer's 'experts' axis is sharded (expert
+parallelism); GSPMD materializes the token exchange as collectives, which
+the roofline §collective term tracks. A shard_map all-to-all variant is the
+§Perf optimization path.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec, fanin_init, normal_init
+from repro.common.sharding import logical_constraint
+from repro.configs.base import ModelConfig
+
+Params = Dict
+
+
+def moe_specs(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    f = cfg.d_ff_moe or cfg.d_ff
+    e = cfg.num_experts
+    specs = {
+        "router": ParamSpec((d, e), normal_init(0.02), ("d_model", "experts")),
+        "experts": {
+            "gate": ParamSpec((e, d, f), fanin_init(1), ("experts", "d_model", "expert_ffn")),
+            "up": ParamSpec((e, d, f), fanin_init(1), ("experts", "d_model", "expert_ffn")),
+            "down": ParamSpec((e, f, d), fanin_init(1), ("experts", "expert_ffn", "d_model")),
+        },
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        specs["shared"] = {
+            "gate": ParamSpec((d, fs), fanin_init(0), ("d_model", "ffn")),
+            "up": ParamSpec((d, fs), fanin_init(0), ("d_model", "ffn")),
+            "down": ParamSpec((fs, d), fanin_init(0), ("ffn", "d_model")),
+        }
+    return specs
+
+
+def expert_ffn(p: Params, x: jax.Array, constrain: bool = True) -> jax.Array:
+    """x (E, C, d) -> (E, C, d), vectorized over experts (SwiGLU).
+
+    ``constrain=False`` inside shard_map (manual-axes context forbids
+    with_sharding_constraint)."""
+    g = jnp.einsum("ecd,edf->ecf", x, p["gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x, p["up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    if constrain:
+        h = logical_constraint(h, ("experts", None, "expert_ffn"))
+    return jnp.einsum("ecf,efd->ecd", h, p["down"].astype(x.dtype))
+
+
+def route(cfg: ModelConfig, p: Params, xt: jax.Array):
+    """xt (T,d) -> (weights (T,k), expert ids (T,k), aux loss)."""
+    scores = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (T,E)
+    if cfg.name.startswith("deepseek"):
+        probs = jax.nn.sigmoid(scores)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    weights = topv / jnp.clip(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    e = cfg.num_experts
+    me = jnp.mean(jax.nn.softmax(scores, axis=-1), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(topi[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return weights, topi, aux
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss). Dispatches to the shard_map
+    expert-parallel path when a production mesh is active (GSPMD replicates
+    the data-dependent scatter otherwise — measured 100x FLOPs/bytes blowup
+    on deepseek-v3, see EXPERIMENTS.md §Dry-run)."""
+    from repro.common.sharding import current_mesh
+
+    mesh = current_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        ncols = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        if cfg.num_experts % ncols == 0 and ncols > 1:
+            return moe_ffn_sharded(cfg, p, x, mesh)
+    return moe_ffn_dense(cfg, p, x)
+
+
+def moe_ffn_dense(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-device reference path (CPU tests, smoke configs)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    weights, topi, aux = route(cfg, p, xt)
+
+    cap = max(int(math.ceil(t / e * cfg.capacity_factor * k)), k)
+
+    # Position of each (token, choice) inside its expert's capacity buffer:
+    # cumulative count of prior assignments to the same expert.
+    flat_e = topi.reshape(t * k)  # row-major: all k choices of token 0, ...
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_key = flat_e[order]
+    starts = jnp.searchsorted(sorted_key, jnp.arange(e + 1))
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_key]
+    pos = jnp.zeros(t * k, jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # drop slot at the end
+
+    # Scatter tokens into the expert buffer.
+    xk = jnp.repeat(xt, k, axis=0)  # (T*k, d)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(xk)
+    xe = buf[: e * cap].reshape(e, cap, d)
+    xe = logical_constraint(xe, ("experts", None, "d_model"))
+
+    ye = expert_ffn(p["experts"], xe)
+    ye = logical_constraint(ye, ("experts", None, "d_model"))
+
+    # Gather back and combine with routing weights.
+    yk = jnp.concatenate([ye.reshape(e * cap, d), jnp.zeros((1, d), ye.dtype)])[dest]
+    w = (weights.reshape(t * k) * keep.astype(weights.dtype)).astype(x.dtype)
+    yt = jnp.sum((yk * w[:, None]).reshape(t, k, d), axis=1)
+
+    out = yt.reshape(b, s, d)
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(xt @ sp["gate"].astype(x.dtype)) * (xt @ sp["up"].astype(x.dtype))
+        h = logical_constraint(h, (None, "ffn"))
+        out = out + (h @ sp["down"].astype(x.dtype)).reshape(b, s, d)
+    return out, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert-parallel path (production mesh)
+# ---------------------------------------------------------------------------
+
+def moe_ffn_sharded(
+    cfg: ModelConfig, p: Params, x: jax.Array, mesh
+) -> Tuple[jax.Array, jax.Array]:
+    """Expert parallelism via shard_map.
+
+    Activations are replicated across the 'model' axis (standard TP layout),
+    so each model column routes ALL of its data-shard's tokens but keeps
+    only the top-k choices that land on its own E/ncols experts; partial
+    outputs (and the model-column slice of the shared expert) are combined
+    with one psum over 'model'. This replaces GSPMD's involuntary
+    replication of the data-dependent scatter with: per-column local
+    scatter (cheap) + one all-reduce per layer (the collective the roofline
+    tracks). FSDP all-gathers of the expert weights are forced explicitly
+    by the shard_map in_specs.
+    """
+    shard_map = jax.shard_map
+    from jax.sharding import PartitionSpec as P
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ncols = sizes["model"]
+    e, k = cfg.num_experts, cfg.top_k
+    e_local = e // ncols
+    b, s, d = x.shape
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    n_rows = int(np.prod([sizes[a] for a in batch_axes])) if batch_axes else 1
+    if batch_axes and b % n_rows != 0:
+        batch_axes = ()  # tiny-batch decode: replicate tokens
+        n_rows = 1
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+    t_local = (b // n_rows) * s
+    cap = max(int(math.ceil(t_local / e * cfg.capacity_factor * k)), k)
+
+    has_shared = bool(cfg.num_shared_experts)
+
+    def local_fn(xl, router, gate, up, down, sh_g, sh_u, sh_d):
+        bl, sl, _ = xl.shape
+        t = bl * sl
+        xt = xl.reshape(t, d)
+        weights, topi, aux = route(cfg, {"router": router}, xt)
+
+        col = jax.lax.axis_index("model")
+        local_id = topi - col * e_local  # (t, k)
+        keep_col = (local_id >= 0) & (local_id < e_local)
+        lid = jnp.where(keep_col, local_id, 0).reshape(t * k)
+        kc = keep_col.reshape(t * k)
+
+        # position-in-expert via stable sort ranking, NOT a (t*k, E) one-hot
+        # cumsum — XLA lowers the big cumsum as a reduce-window whose cost
+        # dominated the per-layer bytes term (EXPERIMENTS.md §Perf A1).
+        tk = t * k
+        key = jnp.where(kc, lid, e_local).astype(jnp.int32)
+        order = jnp.argsort(key, stable=True)  # experts grouped, stable
+        sorted_key = key[order]
+        starts = jnp.searchsorted(sorted_key, jnp.arange(e_local + 1))
+        pos_sorted = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_key]
+        pos = jnp.zeros(tk, jnp.int32).at[order].set(pos_sorted)
+        keep = kc & (pos < cap)
+        dest = jnp.where(keep, lid * cap + pos, e_local * cap)
+
+        # Buffer-centric dispatch: scatter token IDS (ints) into the slot
+        # table, then gather token VECTORS once. Materializing x repeated
+        # top_k times (the obvious formulation) costs T*k*d floats and its
+        # backward scatter was the dominant bytes term (EXPERIMENTS §Perf).
+        n_slots = e_local * cap
+        tok_of_choice = jnp.arange(t * k, dtype=jnp.int32) // k
+        slot_src = jnp.zeros(n_slots + 1, jnp.int32).at[dest].set(tok_of_choice)
+        slot_valid = jnp.zeros(n_slots + 1, jnp.bool_).at[dest].set(True)
+        w_flat = (weights.reshape(t * k) * keep.astype(weights.dtype))
+        slot_w = jnp.zeros(n_slots + 1, jnp.float32).at[dest].set(w_flat)
+
+        xe = xt[slot_src[:n_slots]] * slot_valid[:n_slots, None].astype(xl.dtype)
+        xe = xe.reshape(e_local, cap, d)
+        ye = expert_ffn({"gate": gate, "up": up, "down": down}, xe, constrain=False)
+        contrib = ye.reshape(n_slots, d) * (
+            slot_w[:n_slots, None] * slot_valid[:n_slots, None]
+        ).astype(ye.dtype)
+        yt = jnp.zeros((t, d), xl.dtype).at[slot_src[:n_slots]].add(contrib)
+
+        if has_shared:
+            # shared expert's ffn dim is split over the model columns; the
+            # same psum that combines routed experts completes it.
+            h = jax.nn.silu(xt @ sh_g.astype(xl.dtype)) * (xt @ sh_u.astype(xl.dtype))
+            yt = yt + h @ sh_d.astype(xl.dtype)
+
+        yt = jax.lax.psum(yt, "model")
+        if batch_axes:  # aux is already invariant along 'model'
+            aux = jax.lax.pmean(aux, batch_axes)
+        return yt.reshape(bl, sl, d), aux
+
+    ep = p["experts"]
+    if has_shared:
+        sh = p["shared"]
+        shared_args = (sh["gate"], sh["up"], sh["down"])
+        shared_specs = (P(None, "model"), P(None, "model"), P("model", None))
+    else:
+        z = jnp.zeros((1, 1), x.dtype)
+        shared_args = (z, z, z)
+        shared_specs = (P(None, None),) * 3
+
+    # Expert weights enter shard_map in their TRUE (FSDP) sharding and are
+    # all-gathered INSIDE over the fsdp axes: the VJP of that gather is a
+    # reduce-scatter, so weight grads sync as (682B/256)-sized shards
+    # instead of psum-ing FULL expert tensors over the data axis
+    # (EXPERIMENTS.md §Perf A3 — was 798GB/device of all-reduce).
+    from repro.common.sharding import current_param_rules, logical_to_spec
+
+    prules = current_param_rules()
+    if prules is not None:
+        w_spec = logical_to_spec(
+            ep["gate"].shape, ("experts", "d_model", "expert_ffn"), mesh, prules
+        )
+        fsdp_axes = w_spec[1] if len(w_spec) > 1 and w_spec[1] else None
+    else:
+        w_spec = P("model", None, None)
+        fsdp_axes = None
+
+    def wrapped(xl, router, gate, up, down, sh_g, sh_u, sh_d):
+        if fsdp_axes is not None:
+            gate = jax.lax.all_gather(gate, fsdp_axes, axis=1, tiled=True)
+            up = jax.lax.all_gather(up, fsdp_axes, axis=1, tiled=True)
+            down = jax.lax.all_gather(down, fsdp_axes, axis=2, tiled=True)
+        return local_fn(xl, router, gate, up, down, sh_g, sh_u, sh_d)
+
+    fn = shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=(
+            x_spec,
+            P(None, None),  # router replicated (global top-k)
+            P(*w_spec),
+            P(*w_spec),
+            P(w_spec[0], (w_spec[2] if len(w_spec) > 2 else None), w_spec[1] if len(w_spec) > 1 else None),
+        ) + shared_specs,
+        out_specs=(x_spec, P()),
+    )
+    out, aux = fn(x, p["router"], ep["gate"], ep["up"], ep["down"], *shared_args)
+    return out, aux

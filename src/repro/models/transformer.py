@@ -1,0 +1,479 @@
+"""Generic block-pattern transformer: assembles the model zoo.
+
+The layer stack = unrolled ``prefix_pattern`` + ``unit_pattern`` scanned
+``unit_repeats`` times (stacked params, jax.lax.scan, optional remat) —
+bounded compile time for 61-80 layer configs. Covers dense GQA/MQA decoders,
+MoE, MLA, xLSTM, Mamba, Jamba hybrid, Whisper enc-dec, Qwen2-VL backbone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec, stack_specs
+from repro.common.sharding import logical_constraint
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import xlstm as XL
+
+Params = Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeFlags:
+    """Perf knobs iterated by §Perf (defaults = paper-faithful baseline)."""
+
+    remat: str = "unit"  # unit | none
+    attn_chunk: int = 1024
+    triangular_skip: bool = True
+    scan_units: bool = True  # False -> unroll (compile-time/perf trade)
+
+
+DEFAULT_FLAGS = RuntimeFlags()
+
+
+# ---------------------------------------------------------------------------
+# Block specs / apply
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, block: str) -> Params:
+    mixer, mlpk = cfg.block_parts(block)
+    specs: Params = {}
+    if mixer in ("attn", "swa"):
+        specs["norm1"] = L.norm_specs(cfg)
+        specs["attn"] = L.attention_specs(cfg)
+    elif mixer == "xdec":  # whisper decoder: self-attn + cross-attn
+        specs["norm1"] = L.norm_specs(cfg)
+        specs["attn"] = L.attention_specs(cfg)
+        specs["norm_x"] = L.norm_specs(cfg)
+        specs["xattn"] = L.attention_specs(cfg, cross=True)
+    elif mixer == "mla":
+        specs["norm1"] = L.norm_specs(cfg)
+        specs["attn"] = MLA.mla_specs(cfg)
+    elif mixer == "mlstm":
+        specs["norm1"] = L.norm_specs(cfg)
+        specs["mixer"] = XL.mlstm_specs(cfg)
+    elif mixer == "slstm":
+        specs["norm1"] = L.norm_specs(cfg)
+        specs["mixer"] = XL.slstm_specs(cfg)
+    elif mixer == "mamba":
+        specs["norm1"] = L.norm_specs(cfg)
+        specs["mixer"] = MB.mamba_specs(cfg)
+    else:
+        raise ValueError(f"unknown mixer {mixer}")
+    if mlpk == "mlp":
+        specs["norm2"] = L.norm_specs(cfg)
+        specs["mlp"] = L.mlp_specs(cfg)
+    elif mlpk == "moe":
+        specs["norm2"] = L.norm_specs(cfg)
+        specs["moe"] = MOE.moe_specs(cfg)
+    elif mlpk == "dense_big":  # deepseek first-k-dense layers (d_ff != moe d_ff)
+        specs["norm2"] = L.norm_specs(cfg)
+        specs["mlp"] = L.mlp_specs(cfg, cfg.d_ff)
+    return specs
+
+
+def _rope_for(cfg: ModelConfig, mixer: str, ctx: Dict):
+    if mixer in ("attn", "swa", "xdec"):
+        return ctx.get("cos"), ctx.get("sin")
+    if mixer == "mla":
+        return ctx.get("cos_mla"), ctx.get("sin_mla")
+    return None, None
+
+
+def block_apply(
+    cfg: ModelConfig,
+    p: Params,
+    block: str,
+    h: jax.Array,
+    ctx: Dict,
+    *,
+    causal: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence apply. Returns (h, aux_loss)."""
+    mixer, mlpk = cfg.block_parts(block)
+    aux = jnp.zeros((), jnp.float32)
+    cos, sin = _rope_for(cfg, mixer, ctx)
+    x = L.apply_norm(cfg, p["norm1"], h)
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else 0
+        h = h + L.attention(cfg, p["attn"], x, cos, sin, window=window, causal=causal)
+    elif mixer == "xdec":
+        h = h + L.attention(cfg, p["attn"], x, cos, sin, causal=True)
+        xx = L.apply_norm(cfg, p["norm_x"], h)
+        h = h + L.cross_attention(cfg, p["xattn"], xx, ctx["enc"])
+    elif mixer == "mla":
+        h = h + MLA.mla_attention(cfg, p["attn"], x, cos, sin)
+    elif mixer == "mlstm":
+        h = h + XL.mlstm_forward(cfg, p["mixer"], x)
+    elif mixer == "slstm":
+        h = h + XL.slstm_forward(cfg, p["mixer"], x)
+    elif mixer == "mamba":
+        h = h + MB.mamba_forward(cfg, p["mixer"], x)
+    if mlpk in ("mlp", "dense_big"):
+        h = h + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+    elif mlpk == "moe":
+        y, a = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h))
+        h = h + y
+        aux = aux + a
+    if "adapter" in p:  # Co-PLMs DST domain adapter (core/adapters.py)
+        from repro.core.adapters import apply_adapter
+
+        h = apply_adapter(p["adapter"], h)
+    h = logical_constraint(h, ("batch", "seq", "d_model"))
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode-path block apply (single token, cache in/out)
+# ---------------------------------------------------------------------------
+
+def block_cache_specs(cfg: ModelConfig, block: str, batch: int, max_len: int):
+    mixer, _ = cfg.block_parts(block)
+    if mixer == "attn":
+        return L.attn_cache_specs(cfg, batch, max_len)
+    if mixer == "swa":
+        return L.attn_cache_specs(cfg, batch, max_len, window=cfg.window)
+    if mixer == "xdec":
+        return L.attn_cache_specs(cfg, batch, max_len)
+    if mixer == "mla":
+        return MLA.mla_cache_specs(cfg, batch, max_len)
+    if mixer == "mlstm":
+        return XL.mlstm_cache_specs(cfg, batch)
+    if mixer == "slstm":
+        return XL.slstm_cache_specs(cfg, batch)
+    if mixer == "mamba":
+        return MB.mamba_cache_specs(cfg, batch)
+    raise ValueError(mixer)
+
+
+def block_decode(
+    cfg: ModelConfig,
+    p: Params,
+    block: str,
+    h: jax.Array,
+    cache: Params,
+    pos: jax.Array,
+    ctx: Dict,
+) -> Tuple[jax.Array, Params]:
+    mixer, mlpk = cfg.block_parts(block)
+    cos, sin = _rope_for(cfg, mixer, ctx)
+    x = L.apply_norm(cfg, p["norm1"], h)
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else 0
+        o, cache = L.attention_decode(cfg, p["attn"], x, cache, pos, cos, sin, window=window)
+        h = h + o
+    elif mixer == "xdec":
+        o, cache = L.attention_decode(cfg, p["attn"], x, cache, pos, cos, sin)
+        h = h + o
+        xx = L.apply_norm(cfg, p["norm_x"], h)
+        h = h + L.cross_attention(cfg, p["xattn"], xx, ctx["enc"])
+    elif mixer == "mla":
+        o, cache = MLA.mla_decode(cfg, p["attn"], x, cache, pos, cos, sin)
+        h = h + o
+    elif mixer == "mlstm":
+        o, cache = XL.mlstm_decode(cfg, p["mixer"], x, cache)
+        h = h + o
+    elif mixer == "slstm":
+        o, cache = XL.slstm_decode(cfg, p["mixer"], x, cache)
+        h = h + o
+    elif mixer == "mamba":
+        o, cache = MB.mamba_decode(cfg, p["mixer"], x, cache)
+        h = h + o
+    if mlpk in ("mlp", "dense_big"):
+        h = h + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+    elif mlpk == "moe":
+        y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h))
+        h = h + y
+    if "adapter" in p:
+        from repro.core.adapters import apply_adapter
+
+        h = apply_adapter(p["adapter"], h)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model specs
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> Params:
+    specs: Params = {"embed": L.embed_specs(cfg), "final_norm": L.norm_specs(cfg)}
+    if cfg.pos_type == "learned":
+        specs["pos_embed"] = ParamSpec(
+            (cfg.max_position, cfg.d_model),
+            lambda k, s, d: (jax.random.normal(k, s) * 0.02).astype(d),
+            ("frames", "d_model"),
+        )
+    if cfg.prefix_pattern:
+        specs["prefix"] = {
+            f"l{i}": block_specs(cfg, blk) for i, blk in enumerate(cfg.prefix_pattern)
+        }
+    unit = {f"b{i}": block_specs(cfg, blk) for i, blk in enumerate(cfg.unit_pattern)}
+    specs["units"] = stack_specs(unit, cfg.unit_repeats)
+    if cfg.is_encoder_decoder:
+        enc_unit = {"b0": block_specs(cfg, "attn+mlp")}
+        specs["encoder"] = {
+            "units": stack_specs(enc_unit, cfg.encoder_layers),
+            "final_norm": L.norm_specs(cfg),
+            "pos_embed": ParamSpec(
+                (8192, cfg.d_model),
+                lambda k, s, d: (jax.random.normal(k, s) * 0.02).astype(d),
+                ("frames", "d_model"),
+            ),
+        }
+    if cfg.mtp_depth:
+        specs["mtp"] = {
+            "proj": L.linear_specs(2 * cfg.d_model, cfg.d_model, ("d_model", None)),
+            "block": block_specs(cfg, cfg.unit_pattern[-1]),
+            "norm": L.norm_specs(cfg),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence) — returns hidden states
+# ---------------------------------------------------------------------------
+
+def _make_ctx(cfg: ModelConfig, positions: jax.Array, batch: Dict) -> Dict:
+    """cos/sin tables for whichever mixers the pattern uses."""
+    ctx: Dict = {}
+    blocks = cfg.prefix_pattern + cfg.unit_pattern
+    mixers = {cfg.block_parts(bl)[0] for bl in blocks}
+    if mixers & {"attn", "swa", "xdec"}:
+        if cfg.pos_type == "mrope" and "mrope_pos" in batch:
+            cos, sin = L.mrope_cos_sin(batch["mrope_pos"], cfg.resolved_head_dim, cfg.rope_theta)
+        elif cfg.pos_type == "none":
+            cos = sin = None
+        else:
+            cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        ctx["cos"], ctx["sin"] = cos, sin
+    if "mla" in mixers:
+        ctx["cos_mla"], ctx["sin_mla"] = L.rope_cos_sin(
+            positions, cfg.qk_rope_dim, cfg.rope_theta
+        )
+    return ctx
+
+
+def encode(cfg: ModelConfig, params: Params, audio_embeds: jax.Array,
+           flags: RuntimeFlags = DEFAULT_FLAGS) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B,F,d)."""
+    ep = params["encoder"]
+    f = audio_embeds.shape[1]
+    h = audio_embeds + ep["pos_embed"][:f].astype(audio_embeds.dtype)
+
+    def unit_fn(h, pu):
+        h, _ = block_apply(cfg, pu["b0"], "attn+mlp", h, {"cos": None, "sin": None}, causal=False)
+        return h, jnp.zeros((), jnp.float32)
+
+    if flags.remat == "unit":
+        unit_fn = jax.checkpoint(unit_fn)
+    h, _ = jax.lax.scan(unit_fn, h, ep["units"])
+    return L.apply_norm(cfg, ep["final_norm"], h)
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    batch: Dict,
+    flags: RuntimeFlags = DEFAULT_FLAGS,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward to final hidden states. Returns (h, aux)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = L.embed(cfg, params["embed"], tokens)
+    if cfg.vision_embeds and "vision_embeds" in batch:
+        mask = batch["vision_mask"][..., None]
+        h = jnp.where(mask, batch["vision_embeds"].astype(h.dtype), h)
+    positions = jnp.arange(s)
+    if cfg.pos_type == "learned":
+        h = h + params["pos_embed"][:s].astype(h.dtype)
+    h = logical_constraint(h, ("batch", "seq", "d_model"))
+    ctx = _make_ctx(cfg, positions, batch)
+    if cfg.is_encoder_decoder:
+        ctx["enc"] = encode(cfg, params, batch["audio_embeds"], flags)
+
+    aux = jnp.zeros((), jnp.float32)
+    for i, blk in enumerate(cfg.prefix_pattern):
+        h, a = block_apply(cfg, params["prefix"][f"l{i}"], blk, h, ctx)
+        aux = aux + a
+
+    def unit_fn(h, pu):
+        a_tot = jnp.zeros((), jnp.float32)
+        for i, blk in enumerate(cfg.unit_pattern):
+            h, a = block_apply(cfg, pu[f"b{i}"], blk, h, ctx)
+            a_tot = a_tot + a
+        return h, a_tot
+
+    if flags.scan_units:
+        fn = jax.checkpoint(unit_fn) if flags.remat == "unit" else unit_fn
+        h, auxs = jax.lax.scan(fn, h, params["units"])
+        aux = aux + jnp.sum(auxs)
+    else:
+        for r in range(cfg.unit_repeats):
+            pu = jax.tree.map(lambda x: x[r], params["units"])
+            h, a = unit_fn(h, pu)
+            aux = aux + a
+    return L.apply_norm(cfg, params["final_norm"], h), aux
+
+
+def logits_fn(cfg, params, batch, flags: RuntimeFlags = DEFAULT_FLAGS):
+    h, aux = forward_hidden(cfg, params, batch, flags)
+    return L.unembed(cfg, params["embed"], h), aux
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, mask: jax.Array):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.clip(jnp.sum(mask), 1.0)
+
+
+def train_loss(
+    cfg: ModelConfig,
+    params: Params,
+    batch: Dict,
+    flags: RuntimeFlags = DEFAULT_FLAGS,
+) -> Tuple[jax.Array, Dict]:
+    h, aux = forward_hidden(cfg, params, batch, flags)
+    logits = L.unembed(cfg, params["embed"], h)
+    loss = cross_entropy(logits, batch["targets"], batch["loss_mask"])
+    metrics = {"ce": loss, "aux": aux}
+    total = loss + cfg.router_aux_weight * aux
+    if cfg.mtp_depth and "mtp_targets" in batch:
+        # DeepSeek MTP: one extra block predicts t+2 from [h_t ; emb(t+1)]
+        mp = params["mtp"]
+        emb_next = L.embed(cfg, params["embed"], batch["targets"])
+        hm = L.linear(mp["proj"], jnp.concatenate([h, emb_next], axis=-1))
+        positions = jnp.arange(h.shape[1])
+        ctx = _make_ctx(cfg, positions, batch)
+        hm, _ = block_apply(cfg, mp["block"], cfg.unit_pattern[-1], hm, ctx)
+        hm = L.apply_norm(cfg, mp["norm"], hm)
+        mtp_logits = L.unembed(cfg, params["embed"], hm)
+        mtp_loss = cross_entropy(mtp_logits, batch["mtp_targets"], batch["loss_mask"])
+        metrics["mtp"] = mtp_loss
+        total = total + 0.3 * mtp_loss
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serve (single-token decode with cache)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    specs: Params = {}
+    if cfg.prefix_pattern:
+        specs["prefix"] = {
+            f"l{i}": block_cache_specs(cfg, blk, batch, max_len)
+            for i, blk in enumerate(cfg.prefix_pattern)
+        }
+    unit = {
+        f"b{i}": block_cache_specs(cfg, blk, batch, max_len)
+        for i, blk in enumerate(cfg.unit_pattern)
+    }
+    specs["units"] = jax.tree.map(
+        lambda sds: jax.ShapeDtypeStruct((cfg.unit_repeats,) + sds.shape, sds.dtype),
+        unit,
+    )
+    return specs
+
+
+def block_cache_axes(cfg: ModelConfig, block: str) -> Params:
+    """Logical axes per cache leaf. 'cache_seq' lets long KV caches shard
+    over the model axis when batch/kv_heads can't cover it (decode shapes)."""
+    mixer, _ = cfg.block_parts(block)
+    if mixer in ("attn", "swa", "xdec"):
+        a = ("batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": a, "v": a}
+    if mixer == "mla":
+        return {
+            "c_kv": ("batch", "cache_seq", None),
+            "k_rope": ("batch", "cache_seq", None),
+        }
+    if mixer == "mlstm":
+        return {
+            "C": ("batch", None, None, "feature"),
+            "n": ("batch", None, None),
+            "m": ("batch", None),
+            "conv": ("batch", None, "feature"),
+        }
+    if mixer == "slstm":
+        return {k: ("batch", None) for k in ("h", "c", "n", "m")}
+    if mixer == "mamba":
+        return {
+            "ssm": ("batch", "feature", None),
+            "conv": ("batch", None, "feature"),
+        }
+    raise ValueError(mixer)
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    base: Params = {}
+    if cfg.prefix_pattern:
+        base["prefix"] = {
+            f"l{i}": block_cache_axes(cfg, blk)
+            for i, blk in enumerate(cfg.prefix_pattern)
+        }
+    unit = {
+        f"b{i}": block_cache_axes(cfg, blk) for i, blk in enumerate(cfg.unit_pattern)
+    }
+    base["units"] = jax.tree.map(
+        lambda a: ("layers",) + a,
+        unit,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+    return base
+
+
+def serve_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    batch: Dict,
+    flags: RuntimeFlags = DEFAULT_FLAGS,
+) -> Tuple[jax.Array, Params]:
+    """One decode step: batch {'token': (B,), 'pos': scalar int32, ...}."""
+    tokens = batch["token"][:, None]  # (B,1)
+    pos = batch["pos"]
+    h = L.embed(cfg, params["embed"], tokens)
+    if cfg.pos_type == "learned":
+        h = h + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0
+        ).astype(h.dtype)
+    positions = pos[None] if pos.ndim == 0 else pos
+    ctx = _make_ctx(cfg, jnp.atleast_1d(positions), batch)
+    if cfg.is_encoder_decoder:
+        ctx["enc"] = batch["enc"]
+
+    new_cache: Params = {}
+    if cfg.prefix_pattern:
+        new_cache["prefix"] = {}
+        for i, blk in enumerate(cfg.prefix_pattern):
+            h, c = block_decode(
+                cfg, params["prefix"][f"l{i}"], blk, h, cache["prefix"][f"l{i}"], pos, ctx
+            )
+            new_cache["prefix"][f"l{i}"] = c
+
+    def unit_fn(h, xs):
+        pu, cu = xs
+        new_cu = {}
+        for i, blk in enumerate(cfg.unit_pattern):
+            h, c = block_decode(cfg, pu[f"b{i}"], blk, h, cu[f"b{i}"], pos, ctx)
+            new_cu[f"b{i}"] = c
+        return h, new_cu
+
+    h, new_units = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
+    new_cache["units"] = new_units
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = L.unembed(cfg, params["embed"], h)[:, 0]  # (B,V)
+    return logits, new_cache

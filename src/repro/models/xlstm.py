@@ -1,0 +1,421 @@
+"""xLSTM blocks (arXiv:2405.04517): chunked-parallel mLSTM + recurrent sLSTM.
+
+TPU adaptation (DESIGN.md §2): the CUDA kernels of the reference
+implementation become (a) a chunkwise-parallel scan for mLSTM — intra-chunk
+work is dense matmul (MXU-friendly), inter-chunk state is a short
+``lax.scan`` — and (b) a plain sequential scan for sLSTM (scalar memory,
+negligible FLOPs). All gate math is fp32 log-space with the max-stabilizer
+from the paper; the matrix memory C is stored pre-scaled by exp(-m_state).
+
+Sharding: the value/feature dim of the matrix memory ("feature" logical
+axis) shards over the model axis — C's columns are independent; q/k and the
+normalizer n stay replicated across it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamSpec, fanin_init, normal_init, ones_init, zeros_init
+from repro.common.sharding import logical_constraint
+from repro.configs.base import ModelConfig
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _d_inner_m(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * cfg.mlstm_proj_factor)
+
+
+def mlstm_specs(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = _d_inner_m(cfg)
+    h = cfg.lstm_num_heads
+    dh = di // h
+    # q/k/v are BLOCK-DIAGONAL per head (xLSTM paper) — (H, dh, dh) instead
+    # of (di, di): keeps the 1.3B config at its advertised size.
+    return {
+        # separate x/z up-projections: a fused (d, 2di) matrix sliced at the
+        # di boundary forces a collective-permute per layer when the output
+        # dim is sharded (EXPERIMENTS.md §Perf B2)
+        "up_x": ParamSpec((d, di), fanin_init(0), ("d_model", "feature")),
+        "up_z": ParamSpec((d, di), fanin_init(0), ("d_model", "feature")),
+        "conv": ParamSpec((4, di), normal_init(0.1), ("conv", None)),
+        "wq": ParamSpec((h, dh, dh), fanin_init(1), ("heads", None, None)),
+        "wk": ParamSpec((h, dh, dh), fanin_init(1), ("heads", None, None)),
+        "wv": ParamSpec((h, dh, dh), fanin_init(1), ("heads", None, "feature")),
+        "w_if": ParamSpec((di, 2 * h), normal_init(0.02), (None, None)),
+        "b_if": ParamSpec((2 * h,), zeros_init(), (None,)),
+        "skip_scale": ParamSpec((di,), ones_init(), (None,)),
+        "down": ParamSpec((di, d), fanin_init(0), ("feature", "d_model")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x (B,S,D), w (K,D)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k)
+    )
+    return out
+
+
+def _mlstm_qkv_gates(cfg: ModelConfig, p: Params, x: jax.Array):
+    b, s, _ = x.shape
+    di = _d_inner_m(cfg)
+    h = cfg.lstm_num_heads
+    xi = x @ p["up_x"].astype(x.dtype)
+    z = x @ p["up_z"].astype(x.dtype)
+    xc = jax.nn.silu(_causal_conv(xi, p["conv"]))
+    dh = di // h
+    xch = xc.reshape(*xc.shape[:-1], h, dh)
+    xih = xi.reshape(*xi.shape[:-1], h, dh)
+    q = jnp.einsum("bshk,hkl->bshl", xch, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bshk,hkl->bshl", xch, p["wk"].astype(x.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bshk,hkl->bshl", xih, p["wv"].astype(x.dtype))
+    gates = (xi @ p["w_if"].astype(x.dtype) + p["b_if"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    li = gates[..., :h]  # log input gate preactivation (B,S,H)
+    lf = jax.nn.log_sigmoid(gates[..., h:])  # log forget gate
+    return q, k, v, li, lf, xi, z
+
+
+def mlstm_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlstm_seq_parallel:
+        return mlstm_forward_seqpar(cfg, p, x)
+    return mlstm_forward_scan(cfg, p, x)
+
+
+def _chunk_summary(kc, vc, lic, lfc):
+    """Per-chunk state summary for the associative inter-chunk scan.
+
+    Returns (G, m, C_hat, n_hat): total log-forget G, local max-stabilizer m,
+    and the chunk's kv / k contributions scaled by exp(-m).
+    kc/vc (B,c,H,*), lic/lfc (B,c,H)."""
+    lic = lic.swapaxes(1, 2)
+    lfc = lfc.swapaxes(1, 2)
+    g = jnp.cumsum(lfc, axis=-1)
+    G = g[..., -1]
+    w_upd = G[..., None] - g + lic  # (B,H,c)
+    m = jnp.max(w_upd, axis=-1)  # (B,H)
+    sc = jnp.exp(w_upd - m[..., None])
+    C_hat = jnp.einsum("bkhd,bkhv,bhk->bhdv", kc.astype(jnp.float32),
+                       vc.astype(jnp.float32), sc)
+    n_hat = jnp.einsum("bkhd,bhk->bhd", kc.astype(jnp.float32), sc)
+    return G, m, C_hat, n_hat
+
+
+def _assoc_combine(e1, e2):
+    """Associative combination of (G, m, C, n) summaries; e1 earlier."""
+    G1, m1, C1, n1 = e1
+    G2, m2, C2, n2 = e2
+    G = G1 + G2
+    m = jnp.maximum(m1 + G2, m2)
+    w1 = jnp.exp(m1 + G2 - m)
+    w2 = jnp.exp(m2 - m)
+    C = C1 * w1[..., None, None] + C2 * w2[..., None, None]
+    n = n1 * w1[..., None] + n2 * w2[..., None]
+    return (G, m, C, n)
+
+
+def mlstm_forward_seqpar(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Sequence-parallel chunkwise mLSTM (§Perf B3, LASP-style).
+
+    The inter-chunk recurrence is an exponentially-weighted affine scan, so
+    incoming states for ALL chunks come from one `associative_scan` over the
+    chunk axis — which we shard over the 'model' mesh axis ('seq_chunks'
+    rule). TP all-reduces disappear (weights replicated); the only cross-
+    device traffic is the log-depth state exchange of the associative scan.
+    """
+    b, s, d = x.shape
+    h = cfg.lstm_num_heads
+    c = min(cfg.mlstm_chunk, s)
+    n = s // c
+    q, k, v, li, lf, xi, z = _mlstm_qkv_gates(cfg, p, x)
+    dk, dv = q.shape[-1], v.shape[-1]
+
+    def ch(t):
+        out = t.reshape(b, n, c, *t.shape[2:]).swapaxes(0, 1)
+        return logical_constraint(
+            out, ("seq_chunks", "batch") + (None,) * (out.ndim - 2)
+        )
+
+    qs, ks, vs, lis, lfs = map(ch, (q, k, v, li, lf))
+
+    # per-chunk summaries, parallel over the (sharded) chunk axis
+    G, m, C_hat, n_hat = jax.vmap(_chunk_summary)(ks, vs, lis, lfs)
+    cstr = lambda t: logical_constraint(
+        t, ("seq_chunks", "batch") + (None,) * (t.ndim - 2)
+    )
+    G, m, C_hat, n_hat = cstr(G), cstr(m), cstr(C_hat), cstr(n_hat)
+
+    # inclusive associative scan, then shift to exclusive (incoming state)
+    Gi, mi, Ci, ni = jax.lax.associative_scan(_assoc_combine, (G, m, C_hat, n_hat))
+    neg = jnp.full_like(m[0], -1e30)
+    m_in = jnp.concatenate([neg[None], mi[:-1]])
+    C_in = jnp.concatenate([jnp.zeros_like(C_hat[:1]), Ci[:-1]])
+    n_in = jnp.concatenate([jnp.zeros_like(n_hat[:1]), ni[:-1]])
+
+    def chunk_out(qc, kc, vc, lic, lfc, C0, n0, m0):
+        """Intra-chunk output given incoming state (same math as the scan
+        body of mlstm_forward_scan)."""
+        lic = lic.swapaxes(1, 2)
+        lfc = lfc.swapaxes(1, 2)
+        g = jnp.cumsum(lfc, axis=-1)
+        w_state = g + m0[..., None]
+        w_intra = g[..., :, None] - g[..., None, :] + lic[..., None, :]
+        cc = lic.shape[-1]
+        tri = jnp.tril(jnp.ones((cc, cc), bool))
+        w_intra = jnp.where(tri, w_intra, -jnp.inf)
+        m_loc = jnp.maximum(w_state, jnp.max(w_intra, axis=-1))
+        sc_state = jnp.exp(w_state - m_loc)
+        sc_intra = jnp.exp(w_intra - m_loc[..., None])
+        qk = jnp.einsum("bqhx,bkhx->bhqk", qc, kc).astype(jnp.float32)
+        att = sc_intra * qk
+        num = jnp.einsum("bhqk,bkhv->bqhv", att.astype(qc.dtype), vc).astype(jnp.float32)
+        num += (
+            jnp.einsum("bqhk,bhkv->bqhv", qc.astype(jnp.float32), C0)
+            * sc_state.swapaxes(1, 2)[..., None]
+        )
+        den = (jnp.sum(att, axis=-1)
+               + jnp.einsum("bqhk,bhk->bhq", qc.astype(jnp.float32), n0) * sc_state
+               ).swapaxes(1, 2)
+        hmax = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc).swapaxes(1, 2))
+        return (num / hmax[..., None]).astype(qc.dtype)
+
+    outs = jax.vmap(chunk_out)(qs, ks, vs, lis, lfs, C_in, n_in, m_in)
+    out = outs.swapaxes(0, 1).reshape(b, s, h * dv)
+    out = out + xi * p["skip_scale"].astype(x.dtype)
+    out = out * jax.nn.silu(z)
+    return out @ p["down"].astype(x.dtype)
+
+
+def mlstm_forward_scan(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Chunkwise-parallel mLSTM over the full sequence. x (B,S,d)."""
+    b, s, d = x.shape
+    h = cfg.lstm_num_heads
+    c = min(cfg.mlstm_chunk, s)
+    if s % c:
+        raise ValueError(f"seq {s} not divisible by mlstm_chunk {c}")
+    n = s // c
+    q, k, v, li, lf, xi, z = _mlstm_qkv_gates(cfg, p, x)
+    dk, dv = q.shape[-1], v.shape[-1]
+
+    # chunked views: (n, B, c, ...)
+    def ch(t):
+        return t.reshape(b, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lis, lfs = map(ch, (q, k, v, li, lf))
+
+    def body(carry, inp):
+        C_hat, n_hat, m_state = carry  # C_hat (B,H,dk,dv), n_hat (B,H,dk), m (B,H)
+        qc, kc, vc, lic, lfc = inp  # (B,c,H,*)
+        lic = lic.swapaxes(1, 2)  # (B,H,c)
+        lfc = lfc.swapaxes(1, 2)
+        g = jnp.cumsum(lfc, axis=-1)  # inclusive cumulative log-forget
+        G = g[..., -1:]  # (B,H,1)
+
+        # log weights
+        w_state = g + m_state[..., None]  # (B,H,c) decay applied to carry state
+        w_intra = g[..., :, None] - g[..., None, :] + lic[..., None, :]  # (B,H,c,c)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        w_intra = jnp.where(tri, w_intra, -jnp.inf)
+        m_loc = jnp.maximum(w_state, jnp.max(w_intra, axis=-1))  # (B,H,c)
+
+        sc_state = jnp.exp(w_state - m_loc)  # (B,H,c)
+        sc_intra = jnp.exp(w_intra - m_loc[..., None])  # (B,H,c,c)
+
+        qk = jnp.einsum("bqhx,bkhx->bhqk", qc, kc).astype(jnp.float32)
+        att = sc_intra * qk
+        num = jnp.einsum("bhqk,bkhv->bqhv", att.astype(x.dtype), vc).astype(jnp.float32)
+        num += (
+            jnp.einsum("bqhk,bhkv->bqhv", qc.astype(jnp.float32), C_hat)
+            * sc_state.swapaxes(1, 2)[..., None]
+        )
+        den_intra = jnp.sum(att, axis=-1)  # (B,H,c)
+        den_state = jnp.einsum("bqhk,bhk->bhq", qc.astype(jnp.float32), n_hat) * sc_state
+        den = (den_intra + den_state).swapaxes(1, 2)  # (B,c,H)
+        hmax = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc).swapaxes(1, 2))
+        out = num / hmax[..., None]
+
+        # state update to end of chunk
+        w_upd = G - g + lic  # (B,H,c) decay from position to chunk end
+        m_new = jnp.maximum(G[..., 0] + m_state, jnp.max(w_upd, axis=-1))
+        sc_upd = jnp.exp(w_upd - m_new[..., None])  # (B,H,c)
+        sc_old = jnp.exp(G[..., 0] + m_state - m_new)  # (B,H)
+        kv = jnp.einsum(
+            "bkhd,bkhv,bhk->bhdv", kc.astype(jnp.float32), vc.astype(jnp.float32), sc_upd
+        )
+        C_new = C_hat * sc_old[..., None, None] + kv
+        ksum = jnp.einsum("bkhd,bhk->bhd", kc.astype(jnp.float32), sc_upd)
+        n_new = n_hat * sc_old[..., None] + ksum
+        # pin the carry sharding: without this GSPMD resharded the matrix
+        # memory EVERY chunk step (collective-permute per chunk x layer)
+        C_new = logical_constraint(C_new, ("batch", None, None, "feature"))
+        n_new = logical_constraint(n_new, ("batch", None, None))
+        return (C_new, n_new, m_new), out.astype(x.dtype)
+
+    C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, (C0, n0, m0), (qs, ks, vs, lis, lfs))
+    out = outs.swapaxes(0, 1).reshape(b, s, h * dv)
+    out = logical_constraint(out, ("batch", "seq", "feature"))
+    out = out + xi * p["skip_scale"].astype(x.dtype)
+    out = out * jax.nn.silu(z)
+    return out @ p["down"].astype(x.dtype)
+
+
+def mlstm_cache_specs(cfg: ModelConfig, batch: int):
+    h = cfg.lstm_num_heads
+    di = _d_inner_m(cfg)
+    dk = di // h
+    dv = di // h
+    return {
+        "C": jax.ShapeDtypeStruct((batch, h, dk, dv), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dk), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 4, di), jnp.bfloat16),
+    }
+
+
+def mlstm_decode(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+) -> Tuple[jax.Array, Params]:
+    """Single-token recurrent step. x (B,1,d)."""
+    b = x.shape[0]
+    di = _d_inner_m(cfg)
+    h = cfg.lstm_num_heads
+    xi = x @ p["up_x"].astype(x.dtype)
+    z = x @ p["up_z"].astype(x.dtype)
+    conv_buf = jnp.concatenate(
+        [cache["conv"][:, 1:], xi.astype(cache["conv"].dtype)], axis=1
+    )
+    xc = jax.nn.silu(
+        jnp.sum(conv_buf * p["conv"].astype(conv_buf.dtype)[None], axis=1)
+    )[:, None, :]
+    dh = di // h
+    xch = xc.astype(x.dtype).reshape(b, 1, h, dh)
+    xih = xi.reshape(b, 1, h, dh)
+    q = jnp.einsum("bshk,hkl->bshl", xch, p["wq"].astype(x.dtype))[:, 0]
+    k = jnp.einsum("bshk,hkl->bshl", xch, p["wk"].astype(x.dtype))[:, 0] / math.sqrt(dh)
+    v = jnp.einsum("bshk,hkl->bshl", xih, p["wv"].astype(x.dtype))[:, 0]
+    gates = (xi[:, 0] @ p["w_if"].astype(x.dtype) + p["b_if"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    li, lf = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+
+    C, nv, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fi = jnp.exp(lf + m - m_new)
+    ii = jnp.exp(li - m_new)
+    C_new = C * fi[..., None, None] + ii[..., None, None] * jnp.einsum(
+        "bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n_new = nv * fi[..., None] + ii[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), C_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_new)),
+        jnp.exp(-m_new),
+    )
+    out = (num / den[..., None]).reshape(b, 1, -1).astype(x.dtype)
+    out = out + xi * p["skip_scale"].astype(x.dtype)
+    out = out * jax.nn.silu(z)
+    new_cache = {"C": C_new, "n": n_new, "m": m_new, "conv": conv_buf}
+    return out @ p["down"].astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _d_inner_s(cfg: ModelConfig) -> int:
+    # keep head-divisible
+    di = int(cfg.d_model * 1.0)
+    return di
+
+
+def slstm_specs(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.lstm_num_heads
+    dh = d // h
+    return {
+        "wx": ParamSpec((d, 4 * d), fanin_init(0), ("d_model", "feature")),
+        "r": ParamSpec((4, h, dh, dh), normal_init(0.02), (None, "heads", "head_dim", "head_dim")),
+        "b": ParamSpec((4 * d,), zeros_init(), (None,)),
+        "norm": ParamSpec((d,), ones_init(), ("d_model",)),
+        "up_g": ParamSpec((d, int(d * 4.0 / 3.0)), fanin_init(0), ("d_model", "ffn")),
+        "up_v": ParamSpec((d, int(d * 4.0 / 3.0)), fanin_init(0), ("d_model", "ffn")),
+        "down": ParamSpec((int(d * 4.0 / 3.0), d), fanin_init(0), ("ffn", "d_model")),
+    }
+
+
+def _slstm_cell(cfg, p, gx, state):
+    """One step. gx (B,4d) input-gate preacts; state (h,c,n,m) each (B,d)."""
+    hprev, cprev, nprev, mprev = state
+    b, d = hprev.shape
+    hh = cfg.lstm_num_heads
+    dh = d // hh
+    hp = hprev.reshape(b, hh, dh)
+    rec = jnp.einsum("bhk,ghkl->gbhl", hp.astype(jnp.float32), p["r"].astype(jnp.float32))
+    rec = rec.reshape(4, b, d)
+    pre = gx.astype(jnp.float32).reshape(b, 4, d).swapaxes(0, 1) + rec
+    it, ft, zt, ot = pre[0], pre[1], pre[2], pre[3]
+    m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + mprev, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(jax.nn.log_sigmoid(ft) + mprev - m_new)
+    c_new = f_ * cprev + i_ * jnp.tanh(zt)
+    n_new = f_ * nprev + i_
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    gx = x @ p["wx"].astype(x.dtype) + p["b"].astype(x.dtype)  # (B,S,4d)
+
+    def step(state, g):
+        new = _slstm_cell(cfg, p, g, state)
+        return new, new[0]
+
+    z0 = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+    step = jax.checkpoint(step)
+    _, hs = jax.lax.scan(step, z0, gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,d)
+    # group-norm-ish scale + gated up/down projection (proj_factor 4/3)
+    h = h * p["norm"].astype(x.dtype)
+    h = jax.nn.gelu(h @ p["up_g"].astype(x.dtype), approximate=True) * (
+        h @ p["up_v"].astype(x.dtype)
+    )
+    return h @ p["down"].astype(x.dtype)
+
+
+def slstm_cache_specs(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        k: jax.ShapeDtypeStruct((batch, d), jnp.float32) for k in ("h", "c", "n", "m")
+    }
+
+
+def slstm_decode(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+) -> Tuple[jax.Array, Params]:
+    gx = (x @ p["wx"].astype(x.dtype) + p["b"].astype(x.dtype))[:, 0]
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h_new, c_new, n_new, m_new = _slstm_cell(cfg, p, gx, state)
+    h = h_new[:, None, :].astype(x.dtype) * p["norm"].astype(x.dtype)
+    h = jax.nn.gelu(h @ p["up_g"].astype(x.dtype), approximate=True) * (
+        h @ p["up_v"].astype(x.dtype)
+    )
+    out = h @ p["down"].astype(x.dtype)
+    return out, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedules import cosine_schedule, linear_warmup

@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay (no optax in this environment).
+
+Moments are kept in a configurable dtype: fp32 for the CPU-scale paper
+experiments, bf16 selectable for the >100B dry-run configs where optimizer
+memory dominates bytes/device (a §Perf knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params: PyTree) -> OptState:
+        z = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+        )
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads: PyTree, state: OptState, params: PyTree):
+        """Returns (new_params, new_state)."""
+        step = state.step + 1
+        if self.grad_clip > 0:
+            gsq = sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+            gnorm = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        b1, b2 = self.b1, self.b2
+        lr = self._lr(step)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+            mhat = m32 / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v32 / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (
+                new_p.astype(p.dtype),
+                m32.astype(self.moment_dtype),
+                v32.astype(self.moment_dtype),
+            )
+
+        flat = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step, new_mu, new_nu)

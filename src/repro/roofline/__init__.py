@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    collective_bytes,
+    model_flops,
+    roofline_report,
+)

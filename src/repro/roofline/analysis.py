@@ -1,0 +1,141 @@
+"""Three-term roofline from the dry-run's compiled artifact.
+
+    compute    = HLO_FLOPs    / (chips x peak_FLOP/s)
+    memory     = HLO_bytes    / (chips x HBM_bw)
+    collective = coll_bytes   / (chips x link_bw)
+
+`compiled.cost_analysis()` reports the analysis of the *partitioned*
+(per-device) module; we normalize everything to GLOBAL quantities
+(x num_partitions) and divide by chips, so per-device and global accounting
+agree (verified in tests/test_roofline.py on a hand-checked matmul).
+
+collective_bytes is not in cost_analysis: we parse the post-optimization
+HLO text and sum the OUTPUT shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (ring transfer moves
+~(n-1)/n of that per device — output size is the standard proxy; recorded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[16,2048,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(COLLECTIVE_KINDS) + r")[\s(.]"
+)
+# tuple-shaped collectives:  = (bf16[...], bf16[...]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(" + "|".join(COLLECTIVE_KINDS) + r")[\s(.]"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind OUTPUT bytes (per-device program)."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dtype, dims in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dtype, dims)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float  # per chip, bf16
+    hbm_bw: float  # bytes/s per chip
+    link_bw: float  # bytes/s per ICI link
+    hbm_bytes: float
+
+
+HW_V5E = Hardware(
+    name="TPU v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+
+def model_flops(n_params_active: int, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE)."""
+    return 6.0 * n_params_active * n_tokens
+
+
+def roofline_report(
+    *,
+    per_device_flops: float,
+    per_device_bytes: float,
+    per_device_coll_bytes: Dict[str, int],
+    chips: int,
+    hw: Hardware = HW_V5E,
+    model_flops_total: Optional[float] = None,
+    is_train: bool = True,
+) -> Dict:
+    """All terms in seconds; quantities are per-device (SPMD partition)."""
+    coll_total = float(sum(per_device_coll_bytes.values()))
+    t_compute = per_device_flops / hw.peak_flops
+    t_memory = per_device_bytes / hw.hbm_bw
+    t_coll = coll_total / hw.link_bw
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    report = {
+        "terms_s": terms,
+        "dominant": dominant,
+        "per_device_flops": per_device_flops,
+        "per_device_bytes": per_device_bytes,
+        "collective_bytes": dict(per_device_coll_bytes),
+        "chips": chips,
+        "hw": hw.name,
+    }
+    if model_flops_total is not None:
+        # model_flops_total = 6*N*D (fwd 2ND + bwd 4ND). Inference steps do
+        # only the forward pass: 2ND.
+        useful = model_flops_total if is_train else model_flops_total / 3.0
+        hlo_global = per_device_flops * chips
+        report["model_flops"] = useful
+        report["useful_flops_ratio"] = useful / max(hlo_global, 1.0)
+    return report
+
+
+def count_active_params(cfg, params_total: int) -> int:
+    """Active params for 6ND (MoE: only top-k + shared experts count)."""
+    if not cfg.num_experts:
+        return params_total
+    f = cfg.d_ff_moe or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    n_moe_layers = sum(
+        1 for b in (cfg.prefix_pattern + cfg.unit_pattern * cfg.unit_repeats)
+        if b.endswith("+moe")
+    )
+    inactive = n_moe_layers * (cfg.num_experts - cfg.top_k) * per_expert
+    return params_total - inactive

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (dryrun.py alone forces 512)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates its REDUCED variant (one pattern
+unit of layers, d_model<=256, <=4 experts) and runs one forward/train step
+and one cached decode step on CPU, asserting output shapes and no NaNs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import build_model
+
+ARCHS = [
+    "gemma-2b",
+    "xlstm-1.3b",
+    "qwen2-1.5b",
+    "deepseek-v3-671b",
+    "qwen2.5-3b",
+    "qwen2-vl-2b",
+    "qwen2-72b",
+    "whisper-medium",
+    "phi3.5-moe-42b-a6.6b",
+    "jamba-1.5-large-398b",
+]
+
+B, S = 2, 128
+
+
+def make_batch(cfg, rng, b=B, s=S, kind="train"):
+    if kind == "decode":
+        batch = {
+            "token": jnp.asarray(rng.randint(0, cfg.vocab_size, (b,)), jnp.int32),
+            "pos": jnp.asarray(s // 2, jnp.int32),
+        }
+        if cfg.vision_embeds:
+            batch["mrope_pos"] = jnp.ones((3, b, 1), jnp.int32) * (s // 2)
+        if cfg.is_encoder_decoder:
+            batch["enc"] = jnp.asarray(rng.randn(b, s // 4, cfg.d_model), jnp.bfloat16)
+        return batch
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "targets": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "loss_mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.vision_embeds:
+        batch["vision_embeds"] = jnp.asarray(rng.randn(b, s, cfg.d_model), jnp.bfloat16)
+        batch["vision_mask"] = jnp.asarray(rng.rand(b, s) < 0.3)
+        batch["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(s)[None, None], (3, b, s)
+        ).astype(jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["audio_embeds"] = jnp.asarray(rng.randn(b, s // 4, cfg.d_model), jnp.bfloat16)
+    if cfg.mtp_depth:
+        batch["mtp_targets"] = batch["targets"]
+    return batch
+
+
+@pytest.fixture(scope="module")
+def nprng():
+    return np.random.RandomState(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_decode(arch, nprng):
+    cfg = get_arch(arch).reduced()
+    assert cfg.d_model <= 512 and (not cfg.num_experts or cfg.num_experts <= 4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    batch = make_batch(cfg, nprng)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+
+    cache = model.init_cache(B, S)
+    dbatch = make_batch(cfg, nprng, kind="decode")
+    logits, new_cache = jax.jit(model.serve_step)(params, cache, dbatch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+    # cache tree structure is preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "xlstm-1.3b", "phi3.5-moe-42b-a6.6b"])
+def test_reduced_train_step_decreases_loss(arch, nprng):
+    from repro.optim.adamw import AdamW
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = AdamW(learning_rate=1e-3)
+    state = opt.init(params)
+    batch = make_batch(cfg, nprng, b=4, s=64)
+
+    @jax.jit
+    def step(p, s_):
+        (l, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, batch)
+        p2, s2 = opt.update(g, s_, p)
+        return p2, s2, l
+
+    losses = []
+    for _ in range(8):
+        params, state, l = step(params, state)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], f"{arch}: no learning {losses}"
+
+
+def test_full_configs_match_assignment():
+    """The registered FULL configs carry the exact assigned hyperparams."""
+    expect = {
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    }
+    for arch, (nl, d, h, kv, ff, v) in expect.items():
+        cfg = get_arch(arch)
+        assert cfg.num_layers == nl, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == h, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == v, arch
+    # MoE structure
+    ds = get_arch("deepseek-v3-671b")
+    assert ds.num_experts == 256 and ds.top_k == 8 and ds.num_shared_experts == 1
+    phi = get_arch("phi3.5-moe-42b-a6.6b")
+    assert phi.num_experts == 16 and phi.top_k == 2
+    jb = get_arch("jamba-1.5-large-398b")
+    assert jb.num_experts == 16 and jb.top_k == 2
+    # hybrid interleave: 1 attention per 8 layers
+    assert sum(b.startswith("attn") for b in jb.unit_pattern) == 1
+    assert len(jb.unit_pattern) == 8
+
+
+def test_param_counts_in_range():
+    """Full-config parameter counts are in the advertised ballpark."""
+    from repro.common.module import abstract, param_count
+    from repro.models.transformer import model_specs
+
+    expect = {
+        "gemma-2b": (2.0e9, 3.3e9),
+        "xlstm-1.3b": (1.0e9, 2.2e9),  # block-diag qkv; see config docstring
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "deepseek-v3-671b": (6.0e11, 7.2e11),
+        "qwen2-72b": (6.5e10, 8.5e10),
+        "jamba-1.5-large-398b": (3.3e11, 4.5e11),
+        "phi3.5-moe-42b-a6.6b": (3.8e10, 4.6e10),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(abstract(model_specs(get_arch(arch))))
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"

@@ -1,0 +1,243 @@
+"""Unit tests for the Co-PLMs core: LoRA, adapters, alignment, pooling, SAML."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.adapters import init_adapters, merge_adapters
+from repro.core.align import TokenAligner, align_positions, build_vocab_map
+from repro.core.lora import apply_lora, average_lora, init_lora, lora_param_fraction, lora_specs
+from repro.core.pooling import pool_logits, pool_on_support, pooled_kl
+from repro.data.tokenizer import ToyTokenizer
+from repro.models import build_model
+
+RNG = np.random.RandomState(7)
+
+
+# ---------------------------------------------------------------------------
+# LoRA
+# ---------------------------------------------------------------------------
+
+def test_lora_zero_init_is_identity():
+    cfg = get_arch("qwen2-1.5b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    lora = init_lora(model.specs(), jax.random.key(1), rank=4)
+    merged = apply_lora(params, lora, alpha=16.0)
+    # B is zero-init -> merged == base exactly
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(merged)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_lora_merge_math():
+    cfg = get_arch("qwen2-1.5b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    lora = init_lora(model.specs(), jax.random.key(1), rank=4)
+    # poke nonzero B values
+    lora = jax.tree.map(lambda x: jnp.ones_like(x) * 0.01, lora)
+    merged = apply_lora(params, lora, alpha=8.0)
+    # check one target: units/b0/attn/wq (stacked)
+    base = params["units"]["b0"]["attn"]["wq"]
+    a = lora["units"]["b0"]["attn"]["wq"]["a"]
+    b = lora["units"]["b0"]["attn"]["wq"]["b"]
+    want = base.astype(jnp.float32) + (
+        jnp.einsum("ndr,nrp->ndp", a, b).reshape(base.shape) * (8.0 / 4)
+    )
+    np.testing.assert_allclose(
+        np.asarray(merged["units"]["b0"]["attn"]["wq"], np.float32),
+        np.asarray(want.astype(base.dtype), np.float32),
+        rtol=1e-2, atol=1e-2,
+    )
+
+
+def test_lora_average_and_fraction():
+    cfg = get_arch("paper-dpm").reduced()
+    model = build_model(cfg)
+    l1 = init_lora(model.specs(), jax.random.key(1), rank=4)
+    l2 = jax.tree.map(lambda x: x + 2.0, l1)
+    avg = average_lora([l1, l2])
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(l1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b) + 1.0, rtol=1e-6)
+    params = model.init(jax.random.key(0))
+    frac = lora_param_fraction(l1, params)
+    assert 0 < frac < 0.5
+
+
+def test_lora_targets_only_matrices():
+    cfg = get_arch("qwen2-1.5b").reduced()
+    specs = lora_specs(build_model(cfg).specs(), rank=4)
+    # no norm scales or biases in the lora tree
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    for path, leaf in flat:
+        joined = "/".join(str(getattr(p, "key", p)) for p in path)
+        assert "norm" not in joined
+
+
+# ---------------------------------------------------------------------------
+# Domain adapters (DST)
+# ---------------------------------------------------------------------------
+
+def test_adapter_zero_init_preserves_forward():
+    cfg = get_arch("paper-dpm").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    adapters = init_adapters(cfg, jax.random.key(1))
+    tokens = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    batch = {"tokens": tokens}
+    base_logits, _ = model.logits(params, batch)
+    merged = merge_adapters(params, adapters)
+    ad_logits, _ = model.logits(merged, batch)
+    # w2 zero-init -> adapter is the identity at init
+    np.testing.assert_allclose(
+        np.asarray(base_logits, np.float32), np.asarray(ad_logits, np.float32)
+    )
+
+
+def test_adapter_changes_forward_when_trained():
+    cfg = get_arch("paper-dpm").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    adapters = init_adapters(cfg, jax.random.key(1))
+    adapters = jax.tree.map(lambda x: x + 0.05, adapters)
+    tokens = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    base_logits, _ = model.logits(params, {"tokens": tokens})
+    ad_logits, _ = model.logits(merge_adapters(params, adapters), {"tokens": tokens})
+    assert float(jnp.max(jnp.abs(base_logits - ad_logits))) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Token alignment
+# ---------------------------------------------------------------------------
+
+def test_align_positions_paper_example():
+    """The paper's 'utilize' vs 'util'+'ize' case."""
+    a = ["_i", "_utilize", "_the", "_map", "_to", "_travel"]
+    b = ["_i", "_util", "ize", "_the", "_map", "_to", "_travel"]
+    m_ab = align_positions(a, b)  # for each a-pos, a b-pos
+    assert m_ab[0] == 0
+    assert m_ab[1] in (1, 2)  # 'utilize' -> 'util' or 'ize'
+    assert list(m_ab[2:]) == [3, 4, 5, 6]
+    m_ba = align_positions(b, a)
+    assert m_ba[1] == 1 and m_ba[2] == 1  # both pieces -> 'utilize'
+    assert list(m_ba[3:]) == [2, 3, 4, 5]
+
+
+def test_vocab_map_exact_and_closest():
+    t1 = ToyTokenizer("a", ["_x", "_utilize", "_zq"])
+    t2 = ToyTokenizer("b", ["_x", "_util", "_other"])
+    vm = build_vocab_map(t1, t2)
+    assert t2.pieces[vm[t1.index["_x"]]] == "_x"
+    assert t2.pieces[vm[t1.index["_utilize"]]] == "_util"
+
+
+def test_token_aligner_batch_shapes():
+    corpus = ["the quick utilize map to travel"] * 3
+    ta = ToyTokenizer("a", ["_the", "_quick", "_utilize", "_map", "_to", "_travel"] + list("_abcdefghijklmnopqrstuvwxyz"))
+    tb = ToyTokenizer("b", ["_the", "_qui", "ck", "_util", "ize", "_map", "_to", "_tra", "vel"] + list("_abcdefghijklmnopqrstuvwxyz"))
+    al = TokenAligner(ta, tb)
+    pos = al.batch_positions(corpus, seq_len=16)
+    assert pos.shape == (3, 16)
+    assert pos.max() < 16 and pos.min() >= 0
+
+
+# ---------------------------------------------------------------------------
+# Pooling + pooled KL
+# ---------------------------------------------------------------------------
+
+def test_pool_logits_mass_preservation():
+    y = jnp.asarray(RNG.randn(5, 200), jnp.float32)
+    pooled, idx = pool_logits(y, 16)
+    # pooled softmax sums to 1 and matches the coarsened distribution
+    p = jax.nn.softmax(pooled, axis=-1)
+    np.testing.assert_allclose(np.asarray(jnp.sum(p, -1)), 1.0, rtol=1e-5)
+    full = jax.nn.softmax(y, axis=-1)
+    top_mass = np.take_along_axis(np.asarray(full), np.asarray(idx), -1).sum(-1)
+    np.testing.assert_allclose(np.asarray(p[:, :16].sum(-1)), top_mass, rtol=1e-4)
+
+
+def test_pooled_kl_nonnegative_and_zero_on_self():
+    y = jnp.asarray(RNG.randn(7, 300), jnp.float32)
+    pooled, idx = pool_logits(y, 8)
+    kl = pooled_kl(pooled, pooled)
+    np.testing.assert_allclose(np.asarray(kl), 0.0, atol=1e-6)
+    y2 = y + jnp.asarray(RNG.randn(7, 300), jnp.float32)
+    pooled2 = pool_on_support(y2, idx)
+    assert np.all(np.asarray(pooled_kl(pooled, pooled2)) >= -1e-6)
+
+
+def test_pooled_kl_lower_bounds_full_kl():
+    """Coarsening can only lose information: pooled KL <= full KL."""
+    p = jnp.asarray(RNG.randn(32, 500), jnp.float32)
+    q = jnp.asarray(RNG.randn(32, 500), jnp.float32)
+    pooled_p, idx = pool_logits(p, 16)
+    pooled_q = pool_on_support(q, idx)
+    kl_pooled = np.asarray(pooled_kl(pooled_p, pooled_q))
+    lp = jax.nn.log_softmax(p, -1)
+    lq = jax.nn.log_softmax(q, -1)
+    kl_full = np.asarray(jnp.sum(jnp.exp(lp) * (lp - lq), -1))
+    assert np.all(kl_pooled <= kl_full + 1e-4)
+
+
+def test_pool_no_divergence_singularity():
+    """Sparse teacher (one huge logit) keeps pooled KL finite — the failure
+    mode Eq. (6) exists to avoid."""
+    p = jnp.full((1, 100000), -30.0).at[0, 7].set(40.0)
+    q = jnp.zeros((1, 100000))
+    pooled_p, idx = pool_logits(p, 4)
+    pooled_q = pool_on_support(q, idx)
+    kl = float(pooled_kl(pooled_p, pooled_q)[0])
+    assert np.isfinite(kl)
+
+
+# ---------------------------------------------------------------------------
+# SAML: gradients flow only into LoRA trees
+# ---------------------------------------------------------------------------
+
+def test_saml_grads_only_in_lora():
+    import dataclasses as dc
+
+    from repro.core.saml import SamlConfig, saml_pair_losses
+    from repro.data.tokenizer import build_tokenizer
+
+    corpus = ["question : what is x answer : y"] * 4
+    tok_p = build_tokenizer("p", corpus, max_piece=10, budget=256)
+    tok_l = build_tokenizer("l", corpus, max_piece=4, budget=128)
+    cfg_p = dc.replace(get_arch("paper-dpm").reduced(), vocab_size=tok_p.vocab_size)
+    cfg_l = dc.replace(get_arch("paper-llama2-1.3b").reduced(), vocab_size=tok_l.vocab_size)
+    mp, ml = build_model(cfg_p), build_model(cfg_l)
+    base_p, base_l = mp.init(jax.random.key(0)), ml.init(jax.random.key(1))
+    lora_p = init_lora(mp.specs(), jax.random.key(2), 4)
+    lora_l = init_lora(ml.specs(), jax.random.key(3), 4)
+    adapters = init_adapters(cfg_p, jax.random.key(4))
+
+    s = 24
+    bp = {
+        "tokens": jnp.asarray(RNG.randint(0, cfg_p.vocab_size, (2, s)), jnp.int32),
+        "targets": jnp.asarray(RNG.randint(0, cfg_p.vocab_size, (2, s)), jnp.int32),
+        "loss_mask": jnp.ones((2, s), jnp.float32),
+    }
+    bl = {
+        "tokens": jnp.asarray(RNG.randint(0, cfg_l.vocab_size, (2, s)), jnp.int32),
+        "targets": jnp.asarray(RNG.randint(0, cfg_l.vocab_size, (2, s)), jnp.int32),
+        "loss_mask": jnp.ones((2, s), jnp.float32),
+    }
+    align = {
+        "pos_p2l": jnp.zeros((2, s), jnp.int32),
+        "pos_l2p": jnp.zeros((2, s), jnp.int32),
+        "vm_l2p": jnp.zeros((cfg_l.vocab_size,), jnp.int32),
+        "vm_p2l": jnp.zeros((cfg_p.vocab_size,), jnp.int32),
+    }
+    scfg = SamlConfig(top_k=8)
+
+    def loss_fn(loras):
+        total, _ = saml_pair_losses(
+            mp, ml, base_p, base_l, loras["p"], loras["l"], adapters, bp, bl,
+            align, scfg,
+        )
+        return total
+
+    grads = jax.grad(loss_fn)({"p": lora_p, "l": lora_l})
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,102 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU; BlockSpec tiling is the TPU target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import ref_flash_attention, ref_lora_matmul, ref_topk_pool
+
+RNG = np.random.RandomState(42)
+
+
+@pytest.mark.parametrize("rows,vocab", [(8, 512), (256, 2048), (300, 5000), (64, 9011)])
+@pytest.mark.parametrize("k", [8, 32])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_topk_pool_matches_ref(rows, vocab, k, dtype):
+    x = jnp.asarray(RNG.randn(rows, vocab), dtype)
+    pooled, idx = ops.topk_pool(x, k)
+    pooled_r, idx_r = ref_topk_pool(x, k)
+    np.testing.assert_allclose(
+        np.asarray(pooled), np.asarray(pooled_r), rtol=2e-3, atol=2e-3
+    )
+    # indices must select identical VALUES (ties may reorder equal logits)
+    xv = np.asarray(x, np.float32)
+    got = np.take_along_axis(xv, np.asarray(idx), axis=-1)
+    want = np.take_along_axis(xv, np.asarray(idx_r), axis=-1)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_topk_pool_tail_is_log_mass_of_rest():
+    x = jnp.asarray(RNG.randn(16, 1000), jnp.float32)
+    pooled, idx = ops.topk_pool(x, 8)
+    xv = np.asarray(x, np.float64)
+    for r in range(16):
+        sel = set(np.asarray(idx)[r].tolist())
+        rest = [xv[r, i] for i in range(1000) if i not in sel]
+        want_tail = np.log(np.sum(np.exp(rest)))
+        np.testing.assert_allclose(np.asarray(pooled)[r, -1], want_tail, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 128, 64), (2, 3, 256, 64), (1, 2, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(b, h, s, d, causal):
+    q = jnp.asarray(RNG.randn(b, h, s, d), jnp.float32)
+    k = jnp.asarray(RNG.randn(b, h, s, d), jnp.float32)
+    v = jnp.asarray(RNG.randn(b, h, s, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    ref = ref_flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.randn(2, 2, 256, 64), jnp.bfloat16)
+    k = jnp.asarray(RNG.randn(2, 2, 256, 64), jnp.bfloat16)
+    v = jnp.asarray(RNG.randn(2, 2, 256, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v)
+    ref = ref_flash_attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=0.05, atol=0.05
+    )
+
+
+def test_flash_matches_model_chunked_sdpa():
+    """The XLA fallback (models/layers.chunked_sdpa) and the Pallas kernel
+    implement the same math."""
+    from repro.models.layers import chunked_sdpa
+
+    q = jnp.asarray(RNG.randn(2, 256, 4, 64), jnp.float32)  # (B,S,H,D)
+    k = jnp.asarray(RNG.randn(2, 256, 4, 64), jnp.float32)
+    v = jnp.asarray(RNG.randn(2, 256, 4, 64), jnp.float32)
+    a = chunked_sdpa(q, k, v, causal=True, chunk=64)
+    b_ = ops.flash_attention(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2), causal=True
+    ).swapaxes(1, 2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,r", [(300, 600, 500, 8), (256, 512, 512, 16), (64, 64, 64, 4), (1000, 777, 333, 32)]
+)
+def test_lora_matmul_matches_ref(m, k, n, r):
+    x = jnp.asarray(RNG.randn(m, k), jnp.float32)
+    w = jnp.asarray(RNG.randn(k, n), jnp.float32)
+    a = jnp.asarray(RNG.randn(k, r), jnp.float32)
+    b = jnp.asarray(RNG.randn(r, n), jnp.float32)
+    y = ops.lora_matmul(x, w, a, b)
+    yr = ref_lora_matmul(x, w, a, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=6e-3)
+
+
+def test_lora_matmul_equals_merged_weights():
+    """Kernel output == dense matmul with merged W* = W + s*A@B."""
+    m, k, n, r = 128, 256, 192, 8
+    x = jnp.asarray(RNG.randn(m, k), jnp.float32)
+    w = jnp.asarray(RNG.randn(k, n), jnp.float32)
+    a = jnp.asarray(RNG.randn(k, r), jnp.float32)
+    b = jnp.asarray(RNG.randn(r, n), jnp.float32)
+    scale = 2.0
+    y = ops.lora_matmul(x, w, a, b, scale=scale)
+    merged = w + scale * (a @ b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ merged), rtol=2e-4, atol=6e-3)

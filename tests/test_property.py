@@ -1,0 +1,67 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.align import align_positions
+from repro.core.pooling import pool_logits, pool_on_support, pooled_kl
+from repro.data.tokenizer import build_tokenizer
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+logits_arrays = st.integers(0, 2**31 - 1).map(
+    lambda seed: np.random.RandomState(seed).randn(4, 257).astype(np.float32) * 3
+)
+
+
+@given(logits_arrays, st.integers(1, 64))
+def test_pooling_preserves_total_mass(x, k):
+    pooled, idx = pool_logits(jnp.asarray(x), k)
+    lse_pooled = np.asarray(jax.nn.logsumexp(pooled, axis=-1))
+    lse_full = np.asarray(jax.nn.logsumexp(jnp.asarray(x), axis=-1))
+    np.testing.assert_allclose(lse_pooled, lse_full, rtol=1e-3, atol=1e-3)
+
+
+@given(logits_arrays, st.integers(1, 32))
+def test_pooled_kl_nonnegative(x, k):
+    y = x[::-1].copy()
+    pooled_x, idx = pool_logits(jnp.asarray(x), k)
+    pooled_y = pool_on_support(jnp.asarray(y), idx)
+    kl = np.asarray(pooled_kl(pooled_x, pooled_y))
+    assert np.all(kl >= -1e-5)
+    assert np.all(np.isfinite(kl))
+
+
+@given(logits_arrays, st.integers(2, 32))
+def test_pool_topk_sorted_descending(x, k):
+    pooled, idx = pool_logits(jnp.asarray(x), k)
+    vals = np.asarray(pooled)[:, :k]
+    assert np.all(np.diff(vals, axis=-1) <= 1e-6)
+
+
+words = st.lists(
+    st.text(alphabet="abcdefghij", min_size=1, max_size=8), min_size=1, max_size=12
+)
+
+
+@given(words)
+def test_tokenizer_roundtrip_property(ws):
+    text = " ".join(ws)
+    tok = build_tokenizer("t", [text], max_piece=6, budget=256)
+    assert tok.decode(tok.encode(text)) == " ".join(text.lower().split())
+
+
+@given(words, st.integers(0, 5))
+def test_align_positions_monotone_and_bounded(ws, seed):
+    text = " ".join(ws)
+    ta = build_tokenizer("a", [text], max_piece=8, budget=128)
+    tb = build_tokenizer("b", [text], max_piece=3, budget=64)
+    pa, pb = ta.encode_pieces(text), tb.encode_pieces(text)
+    m = align_positions(pa, pb)
+    assert len(m) == len(pa)
+    if len(m):
+        assert m.min() >= 0 and m.max() < max(len(pb), 1)
+        # alignment along the DP path is monotone non-decreasing
+        assert np.all(np.diff(m) >= 0)

@@ -1,0 +1,77 @@
+"""Roofline machinery: HLO collective parser + cost accounting sanity."""
+import numpy as np
+
+from repro.roofline.analysis import (
+    HW_V5E,
+    collective_bytes,
+    count_active_params,
+    model_flops,
+    roofline_report,
+)
+
+HLO_SAMPLE = """
+HloModule jit_step
+%fused (x: bf16[128,256]) -> bf16[128,256] { ... }
+%ag = bf16[16,2048,512]{2,1,0} all-gather(%p0), replica_groups=...
+%ar.1 = f32[1024,1024]{1,0} all-reduce(%p1), to_apply=%add
+%rs = bf16[64,64]{1,0} reduce-scatter(%p2), dimensions={0}
+%a2a.5 = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) all-to-all(%p3, %p4)
+%cp = u8[1000]{0} collective-permute(%p5), source_target_pairs=...
+%dot.2 = f32[512,512]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 2048 * 512 * 2
+    assert out["all-reduce"] == 1024 * 1024 * 4
+    assert out["reduce-scatter"] == 64 * 64 * 2
+    assert out["all-to-all"] == 2 * 8 * 128 * 2
+    assert out["collective-permute"] == 1000
+
+
+def test_parser_ignores_non_collectives():
+    out = collective_bytes("%d = f32[10,10]{1,0} dot(%a, %b)\n")
+    assert sum(out.values()) == 0
+
+
+def test_roofline_terms_and_dominance():
+    rep = roofline_report(
+        per_device_flops=197e12,  # exactly 1s of compute
+        per_device_bytes=819e9 * 2,  # 2s of memory
+        per_device_coll_bytes={"all-reduce": int(50e9 / 2)},  # 0.5s
+        chips=256,
+        model_flops_total=197e12 * 256 * 0.5,
+        is_train=True,
+    )
+    t = rep["terms_s"]
+    assert abs(t["compute"] - 1.0) < 1e-6
+    assert abs(t["memory"] - 2.0) < 1e-6
+    assert abs(t["collective"] - 0.5) < 1e-6
+    assert rep["dominant"] == "memory"
+    assert abs(rep["useful_flops_ratio"] - 0.5) < 1e-6
+
+
+def test_model_flops_and_active_params():
+    from repro.configs import get_arch
+
+    assert model_flops(10, 7) == 6 * 10 * 7
+    ds = get_arch("deepseek-v3-671b")
+    total = 682_636_457_984  # measured param count of our implementation
+    active = count_active_params(ds, total)
+    # DeepSeek-V3 advertises ~37B active of 671B total; ours lands close
+    assert 2.5e10 < active < 6.5e10
+    dense = get_arch("qwen2-72b")
+    assert count_active_params(dense, 72_000_000_000) == 72_000_000_000
+
+
+def test_cost_analysis_flops_ground_truth():
+    """Anchor the whole pipeline on a hand-checkable matmul."""
+    import jax
+    import jax.numpy as jnp
+
+    m = jax.jit(lambda a, b: a @ b)
+    sds = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = m.lower(sds, sds).compile()
+    flops = c.cost_analysis()["flops"]
+    assert abs(flops - 2 * 512**3) / (2 * 512**3) < 0.05

@@ -1,0 +1,96 @@
+"""Sharding-rule engine tests (+ hypothesis properties)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.sharding import (
+    DEFAULT_RULES,
+    PARAM_RULES,
+    logical_to_spec,
+    sharding_for_tree,
+)
+
+
+def fake_mesh(shape, axes):
+    """Mesh over fake devices (CPU test env has 1 device; Mesh only needs
+    the array structure for spec computation)."""
+    devs = np.asarray([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+MESH = fake_mesh((16, 16), ("data", "model"))
+MESH3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_divisible_dims_shard():
+    spec = logical_to_spec((256, 4096, 2048), ("batch", "seq", "ffn"), MESH)
+    assert spec == P(("data",), None, "model")
+
+
+def test_indivisible_falls_back_to_replication():
+    # 8 heads cannot shard over model=16 (trailing Nones are trimmed, so the
+    # whole spec collapses to replicated)
+    spec = logical_to_spec((1024, 8, 256), ("d_model", "heads", "head_dim"), MESH)
+    assert len(spec) <= 1 or spec[1] is None
+
+
+def test_no_axis_reuse_within_tensor():
+    # both want 'model'; second must fall back
+    spec = logical_to_spec((2048, 2048), ("ffn", "vocab"), MESH)
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used)) == 1
+
+
+def test_multi_pod_batch_uses_pod_and_data():
+    spec = logical_to_spec((256, 4096), ("batch", None), MESH3)
+    assert spec == P(("pod", "data"))
+
+
+def test_param_rules_fsdp():
+    spec = logical_to_spec((8192, 64, 128), ("d_model", "heads", "head_dim"), MESH3, PARAM_RULES)
+    assert spec[0] == ("pod", "data")
+    assert spec[1] == "model"
+
+
+def test_embed_d_never_sharded():
+    spec = logical_to_spec((256000, 2048), ("vocab", "embed_d"), MESH3, PARAM_RULES)
+    assert spec == P("model")
+
+
+def test_sharding_for_tree_zips_correctly():
+    shapes = {"a": jax.ShapeDtypeStruct((64, 2048), np.float32),
+              "b": {"c": jax.ShapeDtypeStruct((16,), np.float32)}}
+    axes = {"a": ("batch", "ffn"), "b": {"c": (None,)}}
+    out = sharding_for_tree(shapes, axes, MESH)
+    assert out["a"].spec == P(("data",), "model")
+    assert out["b"]["c"].spec == P()
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 8192), min_size=1, max_size=4),
+    axes=st.lists(
+        st.sampled_from([None, "batch", "seq", "ffn", "heads", "kv_heads",
+                         "vocab", "experts", "d_model", "layers"]),
+        min_size=1, max_size=4,
+    ),
+)
+def test_spec_always_valid(dims, axes):
+    """Property: every resolved spec (a) never reuses a mesh axis, (b) only
+    shards dims divisibly."""
+    n = min(len(dims), len(axes))
+    dims, axes = tuple(dims[:n]), tuple(axes[:n])
+    spec = logical_to_spec(dims, axes, MESH3, DEFAULT_RULES)
+    sizes = dict(zip(MESH3.axis_names, MESH3.devices.shape))
+    used = []
+    for dim, entry in zip(dims, tuple(spec) + (None,) * (n - len(spec))):
+        if entry is None:
+            continue
+        group = (entry,) if isinstance(entry, str) else entry
+        for g in group:
+            assert g not in used
+            used.append(g)
+        total = int(np.prod([sizes[g] for g in group]))
+        assert dim % total == 0
