@@ -1,0 +1,130 @@
+"""Serving benchmark: fused prefill vs token-at-a-time replay, decode
+throughput, and time-to-first-token, across the three serving arch
+families (attention / MoE / recurrent).
+
+  PYTHONPATH=src python benchmarks/serve_bench.py [--prompt-len 64] \
+      [--batch 4] [--gen 16] [--archs qwen2-1.5b,phi3.5-moe-42b-a6.6b,...]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
+  serve_prefill_fused_<arch>   — one Model.prefill call, derived = tok/s
+  serve_prefill_replay_<arch>  — serve_step x prompt_len, derived = tok/s
+  serve_decode_<arch>          — one decode step, derived = tok/s
+  serve_ttft_<arch>            — engine submit -> first token, derived = x
+                                 speedup of fused prefill over replay
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_ARCHS = "qwen2-1.5b,phi3.5-moe-42b-a6.6b,xlstm-1.3b"
+
+
+def bench(fn, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters
+
+
+def run_arch(arch: str, b: int, plen: int, gen: int):
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.RandomState(0)
+    max_len = plen + gen
+    toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (b, plen)), jnp.int32)
+
+    # fused prefill: one call consumes the whole prompt
+    prefill = jax.jit(lambda p, c, t: model.prefill(p, c, {"tokens": t}))
+
+    def run_fused():
+        cache = model.init_cache(b, max_len)
+        lg, cache = prefill(params, cache, toks)
+        jax.block_until_ready(lg)
+
+    t_fused = bench(run_fused)
+
+    # replay baseline: the pre-engine serving path (serve_step per token)
+    serve = jax.jit(model.serve_step)
+
+    def run_replay():
+        cache = model.init_cache(b, max_len)
+        lg = None
+        for i in range(plen):
+            lg, cache = serve(
+                params, cache,
+                {"token": toks[:, i], "pos": jnp.asarray(i, jnp.int32)},
+            )
+        jax.block_until_ready(lg)
+
+    t_replay = bench(run_replay)
+
+    # decode throughput (batched step, per-slot positions)
+    cache = model.init_cache(b, max_len)
+    _, cache = prefill(params, cache, toks)
+    tok0 = jnp.zeros((b,), jnp.int32)
+    pos = jnp.full((b,), plen, jnp.int32)
+
+    def run_decode():
+        lg, _ = serve(params, cache, {"token": tok0, "pos": pos})
+        jax.block_until_ready(lg)
+
+    t_dec = bench(run_decode, warmup=1, iters=8)
+
+    # TTFT through the engine (includes sampling + cache splice)
+    engine = ServeEngine(model, params, max_batch=b, max_len=max_len, seed=0)
+    engine.submit(list(np.asarray(toks[0])), max_new=1)
+    c = engine.run()[0]
+
+    speedup = t_replay / t_fused
+    rows = [
+        (f"serve_prefill_fused_{arch}", t_fused * 1e6,
+         f"{b * plen / t_fused:.0f}tok/s"),
+        (f"serve_prefill_replay_{arch}", t_replay * 1e6,
+         f"{b * plen / t_replay:.0f}tok/s"),
+        (f"serve_decode_{arch}", t_dec * 1e6, f"{b / t_dec:.0f}tok/s"),
+        (f"serve_ttft_{arch}", c.ttft_s * 1e6, f"{speedup:.1f}x"),
+    ]
+    return rows, speedup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=DEFAULT_ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    speedups = {}
+    for arch in args.archs.split(","):
+        rows, speedup = run_arch(arch, args.batch, args.prompt_len, args.gen)
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived}")
+        speedups[arch] = speedup
+    worst = min(speedups, key=speedups.get)
+    print(
+        f"# fused prefill speedup over replay: "
+        + ", ".join(f"{a}={s:.1f}x" for a, s in speedups.items())
+        + f" (min {speedups[worst]:.1f}x on {worst})",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

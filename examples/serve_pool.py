@@ -1,10 +1,12 @@
-"""Batched serving with a KV cache over a pool of requests — the serving-
-side example (decode path = what decode_32k / long_500k dry-runs lower).
+"""Continuous batching over a pool of requests — the serving-side example.
 
   PYTHONPATH=src python examples/serve_pool.py [--arch xlstm-1.3b]
 
-Two request waves share the serve_step program; xlstm/jamba archs show the
-O(1)-state decode (cache size independent of generated length).
+Two request waves stream through ONE persistent ServeEngine: wave 1 is
+submitted while wave 0 is still decoding, and its requests are admitted
+into slots as wave-0 streams finish — no wave barrier, no cache
+reinitialization. xlstm/jamba archs show the O(1)-state decode (cache size
+independent of generated length).
 """
 import argparse
 import dataclasses
@@ -14,14 +16,13 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.common.module import param_bytes
 from repro.configs import get_arch
 from repro.data.synthetic import generate_corpus
 from repro.data.tokenizer import build_tokenizer
 from repro.models.model import build_model
+from repro.serve import ServeEngine
 
 
 def main():
@@ -37,45 +38,52 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.key(1))
     b, max_len = args.batch, 96
-    serve = jax.jit(model.serve_step)
 
-    cache = model.init_cache(b, max_len)
-    cache_b = sum(x.nbytes for x in jax.tree.leaves(cache))
+    engine = ServeEngine(
+        model, params, max_batch=b, max_len=max_len, eos_id=tok.eos_id, seed=1
+    )
+    cache_b = sum(x.nbytes for x in jax.tree.leaves(engine.cache))
     print(
         f"{cfg.name}: params {param_bytes(params) / 1e6:.1f}MB, "
-        f"cache {cache_b / 1e6:.2f}MB for {b} streams x {max_len} positions"
+        f"cache {cache_b / 1e6:.2f}MB for {b} slots x {max_len} positions"
     )
 
-    for wave in range(2):
+    def submit_wave(wave: int):
         reqs = corpus[wave * b : (wave + 1) * b]
-        enc = [tok.encode(f"question : {s.question} answer :", bos=True) for s in reqs]
-        plen = min(len(e) for e in enc)
-        toks = np.stack([e[:plen] for e in enc]).astype(np.int32)
-        cache = model.init_cache(b, max_len)
+        rids = []
+        for s in reqs:
+            ids = tok.encode(f"question : {s.question} answer :", bos=True)
+            rids.append(engine.submit(ids, max_new=args.gen))
+        return set(rids)
 
-        def dbatch(tk, pos):
-            d = {"token": jnp.asarray(tk), "pos": jnp.asarray(pos, jnp.int32)}
-            if cfg.vision_embeds:
-                d["mrope_pos"] = jnp.full((3, b, 1), pos, jnp.int32)
-            if cfg.is_encoder_decoder:
-                d["enc"] = jnp.zeros((b, max_len // 4, cfg.d_model), jnp.bfloat16)
-            return d
+    t0 = time.time()
+    waves = [submit_wave(0)]
+    done = {}
+    steps = 0
+    # wave 1 arrives mid-flight of wave 0 (or right as it drains, for tiny
+    # --gen values where wave 0 finishes before the trigger step)
+    trigger = max(1, min(4, args.gen // 2))
+    wave1_submitted = False
+    while engine.num_queued or engine.num_active or not wave1_submitted:
+        if not wave1_submitted and (
+            steps == trigger or not (engine.num_queued or engine.num_active)
+        ):
+            waves.append(submit_wave(1))
+            wave1_submitted = True
+            print(f"step {steps}: wave 1 submitted "
+                  f"({engine.num_active} streams still decoding wave 0)")
+        for c in engine.step():
+            done[c.rid] = c
+        steps += 1
+    dt = time.time() - t0
 
-        logits = None
-        t0 = time.time()
-        for i in range(plen):
-            logits, cache = serve(params, cache, dbatch(toks[:, i], i))
-        nxt = np.asarray(jnp.argmax(logits, -1))
-        outs = []
-        for j in range(args.gen):
-            outs.append(nxt)
-            logits, cache = serve(params, cache, dbatch(nxt, plen + j))
-            nxt = np.asarray(jnp.argmax(logits, -1))
-        dt = time.time() - t0
-        print(
-            f"wave {wave}: {b} streams, prefill {plen} + gen {args.gen} "
-            f"in {dt:.2f}s ({b * args.gen / dt:.0f} gen tok/s)"
-        )
+    for w, rids in enumerate(waves):
+        cs = [done[r] for r in sorted(rids)]
+        ttft = sum(c.ttft_s for c in cs) / len(cs)
+        ntok = sum(len(c.tokens) for c in cs)
+        print(f"wave {w}: {len(cs)} requests, {ntok} tokens, "
+              f"mean ttft {ttft * 1e3:.0f}ms")
+    print(f"total {dt:.2f}s | {engine.stats.summary()}")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ from repro.roofline.analysis import (
     collective_bytes,
     count_active_params,
     model_flops,
+    normalize_cost_analysis,
     roofline_report,
 )
 
@@ -200,7 +201,7 @@ def _lower_compile(
 
 
 def _cost_of(compiled) -> Tuple[float, float, Dict[str, int]]:
-    cost = compiled.cost_analysis() or {}
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())

@@ -1,87 +1,69 @@
-"""Batched serving driver: prefill + cached decode loop (deliverable b).
+"""Serving CLI: thin front-end over the continuous-batching engine
+(repro.serve.ServeEngine — fused prefill, per-slot positions, DESIGN.md §6).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --batch 8 \
       --prompt-len 64 --gen 32
 
-Runs the REDUCED config on CPU; the full configs' serve_step is exercised
-by the dry-run. Prefill populates the KV cache by replaying the prompt
-through serve_step (token-at-a-time; a fused prefill kernel is the
-production path and is covered by the prefill_32k dry-runs).
+Runs the REDUCED config on CPU; the full configs' serve path is exercised
+by the dry-run. Prompts are admitted through the engine's request queue, so
+more prompts than --batch slots simply stream through the pool.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.data.synthetic import generate_corpus
 from repro.data.tokenizer import build_tokenizer
 from repro.models.model import build_model
+from repro.serve import ServeEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8, help="engine slots")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of prompts (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     corpus = generate_corpus(100, seed=0)
     texts = [s.text for s in corpus]
     tok = build_tokenizer("serve", texts, max_piece=10, budget=1024)
     cfg = dataclasses.replace(get_arch(args.arch).reduced(), vocab_size=tok.vocab_size)
+    if cfg.is_encoder_decoder:
+        raise SystemExit(
+            f"{args.arch}: encoder-decoder serving is not wired into the "
+            "engine (needs per-slot encoder context); use a decoder-only arch"
+        )
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 
-    b = args.batch
+    n_req = args.requests or args.batch
     max_len = args.prompt_len + args.gen
-    cache = model.init_cache(b, max_len)
-    prompts = [f"question : {s.question} answer :" for s in corpus[:b]]
-    enc = [tok.encode(p, bos=True)[: args.prompt_len] for p in prompts]
-    plen = min(len(e) for e in enc)
-    tokens = np.stack([e[:plen] for e in enc]).astype(np.int32)
-
-    serve = jax.jit(model.serve_step)
-
-    def dbatch(tk, pos):
-        d = {"token": jnp.asarray(tk), "pos": jnp.asarray(pos, jnp.int32)}
-        if cfg.vision_embeds:
-            d["mrope_pos"] = jnp.full((3, b, 1), pos, jnp.int32)
-        if cfg.is_encoder_decoder:
-            d["enc"] = jnp.zeros((b, max(max_len // 4, 8), cfg.d_model), jnp.bfloat16)
-        return d
-
-    # prefill: replay prompt tokens through the cached decode step
-    t0 = time.time()
-    logits = None
-    for i in range(plen):
-        logits, cache = serve(params, cache, dbatch(tokens[:, i], i))
-    t_prefill = time.time() - t0
-
-    # decode
-    out = []
-    nxt = np.asarray(jnp.argmax(logits, -1))
-    t1 = time.time()
-    for j in range(args.gen):
-        out.append(nxt)
-        logits, cache = serve(params, cache, dbatch(nxt, plen + j))
-        nxt = np.asarray(jnp.argmax(logits, -1))
-    t_dec = time.time() - t1
-
-    gen = np.stack(out, 1)
-    for i in range(min(b, 4)):
-        print(f"[{i}] {prompts[i]!r} -> {tok.decode(gen[i])!r}")
-    tok_s = b * args.gen / t_dec
-    print(
-        f"prefill {plen} toks x{b}: {t_prefill:.2f}s | "
-        f"decode {args.gen} steps x{b}: {t_dec:.2f}s ({tok_s:.1f} tok/s)"
+    engine = ServeEngine(
+        model, params, max_batch=args.batch, max_len=max_len,
+        eos_id=tok.eos_id, seed=0,
     )
+
+    prompts = [f"question : {s.question} answer :" for s in corpus[:n_req]]
+    for p in prompts:
+        ids = tok.encode(p, bos=True)[: args.prompt_len]
+        engine.submit(ids, max_new=args.gen, temperature=args.temperature)
+
+    done = engine.run()
+    by_rid = {c.rid: c for c in done}
+    for rid in sorted(by_rid)[:4]:
+        c = by_rid[rid]
+        print(f"[{rid}] {prompts[rid]!r} -> {tok.decode(c.tokens)!r} "
+              f"({c.finish_reason}, ttft {c.ttft_s * 1e3:.0f}ms)")
+    print(engine.stats.summary())
 
 
 if __name__ == "__main__":

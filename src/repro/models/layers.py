@@ -456,7 +456,7 @@ def attention_decode(
     p: Params,
     x: jax.Array,  # (B, 1, d)
     cache: Params,  # {"k": (B,S,KV,D), "v": ...}
-    pos: jax.Array,  # scalar int32: index of the new token
+    pos: jax.Array,  # scalar int32, or (B,) per-slot positions
     cos: jax.Array,
     sin: jax.Array,
     *,
@@ -466,19 +466,81 @@ def attention_decode(
     if cos is not None:
         q = apply_rope(q, cos, sin)
         k_new = apply_rope(k_new, cos, sin)
+    b = x.shape[0]
     s_cache = cache["k"].shape[1]
     slot = (pos % window) if window > 0 else pos  # window is static
     slot = jnp.minimum(slot, s_cache - 1)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    if pos.ndim == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        pos_b = pos[None]  # (1,) broadcasts over batch below
+    else:  # continuous batching: every stream writes its own slot
+        rows = jnp.arange(b)
+        k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+        pos_b = pos
     new_cache = {"k": k, "v": v}
     kk = repeat_kv(k.astype(x.dtype), cfg.num_heads // cfg.num_kv_heads)
     vv = repeat_kv(v.astype(x.dtype), cfg.num_heads // cfg.num_kv_heads)
-    # mask: valid cache entries only
+    # mask: valid cache entries only, per stream
     j = jnp.arange(s_cache)[None, None, None, :]
+    pe = pos_b[:, None, None, None]
     if window > 0:
-        valid = (j >= 0) & (j < jnp.minimum(pos + 1, s_cache))
+        valid = (j >= 0) & (j < jnp.minimum(pe + 1, s_cache))
     else:
-        valid = j <= pos
-    o = sdpa(q, kk, vv, valid)
+        valid = j <= pe
+    o = sdpa(q, kk, vv, valid, softcap=cfg.logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_cache
+
+
+def attention_prefill(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, S, d) whole prompt
+    cache: Params,  # {"k": (B,S_cache,KV,D), "v": ...}
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    window: int = 0,
+    use_flash: bool = False,
+) -> Tuple[jax.Array, Params]:
+    """Fused prompt consumption: one full-sequence attention pass that also
+    populates the KV cache (positions 0..S-1; ring-buffered for swa).
+
+    Equivalent to replaying ``attention_decode`` S times but with S-fold
+    fewer kernel launches and matmul-shaped (not vector-shaped) compute.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    s_cache = cache["k"].shape[1]
+    if s > s_cache and (window == 0 or s_cache < window):
+        # silently-dropped scatter updates would corrupt the cache; the
+        # sliding-window ring math below is only valid when the cache holds
+        # the full window (tail % window then always lands inside s_cache)
+        raise ValueError(f"prompt len {s} exceeds cache capacity {s_cache}")
+    # Full attention writes positions 0..S-1 contiguously; sliding windows
+    # keep only the last min(S, s_cache) positions, landing in their ring
+    # slots (consecutive positions mod window are distinct, so the scatter
+    # indices are unique).
+    take = min(s, s_cache)
+    tail = jnp.arange(s - take, s)
+    slots = (tail % window) if window > 0 else tail
+    k_c = cache["k"].at[:, slots].set(k[:, s - take :].astype(cache["k"].dtype))
+    v_c = cache["v"].at[:, slots].set(v[:, s - take :].astype(cache["v"].dtype))
+    new_cache = {"k": k_c, "v": v_c}
+    kk = repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    vv = repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    if use_flash and window == 0 and cfg.logit_softcap == 0:
+        from repro.kernels.flash_attention import flash_attention
+
+        o = flash_attention(
+            q.swapaxes(1, 2), kk.swapaxes(1, 2), vv.swapaxes(1, 2), causal=True
+        ).swapaxes(1, 2)
+    else:
+        o = chunked_sdpa(
+            q, kk, vv, causal=True, window=window, softcap=cfg.logit_softcap
+        )
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_cache

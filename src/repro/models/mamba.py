@@ -59,13 +59,13 @@ def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def _ssm_inputs(cfg: ModelConfig, p: Params, x: jax.Array):
-    """x (B,S,d) -> (u, z, dt, Bmat, Cmat) with u post-conv."""
+    """x (B,S,d) -> (u, z, dt, Bmat, Cmat, u_pre) with u post-conv."""
     di = _d_inner(cfg)
     ns = cfg.mamba_d_state
     dt_rank = p["dt_proj"].shape[0]
-    u = x @ p["in_u"].astype(x.dtype)
+    u_pre = x @ p["in_u"].astype(x.dtype)
     z = x @ p["in_z"].astype(x.dtype)
-    u = jax.nn.silu(_causal_conv(u, p["conv"]))
+    u = jax.nn.silu(_causal_conv(u_pre, p["conv"]))
     u = logical_constraint(u, ("batch", "seq", "feature"))
     proj = u @ p["x_proj"].astype(x.dtype)
     dt = jax.nn.softplus(
@@ -74,14 +74,14 @@ def _ssm_inputs(cfg: ModelConfig, p: Params, x: jax.Array):
     ).astype(jnp.float32)  # (B,S,di)
     Bmat = proj[..., dt_rank : dt_rank + ns].astype(jnp.float32)  # (B,S,ns)
     Cmat = proj[..., dt_rank + ns :].astype(jnp.float32)
-    return u, z, dt, Bmat, Cmat
+    return u, z, dt, Bmat, Cmat, u_pre
 
 
 def mamba_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
     b, s, _ = x.shape
     di = _d_inner(cfg)
     ns = cfg.mamba_d_state
-    u, z, dt, Bmat, Cmat = _ssm_inputs(cfg, p, x)
+    u, z, dt, Bmat, Cmat, _ = _ssm_inputs(cfg, p, x)
     A = -jnp.exp(p["a_log"])  # (di,ns)
 
     c = min(_CHUNK, s)
@@ -114,6 +114,55 @@ def mamba_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
     y = y + u * p["d_skip"].astype(x.dtype)
     y = y * jax.nn.silu(z)
     return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba_prefill(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+) -> Tuple[jax.Array, Params]:
+    """Fused prompt consumption: chunked selective scan seeded from the cache
+    SSM state, returning outputs + the state after the last prompt token.
+    Arbitrary lengths are padded to a chunk multiple with dt = 0 (dA = I,
+    dBu = 0) so padding never touches the state."""
+    b, s, _ = x.shape
+    di = _d_inner(cfg)
+    ns = cfg.mamba_d_state
+    u, z, dt, Bmat, Cmat, u_pre = _ssm_inputs(cfg, p, x)
+    A = -jnp.exp(p["a_log"])
+
+    c = min(_CHUNK, s)
+    pad = (-s) % c
+    if pad:
+        u3 = ((0, 0), (0, pad), (0, 0))
+        u, dt, Bmat, Cmat = (jnp.pad(t, u3) for t in (u, dt, Bmat, Cmat))
+    n = (s + pad) // c
+
+    def ch(t):
+        return t.reshape(b, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    us, dts, Bs, Cs = map(ch, (u, dt, Bmat, Cmat))
+
+    def body(state, inp):
+        uc, dtc, Bc, Cc = inp
+        dA = jnp.exp(dtc[..., None] * A)
+        dBu = (dtc * uc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+        def comb(a, b_):
+            return (a[0] * b_[0], b_[0] * a[1] + b_[1])
+
+        dec, acc = jax.lax.associative_scan(comb, (dA, dBu), axis=1)
+        st = dec * state[:, None] + acc
+        y = jnp.einsum("bcds,bcs->bcd", st, Cc)
+        return st[:, -1], y
+
+    st_f, ys = jax.lax.scan(body, cache["ssm"], (us, dts, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(b, s + pad, di)[:, :s].astype(x.dtype)
+    y = y + u[:, :s] * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    conv_buf = jnp.concatenate(
+        [cache["conv"], u_pre.astype(cache["conv"].dtype)], axis=1
+    )[:, -cache["conv"].shape[1] :]
+    new_cache = {"ssm": st_f, "conv": conv_buf}
+    return y @ p["out_proj"].astype(x.dtype), new_cache
 
 
 def mamba_cache_specs(cfg: ModelConfig, batch: int):

@@ -71,13 +71,24 @@ def mla_attention(
     cfg: ModelConfig, p: Params, x: jax.Array, cos: jax.Array, sin: jax.Array
 ) -> jax.Array:
     """Train/prefill: expanded form, causal."""
+    c_kv, k_rope = _latents(cfg, p, x)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]  # shared head
+    return _expanded_attention(cfg, p, x, c_kv, k_rope, cos, sin)
+
+
+def _expanded_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    c_kv: jax.Array,  # (B,S,kvr) normalized latents
+    k_rope: jax.Array,  # (B,S,rope) already rotated
+    cos: jax.Array,
+    sin: jax.Array,
+) -> jax.Array:
     b, s, _ = x.shape
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     q_nope, q_rope = _queries(cfg, p, x)
-    c_kv, k_rope = _latents(cfg, p, x)
-
     q_rope = apply_rope(q_rope, cos, sin)
-    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]  # shared head
 
     k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuk"].astype(x.dtype))
     v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuv"].astype(x.dtype))
@@ -97,6 +108,30 @@ def mla_attention(
     o = o[..., :vd]
     o = logical_constraint(o, ("batch", "seq", "heads", "head_dim"))
     return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def mla_prefill(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B,S,d) whole prompt
+    cache: Params,
+    cos: jax.Array,
+    sin: jax.Array,
+) -> Tuple[jax.Array, Params]:
+    """Fused prompt consumption: expanded-form causal attention (same math as
+    mla_attention) that also writes the latent cache for positions 0..S-1."""
+    s = x.shape[1]
+    if s > cache["c_kv"].shape[1]:
+        raise ValueError(
+            f"prompt len {s} exceeds cache capacity {cache['c_kv'].shape[1]}"
+        )
+    c_kv, k_rope = _latents(cfg, p, x)
+    kr = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+    new_cache = {
+        "c_kv": cache["c_kv"].at[:, :s].set(c_kv.astype(cache["c_kv"].dtype)),
+        "k_rope": cache["k_rope"].at[:, :s].set(kr.astype(cache["k_rope"].dtype)),
+    }
+    return _expanded_attention(cfg, p, x, c_kv, kr, cos, sin), new_cache
 
 
 def mla_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
@@ -123,12 +158,19 @@ def mla_decode(
     q_rope = apply_rope(q_rope, cos, sin)
     kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
 
-    c_kv = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1
-    )
-    k_rope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
-    )
+    if pos.ndim == 0:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1
+        )
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
+        )
+    else:  # (B,) per-slot positions (continuous batching)
+        rows = jnp.arange(x.shape[0])
+        c_kv = cache["c_kv"].at[rows, pos].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, pos].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype)
+        )
     new_cache = {"c_kv": c_kv, "k_rope": k_rope}
 
     # absorb W_uk into the query: (B,1,H,nope) x (kvr,H,nope) -> (B,1,H,kvr)
@@ -138,7 +180,8 @@ def mla_decode(
         jnp.einsum("bqhr,bsr->bhqs", q_abs, c_kv.astype(x.dtype))
         + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope.astype(x.dtype))
     ).astype(jnp.float32) * scale
-    valid = (jnp.arange(c_kv.shape[1]) <= pos)[None, None, None, :]
+    pe = pos if pos.ndim == 0 else pos[:, None, None, None]
+    valid = jnp.arange(c_kv.shape[1])[None, None, None, :] <= pe
     scores = jnp.where(valid, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv.astype(x.dtype))

@@ -59,7 +59,19 @@ class Model(NamedTuple):
             self.cache_specs(batch, max_len),
         )
 
+    def prefill(self, params: Params, cache: Params, batch: Dict,
+                full_logits: bool = False):
+        """Consume the whole prompt (batch {'tokens': (B,S), ...}) in one
+        fused call, populating `cache` for positions 0..S-1. Returns
+        (last-position logits (B,V) — or (B,S,V) when full_logits — , cache).
+        """
+        return T.prefill(
+            self.cfg, params, cache, batch, self.flags, full_logits=full_logits
+        )
+
     def serve_step(self, params: Params, cache: Params, batch: Dict):
+        """One decode step; batch['pos'] is a scalar (lockstep batch) or a
+        (B,) vector of per-stream positions (continuous batching)."""
         return T.serve_step(self.cfg, params, cache, batch, self.flags)
 
     def encode(self, params: Params, audio_embeds: jax.Array) -> jax.Array:

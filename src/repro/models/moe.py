@@ -82,22 +82,36 @@ def route(cfg: ModelConfig, p: Params, xt: jax.Array):
     return weights, topi, aux
 
 
-def moe_ffn(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def moe_ffn(
+    cfg: ModelConfig, p: Params, x: jax.Array, dropless: bool = False
+) -> Tuple[jax.Array, jax.Array]:
     """x (B,S,d) -> (out (B,S,d), aux_loss). Dispatches to the shard_map
     expert-parallel path when a production mesh is active (GSPMD replicates
     the data-dependent scatter otherwise — measured 100x FLOPs/bytes blowup
-    on deepseek-v3, see EXPERIMENTS.md §Dry-run)."""
+    on deepseek-v3, see EXPERIMENTS.md §Dry-run).
+
+    ``dropless`` removes the capacity limit (cap = T: no token can overflow
+    its expert). The serving path (prefill/decode) uses it so a token's
+    output is independent of the batch it rides in — capacity dropping is a
+    training-time load-balancing artifact, and under continuous batching it
+    would make generations depend on co-scheduled requests. Note the
+    dispatch buffer is then (E, T, d): fine for decode (T = B) and
+    CPU-scale prefill, but long-prompt prefill on many-expert configs needs
+    a sort/segment dispatch instead of a capacity buffer (ROADMAP scale
+    item)."""
     from repro.common.sharding import current_mesh
 
     mesh = current_mesh()
     if mesh is not None and "model" in mesh.axis_names:
         ncols = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
         if cfg.num_experts % ncols == 0 and ncols > 1:
-            return moe_ffn_sharded(cfg, p, x, mesh)
-    return moe_ffn_dense(cfg, p, x)
+            return moe_ffn_sharded(cfg, p, x, mesh, dropless=dropless)
+    return moe_ffn_dense(cfg, p, x, dropless=dropless)
 
 
-def moe_ffn_dense(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def moe_ffn_dense(
+    cfg: ModelConfig, p: Params, x: jax.Array, dropless: bool = False
+) -> Tuple[jax.Array, jax.Array]:
     """Single-device reference path (CPU tests, smoke configs)."""
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k
@@ -106,7 +120,7 @@ def moe_ffn_dense(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array,
 
     weights, topi, aux = route(cfg, p, xt)
 
-    cap = max(int(math.ceil(t / e * cfg.capacity_factor * k)), k)
+    cap = t if dropless else max(int(math.ceil(t / e * cfg.capacity_factor * k)), k)
 
     # Position of each (token, choice) inside its expert's capacity buffer:
     # cumulative count of prior assignments to the same expert.
@@ -147,7 +161,7 @@ def moe_ffn_dense(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array,
 # ---------------------------------------------------------------------------
 
 def moe_ffn_sharded(
-    cfg: ModelConfig, p: Params, x: jax.Array, mesh
+    cfg: ModelConfig, p: Params, x: jax.Array, mesh, dropless: bool = False
 ) -> Tuple[jax.Array, jax.Array]:
     """Expert parallelism via shard_map.
 
@@ -176,7 +190,9 @@ def moe_ffn_sharded(
         n_rows = 1
     x_spec = P(batch_axes if batch_axes else None, None, None)
     t_local = (b // n_rows) * s
-    cap = max(int(math.ceil(t_local / e * cfg.capacity_factor * k)), k)
+    cap = t_local if dropless else max(
+        int(math.ceil(t_local / e * cfg.capacity_factor * k)), k
+    )
 
     has_shared = bool(cfg.num_shared_experts)
 

@@ -33,6 +33,9 @@ class RuntimeFlags:
     attn_chunk: int = 1024
     triangular_skip: bool = True
     scan_units: bool = True  # False -> unroll (compile-time/perf trade)
+    # prefill attention via the Pallas flash kernel (TPU path; the XLA
+    # chunked-sdpa fallback is the default so CPU serving stays fast)
+    flash_prefill: bool = False
 
 
 DEFAULT_FLAGS = RuntimeFlags()
@@ -189,12 +192,73 @@ def block_decode(
     if mlpk in ("mlp", "dense_big"):
         h = h + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
     elif mlpk == "moe":
-        y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h))
+        y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h),
+                           dropless=True)
         h = h + y
     if "adapter" in p:
         from repro.core.adapters import apply_adapter
 
         h = apply_adapter(p["adapter"], h)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill-path block apply (full prompt, cache out)
+# ---------------------------------------------------------------------------
+
+def block_prefill(
+    cfg: ModelConfig,
+    p: Params,
+    block: str,
+    h: jax.Array,  # (B,S,d) whole prompt
+    cache: Params,
+    ctx: Dict,
+    flags: RuntimeFlags = DEFAULT_FLAGS,
+) -> Tuple[jax.Array, Params]:
+    """Full-sequence apply that also populates this block's serve cache —
+    the fused equivalent of replaying ``block_decode`` S times."""
+    mixer, mlpk = cfg.block_parts(block)
+    cos, sin = _rope_for(cfg, mixer, ctx)
+    x = L.apply_norm(cfg, p["norm1"], h)
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else 0
+        o, cache = L.attention_prefill(
+            cfg, p["attn"], x, cache, cos, sin, window=window,
+            use_flash=flags.flash_prefill,
+        )
+        h = h + o
+    elif mixer == "xdec":
+        o, cache = L.attention_prefill(
+            cfg, p["attn"], x, cache, cos, sin, use_flash=flags.flash_prefill
+        )
+        h = h + o
+        xx = L.apply_norm(cfg, p["norm_x"], h)
+        h = h + L.cross_attention(cfg, p["xattn"], xx, ctx["enc"])
+    elif mixer == "mla":
+        o, cache = MLA.mla_prefill(cfg, p["attn"], x, cache, cos, sin)
+        h = h + o
+    elif mixer == "mlstm":
+        o, cache = XL.mlstm_prefill(cfg, p["mixer"], x, cache)
+        h = h + o
+    elif mixer == "slstm":
+        o, cache = XL.slstm_prefill(cfg, p["mixer"], x, cache)
+        h = h + o
+    elif mixer == "mamba":
+        o, cache = MB.mamba_prefill(cfg, p["mixer"], x, cache)
+        h = h + o
+    else:
+        raise ValueError(f"unknown mixer {mixer}")
+    if mlpk in ("mlp", "dense_big"):
+        h = h + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+    elif mlpk == "moe":
+        y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h),
+                           dropless=True)
+        h = h + y
+    if "adapter" in p:
+        from repro.core.adapters import apply_adapter
+
+        h = apply_adapter(p["adapter"], h)
+    h = logical_constraint(h, ("batch", "seq", "d_model"))
     return h, cache
 
 
@@ -435,6 +499,68 @@ def cache_axes(cfg: ModelConfig) -> Params:
     return base
 
 
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    batch: Dict,
+    flags: RuntimeFlags = DEFAULT_FLAGS,
+    *,
+    full_logits: bool = False,
+) -> Tuple[jax.Array, Params]:
+    """Fused prompt consumption: one full-sequence pass over ``tokens``
+    (B,S) that populates the serve cache for positions 0..S-1 and returns
+    the logits after the last prompt token (or all S positions when
+    ``full_logits``). Equivalent to replaying ``serve_step`` S times from a
+    fresh cache, with matmul-shaped compute instead of S vector steps.
+
+    ``cache`` must be FRESH (``init_cache`` zeros): recurrent blocks seed
+    their matrix/SSM state from it, but the causal-conv windows and the
+    attention positions assume the prompt starts at position 0 — prefill
+    continuation of a partially-filled slot is not supported."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = L.embed(cfg, params["embed"], tokens)
+    if cfg.vision_embeds and "vision_embeds" in batch:
+        mask = batch["vision_mask"][..., None]
+        h = jnp.where(mask, batch["vision_embeds"].astype(h.dtype), h)
+    if cfg.pos_type == "learned":
+        h = h + params["pos_embed"][:s].astype(h.dtype)
+    h = logical_constraint(h, ("batch", "seq", "d_model"))
+    ctx = _make_ctx(cfg, jnp.arange(s), batch)
+    if cfg.is_encoder_decoder:
+        ctx["enc"] = (
+            batch["enc"] if "enc" in batch
+            else encode(cfg, params, batch["audio_embeds"], flags)
+        )
+
+    new_cache: Params = {}
+    if cfg.prefix_pattern:
+        new_cache["prefix"] = {}
+        for i, blk in enumerate(cfg.prefix_pattern):
+            h, c = block_prefill(
+                cfg, params["prefix"][f"l{i}"], blk, h,
+                cache["prefix"][f"l{i}"], ctx, flags,
+            )
+            new_cache["prefix"][f"l{i}"] = c
+
+    def unit_fn(h, xs):
+        pu, cu = xs
+        new_cu = {}
+        for i, blk in enumerate(cfg.unit_pattern):
+            h, c = block_prefill(cfg, pu[f"b{i}"], blk, h, cu[f"b{i}"], ctx, flags)
+            new_cu[f"b{i}"] = c
+        return h, new_cu
+
+    h, new_units = jax.lax.scan(unit_fn, h, (params["units"], cache["units"]))
+    new_cache["units"] = new_units
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    if not full_logits:
+        h = h[:, -1:]
+    logits = L.unembed(cfg, params["embed"], h)
+    return (logits if full_logits else logits[:, 0]), new_cache
+
+
 def serve_step(
     cfg: ModelConfig,
     params: Params,
@@ -442,15 +568,19 @@ def serve_step(
     batch: Dict,
     flags: RuntimeFlags = DEFAULT_FLAGS,
 ) -> Tuple[jax.Array, Params]:
-    """One decode step: batch {'token': (B,), 'pos': scalar int32, ...}."""
+    """One decode step: batch {'token': (B,), 'pos': scalar int32 or (B,)
+    per-stream positions (continuous batching), ...}."""
     tokens = batch["token"][:, None]  # (B,1)
     pos = batch["pos"]
     h = L.embed(cfg, params["embed"], tokens)
     if cfg.pos_type == "learned":
-        h = h + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], pos, 1, axis=0
-        ).astype(h.dtype)
-    positions = pos[None] if pos.ndim == 0 else pos
+        if pos.ndim == 0:
+            h = h + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], pos, 1, axis=0
+            ).astype(h.dtype)
+        else:
+            h = h + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(h.dtype)
+    positions = pos[:, None] if pos.ndim == 1 else pos[None] if pos.ndim == 0 else pos
     ctx = _make_ctx(cfg, jnp.atleast_1d(positions), batch)
     if cfg.is_encoder_decoder:
         ctx["enc"] = batch["enc"]

@@ -276,6 +276,89 @@ def mlstm_forward_scan(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
     return out @ p["down"].astype(x.dtype)
 
 
+def mlstm_prefill(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+) -> Tuple[jax.Array, Params]:
+    """Fused prompt consumption: chunkwise-parallel scan seeded from the
+    cache state (C, n, m) and returning the state after the last prompt
+    token, plus the full-sequence outputs.
+
+    Seeding from the zeroed ``init_cache`` state (m = 0, not the -inf of the
+    training path) makes this bit-compatible with replaying ``mlstm_decode``
+    token-at-a-time from a fresh cache: the per-position stabilizer recursion
+    m_t = max(lf_t + m_{t-1}, li_t) telescopes to exactly the chunk formula.
+    Arbitrary prompt lengths are padded to a chunk multiple with identity
+    gates (lf = 0 keep-state, li = -inf no-input) so padding never touches
+    the state.
+    """
+    b, s, d = x.shape
+    h = cfg.lstm_num_heads
+    q, k, v, li, lf, xi, z = _mlstm_qkv_gates(cfg, p, x)
+    c = min(cfg.mlstm_chunk, s)
+    pad = (-s) % c
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, zq) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+    n = (s + pad) // c
+
+    def ch(t):
+        return t.reshape(b, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lis, lfs = map(ch, (q, k, v, li, lf))
+
+    def body(carry, inp):
+        C_hat, n_hat, m_state = carry
+        qc, kc, vc, lic, lfc = inp
+        lic = lic.swapaxes(1, 2)
+        lfc = lfc.swapaxes(1, 2)
+        g = jnp.cumsum(lfc, axis=-1)
+        G = g[..., -1:]
+        w_state = g + m_state[..., None]
+        w_intra = g[..., :, None] - g[..., None, :] + lic[..., None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        w_intra = jnp.where(tri, w_intra, -jnp.inf)
+        m_loc = jnp.maximum(w_state, jnp.max(w_intra, axis=-1))
+        sc_state = jnp.exp(w_state - m_loc)
+        sc_intra = jnp.exp(w_intra - m_loc[..., None])
+        qk = jnp.einsum("bqhx,bkhx->bhqk", qc, kc).astype(jnp.float32)
+        att = sc_intra * qk
+        num = jnp.einsum("bhqk,bkhv->bqhv", att.astype(x.dtype), vc).astype(jnp.float32)
+        num += (
+            jnp.einsum("bqhk,bhkv->bqhv", qc.astype(jnp.float32), C_hat)
+            * sc_state.swapaxes(1, 2)[..., None]
+        )
+        den = (jnp.sum(att, axis=-1)
+               + jnp.einsum("bqhk,bhk->bhq", qc.astype(jnp.float32), n_hat) * sc_state
+               ).swapaxes(1, 2)
+        hmax = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc).swapaxes(1, 2))
+        out = num / hmax[..., None]
+        w_upd = G - g + lic
+        m_new = jnp.maximum(G[..., 0] + m_state, jnp.max(w_upd, axis=-1))
+        sc_upd = jnp.exp(w_upd - m_new[..., None])
+        sc_old = jnp.exp(G[..., 0] + m_state - m_new)
+        kv = jnp.einsum(
+            "bkhd,bkhv,bhk->bhdv", kc.astype(jnp.float32), vc.astype(jnp.float32), sc_upd
+        )
+        C_new = C_hat * sc_old[..., None, None] + kv
+        ksum = jnp.einsum("bkhd,bhk->bhd", kc.astype(jnp.float32), sc_upd)
+        n_new = n_hat * sc_old[..., None] + ksum
+        return (C_new, n_new, m_new), out.astype(x.dtype)
+
+    carry0 = (cache["C"], cache["n"], cache["m"])
+    (C_f, n_f, m_f), outs = jax.lax.scan(body, carry0, (qs, ks, vs, lis, lfs))
+    dv = v.shape[-1]
+    out = outs.swapaxes(0, 1).reshape(b, s + pad, h * dv)[:, :s]
+    out = out + xi * p["skip_scale"].astype(x.dtype)
+    out = out * jax.nn.silu(z)
+    conv_buf = jnp.concatenate(
+        [cache["conv"], xi.astype(cache["conv"].dtype)], axis=1
+    )[:, -cache["conv"].shape[1] :]
+    new_cache = {"C": C_f, "n": n_f, "m": m_f, "conv": conv_buf}
+    return out @ p["down"].astype(x.dtype), new_cache
+
+
 def mlstm_cache_specs(cfg: ModelConfig, batch: int):
     h = cfg.lstm_num_heads
     di = _d_inner_m(cfg)
@@ -398,6 +481,28 @@ def slstm_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
         h @ p["up_v"].astype(x.dtype)
     )
     return h @ p["down"].astype(x.dtype)
+
+
+def slstm_prefill(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+) -> Tuple[jax.Array, Params]:
+    """Fused prompt consumption: one scan over the prompt seeded from the
+    cache state, returning outputs + the state after the last token."""
+    gx = x @ p["wx"].astype(x.dtype) + p["b"].astype(x.dtype)  # (B,S,4d)
+
+    def step(state, g):
+        new = _slstm_cell(cfg, p, g, state)
+        return new, new[0]
+
+    state0 = (cache["h"], cache["c"], cache["n"], cache["m"])
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    h = h * p["norm"].astype(x.dtype)
+    h = jax.nn.gelu(h @ p["up_g"].astype(x.dtype), approximate=True) * (
+        h @ p["up_v"].astype(x.dtype)
+    )
+    new_cache = {"h": h_f, "c": c_f, "n": n_f, "m": m_f}
+    return h @ p["down"].astype(x.dtype), new_cache
 
 
 def slstm_cache_specs(cfg: ModelConfig, batch: int):

@@ -86,6 +86,17 @@ HW_V5E = Hardware(
 )
 
 
+def normalize_cost_analysis(cost) -> Dict:
+    """``compiled.cost_analysis()`` returned a one-element list of dicts on
+    older JAX and a flat dict (or None) on current JAX — accept every shape.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 def model_flops(n_params_active: int, n_tokens: int) -> float:
     """MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE)."""
     return 6.0 * n_params_active * n_tokens

@@ -1,0 +1,12 @@
+"""Serving subsystem: fused prefill + continuous batching (DESIGN.md §6).
+
+`ServeEngine` owns one persistent KV/state cache of `max_batch` slots. New
+requests are admitted into free slots via one fused `Model.prefill` call
+(no wave barriers, no cache reinit); all active slots then decode in
+lockstep-batched `serve_step` calls with per-slot positions. Finished
+streams are evicted and their slots refilled from the queue.
+"""
+from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.sampling import sample_tokens
+
+__all__ = ["Completion", "Request", "ServeEngine", "sample_tokens"]

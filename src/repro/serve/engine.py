@@ -1,0 +1,291 @@
+"""Continuous-batching serving engine (DESIGN.md §6).
+
+One persistent cache of ``max_batch`` slots lives for the whole engine —
+requests stream through it:
+
+  submit() -> admission queue
+  step():   1. while a slot is free and the queue is non-empty: consume the
+               request's whole prompt in ONE fused ``Model.prefill`` call
+               (batch 1, exact length) and splice the resulting cache slice
+               into the slot — running streams are never paused or reset;
+            2. one batched ``serve_step`` over all slots with per-slot
+               positions (the (B,) ``pos`` vector), sampling each stream at
+               its own temperature;
+            3. evict streams that hit EOS / max_new / the cache end, freeing
+               their slots for the next admission.
+
+Decode compute is spent on every slot (free slots ride along as dead lanes
+— the standard static-batch trade; paged KV is the planned successor), but
+admission never waits for a wave boundary: time-to-first-token is one
+prefill, not the tail of the slowest running stream.
+
+The engine serves decoder-only configs. Encoder-decoder (whisper) serving
+needs per-slot encoder context plumbed through ``serve_step``'s ``enc``
+input and is not wired here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serve.sampling import sample_tokens
+
+Params = Dict
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    temperature: float
+    submit_time: float
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt: List[int]
+    tokens: List[int]
+    finish_reason: str  # eos | length | cache_full
+    ttft_s: float  # submit -> first token (includes queueing)
+    latency_s: float  # submit -> finish
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_tokens: int = 0  # sampled tokens (active streams only)
+    decode_steps: int = 0
+    decode_s: float = 0.0
+
+    def summary(self) -> str:
+        pf = self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+        dc = self.decode_tokens / self.decode_s if self.decode_s else 0.0
+        return (
+            f"prefill {self.prefill_tokens} tok in {self.prefill_s:.2f}s "
+            f"({pf:.1f} tok/s) | decode {self.decode_tokens} tok in "
+            f"{self.decode_s:.2f}s ({dc:.1f} tok/s, {self.decode_steps} steps)"
+        )
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params: Params,
+        *,
+        max_batch: int,
+        max_len: int,
+        eos_id: Optional[int] = None,
+        seed: int = 0,
+    ):
+        cfg = model.cfg
+        if cfg.is_encoder_decoder:
+            raise ValueError("engine serves decoder-only configs")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model.init_cache(max_batch, max_len)
+        self.key = jax.random.key(seed)
+        # per-leaf index of the batch axis: scanned-unit cache leaves are
+        # (layers, batch, ...) while prefix leaves are (batch, ...) — the
+        # slot splice must write along "batch", not axis 0
+        axes_leaves = jax.tree.leaves(
+            model.cache_axes(),
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+        self._cache_bdims = [ax.index("batch") for ax in axes_leaves]
+
+        # host-side slot state
+        self.free: List[int] = list(range(max_batch))[::-1]  # pop() -> slot 0 first
+        self.queue: Deque[Request] = deque()
+        self.pos = np.zeros(max_batch, np.int32)  # tokens already in cache
+        self.active = np.zeros(max_batch, bool)
+        self.cur = np.zeros(max_batch, np.int32)  # last sampled, not yet fed
+        self.temps = np.zeros(max_batch, np.float32)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_gen: List[List[int]] = [[] for _ in range(max_batch)]
+        self.slot_first_tok_t = np.zeros(max_batch, np.float64)
+        self.stats = EngineStats()
+        self._next_rid = 0
+        self._prefill_jit: Dict[int, object] = {}  # compiled per prompt length
+
+        def decode_fn(params, cache, token, pos, temps, key):
+            logits, cache = model.serve_step(
+                params, cache, {"token": token, "pos": pos}
+            )
+            return sample_tokens(logits, key, temps), cache
+
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(
+        self,
+        prompt: List[int],
+        *,
+        max_new: int = 32,
+        temperature: float = 0.0,
+    ) -> int:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt len {len(prompt)} >= max_len {self.max_len}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(
+            Request(rid, list(prompt), max_new, temperature, time.time())
+        )
+        return rid
+
+    def _prefill_for(self, s: int):
+        """Fused prefill (batch 1, exact length s) + splice into the pool
+        cache at `slot` + first-token sample, one compiled program per s."""
+        if s in self._prefill_jit:
+            return self._prefill_jit[s]
+        model = self.model
+
+        def fn(params, cache, tokens, slot, temp, key):
+            fresh = jax.tree.map(
+                lambda sds: jnp.zeros(sds.shape, sds.dtype),
+                model.cache_specs(1, self.max_len),
+            )
+            logits, filled = model.prefill(params, fresh, {"tokens": tokens})
+
+            big_leaves, treedef = jax.tree.flatten(cache)
+            small_leaves = jax.tree.leaves(filled)
+            spliced = []
+            for big, small, bdim in zip(
+                big_leaves, small_leaves, self._cache_bdims
+            ):
+                start = [0] * big.ndim
+                start[bdim] = slot
+                spliced.append(
+                    jax.lax.dynamic_update_slice(big, small, tuple(start))
+                )
+            cache = jax.tree.unflatten(treedef, spliced)
+            tok = sample_tokens(logits, key, jnp.full((1,), temp))[0]
+            return tok, cache
+
+        self._prefill_jit[s] = jax.jit(fn, donate_argnums=(1,))
+        return self._prefill_jit[s]
+
+    def _admit_one(self) -> Optional[Completion]:
+        req = self.queue.popleft()
+        slot = self.free.pop()
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.time()
+        tok, self.cache = self._prefill_for(len(req.prompt))(
+            self.params, self.cache, toks, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(req.temperature, jnp.float32), sub,
+        )
+        tok = int(tok)
+        now = time.time()
+        self.stats.prefill_s += now - t0
+        self.stats.prefill_tokens += len(req.prompt)
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = True
+        self.cur[slot] = tok
+        self.temps[slot] = req.temperature
+        self.slot_req[slot] = req
+        self.slot_gen[slot] = [tok]
+        self.slot_first_tok_t[slot] = now
+        return self._maybe_finish(slot)
+
+    # -- stepping -----------------------------------------------------------
+
+    def _maybe_finish(self, slot: int) -> Optional[Completion]:
+        req = self.slot_req[slot]
+        gen = self.slot_gen[slot]
+        reason = None
+        if self.eos_id is not None and gen and gen[-1] == self.eos_id:
+            reason = "eos"
+        elif len(gen) >= req.max_new:
+            reason = "length"
+        elif self.pos[slot] >= self.max_len:
+            reason = "cache_full"
+        if reason is None:
+            return None
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.free.append(slot)
+        now = time.time()
+        return Completion(
+            rid=req.rid,
+            prompt=req.prompt,
+            tokens=list(gen),
+            finish_reason=reason,
+            ttft_s=self.slot_first_tok_t[slot] - req.submit_time,
+            latency_s=now - req.submit_time,
+        )
+
+    def step(self) -> List[Completion]:
+        """Admit whatever fits, then one batched decode step. Returns the
+        requests that finished during this step."""
+        done: List[Completion] = []
+        while self.free and self.queue:
+            fin = self._admit_one()
+            if fin is not None:
+                done.append(fin)
+        if not self.active.any():
+            return done
+
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.time()
+        tok, self.cache = self._decode(
+            self.params,
+            self.cache,
+            jnp.asarray(self.cur),
+            jnp.asarray(self.pos),
+            jnp.asarray(self.temps),
+            sub,
+        )
+        tok = np.asarray(tok)
+        self.stats.decode_s += time.time() - t0
+        self.stats.decode_steps += 1
+        for slot in np.nonzero(self.active)[0]:
+            self.pos[slot] += 1
+            self.cur[slot] = tok[slot]
+            self.slot_gen[slot].append(int(tok[slot]))
+            self.stats.decode_tokens += 1
+            fin = self._maybe_finish(slot)
+            if fin is not None:
+                done.append(fin)
+        return done
+
+    def run(self, max_steps: Optional[int] = None) -> List[Completion]:
+        """Drive step() until queue and pool drain; returns completions in
+        finish order."""
+        out: List[Completion] = []
+        steps = 0
+        while self.queue or self.active.any():
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)

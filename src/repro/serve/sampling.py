@@ -1,0 +1,23 @@
+"""Per-stream token sampling for the serving engine.
+
+One fused op over the whole batch: greedy where a stream's temperature is
+0, Gumbel-max temperature sampling elsewhere (argmax of logits/T + Gumbel
+noise == one categorical draw, with no per-stream control flow).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(
+    logits: jax.Array,  # (B, V)
+    key: jax.Array,
+    temps: jax.Array,  # (B,) per-stream temperature; <= 0 means greedy
+) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1)
+    g = jax.random.gumbel(key, lf.shape, jnp.float32)
+    scaled = lf / jnp.maximum(temps, 1e-6)[:, None] + g
+    sampled = jnp.argmax(scaled, axis=-1)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)

@@ -65,7 +65,11 @@ def test_mamba_chunked_equals_recurrent():
 def test_forward_matches_cached_decode(arch):
     """logits(full forward) at position t == serve_step replay at t."""
     cfg = get_arch(arch).reduced()
-    cfg = dataclasses.replace(cfg, mtp_depth=0)
+    # generous MoE capacity: the serving decode path is dropless, so the
+    # comparison needs a training forward where no token overflows its
+    # expert (cf >= e/k guarantees cap >= t); otherwise the test outcome
+    # depends on which tokens the shared RNG happens to draw
+    cfg = dataclasses.replace(cfg, mtp_depth=0, capacity_factor=8.0)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     b, s = 2, 24

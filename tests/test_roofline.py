@@ -70,8 +70,20 @@ def test_cost_analysis_flops_ground_truth():
     import jax
     import jax.numpy as jnp
 
+    from repro.roofline.analysis import normalize_cost_analysis
+
     m = jax.jit(lambda a, b: a @ b)
     sds = jax.ShapeDtypeStruct((512, 512), jnp.float32)
     c = m.lower(sds, sds).compile()
-    flops = c.cost_analysis()["flops"]
+    # cost_analysis() is a list of dicts on older JAX, a dict on current
+    flops = normalize_cost_analysis(c.cost_analysis())["flops"]
     assert abs(flops - 2 * 512**3) / (2 * 512**3) < 0.05
+
+
+def test_normalize_cost_analysis_shapes():
+    from repro.roofline.analysis import normalize_cost_analysis
+
+    assert normalize_cost_analysis(None) == {}
+    assert normalize_cost_analysis([]) == {}
+    assert normalize_cost_analysis({"flops": 1.0}) == {"flops": 1.0}
+    assert normalize_cost_analysis([{"flops": 2.0}]) == {"flops": 2.0}

