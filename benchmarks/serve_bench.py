@@ -1,19 +1,25 @@
-"""Serving benchmark: fused prefill vs token-at-a-time replay, decode
-throughput, and time-to-first-token, across the three serving arch
-families (attention / MoE / recurrent).
+"""Serving benchmark for the layered engine (DESIGN.md §7).
+
+Per arch family (attention / MoE / recurrent):
+
+- fused prefill vs token-at-a-time replay (the PR-1 headline numbers);
+- decode throughput at LOW occupancy (1 live stream in an 8-slot pool),
+  live-lane gather vs the PR-1 dead-lane baseline (every slot decodes
+  every step) — the perf point of the ModelRunner;
+- engine-level TTFT p50/p95 and mean batch occupancy over a request wave
+  streaming through a small pool;
+- compiled-program counts (pow2 prompt buckets / lane buckets).
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract and
+writes the full metric set to ``BENCH_serve.json`` so the perf trajectory
+is tracked across PRs.
 
   PYTHONPATH=src python benchmarks/serve_bench.py [--prompt-len 64] \
-      [--batch 4] [--gen 16] [--archs qwen2-1.5b,phi3.5-moe-42b-a6.6b,...]
-
-Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
-  serve_prefill_fused_<arch>   — one Model.prefill call, derived = tok/s
-  serve_prefill_replay_<arch>  — serve_step x prompt_len, derived = tok/s
-  serve_decode_<arch>          — one decode step, derived = tok/s
-  serve_ttft_<arch>            — engine submit -> first token, derived = x
-                                 speedup of fused prefill over replay
+      [--batch 8] [--gen 16] [--archs qwen2-1.5b,...] [--out BENCH_serve.json]
 """
 import argparse
 import dataclasses
+import json
 import os
 import sys
 import time
@@ -36,19 +42,9 @@ def bench(fn, warmup=1, iters=3):
     return (time.time() - t0) / iters
 
 
-def run_arch(arch: str, b: int, plen: int, gen: int):
-    from repro.configs import get_arch
-    from repro.models.model import build_model
-    from repro.serve import ServeEngine
-
-    cfg = get_arch(arch).reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
+def bench_prefill(model, params, cfg, b, plen, max_len):
     rng = np.random.RandomState(0)
-    max_len = plen + gen
     toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (b, plen)), jnp.int32)
-
-    # fused prefill: one call consumes the whole prompt
     prefill = jax.jit(lambda p, c, t: model.prefill(p, c, {"tokens": t}))
 
     def run_fused():
@@ -58,7 +54,6 @@ def run_arch(arch: str, b: int, plen: int, gen: int):
 
     t_fused = bench(run_fused)
 
-    # replay baseline: the pre-engine serving path (serve_step per token)
     serve = jax.jit(model.serve_step)
 
     def run_replay():
@@ -72,34 +67,102 @@ def run_arch(arch: str, b: int, plen: int, gen: int):
         jax.block_until_ready(lg)
 
     t_replay = bench(run_replay)
+    return t_fused, t_replay
 
-    # decode throughput (batched step, per-slot positions)
-    cache = model.init_cache(b, max_len)
-    _, cache = prefill(params, cache, toks)
-    tok0 = jnp.zeros((b,), jnp.int32)
-    pos = jnp.full((b,), plen, jnp.int32)
 
-    def run_decode():
-        lg, _ = serve(params, cache, {"token": tok0, "pos": pos})
-        jax.block_until_ready(lg)
+def bench_low_occupancy_decode(model, params, cfg, pool, plen, gen, max_len,
+                               gather):
+    """Steady-state tok/s of ONE live stream in a pool of ``pool`` slots:
+    live-lane gather vs the PR-1 dead-lane baseline (gather=False decodes
+    all slots every step). A warmup request triggers the jit compiles so
+    the measured pass is compile-free."""
+    from repro.serve import ServeEngine
+    from repro.serve.runner import RunnerStats
 
-    t_dec = bench(run_decode, warmup=1, iters=8)
+    rng = np.random.RandomState(0)
+    eng = ServeEngine(model, params, max_batch=pool, max_len=max_len,
+                      seed=0, gather_live_lanes=gather)
+    prompt = list(rng.randint(1, cfg.vocab_size, (plen,)))
+    eng.submit(prompt, max_new=gen)
+    eng.run()
+    eng.runner.stats = RunnerStats()  # drop compile-inclusive warmup timings
+    eng.submit(prompt, max_new=gen)
+    eng.run()
+    st = eng.stats
+    return st.decode_tokens / st.decode_s if st.decode_s else 0.0
 
-    # TTFT through the engine (includes sampling + cache splice)
-    engine = ServeEngine(model, params, max_batch=b, max_len=max_len, seed=0)
-    engine.submit(list(np.asarray(toks[0])), max_new=1)
-    c = engine.run()[0]
 
+def bench_engine_wave(model, params, cfg, batch, plen, gen, n_req):
+    """A wave of n_req requests with varied prompt lengths through a
+    ``batch``-slot pool: TTFT distribution + occupancy + compile counts."""
+    from repro.serve import ServeEngine
+
+    rng = np.random.RandomState(1)
+    max_len = plen + gen
+    eng = ServeEngine(model, params, max_batch=batch, max_len=max_len, seed=0)
+    for i in range(n_req):
+        n = int(rng.randint(max(4, plen // 4), plen + 1))
+        eng.submit(list(rng.randint(1, cfg.vocab_size, (n,))), max_new=gen)
+    done = eng.run()
+    ttfts = np.asarray(sorted(c.ttft_s for c in done))
+    return {
+        "ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+        "ttft_p95_ms": float(np.percentile(ttfts, 95) * 1e3),
+        "mean_occupancy": eng.mean_occupancy,
+        "prefill_programs": eng.runner.prefill_programs,
+        "decode_programs": eng.runner.decode_programs,
+        "decode_tok_s": (
+            eng.stats.decode_tokens / eng.stats.decode_s
+            if eng.stats.decode_s else 0.0
+        ),
+    }
+
+
+def run_arch(arch: str, b: int, plen: int, gen: int):
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    max_len = plen + gen
+
+    t_fused, t_replay = bench_prefill(model, params, cfg, min(b, 4), plen, max_len)
     speedup = t_replay / t_fused
+
+    pool = 8
+    live_tps = bench_low_occupancy_decode(
+        model, params, cfg, pool, plen, gen, max_len, gather=True
+    )
+    dead_tps = bench_low_occupancy_decode(
+        model, params, cfg, pool, plen, gen, max_len, gather=False
+    )
+    wave = bench_engine_wave(model, params, cfg, b, plen, gen, n_req=2 * b)
+
     rows = [
         (f"serve_prefill_fused_{arch}", t_fused * 1e6,
-         f"{b * plen / t_fused:.0f}tok/s"),
+         f"{min(b, 4) * plen / t_fused:.0f}tok/s"),
         (f"serve_prefill_replay_{arch}", t_replay * 1e6,
-         f"{b * plen / t_replay:.0f}tok/s"),
-        (f"serve_decode_{arch}", t_dec * 1e6, f"{b / t_dec:.0f}tok/s"),
-        (f"serve_ttft_{arch}", c.ttft_s * 1e6, f"{speedup:.1f}x"),
+         f"{min(b, 4) * plen / t_replay:.0f}tok/s"),
+        (f"serve_decode_live_lane_1of{pool}_{arch}",
+         1e6 / live_tps if live_tps else 0.0, f"{live_tps:.0f}tok/s"),
+        (f"serve_decode_dead_lane_1of{pool}_{arch}",
+         1e6 / dead_tps if dead_tps else 0.0, f"{dead_tps:.0f}tok/s"),
+        (f"serve_ttft_p50_{arch}", wave["ttft_p50_ms"] * 1e3,
+         f"occ {wave['mean_occupancy']:.2f}"),
+        (f"serve_ttft_p95_{arch}", wave["ttft_p95_ms"] * 1e3,
+         f"{len(wave['prefill_programs'])}buckets"),
     ]
-    return rows, speedup
+    metrics = {
+        "prefill_fused_us": t_fused * 1e6,
+        "prefill_replay_us": t_replay * 1e6,
+        "prefill_speedup_x": speedup,
+        "decode_low_occupancy_live_tok_s": live_tps,
+        "decode_low_occupancy_dead_tok_s": dead_tps,
+        "live_lane_speedup_x": live_tps / dead_tps if dead_tps else 0.0,
+        **wave,
+    }
+    return rows, metrics
 
 
 def main():
@@ -108,22 +171,36 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    speedups = {}
+    report = {
+        "config": {
+            "batch": args.batch, "prompt_len": args.prompt_len,
+            "gen": args.gen, "low_occupancy_pool": 8,
+        },
+        "archs": {},
+    }
     for arch in args.archs.split(","):
-        rows, speedup = run_arch(arch, args.batch, args.prompt_len, args.gen)
+        rows, metrics = run_arch(arch, args.batch, args.prompt_len, args.gen)
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived}")
-        speedups[arch] = speedup
-    worst = min(speedups, key=speedups.get)
-    print(
-        f"# fused prefill speedup over replay: "
-        + ", ".join(f"{a}={s:.1f}x" for a, s in speedups.items())
-        + f" (min {speedups[worst]:.1f}x on {worst})",
-        file=sys.stderr,
-    )
+        report["archs"][arch] = metrics
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for arch, m in report["archs"].items():
+        print(
+            f"# {arch}: fused prefill {m['prefill_speedup_x']:.1f}x over "
+            f"replay; live-lane decode {m['live_lane_speedup_x']:.2f}x over "
+            f"dead-lane at 1/8 occupancy; ttft p50/p95 "
+            f"{m['ttft_p50_ms']:.0f}/{m['ttft_p95_ms']:.0f}ms; "
+            f"occupancy {m['mean_occupancy']:.2f}",
+            file=sys.stderr,
+        )
+    print(f"# wrote {os.path.abspath(args.out)}", file=sys.stderr)
 
 
 if __name__ == "__main__":

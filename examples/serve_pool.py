@@ -42,10 +42,12 @@ def main():
     engine = ServeEngine(
         model, params, max_batch=b, max_len=max_len, eos_id=tok.eos_id, seed=1
     )
-    cache_b = sum(x.nbytes for x in jax.tree.leaves(engine.cache))
+    geom = engine.cache.geom
     print(
         f"{cfg.name}: params {param_bytes(params) / 1e6:.1f}MB, "
-        f"cache {cache_b / 1e6:.2f}MB for {b} slots x {max_len} positions"
+        f"paged cache {engine.cache_bytes / 1e6:.2f}MB for {b} slots x "
+        f"{max_len} positions ({engine.cache.num_pages} pages of "
+        f"{geom.page_size})"
     )
 
     def submit_wave(wave: int):
@@ -84,6 +86,9 @@ def main():
         print(f"wave {w}: {len(cs)} requests, {ntok} tokens, "
               f"mean ttft {ttft * 1e3:.0f}ms")
     print(f"total {dt:.2f}s | {engine.stats.summary()}")
+    print(f"prefill buckets compiled: {engine.runner.prefill_programs} | "
+          f"decode lane buckets: {engine.runner.decode_programs} | "
+          f"mean occupancy {engine.mean_occupancy:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,18 @@
-"""Serving CLI: thin front-end over the continuous-batching engine
-(repro.serve.ServeEngine — fused prefill, per-slot positions, DESIGN.md §6).
+"""Serving CLI: thin front-end over the layered serving stack
+(repro.serve — paged KV, bucketed prefill, live-lane decode; DESIGN.md §7).
+
+Single-engine mode:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --batch 8 \
       --prompt-len 64 --gen 32
 
-Runs the REDUCED config on CPU; the full configs' serve path is exercised
+Cloud-edge consortium mode — one LLM plus two architecturally
+heterogeneous SLMs with distinct tokenizers behind a CloudEdgeRouter
+(prompt-length policy; this is also the CI router smoke):
+
+  PYTHONPATH=src python -m repro.launch.serve --router --gen 8
+
+Runs the REDUCED configs on CPU; the full configs' serve path is exercised
 by the dry-run. Prompts are admitted through the engine's request queue, so
 more prompts than --batch slots simply stream through the pool.
 """
@@ -19,38 +27,39 @@ from repro.configs import get_arch
 from repro.data.synthetic import generate_corpus
 from repro.data.tokenizer import build_tokenizer
 from repro.models.model import build_model
-from repro.serve import ServeEngine
+from repro.serve import (
+    CloudEdgeRouter,
+    EngineSpec,
+    ServeEngine,
+    prompt_length_policy,
+)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--batch", type=int, default=8, help="engine slots")
-    ap.add_argument("--requests", type=int, default=0,
-                    help="number of prompts (default: --batch)")
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
-    corpus = generate_corpus(100, seed=0)
-    texts = [s.text for s in corpus]
-    tok = build_tokenizer("serve", texts, max_piece=10, budget=1024)
-    cfg = dataclasses.replace(get_arch(args.arch).reduced(), vocab_size=tok.vocab_size)
+def _engine(arch: str, tok, seed: int, batch: int, max_len: int) -> EngineSpec:
+    cfg = dataclasses.replace(get_arch(arch).reduced(), vocab_size=tok.vocab_size)
     if cfg.is_encoder_decoder:
         raise SystemExit(
-            f"{args.arch}: encoder-decoder serving is not wired into the "
+            f"{arch}: encoder-decoder serving is not wired into the "
             "engine (needs per-slot encoder context); use a decoder-only arch"
         )
     model = build_model(cfg)
-    params = model.init(jax.random.key(0))
+    params = model.init(jax.random.key(seed))
+    return EngineSpec(
+        arch,
+        ServeEngine(model, params, max_batch=batch, max_len=max_len,
+                    eos_id=tok.eos_id, seed=seed),
+        tok,
+    )
 
+
+def run_single(args) -> None:
+    corpus = generate_corpus(100, seed=0)
+    texts = [s.text for s in corpus]
+    tok = build_tokenizer("serve", texts, max_piece=10, budget=1024)
     n_req = args.requests or args.batch
     max_len = args.prompt_len + args.gen
-    engine = ServeEngine(
-        model, params, max_batch=args.batch, max_len=max_len,
-        eos_id=tok.eos_id, seed=0,
-    )
+    spec = _engine(args.arch, tok, 0, args.batch, max_len)
+    engine = spec.engine
 
     prompts = [f"question : {s.question} answer :" for s in corpus[:n_req]]
     for p in prompts:
@@ -64,6 +73,74 @@ def main() -> None:
         print(f"[{rid}] {prompts[rid]!r} -> {tok.decode(c.tokens)!r} "
               f"({c.finish_reason}, ttft {c.ttft_s * 1e3:.0f}ms)")
     print(engine.stats.summary())
+    print(f"prefill programs (pow2 buckets): {engine.runner.prefill_programs}, "
+          f"decode programs (lane buckets): {engine.runner.decode_programs}, "
+          f"mean occupancy {engine.mean_occupancy:.2f}")
+
+
+def run_router(args) -> None:
+    """Consortium smoke: LLM = qwen2, SLMs = xlstm (recurrent) + gemma
+    (full attention), three distinct tokenizers; drains all completions."""
+    corpus = generate_corpus(100, seed=0)
+    texts = [s.text for s in corpus]
+    max_len = args.prompt_len + args.gen
+    llm = _engine(
+        "qwen2-1.5b", build_tokenizer("cloud", texts, max_piece=12, budget=1024),
+        0, args.batch, max_len,
+    )
+    slms = [
+        _engine(
+            "xlstm-1.3b", build_tokenizer("edge-a", texts, max_piece=4, budget=512),
+            1, args.batch, max_len,
+        ),
+        _engine(
+            "gemma-2b", build_tokenizer("edge-b", texts, max_piece=7, budget=768),
+            2, args.batch, max_len,
+        ),
+    ]
+    router = CloudEdgeRouter(llm, slms, policy=prompt_length_policy(args.threshold))
+
+    n_req = args.requests or 3 * args.batch
+    rids = [
+        router.submit(f"question : {s.question} answer :",
+                      max_new=args.gen, temperature=args.temperature)
+        for s in corpus[:n_req]
+    ]
+    done = {c.rid: c for c in router.run()}
+    assert sorted(done) == sorted(rids), (
+        f"router did not drain: {len(done)}/{len(rids)} completions"
+    )
+    per_tier = {name: 0 for name in router.specs}
+    for _, decision in router.route_log:
+        per_tier[decision.engine] += 1
+    for rid in rids[:4]:
+        c = done[rid]
+        print(f"[{rid} -> {c.engine}] {c.prompt_text!r} -> {c.text!r} "
+              f"({c.finish_reason})")
+    print(f"routed {len(rids)} requests: "
+          + ", ".join(f"{k}={v}" for k, v in per_tier.items()))
+    print(router.stats_summary())
+    print("router smoke OK: all completions drained")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--router", action="store_true",
+                    help="cloud-edge consortium mode (LLM + 2 SLMs)")
+    ap.add_argument("--batch", type=int, default=8, help="engine slots")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of prompts (default: --batch, 3x for router)")
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--threshold", type=int, default=12,
+                    help="router prompt-length threshold (LLM above)")
+    args = ap.parse_args()
+    if args.router:
+        run_router(args)
+    else:
+        run_single(args)
 
 
 if __name__ == "__main__":

@@ -503,12 +503,19 @@ def attention_prefill(
     *,
     window: int = 0,
     use_flash: bool = False,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params]:
     """Fused prompt consumption: one full-sequence attention pass that also
     populates the KV cache (positions 0..S-1; ring-buffered for swa).
 
     Equivalent to replaying ``attention_decode`` S times but with S-fold
     fewer kernel launches and matmul-shaped (not vector-shaped) compute.
+
+    ``length`` (traced scalar) marks the real prompt length when the prompt
+    is right-padded to a compile bucket (serve v2, DESIGN.md §7). Causality
+    already keeps padding out of real positions' outputs; only the sliding-
+    window ring write needs it, so the ring keeps the last ``window`` REAL
+    positions rather than the bucket tail.
     """
     b, s, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x, x)
@@ -526,10 +533,29 @@ def attention_prefill(
     # slots (consecutive positions mod window are distinct, so the scatter
     # indices are unique).
     take = min(s, s_cache)
-    tail = jnp.arange(s - take, s)
-    slots = (tail % window) if window > 0 else tail
-    k_c = cache["k"].at[:, slots].set(k[:, s - take :].astype(cache["k"].dtype))
-    v_c = cache["v"].at[:, slots].set(v[:, s - take :].astype(cache["v"].dtype))
+    if length is None or window == 0:
+        tail = jnp.arange(s - take, s)
+        slots = (tail % window) if window > 0 else tail
+        k_c = cache["k"].at[:, slots].set(k[:, s - take :].astype(cache["k"].dtype))
+        v_c = cache["v"].at[:, slots].set(v[:, s - take :].astype(cache["v"].dtype))
+    else:
+        # bucketed swa: the last `take` REAL positions end at `length`, not
+        # at the bucket end. Negative (pre-prompt) positions are masked by
+        # keeping the old cache value; their ring slots are distinct from
+        # valid ones (take consecutive ints mod window, take <= window), and
+        # land at slots >= length which decode never reads before rewriting.
+        tail = length - take + jnp.arange(take)
+        valid = (tail >= 0)[None, :, None, None]
+        src = jnp.clip(tail, 0, s - 1)
+        slots = tail % window
+        old_k = cache["k"][:, slots]
+        old_v = cache["v"][:, slots]
+        k_c = cache["k"].at[:, slots].set(
+            jnp.where(valid, k[:, src].astype(cache["k"].dtype), old_k)
+        )
+        v_c = cache["v"].at[:, slots].set(
+            jnp.where(valid, v[:, src].astype(cache["v"].dtype), old_v)
+        )
     new_cache = {"k": k_c, "v": v_c}
     kk = repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
     vv = repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)

@@ -8,7 +8,7 @@ d_state) tensor would be O(1e14) elements at Jamba train_4k scale.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -117,16 +117,21 @@ def mamba_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
 
 
 def mamba_prefill(
-    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params]:
     """Fused prompt consumption: chunked selective scan seeded from the cache
     SSM state, returning outputs + the state after the last prompt token.
     Arbitrary lengths are padded to a chunk multiple with dt = 0 (dA = I,
-    dBu = 0) so padding never touches the state."""
+    dBu = 0) so padding never touches the state; ``length`` (traced scalar)
+    applies the same dt = 0 trick to bucketed right-padded prompts and keeps
+    the conv ring at the last real positions (serve v2)."""
     b, s, _ = x.shape
     di = _d_inner(cfg)
     ns = cfg.mamba_d_state
     u, z, dt, Bmat, Cmat, u_pre = _ssm_inputs(cfg, p, x)
+    if length is not None:
+        dt = jnp.where((jnp.arange(s) < length)[None, :, None], dt, 0.0)
     A = -jnp.exp(p["a_log"])
 
     c = min(_CHUNK, s)
@@ -158,9 +163,12 @@ def mamba_prefill(
     y = ys.swapaxes(0, 1).reshape(b, s + pad, di)[:, :s].astype(x.dtype)
     y = y + u[:, :s] * p["d_skip"].astype(x.dtype)
     y = y * jax.nn.silu(z)
-    conv_buf = jnp.concatenate(
-        [cache["conv"], u_pre.astype(cache["conv"].dtype)], axis=1
-    )[:, -cache["conv"].shape[1] :]
+    cw = cache["conv"].shape[1]
+    cat = jnp.concatenate([cache["conv"], u_pre.astype(cache["conv"].dtype)], axis=1)
+    if length is None:
+        conv_buf = cat[:, -cw:]
+    else:
+        conv_buf = jax.lax.dynamic_slice_in_dim(cat, length, cw, axis=1)
     new_cache = {"ssm": st_f, "conv": conv_buf}
     return y @ p["out_proj"].astype(x.dtype), new_cache
 

@@ -74,6 +74,39 @@ class Model(NamedTuple):
         (B,) vector of per-stream positions (continuous batching)."""
         return T.serve_step(self.cfg, params, cache, batch, self.flags)
 
+    # ---- paged serving (serve v2, DESIGN.md §7) ----
+    def page_geometry(self, max_len: int, page_size: int):
+        """Static page layout (pages per request, swa ring pages, whether
+        page need grows with position) for this config."""
+        from repro.models import paged as PG
+
+        return PG.PageGeometry.build(self.cfg, max_len, page_size)
+
+    def paged_cache_specs(self, num_slots: int, num_pages: int, page_size: int):
+        """(page pools, slot-resident state) abstract shapes; ``num_slots``
+        must include the trash slot (``repro.models.paged`` conventions)."""
+        from repro.models import paged as PG
+
+        return PG.paged_cache_specs(self.cfg, num_slots, num_pages, page_size)
+
+    def init_paged_cache(self, num_slots: int, num_pages: int, page_size: int):
+        paged, slots = self.paged_cache_specs(num_slots, num_pages, page_size)
+        zeros = lambda tree: jax.tree.map(
+            lambda sds: jnp.zeros(sds.shape, sds.dtype), tree
+        )
+        return zeros(paged), zeros(slots)
+
+    def serve_step_paged(self, params: Params, paged: Params, slots: Params,
+                         batch: Dict):
+        """Live-lane decode over paged pools; batch {'token': (L,), 'pos':
+        (L,), 'block_tables': (L, P)}. ``slots`` is the gathered per-lane
+        view (``paged.gather_slots``)."""
+        from repro.models import paged as PG
+
+        return PG.serve_step_paged(
+            self.cfg, params, paged, slots, batch, self.flags
+        )
+
     def encode(self, params: Params, audio_embeds: jax.Array) -> jax.Array:
         return T.encode(self.cfg, params, audio_embeds, self.flags)
 

@@ -1,0 +1,512 @@
+"""Paged KV serving path (DESIGN.md §7).
+
+KV memory for the attention families (attn / swa / mla) lives in per-layer
+*page pools* of shape ``(num_pages, page_size, ...)`` instead of per-slot
+contiguous ``(batch, max_len, ...)`` buffers. A request references its
+pages through a per-request *block table* (``(pages_per_seq,)`` int32,
+shared across layers, vLLM-style): logical position ``p`` of a stream
+lives at ``(pool[bt[p // page_size]], p % page_size)``. Sliding-window
+blocks ring-buffer over the first ``ceil(window / page_size)`` table
+entries; recurrent state (mLSTM / sLSTM / Mamba) is O(1) per stream and
+stays *slot-resident* — ``(num_slots, ...)`` leaves indexed by lane.
+
+Conventions shared with ``repro.serve``:
+
+- physical page 0 is the **trash page**: unallocated block-table entries
+  point at it, so bucket-padding splice writes and padded decode lanes
+  scatter garbage there instead of corrupting live pages;
+- slot index ``num_slots`` (one past the real slots) is the **trash
+  slot** for padded decode lanes' recurrent-state writes.
+
+``serve_step_paged`` is the decode program: one token for each of L *live*
+lanes (L is a power-of-two bucket chosen by the scheduler, not the pool
+size — no dead-lane compute). ``splice_prefill`` moves a fused batch-1
+prefill (bucketed, ``length``-masked — see ``transformer.prefill``) from
+its contiguous temp cache into pool pages + slot state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import mla as MLA
+from repro.models import xlstm as XL
+from repro.models.transformer import (
+    DEFAULT_FLAGS,
+    RuntimeFlags,
+    _make_ctx,
+    _rope_for,
+)
+
+Params = Dict
+
+PAGED_MIXERS = ("attn", "swa", "mla")
+SLOT_MIXERS = ("mlstm", "slstm", "mamba")
+
+TRASH_PAGE = 0
+
+
+def _mixers(cfg: ModelConfig) -> List[str]:
+    return [cfg.block_parts(b)[0] for b in cfg.prefix_pattern + cfg.unit_pattern]
+
+
+@dataclasses.dataclass(frozen=True)
+class PageGeometry:
+    """Static page layout for one (config, max_len, page_size) triple."""
+
+    page_size: int
+    pages_per_seq: int  # block-table width; pages_per_seq * page_size >= max_len
+    max_len: int  # padded up to a page multiple
+    swa_pages: int  # ring pages for swa blocks (0 if no swa blocks)
+    has_growing: bool  # any attn/mla block (page need grows with position)
+    uses_pages: bool  # any paged family at all
+
+    @classmethod
+    def build(cls, cfg: ModelConfig, max_len: int, page_size: int) -> "PageGeometry":
+        mixers = set(_mixers(cfg))
+        if "xdec" in mixers:
+            raise NotImplementedError("paged serving of enc-dec configs")
+        padded = -(-max_len // page_size) * page_size
+        swa_pages = -(-cfg.window // page_size) if "swa" in mixers else 0
+        return cls(
+            page_size=page_size,
+            pages_per_seq=padded // page_size,
+            max_len=padded,
+            swa_pages=swa_pages,
+            has_growing=bool(mixers & {"attn", "mla"}),
+            uses_pages=bool(mixers & set(PAGED_MIXERS)),
+        )
+
+    def admission_pages(self, prompt_len: int) -> int:
+        """Pages a request must own before its prompt is spliced in."""
+        n = -(-prompt_len // self.page_size) if self.has_growing else 0
+        return min(max(n, self.swa_pages), self.pages_per_seq)
+
+    def pages_for(self, pos: int) -> int:
+        """Pages a request must own before decode writes position ``pos``."""
+        n = -(-(pos + 1) // self.page_size) if self.has_growing else 0
+        return min(max(n, self.swa_pages), self.pages_per_seq)
+
+
+# ---------------------------------------------------------------------------
+# Specs: paged pools + slot-resident state
+# ---------------------------------------------------------------------------
+
+def block_paged_specs(
+    cfg: ModelConfig, block: str, num_pages: int, page_size: int
+) -> Params:
+    mixer, _ = cfg.block_parts(block)
+    dt = jnp.bfloat16
+    if mixer in ("attn", "swa"):
+        shp = (num_pages, page_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+        return {"k": jax.ShapeDtypeStruct(shp, dt), "v": jax.ShapeDtypeStruct(shp, dt)}
+    if mixer == "mla":
+        return {
+            "c_kv": jax.ShapeDtypeStruct(
+                (num_pages, page_size, cfg.kv_lora_rank), dt
+            ),
+            "k_rope": jax.ShapeDtypeStruct(
+                (num_pages, page_size, cfg.qk_rope_dim), dt
+            ),
+        }
+    return {}
+
+
+def block_slot_specs(cfg: ModelConfig, block: str, num_slots: int) -> Params:
+    mixer, _ = cfg.block_parts(block)
+    if mixer == "mlstm":
+        return XL.mlstm_cache_specs(cfg, num_slots)
+    if mixer == "slstm":
+        return XL.slstm_cache_specs(cfg, num_slots)
+    if mixer == "mamba":
+        return MB.mamba_cache_specs(cfg, num_slots)
+    return {}
+
+
+def paged_cache_specs(
+    cfg: ModelConfig, num_slots: int, num_pages: int, page_size: int
+) -> Tuple[Params, Params]:
+    """(paged pools, slot state) abstract shapes, mirroring the cache tree
+    structure (prefix/units); scanned-unit leaves gain a leading layer dim.
+    ``num_slots`` should already include the trash slot."""
+
+    def per_block(fn):
+        tree: Params = {}
+        if cfg.prefix_pattern:
+            tree["prefix"] = {
+                f"l{i}": fn(blk) for i, blk in enumerate(cfg.prefix_pattern)
+            }
+        unit = {f"b{i}": fn(blk) for i, blk in enumerate(cfg.unit_pattern)}
+        tree["units"] = jax.tree.map(
+            lambda sds: jax.ShapeDtypeStruct(
+                (cfg.unit_repeats,) + sds.shape, sds.dtype
+            ),
+            unit,
+        )
+        return tree
+
+    paged = per_block(lambda blk: block_paged_specs(cfg, blk, num_pages, page_size))
+    slots = per_block(lambda blk: block_slot_specs(cfg, blk, num_slots))
+    return paged, slots
+
+
+# ---------------------------------------------------------------------------
+# Slot-state gather/scatter (live-lane decode)
+# ---------------------------------------------------------------------------
+
+def _map_grouped(tree: Params, fn_prefix, fn_units) -> Params:
+    out: Params = {}
+    if "prefix" in tree:
+        out["prefix"] = jax.tree.map(fn_prefix, tree["prefix"])
+    out["units"] = jax.tree.map(fn_units, tree["units"])
+    return out
+
+
+def gather_slots(slots: Params, lanes: jax.Array) -> Params:
+    """Per-lane view of the slot-resident state: batch axis is 0 for prefix
+    leaves and 1 (after the layer axis) for scanned-unit leaves."""
+    return _map_grouped(
+        slots,
+        lambda x: jnp.take(x, lanes, axis=0),
+        lambda x: jnp.take(x, lanes, axis=1),
+    )
+
+
+def scatter_slots(slots: Params, sub: Params, lanes: jax.Array) -> Params:
+    out: Params = {}
+    if "prefix" in slots:
+        out["prefix"] = jax.tree.map(
+            lambda big, small: big.at[lanes].set(small),
+            slots["prefix"], sub["prefix"],
+        )
+    out["units"] = jax.tree.map(
+        lambda big, small: big.at[:, lanes].set(small),
+        slots["units"], sub["units"],
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged block decode
+# ---------------------------------------------------------------------------
+
+def paged_attention_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (L, 1, d) — live lanes only
+    pool: Params,  # {"k": (N, ps, KV, D), "v": ...}
+    bt: jax.Array,  # (L, P) block tables
+    pos: jax.Array,  # (L,)
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Params]:
+    q, k_new, v_new = L._project_qkv(cfg, p, x, x)
+    if cos is not None:
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+    ps = pool["k"].shape[1]
+    lanes = x.shape[0]
+    rows = jnp.arange(lanes)
+    if window > 0:
+        # ring over the first w_pages table entries, capacity rounded up to
+        # a page multiple; a ring slot's logical position is recoverable
+        # from (slot, pos), so validity masks both "not yet written" and
+        # "older than the window".
+        w_pages = -(-window // ps)
+        w_cap = w_pages * ps
+        slot = pos % w_cap
+        page = bt[rows, slot // ps]
+        off = slot % ps
+        k = pool["k"].at[page, off].set(k_new[:, 0].astype(pool["k"].dtype))
+        v = pool["v"].at[page, off].set(v_new[:, 0].astype(pool["v"].dtype))
+        kk = k[bt[:, :w_pages]].reshape(lanes, w_cap, *k.shape[2:])
+        vv = v[bt[:, :w_pages]].reshape(lanes, w_cap, *v.shape[2:])
+        j = jnp.arange(w_cap)[None, :]
+        p_j = pos[:, None] - ((pos[:, None] - j) % w_cap)
+        valid = (p_j >= 0) & (p_j > pos[:, None] - window)
+    else:
+        page = bt[rows, pos // ps]
+        off = pos % ps
+        k = pool["k"].at[page, off].set(k_new[:, 0].astype(pool["k"].dtype))
+        v = pool["v"].at[page, off].set(v_new[:, 0].astype(pool["v"].dtype))
+        span = bt.shape[1] * ps
+        kk = k[bt].reshape(lanes, span, *k.shape[2:])
+        vv = v[bt].reshape(lanes, span, *v.shape[2:])
+        valid = jnp.arange(span)[None, :] <= pos[:, None]
+    new_pool = {"k": k, "v": v}
+    rep = cfg.num_heads // cfg.num_kv_heads
+    kk = L.repeat_kv(kk.astype(x.dtype), rep)
+    vv = L.repeat_kv(vv.astype(x.dtype), rep)
+    mask = valid[:, None, None, :]  # (L,1,1,Sk)
+    o = L.sdpa(q, kk, vv, mask, softcap=cfg.logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_pool
+
+
+def paged_mla_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (L, 1, d)
+    pool: Params,  # {"c_kv": (N, ps, kvr), "k_rope": (N, ps, rope)}
+    bt: jax.Array,
+    pos: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+) -> Tuple[jax.Array, Params]:
+    """Absorbed-form MLA decode over paged latent pools (same math as
+    ``mla.mla_decode``, gathered through the block table)."""
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_nope, q_rope = MLA._queries(cfg, p, x)
+    c_new, kr_new = MLA._latents(cfg, p, x)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    kr_new = L.apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+
+    ps = pool["c_kv"].shape[1]
+    lanes = x.shape[0]
+    rows = jnp.arange(lanes)
+    page = bt[rows, pos // ps]
+    off = pos % ps
+    c_pool = pool["c_kv"].at[page, off].set(c_new[:, 0].astype(pool["c_kv"].dtype))
+    r_pool = pool["k_rope"].at[page, off].set(
+        kr_new[:, 0].astype(pool["k_rope"].dtype)
+    )
+    new_pool = {"c_kv": c_pool, "k_rope": r_pool}
+    span = bt.shape[1] * ps
+    c_kv = c_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+    k_rope = r_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wuk"].astype(x.dtype))
+    scale = 1.0 / math.sqrt(nope + rope)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_abs, c_kv)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(span)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx, p["wuv"].astype(x.dtype))
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype)), new_pool
+
+
+def block_decode_paged(
+    cfg: ModelConfig,
+    p: Params,
+    block: str,
+    h: jax.Array,
+    pcache: Params,
+    scache: Params,
+    pos: jax.Array,
+    bt: jax.Array,
+    ctx: Dict,
+) -> Tuple[jax.Array, Params, Params]:
+    mixer, mlpk = cfg.block_parts(block)
+    cos, sin = _rope_for(cfg, mixer, ctx)
+    x = L.apply_norm(cfg, p["norm1"], h)
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else 0
+        o, pcache = paged_attention_decode(
+            cfg, p["attn"], x, pcache, bt, pos, cos, sin, window=window
+        )
+        h = h + o
+    elif mixer == "mla":
+        o, pcache = paged_mla_decode(cfg, p["attn"], x, pcache, bt, pos, cos, sin)
+        h = h + o
+    elif mixer == "mlstm":
+        o, scache = XL.mlstm_decode(cfg, p["mixer"], x, scache)
+        h = h + o
+    elif mixer == "slstm":
+        o, scache = XL.slstm_decode(cfg, p["mixer"], x, scache)
+        h = h + o
+    elif mixer == "mamba":
+        o, scache = MB.mamba_decode(cfg, p["mixer"], x, scache)
+        h = h + o
+    else:
+        raise NotImplementedError(f"paged decode for mixer {mixer}")
+    if mlpk in ("mlp", "dense_big"):
+        h = h + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+    elif mlpk == "moe":
+        from repro.models import moe as MOE
+
+        y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h),
+                           dropless=True)
+        h = h + y
+    if "adapter" in p:
+        from repro.core.adapters import apply_adapter
+
+        h = apply_adapter(p["adapter"], h)
+    return h, pcache, scache
+
+
+def serve_step_paged(
+    cfg: ModelConfig,
+    params: Params,
+    paged: Params,
+    slots: Params,
+    batch: Dict,
+    flags: RuntimeFlags = DEFAULT_FLAGS,
+) -> Tuple[jax.Array, Params, Params]:
+    """One decode step over L live lanes: batch {'token': (L,), 'pos': (L,),
+    'block_tables': (L, P)}. ``slots`` must already be the per-lane gathered
+    view (``gather_slots``); pools are global and indexed via the tables."""
+    tokens = batch["token"][:, None]
+    pos = batch["pos"]
+    bt = batch["block_tables"]
+    h = L.embed(cfg, params["embed"], tokens)
+    if cfg.pos_type == "learned":
+        h = h + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(h.dtype)
+    ctx = _make_ctx(cfg, pos[:, None], batch)
+
+    new_paged: Params = {}
+    new_slots: Params = {}
+    if cfg.prefix_pattern:
+        new_paged["prefix"] = {}
+        new_slots["prefix"] = {}
+        for i, blk in enumerate(cfg.prefix_pattern):
+            key = f"l{i}"
+            h, pc, sc = block_decode_paged(
+                cfg, params["prefix"][key], blk, h,
+                paged["prefix"][key], slots["prefix"][key], pos, bt, ctx,
+            )
+            new_paged["prefix"][key] = pc
+            new_slots["prefix"][key] = sc
+
+    def unit_fn(h, xs):
+        pu, pcu, scu = xs
+        new_pcu, new_scu = {}, {}
+        for i, blk in enumerate(cfg.unit_pattern):
+            key = f"b{i}"
+            h, pc, sc = block_decode_paged(
+                cfg, pu[key], blk, h, pcu[key], scu[key], pos, bt, ctx
+            )
+            new_pcu[key] = pc
+            new_scu[key] = sc
+        return h, (new_pcu, new_scu)
+
+    h, (pu_new, su_new) = jax.lax.scan(
+        unit_fn, h, (params["units"], paged["units"], slots["units"])
+    )
+    new_paged["units"] = pu_new
+    new_slots["units"] = su_new
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = L.unembed(cfg, params["embed"], h)[:, 0]
+    return logits, new_paged, new_slots
+
+
+# ---------------------------------------------------------------------------
+# Prefill splice: contiguous batch-1 temp cache -> pages + slot state
+# ---------------------------------------------------------------------------
+
+def _splice_paged_block(
+    mixer: str,
+    window: int,
+    pool: Params,
+    temp: Params,
+    bt_row: jax.Array,  # (P,) int32; unallocated entries point at TRASH_PAGE
+    length: jax.Array,  # traced real prompt length
+    layered: bool,
+) -> Params:
+    """Scatter one block's contiguous prefill cache into its page pool.
+    Bucket positions >= length land on real pages' tail offsets (masked by
+    position at decode) or — for ring/unallocated entries — the trash page."""
+    first = next(iter(pool.values()))
+    ps = first.shape[2] if layered else first.shape[1]
+
+    if mixer in ("attn", "mla") or (mixer == "swa" and window == 0):
+        out = {}
+        for name, big in pool.items():
+            small = temp[name]
+            if layered:
+                r, _, s_b = small.shape[:3]
+                vals = small[:, 0].reshape(r, s_b // ps, ps, *small.shape[3:])
+                out[name] = big.at[:, bt_row[: s_b // ps]].set(
+                    vals.astype(big.dtype)
+                )
+            else:
+                s_b = small.shape[1]
+                vals = small[0].reshape(s_b // ps, ps, *small.shape[2:])
+                out[name] = big.at[bt_row[: s_b // ps]].set(vals.astype(big.dtype))
+        return out
+
+    # swa: re-ring from the temp modulus (window) into the page-multiple
+    # ring capacity. The last min(window, S_b) candidate positions end at
+    # `length`; pre-prompt (negative) candidates scatter to the trash page.
+    w_pages = -(-window // ps)
+    w_cap = w_pages * ps
+    out = {}
+    for name, big in pool.items():
+        small = temp[name]
+        s_cache = small.shape[2] if layered else small.shape[1]
+        t = min(window, s_cache)
+        positions = length - t + jnp.arange(t)
+        valid = positions >= 0
+        src = jnp.clip(positions % window, 0, s_cache - 1)
+        dslot = positions % w_cap
+        page = jnp.where(valid, bt_row[dslot // ps], TRASH_PAGE)
+        off = dslot % ps
+        if layered:
+            vals = small[:, 0, src]  # (R, t, ...)
+            out[name] = big.at[:, page, off].set(vals.astype(big.dtype))
+        else:
+            vals = small[0, src]  # (t, ...)
+            out[name] = big.at[page, off].set(vals.astype(big.dtype))
+    return out
+
+
+def splice_prefill(
+    cfg: ModelConfig,
+    paged: Params,
+    slots: Params,
+    temp: Params,  # filled cache from a batch-1 (possibly bucketed) prefill
+    *,
+    bt_row: jax.Array,
+    slot: jax.Array,
+    length: jax.Array,
+) -> Tuple[Params, Params]:
+    """Install a freshly prefilled request: paged families scatter into pool
+    pages via its block table row; recurrent state lands in its slot."""
+
+    def one_group(group: str, layered: bool) -> None:
+        pattern = cfg.prefix_pattern if group == "prefix" else cfg.unit_pattern
+        prefixkey = "l" if group == "prefix" else "b"
+        for i, blk in enumerate(pattern):
+            key = f"{prefixkey}{i}"
+            mixer, _ = cfg.block_parts(blk)
+            tc = temp[group][key]
+            if mixer in PAGED_MIXERS:
+                window = cfg.window if mixer == "swa" else 0
+                new_paged[group][key] = _splice_paged_block(
+                    mixer, window, paged[group][key], tc, bt_row, length, layered
+                )
+            elif mixer in SLOT_MIXERS:
+                if layered:
+                    new_slots[group][key] = jax.tree.map(
+                        lambda big, small: big.at[:, slot].set(
+                            small[:, 0].astype(big.dtype)
+                        ),
+                        slots[group][key], tc,
+                    )
+                else:
+                    new_slots[group][key] = jax.tree.map(
+                        lambda big, small: big.at[slot].set(
+                            small[0].astype(big.dtype)
+                        ),
+                        slots[group][key], tc,
+                    )
+            else:
+                raise NotImplementedError(f"splice for mixer {mixer}")
+
+    new_paged = {g: dict(v) for g, v in paged.items()}
+    new_slots = {g: dict(v) for g, v in slots.items()}
+    if cfg.prefix_pattern:
+        one_group("prefix", layered=False)
+    one_group("units", layered=True)
+    return new_paged, new_slots

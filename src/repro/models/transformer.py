@@ -214,9 +214,12 @@ def block_prefill(
     cache: Params,
     ctx: Dict,
     flags: RuntimeFlags = DEFAULT_FLAGS,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params]:
     """Full-sequence apply that also populates this block's serve cache —
-    the fused equivalent of replaying ``block_decode`` S times."""
+    the fused equivalent of replaying ``block_decode`` S times. ``length``
+    (traced scalar) marks the real prompt length when the prompt is right-
+    padded to a compile bucket (serve v2)."""
     mixer, mlpk = cfg.block_parts(block)
     cos, sin = _rope_for(cfg, mixer, ctx)
     x = L.apply_norm(cfg, p["norm1"], h)
@@ -224,7 +227,7 @@ def block_prefill(
         window = cfg.window if mixer == "swa" else 0
         o, cache = L.attention_prefill(
             cfg, p["attn"], x, cache, cos, sin, window=window,
-            use_flash=flags.flash_prefill,
+            use_flash=flags.flash_prefill, length=length,
         )
         h = h + o
     elif mixer == "xdec":
@@ -235,16 +238,17 @@ def block_prefill(
         xx = L.apply_norm(cfg, p["norm_x"], h)
         h = h + L.cross_attention(cfg, p["xattn"], xx, ctx["enc"])
     elif mixer == "mla":
+        # causal + decode-time position masking make bucket padding inert
         o, cache = MLA.mla_prefill(cfg, p["attn"], x, cache, cos, sin)
         h = h + o
     elif mixer == "mlstm":
-        o, cache = XL.mlstm_prefill(cfg, p["mixer"], x, cache)
+        o, cache = XL.mlstm_prefill(cfg, p["mixer"], x, cache, length=length)
         h = h + o
     elif mixer == "slstm":
-        o, cache = XL.slstm_prefill(cfg, p["mixer"], x, cache)
+        o, cache = XL.slstm_prefill(cfg, p["mixer"], x, cache, length=length)
         h = h + o
     elif mixer == "mamba":
-        o, cache = MB.mamba_prefill(cfg, p["mixer"], x, cache)
+        o, cache = MB.mamba_prefill(cfg, p["mixer"], x, cache, length=length)
         h = h + o
     else:
         raise ValueError(f"unknown mixer {mixer}")
@@ -517,8 +521,14 @@ def prefill(
     ``cache`` must be FRESH (``init_cache`` zeros): recurrent blocks seed
     their matrix/SSM state from it, but the causal-conv windows and the
     attention positions assume the prompt starts at position 0 — prefill
-    continuation of a partially-filled slot is not supported."""
+    continuation of a partially-filled slot is not supported.
+
+    ``batch['length']`` (optional traced scalar) marks the real prompt
+    length when ``tokens`` is right-padded to a compile-size bucket
+    (serve v2, DESIGN.md §7): gates/rings ignore padded positions, and the
+    returned logits are taken at position length-1 instead of S-1."""
     tokens = batch["tokens"]
+    length = batch.get("length")
     b, s = tokens.shape
     h = L.embed(cfg, params["embed"], tokens)
     if cfg.vision_embeds and "vision_embeds" in batch:
@@ -540,7 +550,7 @@ def prefill(
         for i, blk in enumerate(cfg.prefix_pattern):
             h, c = block_prefill(
                 cfg, params["prefix"][f"l{i}"], blk, h,
-                cache["prefix"][f"l{i}"], ctx, flags,
+                cache["prefix"][f"l{i}"], ctx, flags, length,
             )
             new_cache["prefix"][f"l{i}"] = c
 
@@ -548,7 +558,9 @@ def prefill(
         pu, cu = xs
         new_cu = {}
         for i, blk in enumerate(cfg.unit_pattern):
-            h, c = block_prefill(cfg, pu[f"b{i}"], blk, h, cu[f"b{i}"], ctx, flags)
+            h, c = block_prefill(
+                cfg, pu[f"b{i}"], blk, h, cu[f"b{i}"], ctx, flags, length
+            )
             new_cu[f"b{i}"] = c
         return h, new_cu
 
@@ -556,7 +568,10 @@ def prefill(
     new_cache["units"] = new_units
     h = L.apply_norm(cfg, params["final_norm"], h)
     if not full_logits:
-        h = h[:, -1:]
+        if length is None:
+            h = h[:, -1:]
+        else:
+            h = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
     logits = L.unembed(cfg, params["embed"], h)
     return (logits if full_logits else logits[:, 0]), new_cache
 

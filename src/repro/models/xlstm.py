@@ -14,7 +14,7 @@ normalizer n stay replicated across it.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -277,7 +277,8 @@ def mlstm_forward_scan(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
 
 
 def mlstm_prefill(
-    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params]:
     """Fused prompt consumption: chunkwise-parallel scan seeded from the
     cache state (C, n, m) and returning the state after the last prompt
@@ -289,11 +290,17 @@ def mlstm_prefill(
     m_t = max(lf_t + m_{t-1}, li_t) telescopes to exactly the chunk formula.
     Arbitrary prompt lengths are padded to a chunk multiple with identity
     gates (lf = 0 keep-state, li = -inf no-input) so padding never touches
-    the state.
+    the state. ``length`` (traced scalar) extends the same trick to bucketed
+    prompts (serve v2): positions >= length get identity gates, and the conv
+    ring keeps the last real positions.
     """
     b, s, d = x.shape
     h = cfg.lstm_num_heads
     q, k, v, li, lf, xi, z = _mlstm_qkv_gates(cfg, p, x)
+    if length is not None:
+        real = (jnp.arange(s) < length)[None, :, None]
+        li = jnp.where(real, li, -1e30)
+        lf = jnp.where(real, lf, 0.0)
     c = min(cfg.mlstm_chunk, s)
     pad = (-s) % c
     if pad:
@@ -352,9 +359,12 @@ def mlstm_prefill(
     out = outs.swapaxes(0, 1).reshape(b, s + pad, h * dv)[:, :s]
     out = out + xi * p["skip_scale"].astype(x.dtype)
     out = out * jax.nn.silu(z)
-    conv_buf = jnp.concatenate(
-        [cache["conv"], xi.astype(cache["conv"].dtype)], axis=1
-    )[:, -cache["conv"].shape[1] :]
+    cw = cache["conv"].shape[1]
+    cat = jnp.concatenate([cache["conv"], xi.astype(cache["conv"].dtype)], axis=1)
+    if length is None:
+        conv_buf = cat[:, -cw:]
+    else:  # entries [length-cw, length) of xi == cat slice [length, length+cw)
+        conv_buf = jax.lax.dynamic_slice_in_dim(cat, length, cw, axis=1)
     new_cache = {"C": C_f, "n": n_f, "m": m_f, "conv": conv_buf}
     return out @ p["down"].astype(x.dtype), new_cache
 
@@ -484,18 +494,29 @@ def slstm_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
 
 
 def slstm_prefill(
-    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params]:
     """Fused prompt consumption: one scan over the prompt seeded from the
-    cache state, returning outputs + the state after the last token."""
+    cache state, returning outputs + the state after the last token.
+    ``length`` freezes the state on right-padded bucket positions."""
+    b, s, _ = x.shape
     gx = x @ p["wx"].astype(x.dtype) + p["b"].astype(x.dtype)  # (B,S,4d)
 
-    def step(state, g):
+    def step(state, inp):
+        g, keep = inp
         new = _slstm_cell(cfg, p, g, state)
+        if length is not None:
+            new = tuple(jnp.where(keep, a, old) for a, old in zip(new, state))
         return new, new[0]
 
+    keep_mask = (
+        jnp.arange(s) < length if length is not None else jnp.ones(s, bool)
+    )
     state0 = (cache["h"], cache["c"], cache["n"], cache["m"])
-    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(
+        step, state0, (gx.swapaxes(0, 1), keep_mask)
+    )
     h = hs.swapaxes(0, 1).astype(x.dtype)
     h = h * p["norm"].astype(x.dtype)
     h = jax.nn.gelu(h @ p["up_g"].astype(x.dtype), approximate=True) * (

@@ -1,12 +1,44 @@
-"""Serving subsystem: fused prefill + continuous batching (DESIGN.md §6).
+"""Serving subsystem: layered paged-KV serving + cloud-edge routing.
 
-`ServeEngine` owns one persistent KV/state cache of `max_batch` slots. New
-requests are admitted into free slots via one fused `Model.prefill` call
-(no wave barriers, no cache reinit); all active slots then decode in
-lockstep-batched `serve_step` calls with per-slot positions. Finished
-streams are evicted and their slots refilled from the queue.
+Layers (DESIGN.md §7): ``BlockCacheManager`` owns KV memory as fixed-size
+pages with per-request block tables (recurrent state slot-resident behind
+the same interface); ``Scheduler`` does admission/eviction and pads
+prompts to power-of-two compile buckets; ``ModelRunner`` holds the jitted
+prefill/decode programs and decodes only live lanes; ``ServeEngine`` is
+the thin facade wiring the three (the PR-1 API unchanged); and
+``CloudEdgeRouter`` fronts one LLM engine plus N heterogeneous SLM
+engines — each with its own tokenizer — routing requests by a pluggable
+policy, mirroring the paper's consortium at inference time.
 """
+from repro.serve.cache import BlockCacheManager
 from repro.serve.engine import Completion, Request, ServeEngine
-from repro.serve.sampling import sample_tokens
+from repro.serve.router import (
+    CloudEdgeRouter,
+    EngineSpec,
+    RouteDecision,
+    RouterCompletion,
+    explicit_tier_policy,
+    prompt_length_policy,
+    round_robin_policy,
+)
+from repro.serve.runner import ModelRunner
+from repro.serve.sampling import sample_tokens, sample_tokens_keys
+from repro.serve.scheduler import Scheduler
 
-__all__ = ["Completion", "Request", "ServeEngine", "sample_tokens"]
+__all__ = [
+    "BlockCacheManager",
+    "CloudEdgeRouter",
+    "Completion",
+    "EngineSpec",
+    "ModelRunner",
+    "Request",
+    "RouteDecision",
+    "RouterCompletion",
+    "Scheduler",
+    "ServeEngine",
+    "explicit_tier_policy",
+    "prompt_length_policy",
+    "round_robin_policy",
+    "sample_tokens",
+    "sample_tokens_keys",
+]

@@ -1,0 +1,121 @@
+"""BlockCacheManager: owns serving KV memory as fixed-size pages.
+
+The manager holds the device trees (page pools for attn/swa/mla families,
+slot-resident state for recurrent families — ``repro.models.paged``) plus
+the host-side page accounting: a free-page list and one block table per
+slot. Pages are allocated lazily — a request owns the pages its prompt
+needs at admission (``alloc_prompt``) and grows page by page as decode
+advances (``ensure``); everything is returned on ``release``. Physical
+page 0 is the reserved trash page (never allocated): unallocated block-
+table entries point at it, so bucket-padding writes land there instead of
+in live memory.
+
+The default pool holds exactly ``num_slots * pages_per_seq`` pages — no
+oversubscription, so admission can never deadlock mid-stream. Passing a
+smaller ``num_pages`` oversubscribes memory (requests then queue on page
+availability, and a stream that cannot grow finishes ``cache_full``).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.models.model import Model
+
+
+class BlockCacheManager:
+    def __init__(
+        self,
+        model: Model,
+        *,
+        num_slots: int,
+        max_len: int,
+        page_size: int = 8,
+        num_pages: Optional[int] = None,
+    ):
+        if page_size < 1 or page_size & (page_size - 1):
+            # pow2 prompt buckets must be page multiples for the whole-page
+            # prefill splice; a non-pow2 page_size would fail deep inside
+            # the jitted reshape instead
+            raise ValueError(f"page_size {page_size} must be a power of two")
+        self.geom = model.page_geometry(max_len, page_size)
+        if num_pages is None:
+            num_pages = (
+                num_slots * self.geom.pages_per_seq + 1
+                if self.geom.uses_pages else 1
+            )
+        if num_pages < 2 and self.geom.uses_pages:
+            raise ValueError("need at least one real page beyond the trash page")
+        self.num_slots = num_slots
+        self.num_pages = num_pages
+        # slot num_slots is the trash slot for padded decode lanes
+        self.paged, self.slots = model.init_paged_cache(
+            num_slots + 1, num_pages, page_size
+        )
+        self.block_tables = np.zeros(
+            (num_slots, self.geom.pages_per_seq), np.int32
+        )
+        self._free_pages: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: List[List[int]] = [[] for _ in range(num_slots)]
+
+    # -- page accounting ----------------------------------------------------
+
+    @property
+    def free_page_count(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self._free_pages)
+
+    @property
+    def trash_slot(self) -> int:
+        return self.num_slots
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return len(self._free_pages) >= self.geom.admission_pages(prompt_len)
+
+    def _grow(self, slot: int, target: int) -> bool:
+        owned = self._owned[slot]
+        while len(owned) < target:
+            if not self._free_pages:
+                return False
+            page = self._free_pages.pop()
+            self.block_tables[slot, len(owned)] = page
+            owned.append(page)
+        return True
+
+    def alloc_prompt(self, slot: int, prompt_len: int) -> np.ndarray:
+        """Give ``slot`` its admission pages; returns the block-table row
+        (unallocated entries = trash page 0) for the prefill splice."""
+        if not self._grow(slot, self.geom.admission_pages(prompt_len)):
+            raise RuntimeError("admission without page headroom (can_admit?)")
+        return self.block_tables[slot].copy()
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Own every page needed before decode writes position ``pos``;
+        False means the pool is exhausted (oversubscribed manager)."""
+        return self._grow(slot, self.geom.pages_for(pos))
+
+    def release(self, slot: int) -> None:
+        self._free_pages.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.block_tables[slot] = 0
+
+    def table_rows(self, lanes: List[int]) -> np.ndarray:
+        """(L, P) block tables for a decode step; trash-slot lanes (batch
+        padding) get an all-trash row."""
+        out = np.zeros((len(lanes), self.geom.pages_per_seq), np.int32)
+        for i, sl in enumerate(lanes):
+            if sl < self.num_slots:
+                out[i] = self.block_tables[sl]
+        return out
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def cache_bytes(self) -> int:
+        leaves = jax.tree.leaves(self.paged) + jax.tree.leaves(self.slots)
+        return sum(x.nbytes for x in leaves)

@@ -1,80 +1,45 @@
-"""Continuous-batching serving engine (DESIGN.md §6).
+"""ServeEngine: thin facade over the layered serving stack (DESIGN.md §7).
 
-One persistent cache of ``max_batch`` slots lives for the whole engine —
-requests stream through it:
+PR-1's monolithic engine is now three layers with one owner each:
 
-  submit() -> admission queue
-  step():   1. while a slot is free and the queue is non-empty: consume the
-               request's whole prompt in ONE fused ``Model.prefill`` call
-               (batch 1, exact length) and splice the resulting cache slice
-               into the slot — running streams are never paused or reset;
-            2. one batched ``serve_step`` over all slots with per-slot
-               positions (the (B,) ``pos`` vector), sampling each stream at
-               its own temperature;
-            3. evict streams that hit EOS / max_new / the cache end, freeing
-               their slots for the next admission.
+  ``BlockCacheManager`` (serve/cache.py)  — paged KV memory + block tables
+  ``Scheduler``         (serve/scheduler.py) — admission, buckets, eviction
+  ``ModelRunner``       (serve/runner.py) — jitted prefill/decode programs
 
-Decode compute is spent on every slot (free slots ride along as dead lanes
-— the standard static-batch trade; paged KV is the planned successor), but
-admission never waits for a wave boundary: time-to-first-token is one
-prefill, not the tail of the slowest running stream.
+The facade keeps the PR-1 surface — ``submit() / step() / run()``,
+``Completion``, ``num_active`` / ``num_queued``, ``stats`` — so existing
+callers migrate by doing nothing; new callers can compose the layers
+directly (``CloudEdgeRouter`` fronts several engines, serve/router.py).
 
-The engine serves decoder-only configs. Encoder-decoder (whisper) serving
-needs per-slot encoder context plumbed through ``serve_step``'s ``enc``
-input and is not wired here.
+What changed underneath:
+
+- prompts prefill in power-of-two buckets: O(log max_len) compiled
+  programs instead of one per distinct prompt length;
+- decode gathers only *live* lanes (power-of-two lane buckets): free
+  slots no longer ride along as dead-lane compute;
+- KV lives in fixed-size pages with per-request block tables; recurrent
+  state stays slot-resident behind the same interface;
+- sampling keys derive from (request seed, token index) via fold_in, so
+  a stream's tokens — greedy or sampled — are byte-identical no matter
+  what traffic it shares the pool with;
+- ``len(prompt) + max_new <= max_len`` is validated at ``submit()``.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.serve.sampling import sample_tokens
+from repro.serve.cache import BlockCacheManager
+from repro.serve.runner import ModelRunner, RunnerStats
+from repro.serve.scheduler import Completion, Request, Scheduler
 
 Params = Dict
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new: int
-    temperature: float
-    submit_time: float
-
-
-@dataclasses.dataclass
-class Completion:
-    rid: int
-    prompt: List[int]
-    tokens: List[int]
-    finish_reason: str  # eos | length | cache_full
-    ttft_s: float  # submit -> first token (includes queueing)
-    latency_s: float  # submit -> finish
-
-
-@dataclasses.dataclass
-class EngineStats:
-    prefill_tokens: int = 0
-    prefill_s: float = 0.0
-    decode_tokens: int = 0  # sampled tokens (active streams only)
-    decode_steps: int = 0
-    decode_s: float = 0.0
-
-    def summary(self) -> str:
-        pf = self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
-        dc = self.decode_tokens / self.decode_s if self.decode_s else 0.0
-        return (
-            f"prefill {self.prefill_tokens} tok in {self.prefill_s:.2f}s "
-            f"({pf:.1f} tok/s) | decode {self.decode_tokens} tok in "
-            f"{self.decode_s:.2f}s ({dc:.1f} tok/s, {self.decode_steps} steps)"
-        )
+__all__ = ["Completion", "Request", "ServeEngine", "RunnerStats"]
 
 
 class ServeEngine:
@@ -87,48 +52,27 @@ class ServeEngine:
         max_len: int,
         eos_id: Optional[int] = None,
         seed: int = 0,
+        page_size: int = 8,
+        num_pages: Optional[int] = None,
+        gather_live_lanes: bool = True,
     ):
-        cfg = model.cfg
-        if cfg.is_encoder_decoder:
+        if model.cfg.is_encoder_decoder:
             raise ValueError("engine serves decoder-only configs")
         self.model = model
-        self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.eos_id = eos_id
-        self.cache = model.init_cache(max_batch, max_len)
-        self.key = jax.random.key(seed)
-        # per-leaf index of the batch axis: scanned-unit cache leaves are
-        # (layers, batch, ...) while prefix leaves are (batch, ...) — the
-        # slot splice must write along "batch", not axis 0
-        axes_leaves = jax.tree.leaves(
-            model.cache_axes(),
-            is_leaf=lambda x: isinstance(x, tuple)
-            and all(isinstance(e, (str, type(None))) for e in x),
+        self.cache = BlockCacheManager(
+            model, num_slots=max_batch, max_len=max_len,
+            page_size=page_size, num_pages=num_pages,
         )
-        self._cache_bdims = [ax.index("batch") for ax in axes_leaves]
-
-        # host-side slot state
-        self.free: List[int] = list(range(max_batch))[::-1]  # pop() -> slot 0 first
-        self.queue: Deque[Request] = deque()
-        self.pos = np.zeros(max_batch, np.int32)  # tokens already in cache
-        self.active = np.zeros(max_batch, bool)
-        self.cur = np.zeros(max_batch, np.int32)  # last sampled, not yet fed
-        self.temps = np.zeros(max_batch, np.float32)
-        self.slot_req: List[Optional[Request]] = [None] * max_batch
-        self.slot_gen: List[List[int]] = [[] for _ in range(max_batch)]
-        self.slot_first_tok_t = np.zeros(max_batch, np.float64)
-        self.stats = EngineStats()
-        self._next_rid = 0
-        self._prefill_jit: Dict[int, object] = {}  # compiled per prompt length
-
-        def decode_fn(params, cache, token, pos, temps, key):
-            logits, cache = model.serve_step(
-                params, cache, {"token": token, "pos": pos}
-            )
-            return sample_tokens(logits, key, temps), cache
-
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self.scheduler = Scheduler(
+            num_slots=max_batch, max_len=max_len, eos_id=eos_id,
+            bucket_cap=self.cache.geom.max_len,
+            min_bucket=max(8, page_size),
+            gather_live_lanes=gather_live_lanes,
+        )
+        self.runner = ModelRunner(model, params)
+        self.base_key = jax.random.key(seed)
 
     # -- admission ----------------------------------------------------------
 
@@ -138,134 +82,86 @@ class ServeEngine:
         *,
         max_new: int = 32,
         temperature: float = 0.0,
+        seed: Optional[int] = None,
     ) -> int:
-        if not prompt:
-            raise ValueError("empty prompt")
-        if len(prompt) >= self.max_len:
+        """Queue a request. ``seed`` pins the sampling stream (defaults to
+        the request id), making sampled generations reproducible across
+        engines. Raises if ``len(prompt) + max_new > max_len``, or if the
+        prompt could never be admitted on this engine's page pool (an
+        oversubscribed ``num_pages``) — otherwise it would queue forever."""
+        need = self.cache.geom.admission_pages(len(prompt))
+        if need > self.cache.num_pages - 1:
             raise ValueError(
-                f"prompt len {len(prompt)} >= max_len {self.max_len}"
+                f"prompt needs {need} pages but the pool only has "
+                f"{self.cache.num_pages - 1}; it could never be admitted"
             )
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(
-            Request(rid, list(prompt), max_new, temperature, time.time())
+        return self.scheduler.submit(
+            prompt, max_new=max_new, temperature=temperature, seed=seed
         )
-        return rid
 
-    def _prefill_for(self, s: int):
-        """Fused prefill (batch 1, exact length s) + splice into the pool
-        cache at `slot` + first-token sample, one compiled program per s."""
-        if s in self._prefill_jit:
-            return self._prefill_jit[s]
-        model = self.model
-
-        def fn(params, cache, tokens, slot, temp, key):
-            fresh = jax.tree.map(
-                lambda sds: jnp.zeros(sds.shape, sds.dtype),
-                model.cache_specs(1, self.max_len),
+    def _admit(self) -> List[Completion]:
+        done: List[Completion] = []
+        while True:
+            adm = self.scheduler.pop_admission(
+                lambda req: self.cache.can_admit(len(req.prompt))
             )
-            logits, filled = model.prefill(params, fresh, {"tokens": tokens})
-
-            big_leaves, treedef = jax.tree.flatten(cache)
-            small_leaves = jax.tree.leaves(filled)
-            spliced = []
-            for big, small, bdim in zip(
-                big_leaves, small_leaves, self._cache_bdims
-            ):
-                start = [0] * big.ndim
-                start[bdim] = slot
-                spliced.append(
-                    jax.lax.dynamic_update_slice(big, small, tuple(start))
-                )
-            cache = jax.tree.unflatten(treedef, spliced)
-            tok = sample_tokens(logits, key, jnp.full((1,), temp))[0]
-            return tok, cache
-
-        self._prefill_jit[s] = jax.jit(fn, donate_argnums=(1,))
-        return self._prefill_jit[s]
-
-    def _admit_one(self) -> Optional[Completion]:
-        req = self.queue.popleft()
-        slot = self.free.pop()
-        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
-        self.key, sub = jax.random.split(self.key)
-        t0 = time.time()
-        tok, self.cache = self._prefill_for(len(req.prompt))(
-            self.params, self.cache, toks, jnp.asarray(slot, jnp.int32),
-            jnp.asarray(req.temperature, jnp.float32), sub,
-        )
-        tok = int(tok)
-        now = time.time()
-        self.stats.prefill_s += now - t0
-        self.stats.prefill_tokens += len(req.prompt)
-        self.pos[slot] = len(req.prompt)
-        self.active[slot] = True
-        self.cur[slot] = tok
-        self.temps[slot] = req.temperature
-        self.slot_req[slot] = req
-        self.slot_gen[slot] = [tok]
-        self.slot_first_tok_t[slot] = now
-        return self._maybe_finish(slot)
+            if adm is None:
+                return done
+            req, slot = adm
+            bt_row = self.cache.alloc_prompt(slot, len(req.prompt))
+            tok, self.cache.paged, self.cache.slots = self.runner.prefill(
+                self.cache.paged, self.cache.slots, req.prompt,
+                bucket=self.scheduler.bucket_for(len(req.prompt)),
+                slot=slot, bt_row=bt_row, temperature=req.temperature,
+                seed=req.seed, base_key=self.base_key,
+            )
+            fin = self.scheduler.on_admitted(req, slot, tok, time.time())
+            if fin is not None:
+                done.append(fin)
+                self.cache.release(slot)
 
     # -- stepping -----------------------------------------------------------
 
-    def _maybe_finish(self, slot: int) -> Optional[Completion]:
-        req = self.slot_req[slot]
-        gen = self.slot_gen[slot]
-        reason = None
-        if self.eos_id is not None and gen and gen[-1] == self.eos_id:
-            reason = "eos"
-        elif len(gen) >= req.max_new:
-            reason = "length"
-        elif self.pos[slot] >= self.max_len:
-            reason = "cache_full"
-        if reason is None:
-            return None
-        self.active[slot] = False
-        self.slot_req[slot] = None
-        self.free.append(slot)
-        now = time.time()
-        return Completion(
-            rid=req.rid,
-            prompt=req.prompt,
-            tokens=list(gen),
-            finish_reason=reason,
-            ttft_s=self.slot_first_tok_t[slot] - req.submit_time,
-            latency_s=now - req.submit_time,
-        )
-
     def step(self) -> List[Completion]:
-        """Admit whatever fits, then one batched decode step. Returns the
+        """Admit whatever fits, then one live-lane decode step. Returns the
         requests that finished during this step."""
-        done: List[Completion] = []
-        while self.free and self.queue:
-            fin = self._admit_one()
-            if fin is not None:
-                done.append(fin)
-        if not self.active.any():
+        done = self._admit()
+        live = self.scheduler.live_slots()
+        for sl in list(live):
+            if not self.cache.ensure(sl, int(self.scheduler.pos[sl])):
+                done.append(
+                    self.scheduler.force_finish(sl, "cache_full", time.time())
+                )
+                self.cache.release(sl)
+                live.remove(sl)
+        if not live:
             return done
 
-        self.key, sub = jax.random.split(self.key)
-        t0 = time.time()
-        tok, self.cache = self._decode(
-            self.params,
-            self.cache,
-            jnp.asarray(self.cur),
-            jnp.asarray(self.pos),
-            jnp.asarray(self.temps),
-            sub,
+        sched = self.scheduler
+        bucket = sched.decode_bucket(len(live))
+        lanes = live + [self.cache.trash_slot] * (bucket - len(live))
+        lanes_np = np.asarray(lanes, np.int32)
+        pad = np.zeros(bucket - len(live), np.int32)
+        toks, self.cache.paged, self.cache.slots = self.runner.decode(
+            self.cache.paged, self.cache.slots,
+            token=np.concatenate([sched.cur[live], pad]),
+            pos=np.concatenate([sched.pos[live], pad]),
+            block_tables=self.cache.table_rows(lanes),
+            lanes=lanes_np,
+            temps=np.concatenate([sched.temps[live], pad.astype(np.float32)]),
+            seeds=np.concatenate([sched.seeds[live], pad]),
+            ngen=np.concatenate(
+                [np.asarray([sched.ngen(s) for s in live], np.int32), pad]
+            ),
+            base_key=self.base_key,
+            n_live=len(live),
         )
-        tok = np.asarray(tok)
-        self.stats.decode_s += time.time() - t0
-        self.stats.decode_steps += 1
-        for slot in np.nonzero(self.active)[0]:
-            self.pos[slot] += 1
-            self.cur[slot] = tok[slot]
-            self.slot_gen[slot].append(int(tok[slot]))
-            self.stats.decode_tokens += 1
-            fin = self._maybe_finish(slot)
+        now = time.time()
+        for i, sl in enumerate(live):
+            fin = sched.on_token(sl, int(toks[i]), now)
             if fin is not None:
                 done.append(fin)
+                self.cache.release(sl)
         return done
 
     def run(self, max_steps: Optional[int] = None) -> List[Completion]:
@@ -273,7 +169,7 @@ class ServeEngine:
         finish order."""
         out: List[Completion] = []
         steps = 0
-        while self.queue or self.active.any():
+        while self.scheduler.queue or self.scheduler.active.any():
             out.extend(self.step())
             steps += 1
             if max_steps is not None and steps >= max_steps:
@@ -283,9 +179,29 @@ class ServeEngine:
     # -- introspection ------------------------------------------------------
 
     @property
+    def stats(self) -> RunnerStats:
+        return self.runner.stats
+
+    @property
     def num_active(self) -> int:
-        return int(self.active.sum())
+        return self.scheduler.num_active
 
     @property
     def num_queued(self) -> int:
-        return len(self.queue)
+        return self.scheduler.num_queued
+
+    @property
+    def free_slots(self) -> List[int]:
+        return sorted(self.scheduler.free)
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.cache.cache_bytes
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean live-lane fraction of the pool across decode steps."""
+        st = self.runner.stats
+        if not st.decode_steps:
+            return 0.0
+        return st.decode_tokens / (st.decode_steps * self.max_batch)

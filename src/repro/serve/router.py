@@ -1,0 +1,247 @@
+"""CloudEdgeRouter: one LLM + N heterogeneous SLM engines, one front door.
+
+Co-PLMs trains a consortium — a server LLM plus on-device SLMs with their
+own tokenizers — and this router mirrors that consortium at inference
+time (the ROADMAP's "cloud-edge LLM/SLM request routing"): each tier is a
+full ``ServeEngine`` wrapped with its tokenizer, and every request is
+assigned to a tier by a pluggable policy:
+
+- ``prompt_length_policy(threshold)`` — short prompts go to the edge
+  (round-robin over SLMs), long ones to the cloud LLM; length is measured
+  in the LLM tokenizer, the consortium's canonical vocabulary;
+- ``explicit_tier_policy()`` — the request names its engine (``tier=``);
+- ``round_robin_policy()`` — cycle the SLMs (optionally the LLM too).
+
+Requests arrive as *text* (encoded with the target's own tokenizer) or as
+*token ids in a named vocabulary*: ids submitted in one tier's vocab are
+moved to the target's through the ``core.align.TokenAligner`` vocab maps
+— the same minimum-edit-distance artifact SAML uses to move top-K ids
+across vocabularies during co-tuning.
+
+Per-request sampling seeds default to the router-wide request id, so a
+generation is byte-identical whether the request rides the router or is
+submitted directly to the target engine (asserted in tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.align import TokenAligner
+from repro.data.tokenizer import ToyTokenizer
+from repro.serve.engine import ServeEngine
+
+
+@dataclasses.dataclass
+class EngineSpec:
+    """One consortium tier: a serving engine plus its tokenizer."""
+
+    name: str
+    engine: ServeEngine
+    tokenizer: ToyTokenizer
+
+
+@dataclasses.dataclass
+class RouteDecision:
+    engine: str
+    reason: str
+
+
+@dataclasses.dataclass
+class RouteRequest:
+    """What a policy sees: the raw request plus its canonical-vocab length."""
+
+    text: Optional[str]
+    tokens: Optional[List[int]]
+    tier: Optional[str]
+    llm_len: int  # prompt length in the LLM (canonical) tokenizer
+
+
+Policy = Callable[[RouteRequest, "CloudEdgeRouter"], RouteDecision]
+
+
+def prompt_length_policy(threshold: int = 32) -> Policy:
+    """Short prompts to the edge SLMs (round-robin), long ones to the LLM."""
+    state = {"rr": 0}
+
+    def policy(req: RouteRequest, router: "CloudEdgeRouter") -> RouteDecision:
+        if req.llm_len > threshold:
+            return RouteDecision(router.llm.name, f"len {req.llm_len} > {threshold}")
+        name = router.slms[state["rr"] % len(router.slms)].name
+        state["rr"] += 1
+        return RouteDecision(name, f"len {req.llm_len} <= {threshold}")
+
+    return policy
+
+
+def explicit_tier_policy(default: Optional[str] = None) -> Policy:
+    """The request names its tier; unrouted requests fall back to
+    ``default`` (the LLM when None)."""
+
+    def policy(req: RouteRequest, router: "CloudEdgeRouter") -> RouteDecision:
+        if req.tier is not None:
+            if req.tier not in router.specs:
+                raise KeyError(f"unknown tier {req.tier!r}")
+            return RouteDecision(req.tier, "explicit")
+        return RouteDecision(default or router.llm.name, "default tier")
+
+    return policy
+
+
+def round_robin_policy(include_llm: bool = False) -> Policy:
+    state = {"rr": 0}
+
+    def policy(req: RouteRequest, router: "CloudEdgeRouter") -> RouteDecision:
+        pool = list(router.slms) + ([router.llm] if include_llm else [])
+        name = pool[state["rr"] % len(pool)].name
+        state["rr"] += 1
+        return RouteDecision(name, "round-robin")
+
+    return policy
+
+
+@dataclasses.dataclass
+class RouterCompletion:
+    rid: int  # router-wide request id
+    engine: str  # tier that served it
+    prompt_text: Optional[str]
+    text: str  # decoded with the serving tier's tokenizer
+    tokens: List[int]  # ids in the serving tier's vocabulary
+    finish_reason: str
+    ttft_s: float
+    latency_s: float
+    decision: RouteDecision
+
+
+class CloudEdgeRouter:
+    def __init__(
+        self,
+        llm: EngineSpec,
+        slms: Sequence[EngineSpec],
+        policy: Optional[Policy] = None,
+    ):
+        if not slms:
+            raise ValueError("a consortium needs at least one SLM tier")
+        names = [llm.name] + [s.name for s in slms]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+        self.llm = llm
+        self.slms = list(slms)
+        self.specs: Dict[str, EngineSpec] = {s.name: s for s in [llm] + self.slms}
+        self.policy = policy or prompt_length_policy()
+        self._aligners: Dict[str, TokenAligner] = {}  # slm name -> aligner
+        self._pending: Dict[Tuple[str, int], Tuple[int, Optional[str], RouteDecision]] = {}
+        self.route_log: List[Tuple[int, RouteDecision]] = []
+        self._next_rid = 0
+
+    # -- vocab bridging -----------------------------------------------------
+
+    def aligner(self, slm_name: str) -> TokenAligner:
+        """TokenAligner between the LLM tokenizer (a) and one SLM's (b);
+        built once per pair and cached."""
+        if slm_name not in self._aligners:
+            self._aligners[slm_name] = TokenAligner(
+                self.llm.tokenizer, self.specs[slm_name].tokenizer
+            )
+        return self._aligners[slm_name]
+
+    def map_tokens(self, tokens: Sequence[int], src: str, dst: str) -> List[int]:
+        """Move token ids between tier vocabularies through the edit-
+        distance vocab maps. One leg must be the LLM (the canonical hub);
+        SLM-to-SLM goes through it."""
+        if src == dst:
+            return list(tokens)
+        if src == self.llm.name:
+            return [int(self.aligner(dst).vocab_a2b[t]) for t in tokens]
+        if dst == self.llm.name:
+            return [int(self.aligner(src).vocab_b2a[t]) for t in tokens]
+        return self.map_tokens(
+            self.map_tokens(tokens, src, self.llm.name), self.llm.name, dst
+        )
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(
+        self,
+        text: Optional[str] = None,
+        *,
+        tokens: Optional[Sequence[int]] = None,
+        vocab: Optional[str] = None,
+        max_new: int = 32,
+        temperature: float = 0.0,
+        seed: Optional[int] = None,
+        tier: Optional[str] = None,
+    ) -> int:
+        """Route one request and queue it on its tier's engine.
+
+        Either ``text`` (encoded with the serving tier's own tokenizer) or
+        ``tokens`` + ``vocab`` (ids in the named tier's vocabulary, mapped
+        to the target's through the aligner). ``seed`` pins the sampling
+        stream; default is the router-wide rid, so co-scheduled traffic
+        never changes a request's generation."""
+        if (text is None) == (tokens is None):
+            raise ValueError("exactly one of text / tokens")
+        llm_len = (
+            len(self.llm.tokenizer.encode(text)) if text is not None
+            else len(tokens)
+        )
+        req = RouteRequest(text, list(tokens) if tokens else None, tier, llm_len)
+        decision = self.policy(req, self)
+        spec = self.specs[decision.engine]
+        if text is not None:
+            ids = spec.tokenizer.encode(text, bos=True)
+        else:
+            ids = self.map_tokens(tokens, vocab or self.llm.name, decision.engine)
+        rid = self._next_rid
+        self._next_rid += 1
+        erid = spec.engine.submit(
+            ids, max_new=max_new, temperature=temperature,
+            seed=seed if seed is not None else rid,
+        )
+        self._pending[(spec.name, erid)] = (rid, text, decision)
+        self.route_log.append((rid, decision))
+        return rid
+
+    # -- stepping -----------------------------------------------------------
+
+    def step(self) -> List[RouterCompletion]:
+        """One step of every tier with work; returns finished requests."""
+        out: List[RouterCompletion] = []
+        for spec in self.specs.values():
+            if not (spec.engine.num_queued or spec.engine.num_active):
+                continue
+            for c in spec.engine.step():
+                rid, text, decision = self._pending.pop((spec.name, c.rid))
+                out.append(RouterCompletion(
+                    rid=rid, engine=spec.name, prompt_text=text,
+                    text=spec.tokenizer.decode(c.tokens), tokens=c.tokens,
+                    finish_reason=c.finish_reason, ttft_s=c.ttft_s,
+                    latency_s=c.latency_s, decision=decision,
+                ))
+        return out
+
+    def run(self, max_steps: Optional[int] = None) -> List[RouterCompletion]:
+        out: List[RouterCompletion] = []
+        steps = 0
+        while self.num_queued or self.num_active:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(s.engine.num_active for s in self.specs.values())
+
+    @property
+    def num_queued(self) -> int:
+        return sum(s.engine.num_queued for s in self.specs.values())
+
+    def stats_summary(self) -> str:
+        return " | ".join(
+            f"{name}: {spec.engine.stats.summary()}"
+            for name, spec in self.specs.items()
+        )

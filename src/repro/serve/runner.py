@@ -1,0 +1,181 @@
+"""ModelRunner: the compiled programs of the serving engine.
+
+Two program families, both bucketed so the compile count is logarithmic,
+not linear (DESIGN.md §7):
+
+- **prefill**, one program per power-of-two prompt bucket: a fused batch-1
+  ``Model.prefill`` over the right-padded prompt (``length``-masked so
+  padding never touches ring buffers or recurrent state), spliced into the
+  page pools / slot state (``paged.splice_prefill``), and the first token
+  sampled — all in one jitted call with donated cache trees.
+- **decode**, one program per power-of-two *live-lane* bucket: gather the
+  live lanes' recurrent state, run ``serve_step_paged`` (page pools are
+  global — only block tables are per-lane), scatter state back, and sample
+  with per-stream fold_in keys. Free slots cost nothing: compute scales
+  with live lanes, not pool size.
+
+The runner holds no request state; the scheduler decides *what* runs and
+the cache manager owns *where* it lives.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import paged as PG
+from repro.models.model import Model
+from repro.serve.sampling import sample_tokens_keys
+
+Params = Dict
+
+
+class RunnerStats:
+    def __init__(self):
+        self.prefill_tokens = 0  # real prompt tokens (padding excluded)
+        self.prefill_s = 0.0
+        self.decode_tokens = 0  # sampled tokens (live lanes only)
+        self.decode_steps = 0
+        self.decode_s = 0.0
+
+    def summary(self) -> str:
+        pf = self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+        dc = self.decode_tokens / self.decode_s if self.decode_s else 0.0
+        return (
+            f"prefill {self.prefill_tokens} tok in {self.prefill_s:.2f}s "
+            f"({pf:.1f} tok/s) | decode {self.decode_tokens} tok in "
+            f"{self.decode_s:.2f}s ({dc:.1f} tok/s, {self.decode_steps} steps)"
+        )
+
+
+class ModelRunner:
+    def __init__(self, model: Model, params: Params):
+        self.model = model
+        self.params = params
+        self.stats = RunnerStats()
+        self._prefill_jit: Dict[int, object] = {}  # prompt bucket -> program
+        self._decode_jit: Dict[int, object] = {}  # lane bucket -> program
+
+    # -- compiled-program inventory (asserted in tests) ---------------------
+
+    @property
+    def prefill_programs(self) -> List[int]:
+        return sorted(self._prefill_jit)
+
+    @property
+    def decode_programs(self) -> List[int]:
+        return sorted(self._decode_jit)
+
+    # -- prefill ------------------------------------------------------------
+
+    def _prefill_for(self, bucket: int):
+        if bucket in self._prefill_jit:
+            return self._prefill_jit[bucket]
+        model = self.model
+
+        def fn(params, paged, slots, tokens, length, slot, bt_row, temp,
+               seed, base_key):
+            temp_cache = jax.tree.map(
+                lambda sds: jnp.zeros(sds.shape, sds.dtype),
+                model.cache_specs(1, bucket),
+            )
+            logits, filled = model.prefill(
+                params, temp_cache, {"tokens": tokens, "length": length}
+            )
+            paged, slots = PG.splice_prefill(
+                model.cfg, paged, slots, filled,
+                bt_row=bt_row, slot=slot, length=length,
+            )
+            key = jax.random.fold_in(jax.random.fold_in(base_key, seed), 0)
+            tok = sample_tokens_keys(logits, key[None], temp[None])[0]
+            return tok, paged, slots
+
+        self._prefill_jit[bucket] = jax.jit(fn, donate_argnums=(1, 2))
+        return self._prefill_jit[bucket]
+
+    def prefill(
+        self,
+        paged: Params,
+        slots: Params,
+        prompt: List[int],
+        *,
+        bucket: int,
+        slot: int,
+        bt_row: np.ndarray,
+        temperature: float,
+        seed: int,
+        base_key: jax.Array,
+    ) -> Tuple[int, Params, Params]:
+        s = len(prompt)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :s] = prompt
+        t0 = time.time()
+        tok, paged, slots = self._prefill_for(bucket)(
+            self.params, paged, slots,
+            jnp.asarray(padded), jnp.asarray(s, jnp.int32),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(bt_row),
+            jnp.asarray(temperature, jnp.float32),
+            jnp.asarray(seed, jnp.int32), base_key,
+        )
+        tok = int(tok)
+        self.stats.prefill_s += time.time() - t0
+        self.stats.prefill_tokens += s
+        return tok, paged, slots
+
+    # -- decode -------------------------------------------------------------
+
+    def _decode_for(self, lanes: int):
+        if lanes in self._decode_jit:
+            return self._decode_jit[lanes]
+        model = self.model
+
+        def fn(params, paged, slots, token, pos, bt, lane_idx, temps, seeds,
+               ngen, base_key):
+            sub = PG.gather_slots(slots, lane_idx)
+            logits, paged, new_sub = model.serve_step_paged(
+                params, paged, sub,
+                {"token": token, "pos": pos, "block_tables": bt},
+            )
+            slots = PG.scatter_slots(slots, new_sub, lane_idx)
+            keys = jax.vmap(
+                lambda s_, n_: jax.random.fold_in(
+                    jax.random.fold_in(base_key, s_), n_
+                )
+            )(seeds, ngen)
+            toks = sample_tokens_keys(logits, keys, temps)
+            return toks, paged, slots
+
+        self._decode_jit[lanes] = jax.jit(fn, donate_argnums=(1, 2))
+        return self._decode_jit[lanes]
+
+    def decode(
+        self,
+        paged: Params,
+        slots: Params,
+        *,
+        token: np.ndarray,  # (L,)
+        pos: np.ndarray,  # (L,)
+        block_tables: np.ndarray,  # (L, P)
+        lanes: np.ndarray,  # (L,) slot index per lane (trash slot = padding)
+        temps: np.ndarray,
+        seeds: np.ndarray,
+        ngen: np.ndarray,
+        base_key: jax.Array,
+        n_live: int,
+    ) -> Tuple[np.ndarray, Params, Params]:
+        t0 = time.time()
+        toks, paged, slots = self._decode_for(len(lanes))(
+            self.params, paged, slots,
+            jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
+            jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
+            jnp.asarray(temps, jnp.float32), jnp.asarray(seeds, jnp.int32),
+            jnp.asarray(ngen, jnp.int32), base_key,
+        )
+        toks = np.asarray(toks)
+        self.stats.decode_s += time.time() - t0
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += n_live
+        return toks, paged, slots

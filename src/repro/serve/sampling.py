@@ -10,14 +10,33 @@ import jax
 import jax.numpy as jnp
 
 
+def _gumbel_select(lf: jax.Array, g: jax.Array, temps: jax.Array) -> jax.Array:
+    """Greedy where T <= 0, argmax of logits/T + Gumbel noise elsewhere."""
+    greedy = jnp.argmax(lf, axis=-1)
+    scaled = lf / jnp.maximum(temps, 1e-6)[:, None] + g
+    sampled = jnp.argmax(scaled, axis=-1)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+
 def sample_tokens(
     logits: jax.Array,  # (B, V)
     key: jax.Array,
     temps: jax.Array,  # (B,) per-stream temperature; <= 0 means greedy
 ) -> jax.Array:
     lf = logits.astype(jnp.float32)
-    greedy = jnp.argmax(lf, axis=-1)
-    g = jax.random.gumbel(key, lf.shape, jnp.float32)
-    scaled = lf / jnp.maximum(temps, 1e-6)[:, None] + g
-    sampled = jnp.argmax(scaled, axis=-1)
-    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+    return _gumbel_select(lf, jax.random.gumbel(key, lf.shape, jnp.float32), temps)
+
+
+def sample_tokens_keys(
+    logits: jax.Array,  # (B, V)
+    keys: jax.Array,  # (B,) typed PRNG keys, one per stream
+    temps: jax.Array,  # (B,) per-stream temperature; <= 0 means greedy
+) -> jax.Array:
+    """Per-stream-keyed sampling (serve v2): each stream's Gumbel noise comes
+    from its own key (derived by ``fold_in`` from the request seed and the
+    token index), so a stream's samples are byte-identical regardless of
+    what else rides in the batch — the sampling-side half of the
+    traffic-independence invariant (DESIGN.md §7)."""
+    lf = logits.astype(jnp.float32)
+    g = jax.vmap(lambda k: jax.random.gumbel(k, lf.shape[-1:], jnp.float32))(keys)
+    return _gumbel_select(lf, g, temps)

@@ -1,0 +1,209 @@
+"""Scheduler: admission, eviction, and compile-size bucketing.
+
+Host-side request lifecycle for the serving engine (DESIGN.md §7):
+
+- ``submit`` validates up front — ``len(prompt) + max_new <= max_len`` —
+  so an oversized request fails loudly at the API boundary instead of
+  silently finishing ``cache_full`` mid-stream;
+- prompts are padded to power-of-two buckets (floored at ``min_bucket``,
+  capped at the page-padded ``max_len``), so the runner compiles
+  O(log max_len) prefill programs instead of one per distinct length;
+- decode runs over the *live* lanes only, rounded up to a power-of-two
+  lane bucket (O(log num_slots) decode programs). ``gather_live_lanes=
+  False`` restores the PR-1 dead-lane behavior (every slot decodes every
+  step) — kept as the benchmark baseline.
+
+The scheduler owns all per-slot stream state (position, last token,
+temperature, per-request sampling seed) and builds Completions; device
+memory lives in ``BlockCacheManager``, compiled programs in
+``ModelRunner``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    temperature: float
+    submit_time: float
+    seed: int = 0  # sampling stream id; defaults to rid
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt: List[int]
+    tokens: List[int]
+    finish_reason: str  # eos | length | cache_full
+    ttft_s: float  # submit -> first token (includes queueing)
+    latency_s: float  # submit -> finish
+
+
+def pow2_bucket(n: int, lo: int, hi: int) -> int:
+    """Smallest power of two >= n, floored at lo, capped at hi."""
+    b = max(lo, 1 << max(0, (n - 1).bit_length()))
+    return min(b, hi)
+
+
+class Scheduler:
+    def __init__(
+        self,
+        *,
+        num_slots: int,
+        max_len: int,
+        eos_id: Optional[int] = None,
+        bucket_cap: Optional[int] = None,
+        min_bucket: int = 8,
+        gather_live_lanes: bool = True,
+    ):
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.bucket_cap = bucket_cap or max_len
+        self.min_bucket = min(min_bucket, self.bucket_cap)
+        self.gather_live_lanes = gather_live_lanes
+
+        self.queue: Deque[Request] = deque()
+        self.free: List[int] = list(range(num_slots))[::-1]  # pop() -> slot 0
+        self.pos = np.zeros(num_slots, np.int32)  # tokens already in cache
+        self.active = np.zeros(num_slots, bool)
+        self.cur = np.zeros(num_slots, np.int32)  # last sampled, not yet fed
+        self.temps = np.zeros(num_slots, np.float32)
+        self.seeds = np.zeros(num_slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.slot_gen: List[List[int]] = [[] for _ in range(num_slots)]
+        self.first_tok_t = np.zeros(num_slots, np.float64)
+        self._next_rid = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(
+        self,
+        prompt: List[int],
+        *,
+        max_new: int = 32,
+        temperature: float = 0.0,
+        seed: Optional[int] = None,
+    ) -> int:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new {max_new} < 1")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt len {len(prompt)} + max_new {max_new} exceeds "
+                f"max_len {self.max_len}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(
+            Request(rid, list(prompt), max_new, temperature, time.time(),
+                    seed if seed is not None else rid)
+        )
+        return rid
+
+    def pop_admission(
+        self, can_admit: Callable[[Request], bool]
+    ) -> Optional[Tuple[Request, int]]:
+        """Next (request, slot) to prefill, or None. FIFO order; the head
+        waits (rather than being skipped) when pages are short, so a long
+        prompt cannot be starved by short ones behind it."""
+        if not self.free or not self.queue:
+            return None
+        if not can_admit(self.queue[0]):
+            return None
+        return self.queue.popleft(), self.free.pop()
+
+    def bucket_for(self, prompt_len: int) -> int:
+        return pow2_bucket(prompt_len, self.min_bucket, self.bucket_cap)
+
+    def on_admitted(
+        self, req: Request, slot: int, first_token: int, now: float
+    ) -> Optional[Completion]:
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = True
+        self.cur[slot] = first_token
+        self.temps[slot] = req.temperature
+        self.seeds[slot] = req.seed
+        self.slot_req[slot] = req
+        self.slot_gen[slot] = [first_token]
+        self.first_tok_t[slot] = now
+        return self._maybe_finish(slot, now)
+
+    # -- decode -------------------------------------------------------------
+
+    def live_slots(self) -> List[int]:
+        return [int(s) for s in np.nonzero(self.active)[0]]
+
+    def decode_bucket(self, n_live: int) -> int:
+        if not self.gather_live_lanes:
+            return self.num_slots
+        # floor at 2 lanes: XLA-CPU lowers batch-1 matmuls to a degenerate
+        # GEMV path ~3x slower than batch-2 GEMM shapes (measured in
+        # serve_bench), so one trash-padded lane is cheaper than a B=1
+        # program. Pools of one slot have no choice.
+        lo = min(2, self.num_slots)
+        return pow2_bucket(n_live, lo, 1 << (self.num_slots - 1).bit_length())
+
+    def ngen(self, slot: int) -> int:
+        return len(self.slot_gen[slot])
+
+    def on_token(self, slot: int, token: int, now: float) -> Optional[Completion]:
+        self.pos[slot] += 1
+        self.cur[slot] = token
+        self.slot_gen[slot].append(token)
+        return self._maybe_finish(slot, now)
+
+    # -- eviction -----------------------------------------------------------
+
+    def _maybe_finish(self, slot: int, now: float) -> Optional[Completion]:
+        req = self.slot_req[slot]
+        gen = self.slot_gen[slot]
+        reason = None
+        if self.eos_id is not None and gen and gen[-1] == self.eos_id:
+            reason = "eos"
+        elif len(gen) >= req.max_new:
+            reason = "length"
+        elif self.pos[slot] >= self.max_len:
+            reason = "cache_full"  # unreachable via submit(); safety net
+        if reason is None:
+            return None
+        return self._evict(slot, reason, now)
+
+    def force_finish(self, slot: int, reason: str, now: float) -> Completion:
+        """Evict a running stream (e.g. page-pool exhaustion under an
+        oversubscribed cache manager)."""
+        return self._evict(slot, reason, now)
+
+    def _evict(self, slot: int, reason: str, now: float) -> Completion:
+        req = self.slot_req[slot]
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.free.append(slot)
+        return Completion(
+            rid=req.rid,
+            prompt=req.prompt,
+            tokens=list(self.slot_gen[slot]),
+            finish_reason=reason,
+            ttft_s=self.first_tok_t[slot] - req.submit_time,
+            latency_s=now - req.submit_time,
+        )
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)

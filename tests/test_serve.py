@@ -1,19 +1,33 @@
-"""Serving subsystem tests (DESIGN.md §6).
+"""Serving subsystem tests (DESIGN.md §6-§7).
 
-1. Fused prefill == token-at-a-time serve_step replay (per arch family):
-   one Model.prefill call must produce the same per-position logits and
-   leave the cache in the same state as replaying the prompt through the
-   cached decode step.
-2. Continuous batching == isolated runs: a request's greedy generation
-   must not depend on what else rides in the batch (admission order,
-   staggered arrivals, slot reuse).
+Model layer:
+1. Fused prefill == token-at-a-time serve_step replay (per arch family).
+2. Bucketed prefill (right-padded + `length`) == exact-length prefill:
+   same last-token logits, and the spliced/continued cache drives the same
+   next step — the correctness contract of power-of-two prompt buckets.
 3. Per-slot position vectors == scalar positions in serve_step.
+
+Serve layer (paged cache manager + scheduler + runner + facade):
+4. Continuous batching == isolated runs (greedy, traffic independence).
+5. Engine == raw prefill+serve_step reference (anchors the paged decode
+   path to the contiguous one).
+6. Prefill compile count is O(log max_len) for many distinct lengths.
+7. submit() rejects oversized requests up front (no silent cache_full).
+8. Eviction/refill drains the pool and returns every page.
+
+Router:
+9. One LLM + 2 architecturally heterogeneous SLMs (recurrent + MoE) with
+   distinct tokenizers in one process; all completions drain.
+10. Routing correctness: a request through the router is byte-identical
+    to the same request submitted directly to the target engine,
+    regardless of co-scheduled traffic (greedy AND sampled — per-request
+    fold_in sampling keys).
 
 fp32 params throughout: the two paths reassociate reductions differently,
 and bf16 noise flips top-k choices of near-tied MoE routers / argmax of a
 random-init model's near-uniform logits. Jamba uses a token seed with
 routing margin — a router tie is a true discontinuity where ANY fp noise
-legitimately diverges the recurrent tail (see test docstring below).
+legitimately diverges the recurrent tail.
 """
 import dataclasses
 
@@ -24,7 +38,14 @@ import pytest
 
 from repro.configs import get_arch
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import (
+    CloudEdgeRouter,
+    EngineSpec,
+    ServeEngine,
+    explicit_tier_policy,
+    prompt_length_policy,
+    round_robin_policy,
+)
 
 B, S, MAX_LEN = 2, 17, 32
 
@@ -98,6 +119,50 @@ def test_fused_prefill_matches_replay(arch, seed, atol):
     )
 
 
+BUCKET_ARCHS = [
+    ("qwen2-1.5b", 0.02),
+    ("gemma-2b-swa", 0.02),  # masked ring write
+    ("deepseek-v3-671b", 0.03),  # MLA latent cache
+    ("xlstm-1.3b", 0.02),  # gate-masked recurrent state
+    ("jamba-1.5-large-398b", 0.08),  # dt-masked mamba + attn hybrid
+]
+
+
+@pytest.mark.parametrize("arch,atol", BUCKET_ARCHS)
+def test_bucketed_prefill_matches_exact(arch, atol):
+    """Right-padding a prompt to a compile bucket with `length` set must
+    produce the same logits and an equivalent cache as exact-length
+    prefill — the invariant behind O(log max_len) prefill programs."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(0)
+    s, bucket = 13, 32
+    toks = rng.randint(0, cfg.vocab_size, (1, s)).astype(np.int32)
+    padded = np.zeros((1, bucket), np.int32)
+    padded[:, :s] = toks
+
+    c_exact = model.init_cache(1, bucket)
+    lg_e, c_exact = jax.jit(model.prefill)(
+        params, c_exact, {"tokens": jnp.asarray(toks)}
+    )
+    c_buck = model.init_cache(1, bucket)
+    lg_b, c_buck = jax.jit(model.prefill)(
+        params, c_buck,
+        {"tokens": jnp.asarray(padded), "length": jnp.asarray(s, jnp.int32)},
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg_e), np.asarray(lg_b), atol=atol, rtol=0
+    )
+
+    serve = jax.jit(model.serve_step)
+    nxt = jnp.argmax(lg_e, -1).astype(jnp.int32)
+    step = {"token": nxt, "pos": jnp.full((1,), s, jnp.int32)}
+    lg_a, _ = serve(params, c_exact, step)
+    lg_c, _ = serve(params, c_buck, step)
+    np.testing.assert_allclose(
+        np.asarray(lg_a), np.asarray(lg_c), atol=atol, rtol=0
+    )
+
+
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "xlstm-1.3b"])
 def test_continuous_batching_matches_isolated(arch):
     """Staggered arrivals through a shared pool produce exactly the same
@@ -127,6 +192,47 @@ def test_continuous_batching_matches_isolated(arch):
         assert c.tokens == pooled[i].tokens, f"request {i}"
 
 
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "qwen2-1.5b",  # full-attention paged decode
+        "gemma-2b-swa",  # paged swa ring (window 8 < prompt 9: ring wrap)
+        "deepseek-v3-671b",  # paged MLA latent pools
+        "jamba-1.5-large-398b",  # hybrid splice: paged attn + mamba slots
+        "xlstm-1.3b",  # pure slot-resident recurrent
+    ],
+)
+def test_engine_matches_raw_model_reference(arch):
+    """The paged engine must generate exactly what a hand-rolled greedy
+    loop over the contiguous prefill + serve_step path generates — per
+    paged family (attention / swa ring / MLA / hybrid / recurrent)."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(3)
+    prompt = list(rng.randint(5, cfg.vocab_size, (9,)))
+    gen = 6
+
+    cache = model.init_cache(1, MAX_LEN)
+    lg, cache = jax.jit(model.prefill)(
+        params, cache, {"tokens": jnp.asarray([prompt], jnp.int32)}
+    )
+    ref = [int(jnp.argmax(lg[0]))]
+    serve = jax.jit(model.serve_step)
+    pos = len(prompt)
+    for _ in range(gen - 1):
+        lg, cache = serve(
+            params, cache,
+            {"token": jnp.asarray([ref[-1]], jnp.int32),
+             "pos": jnp.full((1,), pos, jnp.int32)},
+        )
+        ref.append(int(jnp.argmax(lg[0])))
+        pos += 1
+
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0)
+    eng.submit(prompt, max_new=gen)
+    (c,) = eng.run()
+    assert c.tokens == ref
+
+
 def test_vector_pos_matches_scalar_pos():
     cfg, model, params = _setup("qwen2-1.5b")
     rng = np.random.RandomState(0)
@@ -140,6 +246,27 @@ def test_vector_pos_matches_scalar_pos():
     np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
 
 
+def test_prefill_compile_count_bucketed():
+    """40 distinct prompt lengths must compile at most log2(max_len)
+    prefill programs (power-of-two buckets), not 40."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    max_len = 256
+    rng = np.random.RandomState(0)
+    eng = ServeEngine(model, params, max_batch=2, max_len=max_len, seed=0)
+    lengths = rng.choice(np.arange(3, 200), size=40, replace=False)
+    for n in lengths:
+        eng.submit(list(rng.randint(5, cfg.vocab_size, (int(n),))), max_new=1)
+    done = eng.run()
+    assert len(done) == 40
+    n_programs = len(eng.runner.prefill_programs)
+    assert n_programs <= int(np.log2(max_len)), (
+        f"{n_programs} prefill programs for 40 lengths: "
+        f"{eng.runner.prefill_programs}"
+    )
+    # every program is a power-of-two bucket
+    assert all(b & (b - 1) == 0 for b in eng.runner.prefill_programs)
+
+
 def test_engine_eviction_refill_and_sampling():
     cfg, model, params = _setup("qwen2-1.5b")
     rng = np.random.RandomState(1)
@@ -147,23 +274,22 @@ def test_engine_eviction_refill_and_sampling():
     rids = [
         eng.submit(list(rng.randint(5, cfg.vocab_size, (6,))),
                    max_new=n, temperature=t)
-        for n, t in [(3, 0.0), (30, 0.0), (4, 0.8), (2, 0.8)]
+        for n, t in [(3, 0.0), (18, 0.0), (4, 0.8), (2, 0.8)]
     ]
     done = eng.run()
     by_rid = {c.rid: c for c in done}
     assert sorted(by_rid) == rids
     assert len(by_rid[rids[0]].tokens) == 3
-    # rid 1 asked for 30 new tokens but the cache has 24 slots; the last
-    # sampled token is never fed back, so prompt + gen = max_len + 1
-    c1 = by_rid[rids[1]]
-    assert c1.finish_reason == "cache_full"
-    assert len(c1.prompt) + len(c1.tokens) == 24 + 1
+    assert len(by_rid[rids[1]].tokens) == 18
     for c in done:
+        assert c.finish_reason == "length"
         assert all(0 <= t < cfg.vocab_size for t in c.tokens)
         assert c.ttft_s >= 0 and c.latency_s >= c.ttft_s
-    # all slots were freed: the pool is drained
+    # the pool drained: all slots free, every page back in the pool
     assert eng.num_active == 0 and eng.num_queued == 0
-    assert sorted(eng.free) == [0, 1]
+    assert eng.free_slots == [0, 1]
+    assert eng.cache.free_page_count == eng.cache.num_pages - 1
+    assert eng.mean_occupancy > 0
 
 
 def test_prefill_rejects_oversized_prompt():
@@ -175,9 +301,144 @@ def test_prefill_rejects_oversized_prompt():
 
 
 def test_engine_rejects_bad_requests():
+    """Regression: an oversized request must fail at submit(), not finish
+    silently with cache_full after burning a slot."""
     _, model, params = _setup("qwen2-1.5b")
-    eng = ServeEngine(model, params, max_batch=1, max_len=8)
+    eng = ServeEngine(model, params, max_batch=1, max_len=16)
     with pytest.raises(ValueError):
         eng.submit([])
-    with pytest.raises(ValueError):
-        eng.submit(list(range(1, 9)))  # prompt fills the whole cache
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(list(range(1, 9)), max_new=0)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(list(range(1, 10)), max_new=8)  # 9 + 8 > 16
+    eng.submit(list(range(1, 9)), max_new=8)  # 8 + 8 == 16: fits
+    (c,) = eng.run()
+    assert c.finish_reason == "length" and len(c.tokens) == 8
+    assert eng.num_active == 0 and eng.num_queued == 0
+
+
+def test_engine_rejects_never_admittable_and_bad_page_size():
+    """An oversubscribed page pool must reject a prompt that could never
+    own enough pages (otherwise run() would spin forever), and page_size
+    must be a power of two (pow2 buckets must be page multiples)."""
+    _, model, params = _setup("qwen2-1.5b")
+    eng = ServeEngine(model, params, max_batch=2, max_len=64,
+                      page_size=8, num_pages=4)  # 3 usable pages
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(list(range(1, 41)), max_new=4)  # needs 5 pages
+    rid = eng.submit(list(range(1, 17)), max_new=4)  # 2 pages: fits
+    (c,) = eng.run()
+    assert c.rid == rid
+    with pytest.raises(ValueError, match="power of two"):
+        ServeEngine(model, params, max_batch=2, max_len=60, page_size=12)
+
+
+# ---------------------------------------------------------------------------
+# CloudEdgeRouter: one LLM + heterogeneous SLMs, one process
+# ---------------------------------------------------------------------------
+
+ROUTER_MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def consortium():
+    """LLM = qwen2 (GQA attention); SLMs = xlstm (recurrent mLSTM/sLSTM)
+    and phi3.5-moe (MoE attention) — three architecturally distinct
+    stacks, three distinct tokenizers, one process."""
+    from repro.data.synthetic import generate_corpus
+    from repro.data.tokenizer import build_tokenizer
+
+    corpus = generate_corpus(60, seed=0)
+    texts = [s.text for s in corpus]
+    toks = {
+        "qwen2-1.5b": build_tokenizer("cloud", texts, max_piece=12, budget=1024),
+        "xlstm-1.3b": build_tokenizer("edge-a", texts, max_piece=4, budget=512),
+        "phi3.5-moe-42b-a6.6b":
+            build_tokenizer("edge-b", texts, max_piece=7, budget=768),
+    }
+    specs = {}
+    for i, (arch, tok) in enumerate(toks.items()):
+        cfg = dataclasses.replace(
+            get_arch(arch).reduced(), vocab_size=tok.vocab_size
+        )
+        model = build_model(cfg)
+        params = model.init(jax.random.key(i), dtype=jnp.float32)
+        specs[arch] = (model, params, tok)
+    return corpus, specs
+
+
+def _make_spec(specs, arch, batch=2):
+    model, params, tok = specs[arch]
+    return EngineSpec(
+        arch,
+        ServeEngine(model, params, max_batch=batch, max_len=ROUTER_MAX_LEN,
+                    eos_id=tok.eos_id, seed=0),
+        tok,
+    )
+
+
+def test_router_heterogeneous_consortium_drains(consortium):
+    corpus, specs = consortium
+    llm = _make_spec(specs, "qwen2-1.5b")
+    slms = [_make_spec(specs, "xlstm-1.3b"), _make_spec(specs, "phi3.5-moe-42b-a6.6b")]
+    router = CloudEdgeRouter(llm, slms, policy=prompt_length_policy(threshold=12))
+    rids = [
+        router.submit(f"question : {s.question} answer :", max_new=4,
+                      temperature=0.5 if i % 2 else 0.0)
+        for i, s in enumerate(corpus[:8])
+    ]
+    done = {c.rid: c for c in router.run()}
+    assert sorted(done) == rids
+    used = {d.engine for _, d in router.route_log}
+    assert len(used) >= 2, f"policy sent everything to one tier: {used}"
+    for c in done.values():
+        tok = router.specs[c.engine].tokenizer
+        assert all(0 <= t < tok.vocab_size for t in c.tokens)
+        assert c.finish_reason in ("eos", "length")
+
+
+@pytest.mark.parametrize("slm", ["xlstm-1.3b", "phi3.5-moe-42b-a6.6b"])
+def test_router_matches_direct_submission(consortium, slm):
+    """Same-seed request through the router == direct submission to the
+    target engine, byte-identical, with co-scheduled traffic on every
+    tier and temperature sampling on."""
+    corpus, specs = consortium
+    llm = _make_spec(specs, "qwen2-1.5b")
+    slms = [_make_spec(specs, "xlstm-1.3b"), _make_spec(specs, "phi3.5-moe-42b-a6.6b")]
+    router = CloudEdgeRouter(llm, slms, policy=explicit_tier_policy())
+    text = f"question : {corpus[0].question} answer :"
+    target = router.submit(text, tier=slm, max_new=5, temperature=0.8, seed=123)
+    # co-traffic everywhere, different seeds/temps
+    for i, s in enumerate(corpus[1:6]):
+        router.submit(f"question : {s.question} answer :",
+                      tier=list(router.specs)[i % 3], max_new=5,
+                      temperature=0.3 * i)
+    done = {c.rid: c for c in router.run()}
+    routed = done[target]
+    assert routed.engine == slm
+
+    direct_spec = _make_spec(specs, slm)  # fresh engine, no other traffic
+    ids = direct_spec.tokenizer.encode(text, bos=True)
+    erid = direct_spec.engine.submit(ids, max_new=5, temperature=0.8, seed=123)
+    (direct,) = direct_spec.engine.run()
+    assert direct.rid == erid
+    assert direct.tokens == routed.tokens, (
+        f"router tokens {routed.tokens} != direct {direct.tokens}"
+    )
+
+
+def test_router_round_robin_and_cross_vocab(consortium):
+    corpus, specs = consortium
+    llm = _make_spec(specs, "qwen2-1.5b")
+    slms = [_make_spec(specs, "xlstm-1.3b"), _make_spec(specs, "phi3.5-moe-42b-a6.6b")]
+    router = CloudEdgeRouter(llm, slms, policy=round_robin_policy())
+    r0 = router.submit("question : what is gravity answer :", max_new=3)
+    # token ids in the LLM vocab, mapped to the SLM vocab by the aligner
+    llm_ids = llm.tokenizer.encode("question : what is light answer :", bos=True)
+    r1 = router.submit(tokens=llm_ids, vocab="qwen2-1.5b", max_new=3)
+    done = {c.rid: c for c in router.run()}
+    assert sorted(done) == [r0, r1]
+    assert done[r0].engine == "xlstm-1.3b"  # rr starts at the first SLM
+    assert done[r1].engine == "phi3.5-moe-42b-a6.6b"
+    tok1 = router.specs[done[r1].engine].tokenizer
+    assert all(0 <= t < tok1.vocab_size for t in done[r1].tokens)
