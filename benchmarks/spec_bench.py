@@ -1,0 +1,144 @@
+"""Speculative-decoding benchmark (DESIGN.md §8).
+
+Measures, at K in {2, 4, 8} draft tokens per verify:
+
+- **accepted tokens per verify step** and the acceptance rate, for two
+  drafter regimes: ``tied`` (drafter shares the verifier's weights — the
+  acceptance *upper bound*, every draft matches, K+1 tokens commit per
+  dispatch) and ``slm`` (an independently initialized SLM drafter — the
+  from-scratch consortium floor; acceptance on random-init weights is near
+  zero, and rises only as co-tuning aligns the pair);
+- **end-to-end decode throughput** of the pair (draft + verify + commit
+  wall time) against the plain verifier-only engine on the same workload,
+  reported as a speedup factor.
+
+The two regimes bracket reality: a co-tuned consortium SLM sits between
+them, and the ``tied`` rows show how much each accepted token buys once
+it does. Prints ``name,us_per_call,derived`` CSV rows per the harness
+contract and writes the full metric set to ``BENCH_spec.json``.
+
+  PYTHONPATH=src python benchmarks/spec_bench.py [--batch 4] [--gen 24] \
+      [--requests 8] [--ks 2,4,8] [--out BENCH_spec.json]
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VERIFIER = "qwen2-1.5b"
+SLM_DRAFTER = "xlstm-1.3b"
+
+
+def build(arch, vocab, seed):
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+
+    cfg = dataclasses.replace(get_arch(arch).reduced(), vocab_size=vocab)
+    model = build_model(cfg)
+    return model, model.init(jax.random.key(seed))
+
+
+def make_prompts(vocab, n, plen, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(5, vocab, (plen,))) for _ in range(n)]
+
+
+def timed_run(engine, prompts, gen):
+    """Submit + drain; returns (wall seconds of the generation phase,
+    committed tokens), warm-compiled by a 1-request pre-run."""
+    engine.submit(prompts[0], max_new=gen)
+    engine.run()  # warm the compiled programs
+    st = engine.stats
+    t0_decode, t0_spec = st.decode_s, st.spec_s
+    tok0 = st.decode_tokens + st.spec_tokens
+    for p in prompts:
+        engine.submit(p, max_new=gen)
+    done = engine.run()
+    st = engine.stats
+    dt = (st.decode_s - t0_decode) + (st.spec_s - t0_spec)
+    toks = (st.decode_tokens + st.spec_tokens) - tok0
+    return dt, toks, done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--ks", default="2,4,8")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_spec.json"))
+    args = ap.parse_args()
+    ks = [int(x) for x in args.ks.split(",")]
+
+    from repro.serve import ServeEngine, SpecCoordinator
+
+    vm, vp = build(VERIFIER, 1024, 0)
+    dm, dp = build(SLM_DRAFTER, 1024, 1)
+    vocab = vm.cfg.vocab_size
+    max_len = args.prompt_len + args.gen + max(ks) + 1
+    prompts = make_prompts(vocab, args.requests, args.prompt_len)
+
+    plain = ServeEngine(vm, vp, max_batch=args.batch, max_len=max_len, seed=0)
+    t_plain, tok_plain, _ = timed_run(plain, prompts, args.gen)
+    plain_tps = tok_plain / t_plain if t_plain else 0.0
+    print(f"# plain {VERIFIER}: {tok_plain} tok in {t_plain:.2f}s "
+          f"({plain_tps:.1f} tok/s)")
+    rows = [("plain_decode", 1e6 * t_plain / max(tok_plain, 1), plain_tps)]
+
+    results = {
+        "config": vars(args) | {"verifier": VERIFIER, "slm_drafter": SLM_DRAFTER},
+        "plain": {"decode_tok_s": plain_tps, "tokens": tok_plain},
+        "pairs": {},
+    }
+    for pair_name, (d_model, d_params) in (
+        ("tied", (vm, vp)), ("slm", (dm, dp)),
+    ):
+        results["pairs"][pair_name] = {}
+        for k in ks:
+            spec = SpecCoordinator(
+                vm, vp, d_model, d_params, max_batch=args.batch,
+                max_len=max_len, k=k, seed=0,
+            )
+            t_spec, tok_spec, done = timed_run(spec, prompts, args.gen)
+            st = spec.stats
+            tps = tok_spec / t_spec if t_spec else 0.0
+            speedup = tps / plain_tps if plain_tps else 0.0
+            entry = {
+                "accepted_per_verify": st.accepted_per_verify,
+                "acceptance_rate": st.acceptance_rate,
+                "tokens_per_dispatch": st.spec_tokens / max(st.verify_lanes, 1),
+                "spec_tok_s": tps,
+                "speedup_vs_plain": speedup,
+                "verify_steps": st.verify_steps,
+            }
+            results["pairs"][pair_name][f"k={k}"] = entry
+            rows.append((
+                f"spec_{pair_name}_k{k}",
+                1e6 * t_spec / max(tok_spec, 1),
+                st.accepted_per_verify,
+            ))
+            print(f"# {pair_name} k={k}: {st.accepted_per_verify:.2f} "
+                  f"accepted/verify (accept {st.acceptance_rate:.0%}), "
+                  f"{tps:.1f} tok/s, {speedup:.2f}x vs plain")
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.3f}")
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

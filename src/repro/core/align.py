@@ -119,6 +119,17 @@ def build_vocab_map(src: ToyTokenizer, dst: ToyTokenizer) -> np.ndarray:
     return out
 
 
+def exact_match_mask(src: ToyTokenizer, dst: ToyTokenizer) -> np.ndarray:
+    """(src.vocab_size,) bool: True where the src piece exists verbatim in
+    dst's vocabulary — the ids whose vocab-map image round-trips exactly.
+    Ids outside the mask map to their *closest* dst piece (fine for pooled
+    KL and for conditioning a drafter), but speculative drafting treats
+    them as unmappable and auto-rejects (serve/spec.py)."""
+    return np.fromiter(
+        (p in dst.index for p in src.pieces), bool, src.vocab_size
+    )
+
+
 class TokenAligner:
     """Caches per-(text, direction) position alignments + the vocab maps
     for one tokenizer pair."""
@@ -127,6 +138,8 @@ class TokenAligner:
         self.tok_a, self.tok_b = tok_a, tok_b
         self.vocab_a2b = build_vocab_map(tok_a, tok_b)
         self.vocab_b2a = build_vocab_map(tok_b, tok_a)
+        self.exact_a2b = exact_match_mask(tok_a, tok_b)
+        self.exact_b2a = exact_match_mask(tok_b, tok_a)
         self._cache: Dict[Tuple[str, str], np.ndarray] = {}
 
     def positions(self, text: str, direction: str = "a2b") -> np.ndarray:

@@ -12,6 +12,12 @@ heterogeneous SLMs with distinct tokenizers behind a CloudEdgeRouter
 
   PYTHONPATH=src python -m repro.launch.serve --router --gen 8
 
+Speculative collaborative decoding mode (DESIGN.md §8) — an SLM drafter
+paired with the LLM verifier; asserts the greedy speculative output is
+byte-identical to plain LLM-only decoding (the CI spec smoke):
+
+  PYTHONPATH=src python -m repro.launch.serve --spec --k 3 --gen 8
+
 Runs the REDUCED configs on CPU; the full configs' serve path is exercised
 by the dry-run. Prompts are admitted through the engine's request queue, so
 more prompts than --batch slots simply stream through the pool.
@@ -31,6 +37,7 @@ from repro.serve import (
     CloudEdgeRouter,
     EngineSpec,
     ServeEngine,
+    SpecCoordinator,
     prompt_length_policy,
 )
 
@@ -123,11 +130,73 @@ def run_router(args) -> None:
     print("router smoke OK: all completions drained")
 
 
+def run_spec(args) -> None:
+    """Speculative-decoding smoke: SLM drafter + LLM verifier over the
+    paged stacks, greedy acceptance. Asserts byte-identical completions
+    against a plain verifier-only engine, then reports acceptance and a
+    self-speculation upper bound."""
+    corpus = generate_corpus(100, seed=0)
+    texts = [s.text for s in corpus]
+    tok = build_tokenizer("serve", texts, max_piece=10, budget=1024)
+    max_len = args.prompt_len + args.gen + args.k + 1  # verify lookahead
+    n_req = args.requests or args.batch
+
+    def build(arch, seed):
+        cfg = dataclasses.replace(
+            get_arch(arch).reduced(), vocab_size=tok.vocab_size
+        )
+        model = build_model(cfg)
+        return model, model.init(jax.random.key(seed))
+
+    vm, vp = build(args.arch, 0)
+    dm, dp = build(args.spec_drafter, 1)
+    prompts = [
+        tok.encode(f"question : {s.question} answer :", bos=True)
+        [: args.prompt_len]
+        for s in corpus[:n_req]
+    ]
+
+    plain = ServeEngine(vm, vp, max_batch=args.batch, max_len=max_len,
+                        eos_id=tok.eos_id, seed=0)
+    for p in prompts:
+        plain.submit(p, max_new=args.gen)
+    ref = {c.rid: c.tokens for c in plain.run()}
+
+    for name, (d_model, d_params) in (
+        (args.spec_drafter, (dm, dp)),  # heterogeneous SLM drafter
+        ("self-speculation", (vm, vp)),  # acceptance upper bound
+    ):
+        spec = SpecCoordinator(
+            vm, vp, d_model, d_params, max_batch=args.batch, max_len=max_len,
+            k=args.k, eos_id=tok.eos_id, seed=0, exhaust_policy="preempt",
+        )
+        for p in prompts:
+            spec.submit(p, max_new=args.gen)
+        got = {c.rid: c.tokens for c in spec.run()}
+        assert got == ref, (
+            f"speculative output diverged from plain decode ({name}): "
+            f"{got} != {ref}"
+        )
+        st = spec.stats
+        print(f"[drafter={name}] byte-identical to plain decode over "
+              f"{len(prompts)} requests | accept {st.acceptance_rate:.0%}, "
+              f"{st.accepted_per_verify:.2f} accepted tok/verify, "
+              f"{st.verify_steps} verifies")
+    print(f"verifier={args.arch} k={args.k}: {spec.stats.summary()}")
+    print("spec smoke OK: greedy speculative decode is byte-identical")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--router", action="store_true",
                     help="cloud-edge consortium mode (LLM + 2 SLMs)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding mode (SLM drafts, LLM verifies)")
+    ap.add_argument("--spec-drafter", default="xlstm-1.3b",
+                    help="drafter arch for --spec")
+    ap.add_argument("--k", type=int, default=3,
+                    help="draft window (tokens per verify) for --spec")
     ap.add_argument("--batch", type=int, default=8, help="engine slots")
     ap.add_argument("--requests", type=int, default=0,
                     help="number of prompts (default: --batch, 3x for router)")
@@ -139,6 +208,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.router:
         run_router(args)
+    elif args.spec:
+        run_spec(args)
     else:
         run_single(args)
 

@@ -107,6 +107,19 @@ class Model(NamedTuple):
             self.cfg, params, paged, slots, batch, self.flags
         )
 
+    def verify_step_paged(self, params: Params, paged: Params, slots: Params,
+                          batch: Dict):
+        """Speculative-decoding verify (DESIGN.md §8): score K+1 tokens per
+        live lane in one call; batch {'tokens': (L, K+1), 'pos': (L,),
+        'block_tables': (L, P)}. Returns (logits (L, K+1, V), written
+        pools, per-step stacked slot state) — pair with
+        ``paged.rollback_pages`` / ``paged.select_slots``."""
+        from repro.models import paged as PG
+
+        return PG.verify_step_paged(
+            self.cfg, params, paged, slots, batch, self.flags
+        )
+
     def encode(self, params: Params, audio_embeds: jax.Array) -> jax.Array:
         return T.encode(self.cfg, params, audio_embeds, self.flags)
 

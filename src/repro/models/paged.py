@@ -23,6 +23,25 @@ lanes (L is a power-of-two bucket chosen by the scheduler, not the pool
 size — no dead-lane compute). ``splice_prefill`` moves a fused batch-1
 prefill (bucketed, ``length``-masked — see ``transformer.prefill``) from
 its contiguous temp cache into pool pages + slot state.
+
+``verify_step_paged`` is the speculative-decoding program (DESIGN.md §8):
+score K+1 tokens per live lane — the pending token plus K draft tokens —
+in ONE bucketed call against the paged cache. Rollback on rejection is
+split by cache family:
+
+- attn / mla: draft writes land at positions ``pos+1..pos+K``; rejected
+  entries are *position-masked* at every later read (``valid = key_pos <=
+  query_pos``) and overwritten by the next commit, so rewinding the write
+  position is free;
+- swa: the ring buffer destroys the overwritten entry, so
+  ``ring_undo_snapshot`` captures the displaced (page, offset, value)
+  triples before the verify write and ``rollback_pages`` restores the
+  entries whose draft was rejected (kept steps redirect their restore to
+  the trash page). Requires K+1 <= ring capacity so verify writes never
+  alias inside one window;
+- mLSTM / sLSTM / Mamba: the K+1 single-token recurrences run as an inner
+  scan that stacks the slot state *after every step*; ``select_slots``
+  keeps the state at the accepted length and discards the rest.
 """
 from __future__ import annotations
 
@@ -225,6 +244,9 @@ def paged_attention_decode(
         w_cap = w_pages * ps
         slot = pos % w_cap
         page = bt[rows, slot // ps]
+        # positions past the padded max_len (a drafter running ahead of a
+        # stream's budget) must not destroy live ring entries
+        page = jnp.where(pos < bt.shape[1] * ps, page, TRASH_PAGE)
         off = slot % ps
         k = pool["k"].at[page, off].set(k_new[:, 0].astype(pool["k"].dtype))
         v = pool["v"].at[page, off].set(v_new[:, 0].astype(pool["v"].dtype))
@@ -234,11 +256,11 @@ def paged_attention_decode(
         p_j = pos[:, None] - ((pos[:, None] - j) % w_cap)
         valid = (p_j >= 0) & (p_j > pos[:, None] - window)
     else:
-        page = bt[rows, pos // ps]
+        span = bt.shape[1] * ps
+        page = jnp.where(pos < span, bt[rows, pos // ps], TRASH_PAGE)
         off = pos % ps
         k = pool["k"].at[page, off].set(k_new[:, 0].astype(pool["k"].dtype))
         v = pool["v"].at[page, off].set(v_new[:, 0].astype(pool["v"].dtype))
-        span = bt.shape[1] * ps
         kk = k[bt].reshape(lanes, span, *k.shape[2:])
         vv = v[bt].reshape(lanes, span, *v.shape[2:])
         valid = jnp.arange(span)[None, :] <= pos[:, None]
@@ -272,7 +294,7 @@ def paged_mla_decode(
     ps = pool["c_kv"].shape[1]
     lanes = x.shape[0]
     rows = jnp.arange(lanes)
-    page = bt[rows, pos // ps]
+    page = jnp.where(pos < bt.shape[1] * ps, bt[rows, pos // ps], TRASH_PAGE)
     off = pos % ps
     c_pool = pool["c_kv"].at[page, off].set(c_new[:, 0].astype(pool["c_kv"].dtype))
     r_pool = pool["k_rope"].at[page, off].set(
@@ -399,6 +421,373 @@ def serve_step_paged(
     h = L.apply_norm(cfg, params["final_norm"], h)
     logits = L.unembed(cfg, params["embed"], h)[:, 0]
     return logits, new_paged, new_slots
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify: score K+1 tokens per lane in one call (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def paged_attention_verify(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (L, K1, d) — pending token + K drafts per live lane
+    pool: Params,
+    bt: jax.Array,  # (L, P)
+    pos: jax.Array,  # (L,) position of x[:, 0]
+    cos: jax.Array,  # (L, K1, D/2)
+    sin: jax.Array,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Params]:
+    """Multi-token paged attention: write K1 new k/v at positions
+    ``pos..pos+K-1``... i.e. ``pos + i``, then attend with a per-query
+    causal/window mask. New k/v round-trip through the pool dtype so the
+    math is bit-compatible with K1 sequential ``paged_attention_decode``
+    steps."""
+    q, k_new, v_new = L._project_qkv(cfg, p, x, x)
+    if cos is not None:
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+    ps = pool["k"].shape[1]
+    lanes, k1 = x.shape[:2]
+    rows = jnp.arange(lanes)[:, None]
+    positions = pos[:, None] + jnp.arange(k1)[None, :]  # (L, K1)
+    span = bt.shape[1] * ps
+    in_range = positions < span
+    kw = k_new.astype(pool["k"].dtype)
+    vw = v_new.astype(pool["v"].dtype)
+    rep = cfg.num_heads // cfg.num_kv_heads
+    if window > 0:
+        # The ring overwrite is destructive, so queries read [pre-write
+        # ring content, fresh k/v] with disjoint validity masks instead of
+        # the post-write pool (later draft writes must not pollute earlier
+        # queries' windows). Distinct write targets require K1 <= w_cap.
+        w_pages = -(-window // ps)
+        w_cap = w_pages * ps
+        if k1 > w_cap:
+            raise ValueError(
+                f"verify window {k1} tokens > swa ring capacity {w_cap}"
+            )
+        ring_k = pool["k"][bt[:, :w_pages]].reshape(lanes, w_cap, *kw.shape[2:])
+        ring_v = pool["v"][bt[:, :w_pages]].reshape(lanes, w_cap, *vw.shape[2:])
+        slot = positions % w_cap
+        page = jnp.where(in_range, bt[rows, slot // ps], TRASH_PAGE)
+        off = slot % ps
+        k = pool["k"].at[page, off].set(kw)
+        v = pool["v"].at[page, off].set(vw)
+        # ring entry j's latest position as of the last committed write
+        last = pos[:, None] - 1
+        j = jnp.arange(w_cap)[None, :]
+        p_j = last - ((last - j) % w_cap)  # (L, w_cap)
+        qp = positions[:, :, None]  # (L, K1, 1)
+        ring_valid = (p_j[:, None, :] >= 0) & (p_j[:, None, :] > qp - window)
+        i = jnp.arange(k1)
+        new_valid = (i[None, :] <= i[:, None]) & (i[None, :] > i[:, None] - window)
+        new_valid = jnp.broadcast_to(new_valid[None], (lanes, k1, k1))
+        kk = jnp.concatenate(
+            [ring_k.astype(x.dtype), kw.astype(x.dtype)], axis=1
+        )
+        vv = jnp.concatenate(
+            [ring_v.astype(x.dtype), vw.astype(x.dtype)], axis=1
+        )
+        valid = jnp.concatenate([ring_valid, new_valid], axis=-1)
+    else:
+        page = jnp.where(in_range, bt[rows, positions // ps], TRASH_PAGE)
+        off = positions % ps
+        k = pool["k"].at[page, off].set(kw)
+        v = pool["v"].at[page, off].set(vw)
+        kk = k[bt].reshape(lanes, span, *k.shape[2:]).astype(x.dtype)
+        vv = v[bt].reshape(lanes, span, *v.shape[2:]).astype(x.dtype)
+        valid = jnp.arange(span)[None, None, :] <= positions[:, :, None]
+    new_pool = {"k": k, "v": v}
+    kk = L.repeat_kv(kk, rep)
+    vv = L.repeat_kv(vv, rep)
+    mask = valid[:, None]  # (L, 1, K1, Sk)
+    o = L.sdpa(q, kk, vv, mask, softcap=cfg.logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_pool
+
+
+def paged_mla_verify(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (L, K1, d)
+    pool: Params,
+    bt: jax.Array,
+    pos: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+) -> Tuple[jax.Array, Params]:
+    """Absorbed-form MLA over paged latent pools, K1 queries at once."""
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_nope, q_rope = MLA._queries(cfg, p, x)
+    c_new, kr_new = MLA._latents(cfg, p, x)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    kr_new = L.apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+
+    ps = pool["c_kv"].shape[1]
+    lanes, k1 = x.shape[:2]
+    rows = jnp.arange(lanes)[:, None]
+    positions = pos[:, None] + jnp.arange(k1)[None, :]
+    span = bt.shape[1] * ps
+    page = jnp.where(positions < span, bt[rows, positions // ps], TRASH_PAGE)
+    off = positions % ps
+    c_pool = pool["c_kv"].at[page, off].set(c_new.astype(pool["c_kv"].dtype))
+    r_pool = pool["k_rope"].at[page, off].set(
+        kr_new.astype(pool["k_rope"].dtype)
+    )
+    new_pool = {"c_kv": c_pool, "k_rope": r_pool}
+    c_kv = c_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+    k_rope = r_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wuk"].astype(x.dtype))
+    scale = 1.0 / math.sqrt(nope + rope)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_abs, c_kv)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(span)[None, None, None, :] <= positions[:, None, :, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx, p["wuv"].astype(x.dtype))
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype)), new_pool
+
+
+def _recurrent_verify(step_fn, x: jax.Array, state: Params):
+    """Run K1 single-token recurrent steps as a scan, stacking the slot
+    state AFTER each step (leading K1 axis) so the caller can keep the
+    state at the accepted length (``select_slots``)."""
+
+    def body(st, xt):  # xt (L, d)
+        o, st = step_fn(xt[:, None, :], st)
+        return st, (o[:, 0], st)
+
+    _, (outs, states) = jax.lax.scan(body, state, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(outs, 0, 1), states
+
+
+def block_verify_paged(
+    cfg: ModelConfig,
+    p: Params,
+    block: str,
+    h: jax.Array,  # (L, K1, d)
+    pcache: Params,
+    scache: Params,
+    pos: jax.Array,
+    bt: jax.Array,
+    ctx: Dict,
+) -> Tuple[jax.Array, Params, Params]:
+    """Multi-token analogue of ``block_decode_paged``. Recurrent mixers
+    return per-step stacked state (leading K1 axis on every leaf)."""
+    mixer, mlpk = cfg.block_parts(block)
+    cos, sin = _rope_for(cfg, mixer, ctx)
+    x = L.apply_norm(cfg, p["norm1"], h)
+    if mixer in ("attn", "swa"):
+        window = cfg.window if mixer == "swa" else 0
+        o, pcache = paged_attention_verify(
+            cfg, p["attn"], x, pcache, bt, pos, cos, sin, window=window
+        )
+        h = h + o
+    elif mixer == "mla":
+        o, pcache = paged_mla_verify(cfg, p["attn"], x, pcache, bt, pos, cos, sin)
+        h = h + o
+    elif mixer == "mlstm":
+        o, scache = _recurrent_verify(
+            lambda xt, st: XL.mlstm_decode(cfg, p["mixer"], xt, st), x, scache
+        )
+        h = h + o
+    elif mixer == "slstm":
+        o, scache = _recurrent_verify(
+            lambda xt, st: XL.slstm_decode(cfg, p["mixer"], xt, st), x, scache
+        )
+        h = h + o
+    elif mixer == "mamba":
+        o, scache = _recurrent_verify(
+            lambda xt, st: MB.mamba_decode(cfg, p["mixer"], xt, st), x, scache
+        )
+        h = h + o
+    else:
+        raise NotImplementedError(f"paged verify for mixer {mixer}")
+    if mlpk in ("mlp", "dense_big"):
+        h = h + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+    elif mlpk == "moe":
+        from repro.models import moe as MOE
+
+        y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h),
+                           dropless=True)
+        h = h + y
+    if "adapter" in p:
+        from repro.core.adapters import apply_adapter
+
+        h = apply_adapter(p["adapter"], h)
+    return h, pcache, scache
+
+
+def verify_step_paged(
+    cfg: ModelConfig,
+    params: Params,
+    paged: Params,
+    slots: Params,
+    batch: Dict,
+    flags: RuntimeFlags = DEFAULT_FLAGS,
+) -> Tuple[jax.Array, Params, Params]:
+    """Score K1 = K+1 tokens per live lane against the paged cache in one
+    call: batch {'tokens': (L, K1), 'pos': (L,) position of tokens[:, 0],
+    'block_tables': (L, P)}. ``slots`` is the gathered per-lane view.
+
+    Returns (logits (L, K1, V), new paged pools with the K1 writes
+    applied, per-step stacked slot state). The caller decides the accepted
+    length per lane and then rolls back: ``rollback_pages`` restores
+    displaced swa ring entries, ``select_slots`` keeps the recurrent state
+    at the accepted step; attn/mla writes past the accepted position are
+    position-masked at every later read and need no undo."""
+    tokens = batch["tokens"]
+    pos = batch["pos"]
+    bt = batch["block_tables"]
+    k1 = tokens.shape[1]
+    positions = pos[:, None] + jnp.arange(k1)[None, :]  # (L, K1)
+    h = L.embed(cfg, params["embed"], tokens)
+    if cfg.pos_type == "learned":
+        h = h + jnp.take(params["pos_embed"], positions, axis=0).astype(h.dtype)
+    ctx = _make_ctx(cfg, positions, batch)
+
+    new_paged: Params = {}
+    new_slots: Params = {}
+    if cfg.prefix_pattern:
+        new_paged["prefix"] = {}
+        new_slots["prefix"] = {}
+        for i, blk in enumerate(cfg.prefix_pattern):
+            key = f"l{i}"
+            h, pc, sc = block_verify_paged(
+                cfg, params["prefix"][key], blk, h,
+                paged["prefix"][key], slots["prefix"][key], pos, bt, ctx,
+            )
+            new_paged["prefix"][key] = pc
+            new_slots["prefix"][key] = sc
+
+    def unit_fn(h, xs):
+        pu, pcu, scu = xs
+        new_pcu, new_scu = {}, {}
+        for i, blk in enumerate(cfg.unit_pattern):
+            key = f"b{i}"
+            h, pc, sc = block_verify_paged(
+                cfg, pu[key], blk, h, pcu[key], scu[key], pos, bt, ctx
+            )
+            new_pcu[key] = pc
+            new_scu[key] = sc
+        return h, (new_pcu, new_scu)
+
+    h, (pu_new, su_new) = jax.lax.scan(
+        unit_fn, h, (params["units"], paged["units"], slots["units"])
+    )
+    new_paged["units"] = pu_new
+    new_slots["units"] = su_new
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = L.unembed(cfg, params["embed"], h)  # (L, K1, V)
+    return logits, new_paged, new_slots
+
+
+# ---------------------------------------------------------------------------
+# Rollback: ring undo snapshots, page restore, per-step state selection
+# ---------------------------------------------------------------------------
+
+def _ring_targets(window: int, ps: int, bt: jax.Array, positions: jax.Array):
+    """(page, off) the ring writes for ``positions`` will hit; positions
+    past the padded max_len redirect to the trash page."""
+    w_cap = -(-window // ps) * ps
+    rows = jnp.arange(bt.shape[0])[:, None]
+    slot = positions % w_cap
+    page = jnp.where(
+        positions < bt.shape[1] * ps, bt[rows, slot // ps], TRASH_PAGE
+    )
+    return page, slot % ps
+
+
+def ring_undo_snapshot(
+    cfg: ModelConfig, paged: Params, bt: jax.Array, pos: jax.Array,
+    n_steps: int,
+) -> Params:
+    """Capture the swa ring entries that ``n_steps`` sequential (or fused)
+    writes starting at ``pos`` will displace — {page, off, old-values} per
+    swa block, {} for every other block. Must run BEFORE the writes; write
+    targets depend only on positions, so one snapshot covers both the
+    fused verify write and a K-step decode scan."""
+    positions = pos[:, None] + jnp.arange(n_steps)[None, :]  # (L, N)
+
+    def per_block(blk: str, pool: Params, layered: bool) -> Params:
+        mixer, _ = cfg.block_parts(blk)
+        if mixer != "swa" or cfg.window <= 0:
+            return {}
+        first = next(iter(pool.values()))
+        ps = first.shape[2] if layered else first.shape[1]
+        page, off = _ring_targets(cfg.window, ps, bt, positions)
+        old = {
+            name: (big[:, page, off] if layered else big[page, off])
+            for name, big in pool.items()
+        }
+        return {"page": page, "off": off, "old": old}
+
+    undo: Params = {}
+    if cfg.prefix_pattern:
+        undo["prefix"] = {
+            f"l{i}": per_block(blk, paged["prefix"][f"l{i}"], False)
+            for i, blk in enumerate(cfg.prefix_pattern)
+        }
+    undo["units"] = {
+        f"b{i}": per_block(blk, paged["units"][f"b{i}"], True)
+        for i, blk in enumerate(cfg.unit_pattern)
+    }
+    return undo
+
+
+def rollback_pages(
+    cfg: ModelConfig, paged: Params, undo: Params, n_acc: jax.Array
+) -> Params:
+    """Restore displaced ring entries at rejected steps (> ``n_acc`` per
+    lane). Kept steps redirect their restore to the trash page, so one
+    order-independent scatter serves every lane."""
+
+    def per_block(pool: Params, u: Params, layered: bool) -> Params:
+        if not u:
+            return pool
+        steps = jnp.arange(u["page"].shape[1])[None, :]
+        page = jnp.where(steps <= n_acc[:, None], TRASH_PAGE, u["page"])
+        off = u["off"]
+        if layered:
+            return {
+                name: big.at[:, page, off].set(u["old"][name])
+                for name, big in pool.items()
+            }
+        return {
+            name: big.at[page, off].set(u["old"][name])
+            for name, big in pool.items()
+        }
+
+    out: Params = {}
+    if "prefix" in paged:
+        out["prefix"] = {
+            key: per_block(pool, undo["prefix"][key], False)
+            for key, pool in paged["prefix"].items()
+        }
+    out["units"] = {
+        key: per_block(pool, undo["units"][key], True)
+        for key, pool in paged["units"].items()
+    }
+    return out
+
+
+def select_slots(stacked: Params, n_acc: jax.Array) -> Params:
+    """Keep the recurrent state at the accepted step: stacked leaves are
+    (K1, L, ...) for prefix blocks and (R, K1, L, ...) for scanned units;
+    lane ``l`` keeps step ``n_acc[l]``."""
+
+    def pick_prefix(leaf):
+        return leaf[n_acc, jnp.arange(leaf.shape[1])]
+
+    def pick_units(leaf):
+        return leaf[:, n_acc, jnp.arange(leaf.shape[2])]
+
+    return _map_grouped(stacked, pick_prefix, pick_units)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,13 @@ the thin facade wiring the three (the PR-1 API unchanged); and
 ``CloudEdgeRouter`` fronts one LLM engine plus N heterogeneous SLM
 engines — each with its own tokenizer — routing requests by a pluggable
 policy, mirroring the paper's consortium at inference time.
+
+``SpecCoordinator`` (serve/spec.py, DESIGN.md §8) pairs a drafter engine
+with a verifier engine for speculative collaborative decoding — the SLM
+drafts K tokens, the LLM scores them in one fused verify against the
+paged cache and commits the accepted prefix, with rollback on rejection
+per cache family; ``collaborative_policy`` routes long prompts to such a
+pair instead of a single tier.
 """
 from repro.serve.cache import BlockCacheManager
 from repro.serve.engine import Completion, Request, ServeEngine
@@ -17,13 +24,20 @@ from repro.serve.router import (
     EngineSpec,
     RouteDecision,
     RouterCompletion,
+    collaborative_policy,
     explicit_tier_policy,
     prompt_length_policy,
     round_robin_policy,
 )
 from repro.serve.runner import ModelRunner
-from repro.serve.sampling import sample_tokens, sample_tokens_keys
+from repro.serve.sampling import (
+    sample_tokens,
+    sample_tokens_keys,
+    sampling_dist,
+    speculative_accept,
+)
 from repro.serve.scheduler import Scheduler
+from repro.serve.spec import SpecCoordinator
 
 __all__ = [
     "BlockCacheManager",
@@ -36,9 +50,13 @@ __all__ = [
     "RouterCompletion",
     "Scheduler",
     "ServeEngine",
+    "SpecCoordinator",
+    "collaborative_policy",
     "explicit_tier_policy",
     "prompt_length_policy",
     "round_robin_policy",
     "sample_tokens",
     "sample_tokens_keys",
+    "sampling_dist",
+    "speculative_accept",
 ]

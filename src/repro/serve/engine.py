@@ -22,12 +22,18 @@ What changed underneath:
 - sampling keys derive from (request seed, token index) via fold_in, so
   a stream's tokens — greedy or sampled — are byte-identical no matter
   what traffic it shares the pool with;
-- ``len(prompt) + max_new <= max_len`` is validated at ``submit()``.
+- ``len(prompt) + max_new <= max_len`` is validated at ``submit()``;
+- oversubscribed page pools choose what exhaustion means:
+  ``exhaust_policy="evict"`` (the PR-2 behavior) finishes the starved
+  stream ``cache_full``; ``"preempt"`` pushes the *youngest* stream back
+  to the queue head instead — its generated tokens ride along and are
+  re-prefilled on re-admission, so nothing is lost and the resumed
+  generation is byte-identical to an unpreempted run.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -40,6 +46,45 @@ from repro.serve.scheduler import Completion, Request, Scheduler
 Params = Dict
 
 __all__ = ["Completion", "Request", "ServeEngine", "RunnerStats"]
+
+
+def ensure_pages(
+    cache: BlockCacheManager,
+    sched: Scheduler,
+    slot: int,
+    pos: int,
+    policy: str,
+    done: List[Completion],
+    release: Callable[[int], None],
+    lookahead: int = 0,
+) -> bool:
+    """Grow ``slot``'s pages so decode may write up to ``pos``; on pool
+    exhaustion apply the oversubscription policy until it can (or the slot
+    itself is reclaimed — returns False). ``"preempt"`` requeues the
+    youngest active stream (finishing it ``cache_full`` only when its
+    re-prefill could never fit the pool); ``"evict"`` finishes the starved
+    stream itself. ``release(victim)`` frees any paired per-slot resources
+    beyond ``cache`` (e.g. a spec engine's drafter pages)."""
+    while not cache.ensure(slot, pos):
+        victim = sched.youngest_active() if policy == "preempt" else None
+        now = time.time()
+        if victim is None:
+            done.append(sched.force_finish(slot, "cache_full", now))
+            release(slot)
+            return False
+        req = sched.slot_req[victim]
+        flen = len(req.prompt) + max(0, len(sched.slot_gen[victim]) - 1)
+        # requeue only if the stream could also DECODE after re-admission
+        # (write position flen, plus the caller's draft lookahead) with the
+        # whole pool to itself — otherwise it would bounce forever
+        if cache.geom.pages_for(flen + lookahead) <= cache.num_pages - 1:
+            sched.preempt(victim)
+        else:
+            done.append(sched.force_finish(victim, "cache_full", now))
+        release(victim)
+        if victim == slot:
+            return False
+    return True
 
 
 class ServeEngine:
@@ -55,12 +100,16 @@ class ServeEngine:
         page_size: int = 8,
         num_pages: Optional[int] = None,
         gather_live_lanes: bool = True,
+        exhaust_policy: str = "evict",
     ):
         if model.cfg.is_encoder_decoder:
             raise ValueError("engine serves decoder-only configs")
+        if exhaust_policy not in ("evict", "preempt"):
+            raise ValueError(f"unknown exhaust_policy {exhaust_policy!r}")
         self.model = model
         self.max_batch = max_batch
         self.max_len = max_len
+        self.exhaust_policy = exhaust_policy
         self.cache = BlockCacheManager(
             model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
@@ -103,15 +152,16 @@ class ServeEngine:
         done: List[Completion] = []
         while True:
             adm = self.scheduler.pop_admission(
-                lambda req: self.cache.can_admit(len(req.prompt))
+                lambda req: self.cache.can_admit(req.prefill_len)
             )
             if adm is None:
                 return done
             req, slot = adm
-            bt_row = self.cache.alloc_prompt(slot, len(req.prompt))
+            feed = req.feed  # resumed requests re-prefill prompt + generated
+            bt_row = self.cache.alloc_prompt(slot, len(feed))
             tok, self.cache.paged, self.cache.slots = self.runner.prefill(
-                self.cache.paged, self.cache.slots, req.prompt,
-                bucket=self.scheduler.bucket_for(len(req.prompt)),
+                self.cache.paged, self.cache.slots, feed,
+                bucket=self.scheduler.bucket_for(len(feed)),
                 slot=slot, bt_row=bt_row, temperature=req.temperature,
                 seed=req.seed, base_key=self.base_key,
             )
@@ -126,14 +176,16 @@ class ServeEngine:
         """Admit whatever fits, then one live-lane decode step. Returns the
         requests that finished during this step."""
         done = self._admit()
-        live = self.scheduler.live_slots()
-        for sl in list(live):
-            if not self.cache.ensure(sl, int(self.scheduler.pos[sl])):
-                done.append(
-                    self.scheduler.force_finish(sl, "cache_full", time.time())
-                )
-                self.cache.release(sl)
-                live.remove(sl)
+        live = []
+        for sl in self.scheduler.live_slots():
+            if not self.scheduler.active[sl]:
+                continue  # preempted as a victim earlier in this step
+            if ensure_pages(self.cache, self.scheduler, sl,
+                            int(self.scheduler.pos[sl]), self.exhaust_policy,
+                            done, self.cache.release):
+                live.append(sl)
+        # a later slot's reclaim may have preempted an earlier survivor
+        live = [sl for sl in live if self.scheduler.active[sl]]
         if not live:
             return done
 

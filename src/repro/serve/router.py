@@ -100,6 +100,30 @@ def round_robin_policy(include_llm: bool = False) -> Policy:
     return policy
 
 
+def collaborative_policy(threshold: int = 32) -> Policy:
+    """Long prompts go to the speculative (SLM-drafter, LLM-verifier)
+    pair — LLM-quality output at multi-token-per-dispatch decode — instead
+    of picking a single tier; short prompts round-robin the edge SLMs.
+    Requires the router to be built with ``spec_pair=``."""
+    state = {"rr": 0}
+
+    def policy(req: RouteRequest, router: "CloudEdgeRouter") -> RouteDecision:
+        if router.spec_pair is None:
+            raise ValueError(
+                "collaborative_policy needs a router with a spec_pair tier"
+            )
+        if req.llm_len > threshold:
+            return RouteDecision(
+                router.spec_pair.name,
+                f"len {req.llm_len} > {threshold}: draft+verify",
+            )
+        name = router.slms[state["rr"] % len(router.slms)].name
+        state["rr"] += 1
+        return RouteDecision(name, f"len {req.llm_len} <= {threshold}")
+
+    return policy
+
+
 @dataclasses.dataclass
 class RouterCompletion:
     rid: int  # router-wide request id
@@ -119,15 +143,22 @@ class CloudEdgeRouter:
         llm: EngineSpec,
         slms: Sequence[EngineSpec],
         policy: Optional[Policy] = None,
+        spec_pair: Optional[EngineSpec] = None,
     ):
+        """``spec_pair`` registers one extra tier whose engine is a
+        ``serve.spec.SpecCoordinator`` — an (SLM-drafter, LLM-verifier)
+        pair behind the ServeEngine surface; ``collaborative_policy``
+        routes long prompts to it. Its tokenizer is the verifier's."""
         if not slms:
             raise ValueError("a consortium needs at least one SLM tier")
-        names = [llm.name] + [s.name for s in slms]
+        tiers = [llm] + list(slms) + ([spec_pair] if spec_pair else [])
+        names = [s.name for s in tiers]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tier names: {names}")
         self.llm = llm
         self.slms = list(slms)
-        self.specs: Dict[str, EngineSpec] = {s.name: s for s in [llm] + self.slms}
+        self.spec_pair = spec_pair
+        self.specs: Dict[str, EngineSpec] = {s.name: s for s in tiers}
         self.policy = policy or prompt_length_policy()
         self._aligners: Dict[str, TokenAligner] = {}  # slm name -> aligner
         self._pending: Dict[Tuple[str, int], Tuple[int, Optional[str], RouteDecision]] = {}
@@ -241,7 +272,24 @@ class CloudEdgeRouter:
         return sum(s.engine.num_queued for s in self.specs.values())
 
     def stats_summary(self) -> str:
-        return " | ".join(
-            f"{name}: {spec.engine.stats.summary()}"
-            for name, spec in self.specs.items()
-        )
+        """One line per tier: prefill/generated token throughput, and for
+        speculative tiers the draft-acceptance rate — the number that says
+        whether the consortium pairing is actually paying off."""
+        lines = []
+        for name, spec in self.specs.items():
+            st = spec.engine.stats
+            pf = st.prefill_tokens / st.prefill_s if st.prefill_s else 0.0
+            gen_tok = st.decode_tokens + st.spec_tokens
+            gen_s = st.decode_s + st.spec_s
+            gen = gen_tok / gen_s if gen_s else 0.0
+            line = (
+                f"{name}: prefill {st.prefill_tokens} tok ({pf:.1f} tok/s), "
+                f"gen {gen_tok} tok ({gen:.1f} tok/s)"
+            )
+            if st.draft_tokens:
+                line += (
+                    f", draft-accept {st.acceptance_rate:.0%} "
+                    f"({st.accepted_per_verify:.2f} tok/verify)"
+                )
+            lines.append(line)
+        return " | ".join(lines)

@@ -1,7 +1,7 @@
 """ModelRunner: the compiled programs of the serving engine.
 
-Two program families, both bucketed so the compile count is logarithmic,
-not linear (DESIGN.md §7):
+Four program families, all bucketed so the compile count is logarithmic,
+not linear (DESIGN.md §7-§8):
 
 - **prefill**, one program per power-of-two prompt bucket: a fused batch-1
   ``Model.prefill`` over the right-padded prompt (``length``-masked so
@@ -13,6 +13,15 @@ not linear (DESIGN.md §7):
   global — only block tables are per-lane), scatter state back, and sample
   with per-stream fold_in keys. Free slots cost nothing: compute scales
   with live lanes, not pool size.
+- **verify** (speculative decoding, §8), one program per (lane bucket, K):
+  ring-undo snapshot -> fused K+1-token ``verify_step_paged`` ->
+  acceptance (greedy or rejection sampling) -> page rollback + per-step
+  state selection -> scatter. One dispatch commits 1..K+1 tokens/lane.
+- **draft** + **commit_draft** (the drafter side): K+1 sequential decode
+  steps in one dispatch, emitting draft tokens (and, in rejection mode,
+  the drafter's sampling distributions) plus the per-step state stack and
+  ring undo; commit applies rollback once the verifier's accepted lengths
+  are known.
 
 The runner holds no request state; the scheduler decides *what* runs and
 the cache manager owns *where* it lives.
@@ -20,7 +29,7 @@ the cache manager owns *where* it lives.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +37,11 @@ import numpy as np
 
 from repro.models import paged as PG
 from repro.models.model import Model
-from repro.serve.sampling import sample_tokens_keys
+from repro.serve.sampling import (
+    sample_tokens_keys,
+    sampling_dist,
+    speculative_accept,
+)
 
 Params = Dict
 
@@ -40,15 +53,44 @@ class RunnerStats:
         self.decode_tokens = 0  # sampled tokens (live lanes only)
         self.decode_steps = 0
         self.decode_s = 0.0
+        # speculative decoding (DESIGN.md §8)
+        self.verify_steps = 0  # verify dispatches
+        self.verify_lanes = 0  # live lanes summed over verify steps
+        self.draft_tokens = 0  # drafts offered to the verifier (K * lanes)
+        self.accepted_tokens = 0  # drafts the verifier accepted
+        # tokens actually committed by the scheduler (booked by the
+        # coordinator AFTER mid-window EOS/max_new truncation, so spec
+        # throughput is comparable to plain decode_tokens)
+        self.spec_tokens = 0
+        self.spec_s = 0.0  # draft + verify + commit wall time
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of offered draft tokens the verifier accepted."""
+        return self.accepted_tokens / self.draft_tokens if self.draft_tokens else 0.0
+
+    @property
+    def accepted_per_verify(self) -> float:
+        """Mean accepted draft tokens per live lane per verify step."""
+        return self.accepted_tokens / self.verify_lanes if self.verify_lanes else 0.0
 
     def summary(self) -> str:
         pf = self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
         dc = self.decode_tokens / self.decode_s if self.decode_s else 0.0
-        return (
+        out = (
             f"prefill {self.prefill_tokens} tok in {self.prefill_s:.2f}s "
             f"({pf:.1f} tok/s) | decode {self.decode_tokens} tok in "
             f"{self.decode_s:.2f}s ({dc:.1f} tok/s, {self.decode_steps} steps)"
         )
+        if self.verify_steps:
+            sp = self.spec_tokens / self.spec_s if self.spec_s else 0.0
+            out += (
+                f" | spec {self.spec_tokens} tok in {self.spec_s:.2f}s "
+                f"({sp:.1f} tok/s, {self.verify_steps} verifies, "
+                f"{self.accepted_per_verify:.2f} acc/verify, "
+                f"accept {self.acceptance_rate:.0%})"
+            )
+        return out
 
 
 class ModelRunner:
@@ -58,6 +100,9 @@ class ModelRunner:
         self.stats = RunnerStats()
         self._prefill_jit: Dict[int, object] = {}  # prompt bucket -> program
         self._decode_jit: Dict[int, object] = {}  # lane bucket -> program
+        self._verify_jit: Dict[Tuple, object] = {}  # (lanes, k, mode) -> prog
+        self._draft_jit: Dict[Tuple, object] = {}  # (lanes, k, sample) -> prog
+        self._commit_jit: Dict[int, object] = {}  # lanes -> program
 
     # -- compiled-program inventory (asserted in tests) ---------------------
 
@@ -68,6 +113,10 @@ class ModelRunner:
     @property
     def decode_programs(self) -> List[int]:
         return sorted(self._decode_jit)
+
+    @property
+    def verify_programs(self) -> List[Tuple]:
+        return sorted(self._verify_jit)
 
     # -- prefill ------------------------------------------------------------
 
@@ -179,3 +228,218 @@ class ModelRunner:
         self.stats.decode_steps += 1
         self.stats.decode_tokens += n_live
         return toks, paged, slots
+
+    # -- speculative decoding: verifier side (DESIGN.md §8) -----------------
+
+    @staticmethod
+    def _key_grid(base_key, seeds, ngen, k1):
+        """(L, K1) typed keys: position j of lane i draws from
+        fold_in(fold_in(base, seed_i), ngen_i + j) — the same per-request
+        stream shape as plain decode, so outputs stay traffic-independent."""
+        steps = jnp.arange(k1)
+
+        def per_lane(s_, n_):
+            return jax.vmap(
+                lambda j: jax.random.fold_in(
+                    jax.random.fold_in(base_key, s_), n_ + j
+                )
+            )(steps)
+
+        return jax.vmap(per_lane)(seeds, ngen)
+
+    def _verify_for(self, lanes: int, k: int, mode: str):
+        key = (lanes, k, mode)
+        if key in self._verify_jit:
+            return self._verify_jit[key]
+        model = self.model
+
+        def fn(params, paged, slots, tokens, draft_cmp, q, pos, bt, lane_idx,
+               temps, seeds, ngen, base_key):
+            undo = PG.ring_undo_snapshot(model.cfg, paged, bt, pos, k + 1)
+            sub = PG.gather_slots(slots, lane_idx)
+            logits, paged, stacked = model.verify_step_paged(
+                params, paged, sub,
+                {"tokens": tokens, "pos": pos, "block_tables": bt},
+            )
+            if mode == "greedy":
+                out, n_acc = speculative_accept(logits, draft_cmp)
+            else:
+                keys = self._key_grid(base_key, seeds, ngen, k + 1)
+                out, n_acc = speculative_accept(
+                    logits, draft_cmp, temps=temps, keys=keys, q=q
+                )
+            paged = PG.rollback_pages(model.cfg, paged, undo, n_acc)
+            slots = PG.scatter_slots(slots, PG.select_slots(stacked, n_acc),
+                                     lane_idx)
+            return out, n_acc, paged, slots
+
+        self._verify_jit[key] = jax.jit(fn, donate_argnums=(1, 2))
+        return self._verify_jit[key]
+
+    def verify(
+        self,
+        paged: Params,
+        slots: Params,
+        *,
+        tokens: np.ndarray,  # (L, K+1): pending token + K drafts (feed ids)
+        draft_cmp: np.ndarray,  # (L, K): drafts to compare; -1 auto-rejects
+        q,  # (L, K, V) drafter dists (rejection mode) or None (greedy)
+        pos: np.ndarray,
+        block_tables: np.ndarray,
+        lanes: np.ndarray,
+        temps: np.ndarray,
+        seeds: np.ndarray,
+        ngen: np.ndarray,
+        base_key: jax.Array,
+        mode: str,
+        n_live: int,
+    ) -> Tuple[np.ndarray, np.ndarray, Params, Params]:
+        """One fused verify: scores K drafts + samples the correction/bonus
+        per lane, rolls the cache back to the accepted length. Returns
+        (out_tokens (L, K+1), n_acc (L,), paged, slots); lane i commits
+        out_tokens[i, : n_acc[i] + 1]."""
+        L, k1 = tokens.shape
+        t0 = time.time()
+        if q is None:
+            q = jnp.zeros((), jnp.float32)  # unused placeholder operand
+        out, n_acc, paged, slots = self._verify_for(L, k1 - 1, mode)(
+            self.params, paged, slots,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(draft_cmp, jnp.int32),
+            q, jnp.asarray(pos, jnp.int32), jnp.asarray(block_tables),
+            jnp.asarray(lanes, jnp.int32), jnp.asarray(temps, jnp.float32),
+            jnp.asarray(seeds, jnp.int32), jnp.asarray(ngen, jnp.int32),
+            base_key,
+        )
+        out, n_acc = np.asarray(out), np.asarray(n_acc)
+        self.stats.spec_s += time.time() - t0
+        self.stats.verify_steps += 1
+        self.stats.verify_lanes += n_live
+        self.stats.draft_tokens += n_live * (k1 - 1)
+        self.stats.accepted_tokens += int(n_acc[:n_live].sum())
+        return out, n_acc, paged, slots
+
+    # -- speculative decoding: drafter side ---------------------------------
+
+    def _draft_for(self, lanes: int, k: int, sample: bool):
+        key = (lanes, k, sample)
+        if key in self._draft_jit:
+            return self._draft_jit[key]
+        model = self.model
+
+        def fn(params, paged, slots, token, pos, bt, lane_idx, temps, seeds,
+               ngen, base_key):
+            # K+1 steps: the extra step feeds the last draft so the
+            # drafter's cache has no gap when the whole window is accepted
+            undo = PG.ring_undo_snapshot(model.cfg, paged, bt, pos, k + 1)
+            sub = PG.gather_slots(slots, lane_idx)
+
+            def step(carry, j):
+                tok, paged_c, sub_c = carry
+                logits, paged_c, sub_c = model.serve_step_paged(
+                    params, paged_c, sub_c,
+                    {"token": tok, "pos": pos + j, "block_tables": bt},
+                )
+                if sample:
+                    keys = jax.vmap(
+                        lambda s_, n_: jax.random.fold_in(
+                            jax.random.fold_in(base_key, s_), n_ + j
+                        )
+                    )(seeds, ngen)
+                    nxt = sample_tokens_keys(logits, keys, temps)
+                    ys = (nxt, sampling_dist(logits, temps), sub_c)
+                else:
+                    nxt = jnp.argmax(
+                        logits.astype(jnp.float32), -1
+                    ).astype(jnp.int32)
+                    ys = (nxt, sub_c)
+                return (nxt, paged_c, sub_c), ys
+
+            (_, paged, _), ys = jax.lax.scan(
+                step, (token, paged, sub), jnp.arange(k + 1)
+            )
+            if sample:
+                toks, probs, stacked = ys
+                probs = jnp.swapaxes(probs[:k], 0, 1)  # (L, K, V)
+            else:
+                toks, stacked = ys
+                probs = jnp.zeros((), jnp.float32)
+            drafts = jnp.swapaxes(toks[:k], 0, 1)  # (L, K)
+            # normalize stacked layout to select_slots': units (R, K1, L, .)
+            stacked = {
+                grp: jax.tree.map(
+                    (lambda x: jnp.moveaxis(x, 0, 1)) if grp == "units"
+                    else (lambda x: x),
+                    leaves,
+                )
+                for grp, leaves in stacked.items()
+            }
+            return drafts, probs, paged, stacked, undo
+
+        self._draft_jit[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._draft_jit[key]
+
+    def draft(
+        self,
+        paged: Params,
+        slots: Params,
+        *,
+        token: np.ndarray,
+        pos: np.ndarray,
+        block_tables: np.ndarray,
+        lanes: np.ndarray,
+        temps: np.ndarray,
+        seeds: np.ndarray,
+        ngen: np.ndarray,
+        base_key: jax.Array,
+        k: int,
+        sample: bool,
+    ):
+        """Draft K tokens per lane in one dispatch (greedy argmax, or
+        keyed sampling + distributions when ``sample``). Slot state is NOT
+        scattered back — ``commit_draft`` applies it once the verifier's
+        accepted lengths are known. Returns (drafts (L, K), probs, paged,
+        stacked per-step state, ring undo)."""
+        t0 = time.time()
+        out = self._draft_for(len(lanes), k, sample)(
+            self.params, paged, slots,
+            jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
+            jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
+            jnp.asarray(temps, jnp.float32), jnp.asarray(seeds, jnp.int32),
+            jnp.asarray(ngen, jnp.int32), base_key,
+        )
+        self.stats.spec_s += time.time() - t0
+        return out
+
+    def _commit_for(self, lanes: int):
+        if lanes in self._commit_jit:
+            return self._commit_jit[lanes]
+        model = self.model
+
+        def fn(paged, slots, stacked, undo, n_acc, lane_idx):
+            paged = PG.rollback_pages(model.cfg, paged, undo, n_acc)
+            slots = PG.scatter_slots(slots, PG.select_slots(stacked, n_acc),
+                                     lane_idx)
+            return paged, slots
+
+        self._commit_jit[lanes] = jax.jit(fn, donate_argnums=(0, 1))
+        return self._commit_jit[lanes]
+
+    def commit_draft(
+        self,
+        paged: Params,
+        slots: Params,
+        *,
+        stacked: Params,
+        undo: Params,
+        n_acc: np.ndarray,
+        lanes: np.ndarray,
+    ) -> Tuple[Params, Params]:
+        """Roll the drafter back to the verifier's accepted lengths: keep
+        ring writes / recurrent state through step n_acc, restore the rest."""
+        t0 = time.time()
+        paged, slots = self._commit_for(len(lanes))(
+            paged, slots, stacked, undo,
+            jnp.asarray(n_acc, jnp.int32), jnp.asarray(lanes, jnp.int32),
+        )
+        self.stats.spec_s += time.time() - t0
+        return paged, slots

@@ -40,3 +40,83 @@ def sample_tokens_keys(
     lf = logits.astype(jnp.float32)
     g = jax.vmap(lambda k: jax.random.gumbel(k, lf.shape[-1:], jnp.float32))(keys)
     return _gumbel_select(lf, g, temps)
+
+
+# ---------------------------------------------------------------------------
+# Speculative acceptance (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def sampling_dist(logits: jax.Array, temps: jax.Array) -> jax.Array:
+    """The distribution a stream samples from: softmax(logits / T) where
+    T > 0, a one-hot at the argmax where T <= 0 — so greedy streams flow
+    through the same rejection-sampling algebra (accept iff the argmaxes
+    agree, correct to the argmax) with no control flow."""
+    lf = logits.astype(jnp.float32)
+    greedy = jax.nn.one_hot(jnp.argmax(lf, -1), lf.shape[-1], dtype=jnp.float32)
+    t = temps.reshape(temps.shape + (1,) * (lf.ndim - temps.ndim))
+    soft = jax.nn.softmax(lf / jnp.maximum(t, 1e-6), axis=-1)
+    return jnp.where(t > 0, soft, greedy)
+
+
+def _categorical(probs: jax.Array, key: jax.Array) -> jax.Array:
+    g = jax.random.gumbel(key, probs.shape, jnp.float32)
+    return jnp.argmax(jnp.log(jnp.maximum(probs, 1e-30)) + g, axis=-1)
+
+
+def speculative_accept(
+    v_logits: jax.Array,  # (L, K+1, V) verifier logits at pos..pos+K
+    draft: jax.Array,  # (L, K) draft token ids in the verifier vocab; -1 =
+    #                    unmappable (cross-vocab drafting) -> auto-reject
+    *,
+    temps: jax.Array = None,  # (L,) — rejection mode only
+    keys: jax.Array = None,  # (L, K+1) typed PRNG keys — rejection mode only
+    q: jax.Array = None,  # (L, K, V) drafter sampling dist — rejection mode
+):
+    """Decide the accepted draft prefix per lane and assemble the committed
+    tokens. Returns (out_tokens (L, K+1), n_acc (L,)): lane ``l`` commits
+    ``out_tokens[l, : n_acc[l] + 1]`` — the accepted drafts plus one
+    correction (first rejection) or bonus (all K accepted) token.
+
+    Greedy mode (``q is None``): accept while the draft equals the
+    verifier argmax; corrections are the argmax — byte-identical to plain
+    greedy decoding by induction over the committed prefix.
+
+    Rejection mode: standard speculative sampling — accept ``d_i`` with
+    prob ``min(1, p_i(d_i) / q_i(d_i))``, on rejection resample from
+    ``normalize(max(p_i - q_i, 0))``, bonus from ``p_K`` — preserving the
+    verifier's sampling distribution exactly. All randomness is keyed per
+    (request seed, token index), never by lane, so generations stay
+    traffic-independent."""
+    lanes, k1 = v_logits.shape[:2]
+    k = k1 - 1
+    if q is None:
+        tgt = jnp.argmax(v_logits.astype(jnp.float32), -1).astype(jnp.int32)
+        acc = (draft == tgt[:, :k]).astype(jnp.int32)
+        corr = tgt
+    else:
+        p = sampling_dist(v_logits, temps)  # (L, K1, V)
+        safe = jnp.maximum(draft, 0)[..., None]
+        p_d = jnp.take_along_axis(p[:, :k], safe, axis=-1)[..., 0]
+        q_d = jnp.take_along_axis(q, safe, axis=-1)[..., 0]
+        ratio = jnp.where(draft >= 0, p_d / jnp.maximum(q_d, 1e-30), 0.0)
+        u = jax.vmap(jax.vmap(
+            lambda kk: jax.random.uniform(jax.random.fold_in(kk, 0))
+        ))(keys[:, :k])
+        acc = (u < ratio).astype(jnp.int32)
+        res = jnp.maximum(p[:, :k] - q, 0.0)
+        res_sum = res.sum(-1, keepdims=True)
+        res = jnp.where(res_sum > 0, res / jnp.maximum(res_sum, 1e-30), p[:, :k])
+        dists = jnp.concatenate([res, p[:, k:]], axis=1)  # (L, K1, V)
+        corr = jax.vmap(jax.vmap(
+            lambda pr, kk: _categorical(pr, jax.random.fold_in(kk, 1))
+        ))(dists, keys).astype(jnp.int32)
+    n_acc = jnp.cumprod(acc, axis=1).sum(axis=1).astype(jnp.int32)
+    steps = jnp.arange(k1)[None, :]
+    draft_p = jnp.concatenate(
+        [draft, jnp.zeros((lanes, 1), jnp.int32)], axis=1
+    )
+    out = jnp.where(
+        steps < n_acc[:, None], draft_p,
+        jnp.where(steps == n_acc[:, None], corr, 0),
+    ).astype(jnp.int32)
+    return out, n_acc

@@ -36,6 +36,22 @@ class Request:
     temperature: float
     submit_time: float
     seed: int = 0  # sampling stream id; defaults to rid
+    # preempt-and-requeue state: tokens generated before preemption (kept;
+    # re-prefilled as part of the prompt on re-admission) and the original
+    # first-token time (TTFT must not reset on resume)
+    done: List[int] = dataclasses.field(default_factory=list)
+    first_tok_t: float = 0.0
+
+    @property
+    def feed(self) -> List[int]:
+        """Tokens fed at (re-)admission: the prompt plus all generated
+        tokens except the last, which stays the pending ``cur`` token
+        (restored by ``on_admitted`` in place of the prefill sample)."""
+        return self.prompt + self.done[:-1] if self.done else self.prompt
+
+    @property
+    def prefill_len(self) -> int:
+        return len(self.prompt) + max(0, len(self.done) - 1)
 
 
 @dataclasses.dataclass
@@ -129,14 +145,19 @@ class Scheduler:
     def on_admitted(
         self, req: Request, slot: int, first_token: int, now: float
     ) -> Optional[Completion]:
-        self.pos[slot] = len(req.prompt)
+        """Install a freshly prefilled request. For a request resumed after
+        preemption (``req.done`` non-empty) the prefill consumed the prompt
+        plus the already-generated tokens; the runner's sampled token is
+        discarded — the pending token is the one sampled before preemption,
+        so the resumed stream is byte-identical to an unpreempted run."""
+        self.pos[slot] = req.prefill_len
         self.active[slot] = True
-        self.cur[slot] = first_token
+        self.cur[slot] = req.done[-1] if req.done else first_token
         self.temps[slot] = req.temperature
         self.seeds[slot] = req.seed
         self.slot_req[slot] = req
-        self.slot_gen[slot] = [first_token]
-        self.first_tok_t[slot] = now
+        self.slot_gen[slot] = list(req.done) if req.done else [first_token]
+        self.first_tok_t[slot] = req.first_tok_t if req.done else now
         return self._maybe_finish(slot, now)
 
     # -- decode -------------------------------------------------------------
@@ -163,7 +184,45 @@ class Scheduler:
         self.slot_gen[slot].append(token)
         return self._maybe_finish(slot, now)
 
-    # -- eviction -----------------------------------------------------------
+    def on_tokens(
+        self, slot: int, tokens: List[int], now: float
+    ) -> Optional[Completion]:
+        """Commit a verify window's worth of tokens (accepted drafts plus
+        the correction/bonus token). A request may finish mid-window — on
+        EOS or max_new the remaining tokens are discarded, exactly as if
+        they had never been drafted."""
+        for tok in tokens:
+            fin = self.on_token(slot, int(tok), now)
+            if fin is not None:
+                return fin
+        return None
+
+    # -- preemption / eviction ---------------------------------------------
+
+    def youngest_active(self) -> Optional[int]:
+        """The most recently submitted active slot — the preemption victim
+        on page-pool exhaustion (least progress lost; FIFO order of the
+        older streams preserved)."""
+        best, best_key = None, None
+        for slot in np.nonzero(self.active)[0]:
+            req = self.slot_req[slot]
+            key = (req.submit_time, req.rid)
+            if best_key is None or key > best_key:
+                best, best_key = int(slot), key
+        return best
+
+    def preempt(self, slot: int) -> Request:
+        """Push an active stream back to the queue head, carrying its
+        generated tokens; re-admission re-prefills prompt + generated and
+        resumes the stream byte-identically (``on_admitted``)."""
+        req = self.slot_req[slot]
+        req.done = list(self.slot_gen[slot])
+        req.first_tok_t = float(self.first_tok_t[slot])
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.free.append(slot)
+        self.queue.appendleft(req)
+        return req
 
     def _maybe_finish(self, slot: int, now: float) -> Optional[Completion]:
         req = self.slot_req[slot]

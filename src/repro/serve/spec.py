@@ -1,0 +1,355 @@
+"""Speculative collaborative decoding: SLM drafts, LLM verifies (§8).
+
+The consortium's inference-time pairing, one level deeper than routing: a
+``SpecCoordinator`` drives TWO paged serving stacks in lockstep — a cheap
+*drafter* (any family: attention, swa, MLA, mLSTM/sLSTM, Mamba) and the
+*verifier* LLM — so each verifier dispatch commits up to K+1 tokens
+instead of one:
+
+1. the drafter runs K+1 sequential decode steps in one compiled program
+   (``ModelRunner.draft``), proposing K tokens per live lane;
+2. the verifier scores the pending token plus all K drafts in one fused
+   bucketed call against its paged cache (``verify_step_paged``) and
+   accepts a prefix — greedy token match, or distribution-preserving
+   rejection sampling (``sampling.speculative_accept``);
+3. both stacks roll back to the accepted length: attn/mla rejected writes
+   are position-masked (free), swa ring entries are restored from undo
+   snapshots, recurrent slot state is re-selected from the per-step stack.
+
+Greedy acceptance is **byte-identical** to plain verifier-only decoding
+(asserted per cache family in ``tests/test_spec.py``): accepted drafts
+equal the verifier argmax at every position by construction, and the
+correction/bonus token is the argmax itself.
+
+Cross-vocabulary drafting reuses the structure-agnostic bridge from
+co-tuning: draft ids move through ``core.align.TokenAligner`` vocab maps
+(drafter -> verifier); ids without an exact-piece image **auto-reject**
+(compared as -1, which never matches), and committed verifier tokens map
+back to condition the drafter. The drafter is then an approximation by
+design — it only ever affects the acceptance rate, never the output.
+
+Sampling keys stay per-request (fold_in of seed and token index) on both
+stacks, so generations remain traffic-independent (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.align import TokenAligner
+from repro.models.model import Model
+from repro.serve.cache import BlockCacheManager
+from repro.serve.engine import ensure_pages
+from repro.serve.runner import ModelRunner, RunnerStats
+from repro.serve.scheduler import Completion, Scheduler
+
+Params = Dict
+
+__all__ = ["SpecCoordinator"]
+
+
+class SpecCoordinator:
+    """Pairs a drafter engine with a verifier engine over the paged stack.
+
+    Duck-types ``ServeEngine`` (``submit / step / run``, ``Completion``,
+    ``num_active / num_queued``, ``stats``) so a ``CloudEdgeRouter`` tier
+    can be a (drafter, verifier) pair instead of a single engine (the
+    ``collaborative`` policy, serve/router.py).
+    """
+
+    def __init__(
+        self,
+        verifier_model: Model,
+        verifier_params: Params,
+        drafter_model: Model,
+        drafter_params: Params,
+        *,
+        max_batch: int,
+        max_len: int,
+        k: int = 4,
+        mode: str = "greedy",
+        eos_id: Optional[int] = None,
+        seed: int = 0,
+        page_size: int = 8,
+        num_pages: Optional[int] = None,
+        drafter_num_pages: Optional[int] = None,
+        verifier_tokenizer=None,
+        drafter_tokenizer=None,
+        gather_live_lanes: bool = True,
+        exhaust_policy: str = "evict",
+    ):
+        if verifier_model.cfg.is_encoder_decoder or drafter_model.cfg.is_encoder_decoder:
+            raise ValueError("speculative decoding serves decoder-only configs")
+        if mode not in ("greedy", "rejection"):
+            raise ValueError(f"unknown acceptance mode {mode!r}")
+        if exhaust_policy not in ("evict", "preempt"):
+            raise ValueError(f"unknown exhaust_policy {exhaust_policy!r}")
+        if k < 1:
+            raise ValueError(f"draft window k={k} < 1")
+        self.k = k
+        self.mode = mode
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.exhaust_policy = exhaust_policy
+
+        # cross-vocab bridge: built only when the tokenizers differ
+        self.aligner: Optional[TokenAligner] = None
+        if (verifier_tokenizer is not None and drafter_tokenizer is not None
+                and verifier_tokenizer is not drafter_tokenizer):
+            self.aligner = TokenAligner(verifier_tokenizer, drafter_tokenizer)
+            if mode == "rejection":
+                raise ValueError(
+                    "rejection-sampling acceptance compares distributions "
+                    "and needs a shared vocabulary; cross-vocab drafting "
+                    "supports greedy acceptance only"
+                )
+        elif drafter_model.cfg.vocab_size != verifier_model.cfg.vocab_size:
+            raise ValueError(
+                "drafter/verifier vocab sizes differ "
+                f"({drafter_model.cfg.vocab_size} vs "
+                f"{verifier_model.cfg.vocab_size}); pass both tokenizers to "
+                "draft across vocabularies"
+            )
+
+        self.cache_v = BlockCacheManager(
+            verifier_model, num_slots=max_batch, max_len=max_len,
+            page_size=page_size, num_pages=num_pages,
+        )
+        self.cache_d = BlockCacheManager(
+            drafter_model, num_slots=max_batch, max_len=max_len,
+            page_size=page_size, num_pages=drafter_num_pages,
+        )
+        for name, geom in (("verifier", self.cache_v.geom),
+                           ("drafter", self.cache_d.geom)):
+            if geom.swa_pages and k + 1 > geom.swa_pages * page_size:
+                raise ValueError(
+                    f"{name} swa ring capacity {geom.swa_pages * page_size} "
+                    f"cannot hold a {k + 1}-token verify window (rollback "
+                    "would alias ring slots); lower k or raise the window"
+                )
+        self.scheduler = Scheduler(
+            num_slots=max_batch, max_len=max_len, eos_id=eos_id,
+            bucket_cap=self.cache_v.geom.max_len,
+            min_bucket=max(8, page_size),
+            gather_live_lanes=gather_live_lanes,
+        )
+        self.runner_v = ModelRunner(verifier_model, verifier_params)
+        self.runner_d = ModelRunner(drafter_model, drafter_params)
+        self.base_key = jax.random.key(seed)
+        self.draft_key = jax.random.key(seed + 1)
+        # pending drafter-vocab token per slot (the drafter's image of the
+        # verifier's pending ``cur`` token)
+        self.draft_cur = np.zeros(max_batch, np.int32)
+
+    # -- vocab bridging ------------------------------------------------------
+
+    def _to_drafter(self, ids: List[int]) -> List[int]:
+        if self.aligner is None:
+            return list(ids)
+        return [int(self.aligner.vocab_a2b[t]) for t in ids]
+
+    def _map_drafts(self, drafts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Drafter-vocab drafts -> (feed ids, compare ids) in the verifier
+        vocab. Unmappable drafts compare as -1 (auto-reject) but still feed
+        a valid closest-piece id, so the verifier batch stays well-formed."""
+        if self.aligner is None:
+            return drafts, drafts
+        feed = self.aligner.vocab_b2a[drafts].astype(np.int32)
+        cmp = np.where(self.aligner.exact_b2a[drafts], feed, -1).astype(np.int32)
+        return feed, cmp
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(
+        self,
+        prompt: List[int],
+        *,
+        max_new: int = 32,
+        temperature: float = 0.0,
+        seed: Optional[int] = None,
+    ) -> int:
+        """Queue a request (verifier-vocab ids). Greedy acceptance serves
+        temperature-0 streams only — sampled streams need ``mode=
+        'rejection'`` to preserve their distribution."""
+        if temperature > 0 and self.mode == "greedy":
+            raise ValueError(
+                "greedy acceptance is exact only for temperature-0 streams; "
+                "build the coordinator with mode='rejection' to sample"
+            )
+        for cache in (self.cache_v, self.cache_d):
+            need = cache.geom.admission_pages(len(prompt))
+            if need > cache.num_pages - 1:
+                raise ValueError(
+                    f"prompt needs {need} pages but the pool only has "
+                    f"{cache.num_pages - 1}; it could never be admitted"
+                )
+        return self.scheduler.submit(
+            prompt, max_new=max_new, temperature=temperature, seed=seed
+        )
+
+    def _release(self, slot: int) -> None:
+        self.cache_v.release(slot)
+        self.cache_d.release(slot)
+
+    def _admit(self) -> List[Completion]:
+        done: List[Completion] = []
+        while True:
+            adm = self.scheduler.pop_admission(
+                lambda req: self.cache_v.can_admit(req.prefill_len)
+                and self.cache_d.can_admit(req.prefill_len)
+            )
+            if adm is None:
+                return done
+            req, slot = adm
+            feed = req.feed  # resumed requests re-prefill prompt + generated
+            bucket = self.scheduler.bucket_for(len(feed))
+            bt_v = self.cache_v.alloc_prompt(slot, len(feed))
+            tok, self.cache_v.paged, self.cache_v.slots = self.runner_v.prefill(
+                self.cache_v.paged, self.cache_v.slots, feed, bucket=bucket,
+                slot=slot, bt_row=bt_v, temperature=req.temperature,
+                seed=req.seed, base_key=self.base_key,
+            )
+            fin = self.scheduler.on_admitted(req, slot, tok, time.time())
+            if fin is not None:  # finished at admission: never draft
+                done.append(fin)
+                self.cache_v.release(slot)
+                continue
+            # the drafter mirrors the stream token-for-token (the vocab map
+            # preserves length), so positions stay aligned across stacks
+            feed_d = self._to_drafter(feed)
+            bt_d = self.cache_d.alloc_prompt(slot, len(feed_d))
+            _, self.cache_d.paged, self.cache_d.slots = self.runner_d.prefill(
+                self.cache_d.paged, self.cache_d.slots, feed_d, bucket=bucket,
+                slot=slot, bt_row=bt_d, temperature=0.0,
+                seed=req.seed, base_key=self.draft_key,
+            )
+            cur = int(self.scheduler.cur[slot])
+            self.draft_cur[slot] = (
+                int(self.aligner.vocab_a2b[cur]) if self.aligner else cur
+            )
+
+    # -- stepping ------------------------------------------------------------
+
+    def step(self) -> List[Completion]:
+        """Admit whatever fits, then one draft -> verify -> commit round:
+        every live lane commits between 1 and K+1 tokens. Requests may
+        finish mid-window (EOS / max_new); the scheduler discards the rest
+        of their window."""
+        done = self._admit()
+        k = self.k
+        live: List[int] = []
+        for sl in self.scheduler.live_slots():
+            if not self.scheduler.active[sl]:
+                continue
+            # both stacks write positions pos..pos+K this round
+            target = int(self.scheduler.pos[sl]) + k
+            if ensure_pages(self.cache_v, self.scheduler, sl, target,
+                            self.exhaust_policy, done, self._release,
+                            lookahead=k) \
+                    and self.scheduler.active[sl] \
+                    and ensure_pages(self.cache_d, self.scheduler, sl, target,
+                                     self.exhaust_policy, done, self._release,
+                                     lookahead=k):
+                live.append(sl)
+        live = [sl for sl in live if self.scheduler.active[sl]]
+        if not live:
+            return done
+
+        sched = self.scheduler
+        bucket = sched.decode_bucket(len(live))
+        lanes = live + [self.cache_v.trash_slot] * (bucket - len(live))
+        lanes_np = np.asarray(lanes, np.int32)
+        pad = np.zeros(bucket - len(live), np.int32)
+        pos = np.concatenate([sched.pos[live], pad])
+        temps = np.concatenate([sched.temps[live], pad.astype(np.float32)])
+        seeds = np.concatenate([sched.seeds[live], pad])
+        ngen = np.concatenate(
+            [np.asarray([sched.ngen(s) for s in live], np.int32), pad]
+        )
+        sample = self.mode == "rejection"
+
+        drafts, q, self.cache_d.paged, stacked, undo = self.runner_d.draft(
+            self.cache_d.paged, self.cache_d.slots,
+            token=np.concatenate([self.draft_cur[live], pad]),
+            pos=pos, block_tables=self.cache_d.table_rows(lanes),
+            lanes=lanes_np, temps=temps, seeds=seeds, ngen=ngen,
+            base_key=self.draft_key, k=k, sample=sample,
+        )
+        feed, cmp = self._map_drafts(np.asarray(drafts))
+        tokens = np.concatenate(
+            [np.concatenate([sched.cur[live], pad])[:, None], feed], axis=1
+        )
+        out, n_acc, self.cache_v.paged, self.cache_v.slots = self.runner_v.verify(
+            self.cache_v.paged, self.cache_v.slots,
+            tokens=tokens, draft_cmp=cmp, q=q if sample else None,
+            pos=pos, block_tables=self.cache_v.table_rows(lanes),
+            lanes=lanes_np, temps=temps, seeds=seeds, ngen=ngen,
+            base_key=self.base_key, mode=self.mode, n_live=len(live),
+        )
+        self.cache_d.paged, self.cache_d.slots = self.runner_d.commit_draft(
+            self.cache_d.paged, self.cache_d.slots,
+            stacked=stacked, undo=undo, n_acc=n_acc, lanes=lanes_np,
+        )
+
+        now = time.time()
+        committed = 0
+        for i, sl in enumerate(live):
+            before = sched.ngen(sl)
+            fin = sched.on_tokens(sl, list(out[i, : n_acc[i] + 1]), now)
+            if fin is not None:
+                committed += len(fin.tokens) - before
+                done.append(fin)
+                self._release(sl)
+            else:
+                committed += sched.ngen(sl) - before
+                cur = int(sched.cur[sl])
+                self.draft_cur[sl] = (
+                    int(self.aligner.vocab_a2b[cur]) if self.aligner else cur
+                )
+        # booked here, not in the runner: a mid-window EOS/max_new finish
+        # discards the tail of the window and those tokens must not count
+        self.runner_v.stats.spec_tokens += committed
+        return done
+
+    def run(self, max_steps: Optional[int] = None) -> List[Completion]:
+        out: List[Completion] = []
+        steps = 0
+        while self.scheduler.queue or self.scheduler.active.any():
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def stats(self) -> RunnerStats:
+        """Merged pair view: the verifier's counters (verify stats live
+        there) with the drafter's wall time folded in, so throughput is
+        end-to-end for the pair, not verifier-only."""
+        v, d = self.runner_v.stats, self.runner_d.stats
+        out = RunnerStats()
+        out.__dict__.update(v.__dict__)
+        out.prefill_s += d.prefill_s
+        out.spec_s += d.spec_s
+        return out
+
+    @property
+    def num_active(self) -> int:
+        return self.scheduler.num_active
+
+    @property
+    def num_queued(self) -> int:
+        return self.scheduler.num_queued
+
+    @property
+    def free_slots(self) -> List[int]:
+        return sorted(self.scheduler.free)
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.cache_v.cache_bytes + self.cache_d.cache_bytes

@@ -333,6 +333,70 @@ def test_engine_rejects_never_admittable_and_bad_page_size():
         ServeEngine(model, params, max_batch=2, max_len=60, page_size=12)
 
 
+def test_preempt_requeue_on_pool_exhaustion():
+    """exhaust_policy='preempt': on page-pool exhaustion the youngest
+    stream is pushed back to the queue (keeping its generated tokens) and
+    re-prefilled on re-admission — every request finishes 'length' with
+    generations byte-identical to an unconstrained pool, where the evict
+    policy would have killed streams with 'cache_full'."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(1)
+    prompts = [list(rng.randint(5, cfg.vocab_size, (8,))) for _ in range(3)]
+
+    ample = ServeEngine(model, params, max_batch=2, max_len=48, seed=0)
+    for p in prompts:
+        ample.submit(p, max_new=20)
+    ref = {c.rid: c.tokens for c in ample.run()}
+
+    # 5 usable pages; two 28-token streams need 8 -> mid-decode exhaustion
+    evict = ServeEngine(model, params, max_batch=2, max_len=48,
+                        page_size=8, num_pages=6, seed=0)
+    for p in prompts:
+        evict.submit(p, max_new=20)
+    assert any(c.finish_reason == "cache_full" for c in evict.run())
+
+    pre = ServeEngine(model, params, max_batch=2, max_len=48, page_size=8,
+                      num_pages=6, seed=0, exhaust_policy="preempt")
+    for p in prompts:
+        pre.submit(p, max_new=20)
+    done = {c.rid: c for c in pre.run()}
+    assert sorted(done) == [0, 1, 2]
+    for rid, c in done.items():
+        assert c.finish_reason == "length"
+        assert c.tokens == ref[rid], f"request {rid} diverged after preemption"
+        assert c.latency_s >= c.ttft_s >= 0
+    # all pages and slots returned
+    assert pre.cache.free_page_count == pre.cache.num_pages - 1
+    assert pre.num_active == 0 and pre.num_queued == 0
+
+
+def test_preempt_unresumable_stream_finishes_cache_full():
+    """A stream whose prompt+generation could never re-fit the pool is
+    finished 'cache_full' instead of being requeued forever."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(2)
+    eng = ServeEngine(model, params, max_batch=1, max_len=64, page_size=8,
+                      num_pages=3, seed=0, exhaust_policy="preempt")
+    eng.submit(list(rng.randint(5, cfg.vocab_size, (10,))), max_new=40)
+    (c,) = eng.run(max_steps=100)
+    assert c.finish_reason == "cache_full"
+    assert eng.num_active == 0 and eng.num_queued == 0
+
+
+def test_scheduler_on_tokens_truncates_at_eos():
+    """Multi-token commit (spec verify window) stops exactly at EOS and
+    discards the rest of the window."""
+    from repro.serve import Scheduler
+
+    sched = Scheduler(num_slots=1, max_len=32, eos_id=9)
+    sched.submit([1, 2, 3], max_new=10)
+    req, slot = sched.pop_admission(lambda r: True)
+    assert sched.on_admitted(req, slot, 5, 0.0) is None
+    fin = sched.on_tokens(slot, [6, 7, 9, 8, 8], 1.0)
+    assert fin is not None and fin.finish_reason == "eos"
+    assert fin.tokens == [5, 6, 7, 9]  # nothing after EOS leaks out
+
+
 # ---------------------------------------------------------------------------
 # CloudEdgeRouter: one LLM + heterogeneous SLMs, one process
 # ---------------------------------------------------------------------------

@@ -1,0 +1,281 @@
+"""Speculative collaborative decoding tests (DESIGN.md §8).
+
+Correctness contract, per cache family:
+
+1. Greedy speculative decoding is BYTE-IDENTICAL to plain verifier-only
+   decoding — for every verifier cache family (attn / swa ring / MLA /
+   mLSTM+sLSTM / Mamba hybrid), with a mismatched drafter so nearly every
+   verify window is rejected and rolled back (the hard path: swa ring
+   restore, recurrent per-step state selection).
+2. The same, sweeping the DRAFTER family (recurrent and ring drafters
+   exercise the draft-side commit/rollback machinery).
+3. Self-speculation (drafter == verifier) accepts every draft: the
+   acceptance upper bound, committing K+1 tokens per verify.
+4. Rejection-sampling acceptance with a tied drafter also accepts
+   everything (p == q => accept prob 1), stays traffic-independent, and
+   greedy streams under it reduce to exact greedy.
+5. Cross-vocab drafting through the TokenAligner vocab maps: unmappable
+   draft ids auto-reject, output still byte-identical to the verifier.
+6. Mid-window finish: EOS or max_new inside a verify window truncates the
+   commit exactly there.
+
+Plus TokenAligner edge cases used by drafting (round-trip of mappable
+ids, unmappable-id behavior, identical-tokenizer fast path).
+
+fp32 params throughout, for the same reason as tests/test_serve.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.align import TokenAligner
+from repro.models import build_model
+from repro.serve import ServeEngine, SpecCoordinator
+
+MAX_LEN = 32
+
+
+def _setup(arch, seed=0, vocab=None):
+    if arch == "gemma-2b-swa":
+        from repro.configs.gemma_2b import sliding_variant
+
+        cfg = sliding_variant(get_arch("gemma-2b").reduced(), window=8)
+    else:
+        cfg = get_arch(arch).reduced()
+    if vocab is not None:
+        cfg = dataclasses.replace(cfg, vocab_size=vocab)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _prompts(cfg, lengths=(9, 6, 11), seed=3):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(5, cfg.vocab_size, (n,))) for n in lengths]
+
+
+def _plain_ref(model, params, prompts, max_new=6, **kw):
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0, **kw)
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    return {c.rid: c.tokens for c in eng.run()}
+
+
+VERIFIER_FAMILIES = [
+    "qwen2-1.5b",  # full-attention paged verify
+    "gemma-2b-swa",  # swa ring: undo snapshot + rejected-entry restore
+    "deepseek-v3-671b",  # MLA latent pools + MoE
+    "xlstm-1.3b",  # mLSTM + sLSTM per-step state selection
+    "jamba-1.5-large-398b",  # mamba hybrid: paged attn + slot rollback mixed
+]
+
+
+@pytest.mark.parametrize("arch", VERIFIER_FAMILIES)
+def test_greedy_spec_matches_plain_per_family(arch):
+    """A drafter with different weights is rejected almost every window —
+    every round exercises verify-side rollback — and the output must still
+    equal plain decoding byte-for-byte."""
+    cfg, vm, vp = _setup(arch)
+    _, dm, dp = _setup("qwen2-1.5b", seed=7, vocab=cfg.vocab_size)
+    prompts = _prompts(cfg)
+    ref = _plain_ref(vm, vp, prompts)
+
+    spec = SpecCoordinator(vm, vp, dm, dp, max_batch=2, max_len=MAX_LEN,
+                           k=3, seed=0)
+    for p in prompts:
+        spec.submit(p, max_new=6)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref, f"{arch}: spec {got} != plain {ref}"
+    # the pool drained: every page returned on both stacks
+    assert spec.cache_v.free_page_count == spec.cache_v.num_pages - 1
+    assert spec.cache_d.free_page_count == spec.cache_d.num_pages - 1
+
+
+@pytest.mark.parametrize("darch", ["xlstm-1.3b", "gemma-2b-swa"])
+def test_greedy_spec_drafter_family_rollback(darch):
+    """Recurrent / ring DRAFTERS: the drafter's own state must roll back
+    to the accepted length (commit_draft) or later drafts diverge."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    _, dm, dp = _setup(darch, seed=5, vocab=cfg.vocab_size)
+    prompts = _prompts(cfg, lengths=(9, 6))
+    ref = _plain_ref(vm, vp, prompts)
+
+    spec = SpecCoordinator(vm, vp, dm, dp, max_batch=2, max_len=MAX_LEN,
+                           k=3, seed=0)
+    for p in prompts:
+        spec.submit(p, max_new=6)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref
+
+
+def test_self_speculation_accepts_every_draft():
+    """Drafter == verifier: greedy drafts equal greedy argmax by
+    construction, so acceptance is 100% and each verify commits K+1."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    prompts = _prompts(cfg)
+    ref = _plain_ref(vm, vp, prompts, max_new=8)
+
+    spec = SpecCoordinator(vm, vp, vm, vp, max_batch=2, max_len=MAX_LEN,
+                           k=3, seed=0)
+    for p in prompts:
+        spec.submit(p, max_new=8)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref
+    st = spec.stats
+    assert st.acceptance_rate == 1.0
+    assert st.accepted_per_verify == pytest.approx(3.0)
+
+
+def test_rejection_sampling_tied_drafter_and_traffic_independence():
+    """mode='rejection' with q == p accepts every draft; a sampled stream's
+    output depends only on its seed, not on co-scheduled traffic."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    prompts = _prompts(cfg)
+
+    def run(extra_traffic):
+        spec = SpecCoordinator(vm, vp, vm, vp, max_batch=2, max_len=MAX_LEN,
+                               k=3, seed=0, mode="rejection")
+        spec.submit(prompts[0], max_new=6, temperature=0.8, seed=123)
+        if extra_traffic:
+            for p in prompts[1:]:
+                spec.submit(p, max_new=6, temperature=0.5)
+        done = {c.rid: c for c in spec.run()}
+        return done[0].tokens, spec
+
+    solo, spec_a = run(False)
+    pooled, spec_b = run(True)
+    assert solo == pooled, "sampled stream changed with co-traffic"
+    assert spec_b.stats.acceptance_rate == 1.0  # p == q
+    assert all(0 <= t < cfg.vocab_size for t in solo)
+    # greedy streams under rejection mode reduce to exact greedy decode
+    spec = SpecCoordinator(vm, vp, vm, vp, max_batch=2, max_len=MAX_LEN,
+                           k=3, seed=0, mode="rejection")
+    for p in prompts:
+        spec.submit(p, max_new=6)  # temperature 0
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == _plain_ref(vm, vp, prompts)
+
+
+def test_greedy_mode_rejects_sampled_submit():
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    spec = SpecCoordinator(vm, vp, vm, vp, max_batch=1, max_len=MAX_LEN, k=2)
+    with pytest.raises(ValueError, match="rejection"):
+        spec.submit([1, 2, 3], temperature=0.5)
+
+
+def test_spec_finishes_mid_window():
+    """max_new lands inside a verify window: the commit truncates exactly
+    at the budget even though the verifier accepted more."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    prompts = _prompts(cfg, lengths=(9,))
+    ref = _plain_ref(vm, vp, prompts, max_new=5)
+    # K=3 commits up to 4/round: 5 = 4 + truncated-to-1
+    spec = SpecCoordinator(vm, vp, vm, vp, max_batch=1, max_len=MAX_LEN,
+                           k=3, seed=0)
+    spec.submit(prompts[0], max_new=5)
+    (c,) = spec.run()
+    assert c.tokens == ref[0] and len(c.tokens) == 5
+    assert c.finish_reason == "length"
+
+
+# ---------------------------------------------------------------------------
+# Cross-vocab drafting through the TokenAligner bridge
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def toks():
+    from repro.data.synthetic import generate_corpus
+    from repro.data.tokenizer import build_tokenizer
+
+    corpus = generate_corpus(40, seed=0)
+    texts = [s.text for s in corpus]
+    return (
+        corpus,
+        build_tokenizer("cloud", texts, max_piece=12, budget=1024),
+        build_tokenizer("edge", texts, max_piece=4, budget=512),
+    )
+
+
+def test_cross_vocab_drafting_matches_plain(toks):
+    """Drafter with its OWN tokenizer: draft ids cross through the vocab
+    maps, unmappable ids auto-reject, and greedy output is still
+    byte-identical to the verifier alone."""
+    corpus, tok_v, tok_d = toks
+    cfg_v, vm, vp = _setup("qwen2-1.5b", vocab=tok_v.vocab_size)
+    _, dm, dp = _setup("xlstm-1.3b", seed=1, vocab=tok_d.vocab_size)
+
+    prompts = [
+        tok_v.encode(f"question : {s.question} answer :", bos=True)[:12]
+        for s in corpus[:2]
+    ]
+    ref = _plain_ref(vm, vp, prompts, max_new=5)
+    spec = SpecCoordinator(
+        vm, vp, dm, dp, max_batch=2, max_len=MAX_LEN, k=2, seed=0,
+        verifier_tokenizer=tok_v, drafter_tokenizer=tok_d,
+    )
+    for p in prompts:
+        spec.submit(p, max_new=5)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref
+    for c_tokens in got.values():
+        assert all(0 <= t < tok_v.vocab_size for t in c_tokens)
+
+
+def test_cross_vocab_rejection_mode_refused(toks):
+    _, tok_v, tok_d = toks
+    _, vm, vp = _setup("qwen2-1.5b", vocab=tok_v.vocab_size)
+    _, dm, dp = _setup("xlstm-1.3b", seed=1, vocab=tok_d.vocab_size)
+    with pytest.raises(ValueError, match="shared vocabulary"):
+        SpecCoordinator(vm, vp, dm, dp, max_batch=1, max_len=MAX_LEN, k=2,
+                        mode="rejection",
+                        verifier_tokenizer=tok_v, drafter_tokenizer=tok_d)
+
+
+# ---------------------------------------------------------------------------
+# TokenAligner edge cases used by drafting
+# ---------------------------------------------------------------------------
+
+def test_aligner_mappable_round_trip(toks):
+    """Ids whose pieces exist verbatim in both vocabularies round-trip
+    exactly through a2b then b2a."""
+    _, tok_v, tok_d = toks
+    al = TokenAligner(tok_v, tok_d)
+    shared = [
+        i for i in range(tok_v.vocab_size)
+        if al.exact_a2b[i] and al.exact_b2a[al.vocab_a2b[i]]
+    ]
+    assert shared, "corpora should share short pieces"
+    for i in shared:
+        j = al.vocab_a2b[i]
+        assert tok_d.pieces[j] == tok_v.pieces[i]
+        assert al.vocab_b2a[j] == i
+    # specials exist in every toy vocab and must be exact
+    assert al.exact_a2b[tok_v.eos_id] and al.vocab_a2b[tok_v.eos_id] == tok_d.eos_id
+
+
+def test_aligner_unmappable_maps_to_closest_but_flags(toks):
+    """Pieces absent from the other vocab still get a (closest) image —
+    usable for conditioning — but the exact mask flags them so drafting
+    auto-rejects."""
+    _, tok_v, tok_d = toks
+    al = TokenAligner(tok_v, tok_d)
+    unmappable = np.nonzero(~al.exact_a2b)[0]
+    assert len(unmappable), "max_piece 12 vs 4 must leave long pieces unmapped"
+    for i in unmappable[:16]:
+        j = int(al.vocab_a2b[i])
+        assert 0 <= j < tok_d.vocab_size
+        assert tok_d.pieces[j] != tok_v.pieces[i]
+
+
+def test_aligner_identical_tokenizer_fast_path(toks):
+    """Same tokenizer on both sides: the vocab map is the identity and
+    everything is exact — the fast path same-vocab drafting relies on."""
+    _, tok_v, _ = toks
+    al = TokenAligner(tok_v, tok_v)
+    np.testing.assert_array_equal(al.vocab_a2b, np.arange(tok_v.vocab_size))
+    np.testing.assert_array_equal(al.vocab_b2a, np.arange(tok_v.vocab_size))
+    assert al.exact_a2b.all() and al.exact_b2a.all()
