@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -438,12 +438,16 @@ def paged_attention_verify(
     sin: jax.Array,
     *,
     window: int = 0,
+    write_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params]:
     """Multi-token paged attention: write K1 new k/v at positions
     ``pos..pos+K-1``... i.e. ``pos + i``, then attend with a per-query
     causal/window mask. New k/v round-trip through the pool dtype so the
     math is bit-compatible with K1 sequential ``paged_attention_decode``
-    steps."""
+    steps. ``write_len`` (traced scalar) marks the real token count when
+    the window is right-padded to a compile bucket (partial prefill,
+    DESIGN.md §9): padding steps redirect their pool writes to the trash
+    page, and causal masking keeps real queries off the padded keys."""
     q, k_new, v_new = L._project_qkv(cfg, p, x, x)
     if cos is not None:
         q = L.apply_rope(q, cos, sin)
@@ -454,6 +458,8 @@ def paged_attention_verify(
     positions = pos[:, None] + jnp.arange(k1)[None, :]  # (L, K1)
     span = bt.shape[1] * ps
     in_range = positions < span
+    if write_len is not None:
+        in_range = in_range & (jnp.arange(k1)[None, :] < write_len)
     kw = k_new.astype(pool["k"].dtype)
     vw = v_new.astype(pool["v"].dtype)
     rep = cfg.num_heads // cfg.num_kv_heads
@@ -516,8 +522,10 @@ def paged_mla_verify(
     pos: jax.Array,
     cos: jax.Array,
     sin: jax.Array,
+    write_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params]:
-    """Absorbed-form MLA over paged latent pools, K1 queries at once."""
+    """Absorbed-form MLA over paged latent pools, K1 queries at once.
+    ``write_len`` as in ``paged_attention_verify``."""
     nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
     q_nope, q_rope = MLA._queries(cfg, p, x)
     c_new, kr_new = MLA._latents(cfg, p, x)
@@ -529,7 +537,10 @@ def paged_mla_verify(
     rows = jnp.arange(lanes)[:, None]
     positions = pos[:, None] + jnp.arange(k1)[None, :]
     span = bt.shape[1] * ps
-    page = jnp.where(positions < span, bt[rows, positions // ps], TRASH_PAGE)
+    in_range = positions < span
+    if write_len is not None:
+        in_range = in_range & (jnp.arange(k1)[None, :] < write_len)
+    page = jnp.where(in_range, bt[rows, positions // ps], TRASH_PAGE)
     off = positions % ps
     c_pool = pool["c_kv"].at[page, off].set(c_new.astype(pool["c_kv"].dtype))
     r_pool = pool["k_rope"].at[page, off].set(
@@ -576,6 +587,7 @@ def block_verify_paged(
     pos: jax.Array,
     bt: jax.Array,
     ctx: Dict,
+    write_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params, Params]:
     """Multi-token analogue of ``block_decode_paged``. Recurrent mixers
     return per-step stacked state (leading K1 axis on every leaf)."""
@@ -585,11 +597,13 @@ def block_verify_paged(
     if mixer in ("attn", "swa"):
         window = cfg.window if mixer == "swa" else 0
         o, pcache = paged_attention_verify(
-            cfg, p["attn"], x, pcache, bt, pos, cos, sin, window=window
+            cfg, p["attn"], x, pcache, bt, pos, cos, sin, window=window,
+            write_len=write_len,
         )
         h = h + o
     elif mixer == "mla":
-        o, pcache = paged_mla_verify(cfg, p["attn"], x, pcache, bt, pos, cos, sin)
+        o, pcache = paged_mla_verify(cfg, p["attn"], x, pcache, bt, pos,
+                                     cos, sin, write_len)
         h = h + o
     elif mixer == "mlstm":
         o, scache = _recurrent_verify(
@@ -640,10 +654,17 @@ def verify_step_paged(
     length per lane and then rolls back: ``rollback_pages`` restores
     displaced swa ring entries, ``select_slots`` keeps the recurrent state
     at the accepted step; attn/mla writes past the accepted position are
-    position-masked at every later read and need no undo."""
+    position-masked at every later read and need no undo.
+
+    ``batch['write_len']`` (optional traced scalar) right-pad-masks the
+    window: steps past it redirect pool writes to the trash page. This is
+    what turns the verify program into the partial-prefill chunk program
+    (DESIGN.md §9): score the uncached prompt tail against cached prefix
+    pages, write its KV, and take the state at the last real step."""
     tokens = batch["tokens"]
     pos = batch["pos"]
     bt = batch["block_tables"]
+    write_len = batch.get("write_len")
     k1 = tokens.shape[1]
     positions = pos[:, None] + jnp.arange(k1)[None, :]  # (L, K1)
     h = L.embed(cfg, params["embed"], tokens)
@@ -661,6 +682,7 @@ def verify_step_paged(
             h, pc, sc = block_verify_paged(
                 cfg, params["prefix"][key], blk, h,
                 paged["prefix"][key], slots["prefix"][key], pos, bt, ctx,
+                write_len,
             )
             new_paged["prefix"][key] = pc
             new_slots["prefix"][key] = sc
@@ -671,7 +693,8 @@ def verify_step_paged(
         for i, blk in enumerate(cfg.unit_pattern):
             key = f"b{i}"
             h, pc, sc = block_verify_paged(
-                cfg, pu[key], blk, h, pcu[key], scu[key], pos, bt, ctx
+                cfg, pu[key], blk, h, pcu[key], scu[key], pos, bt, ctx,
+                write_len,
             )
             new_pcu[key] = pc
             new_scu[key] = sc

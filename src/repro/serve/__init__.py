@@ -1,14 +1,18 @@
 """Serving subsystem: layered paged-KV serving + cloud-edge routing.
 
-Layers (DESIGN.md §7): ``BlockCacheManager`` owns KV memory as fixed-size
-pages with per-request block tables (recurrent state slot-resident behind
-the same interface); ``Scheduler`` does admission/eviction and pads
-prompts to power-of-two compile buckets; ``ModelRunner`` holds the jitted
-prefill/decode programs and decodes only live lanes; ``ServeEngine`` is
-the thin facade wiring the three (the PR-1 API unchanged); and
-``CloudEdgeRouter`` fronts one LLM engine plus N heterogeneous SLM
-engines — each with its own tokenizer — routing requests by a pluggable
-policy, mirroring the paper's consortium at inference time.
+Layers (DESIGN.md §7): ``BlockCacheManager`` owns KV memory as
+refcounted, copy-on-write fixed-size pages with per-request block tables
+(recurrent state slot-resident behind the same interface) plus the §9
+prefix index — requests sharing a prompt prefix share its pages and
+prefill only their uncached tails; ``Scheduler`` does admission/eviction
+and pads prompts to power-of-two compile buckets; ``ModelRunner`` holds
+the jitted prefill/decode programs and decodes only live lanes;
+``ServeEngine`` is the thin facade wiring the three (the PR-1 API
+unchanged); and ``CloudEdgeRouter`` fronts one LLM engine plus N
+heterogeneous SLM engines — each with its own tokenizer — routing
+requests by a pluggable policy, mirroring the paper's consortium at
+inference time (``prewarm`` seeds every tier's prefix pool with the
+consortium-wide system prompt).
 
 ``SpecCoordinator`` (serve/spec.py, DESIGN.md §8) pairs a drafter engine
 with a verifier engine for speculative collaborative decoding — the SLM

@@ -1,14 +1,36 @@
-"""BlockCacheManager: owns serving KV memory as fixed-size pages.
+"""BlockCacheManager: refcounted, copy-on-write serving pages + prefix index.
 
 The manager holds the device trees (page pools for attn/swa/mla families,
 slot-resident state for recurrent families — ``repro.models.paged``) plus
-the host-side page accounting: a free-page list and one block table per
-slot. Pages are allocated lazily — a request owns the pages its prompt
-needs at admission (``alloc_prompt``) and grows page by page as decode
-advances (``ensure``); everything is returned on ``release``. Physical
-page 0 is the reserved trash page (never allocated): unallocated block-
-table entries point at it, so bucket-padding writes land there instead of
-in live memory.
+the host-side page accounting: per-page refcounts, a free-page list, one
+block table per slot, and (when ``prefix_cache=True``) a radix-style
+*prefix index* that lets requests sharing a prompt prefix share the pages
+that prefix was prefilled into. Physical page 0 is the reserved trash
+page (never allocated): unallocated block-table entries point at it, so
+bucket-padding writes land there instead of in live memory.
+
+Prefix sharing (DESIGN.md §9):
+
+- full pages written by prefill are keyed by a **rolling hash of
+  (token-chunk, parent-hash)** — a radix map over page-size token chunks;
+- ``alloc_prompt`` walks the map and returns ``(cached_len, block_row)``:
+  the matched pages are installed into the request's block table with a
+  refcount bump and only the uncached tail is prefilled;
+- a **decode write to a shared page triggers copy-on-write** (``ensure``)
+  — the writer gets a private copy, the cached content survives;
+- the index holds its own reference on every registered page, so a page
+  is freed only when its refcount reaches zero (no owner slot AND no
+  index node). Refcount-0 *cached* pages are reclaimed in **LRU order**
+  (leaf nodes first, so chains stay contiguous) when the pool runs short.
+
+Two registration modes, chosen by cache family:
+
+- ``chain`` (pure attn/mla): a node per full prompt chunk referencing the
+  single immutable page that chunk's KV lives in across every layer pool;
+- ``snapshot`` (any swa ring or recurrent slot state): a node per page
+  boundary referencing the whole table-row prefix at that boundary (ring
+  pages included — COW keeps them immutable once registered) plus a
+  snapshot of the slot-resident recurrent state.
 
 The default pool holds exactly ``num_slots * pages_per_seq`` pages — no
 oversubscription, so admission can never deadlock mid-stream. Passing a
@@ -17,12 +39,40 @@ availability, and a stream that cannot grow finishes ``cache_full``).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.models import paged as PG
 from repro.models.model import Model
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def rolling_hash(parent: int, chunk: Sequence[int]) -> int:
+    """FNV-1a over (parent-hash, token-chunk): the radix-map key for one
+    full page of prompt tokens. Root chains hang off parent 0."""
+    h = (_FNV_OFFSET ^ (parent & _MASK64)) * _FNV_PRIME & _MASK64
+    for t in chunk:
+        h = ((h ^ ((int(t) + 1) & _MASK64)) * _FNV_PRIME) & _MASK64
+    return h or 1  # 0 is the root sentinel
+
+
+@dataclasses.dataclass
+class PrefixNode:
+    key: int
+    parent: int
+    chunk: Tuple[int, ...]
+    depth: int  # chunk index; boundary position = (depth + 1) * page_size
+    pages: Tuple[int, ...]  # chain: (chunk page,); snapshot: row prefix
+    state: Optional[object] = None  # slot-state snapshot (device tree)
+    last_used: int = 0
+    children: set = dataclasses.field(default_factory=set)
 
 
 class BlockCacheManager:
@@ -34,6 +84,8 @@ class BlockCacheManager:
         max_len: int,
         page_size: int = 8,
         num_pages: Optional[int] = None,
+        prefix_cache: bool = False,
+        max_prefix_nodes: int = 1024,
     ):
         if page_size < 1 or page_size & (page_size - 1):
             # pow2 prompt buckets must be page multiples for the whole-page
@@ -50,6 +102,17 @@ class BlockCacheManager:
             raise ValueError("need at least one real page beyond the trash page")
         self.num_slots = num_slots
         self.num_pages = num_pages
+        mixers = set(PG._mixers(model.cfg))
+        self.has_ring = "swa" in mixers and model.cfg.window > 0
+        self.has_state = bool(mixers & set(PG.SLOT_MIXERS))
+        self.prefix_cache = prefix_cache
+        # chain mode: every shared page is write-once (attn/mla chunk KV).
+        # snapshot mode: ring pages mutate in place and recurrent state is
+        # not a page at all, so nodes carry row snapshots + state snapshots.
+        self.prefix_mode = (
+            "chain" if not (self.has_ring or self.has_state) else "snapshot"
+        )
+        self.max_prefix_nodes = max_prefix_nodes
         # slot num_slots is the trash slot for padded decode lanes
         self.paged, self.slots = model.init_paged_cache(
             num_slots + 1, num_pages, page_size
@@ -59,6 +122,23 @@ class BlockCacheManager:
         )
         self._free_pages: List[int] = list(range(num_pages - 1, 0, -1))
         self._owned: List[List[int]] = [[] for _ in range(num_slots)]
+        # refcount = owning slots (via block-table entries) + index nodes;
+        # a page is freed exactly when it reaches zero
+        self._refcount = np.zeros(num_pages, np.int64)
+        self._index_refs = np.zeros(num_pages, np.int64)
+        self._index: Dict[int, PrefixNode] = {}
+        self._tick = 0
+        # dirty-tracked table_rows: per-slot version counters plus one
+        # reusable host buffer per lane-bucket size
+        self._slot_ver = np.zeros(num_slots + 1, np.int64)
+        self._rows_buf: Dict[int, np.ndarray] = {}
+        self._rows_src: Dict[int, List] = {}
+        self._copy_jit: Dict[int, object] = {}
+        self._gather_jit = None
+        self._restore_jit = None
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
 
     # -- page accounting ----------------------------------------------------
 
@@ -74,46 +154,419 @@ class BlockCacheManager:
     def trash_slot(self) -> int:
         return self.num_slots
 
-    def can_admit(self, prompt_len: int) -> bool:
-        return len(self._free_pages) >= self.geom.admission_pages(prompt_len)
+    def _bump(self, slot: int) -> None:
+        self._slot_ver[slot] += 1
+
+    def _incref(self, page: int) -> None:
+        self._refcount[page] += 1
+
+    def _decref(self, page: int) -> None:
+        assert self._refcount[page] > 0, f"double free of page {page}"
+        self._refcount[page] -= 1
+        if self._refcount[page] == 0:
+            self._free_pages.append(page)
+
+    def _alloc_page(self) -> Optional[int]:
+        """Pop a free page, reclaiming LRU refcount-0 cached pages (leaf
+        prefix nodes first) when the free list runs dry."""
+        while not self._free_pages:
+            if not self._reclaim_one():
+                return None
+        return self._free_pages.pop()
 
     def _grow(self, slot: int, target: int) -> bool:
         owned = self._owned[slot]
+        grew = False
         while len(owned) < target:
-            if not self._free_pages:
+            page = self._alloc_page()
+            if page is None:
+                if grew:
+                    self._bump(slot)
                 return False
-            page = self._free_pages.pop()
+            self._incref(page)
             self.block_tables[slot, len(owned)] = page
             owned.append(page)
+            grew = True
+        if grew:
+            self._bump(slot)
         return True
 
-    def alloc_prompt(self, slot: int, prompt_len: int) -> np.ndarray:
-        """Give ``slot`` its admission pages; returns the block-table row
-        (unallocated entries = trash page 0) for the prefill splice."""
-        if not self._grow(slot, self.geom.admission_pages(prompt_len)):
-            raise RuntimeError("admission without page headroom (can_admit?)")
-        return self.block_tables[slot].copy()
+    def can_admit(self, prompt_len: int, tokens: Optional[Sequence[int]] = None) -> bool:
+        need = self.geom.admission_pages(prompt_len)
+        hit_pages: Tuple[int, ...] = ()
+        if tokens is not None and self.prefix_cache:
+            h, hit_pages, _ = self._match(tokens)
+            # only immutable growing entries past the ring zone are a
+            # durable saving; ring entries COW back to fresh pages
+            ring_zone = self.geom.swa_pages if self.has_ring else 0
+            if self.geom.has_growing:
+                need -= max(0, h // self.geom.page_size - ring_zone)
+        avail = len(self._free_pages) + self._evictable_page_count(hit_pages)
+        return avail >= need
 
-    def ensure(self, slot: int, pos: int) -> bool:
-        """Own every page needed before decode writes position ``pos``;
-        False means the pool is exhausted (oversubscribed manager)."""
-        return self._grow(slot, self.geom.pages_for(pos))
+    def _evictable_page_count(self, exclude: Sequence[int] = ()) -> int:
+        rc, ir = self._refcount, self._index_refs
+        evictable = (rc > 0) & (rc == ir)
+        evictable[0] = False
+        n = int(np.count_nonzero(evictable))
+        # hit pages about to be installed must not double as headroom
+        return n - sum(1 for p in set(exclude) if evictable[p])
+
+    # -- prefix index -------------------------------------------------------
+
+    def _walk(self, tokens: Sequence[int], max_chunks: int) -> List[PrefixNode]:
+        """Matched node chain (shallow -> deep), LRU-touched along the way."""
+        ps = self.geom.page_size
+        out: List[PrefixNode] = []
+        parent = 0
+        for j in range(max_chunks):
+            chunk = tuple(int(t) for t in tokens[j * ps:(j + 1) * ps])
+            key = rolling_hash(parent, chunk)
+            node = self._index.get(key)
+            if node is None or node.parent != parent or node.chunk != chunk:
+                break
+            self._tick += 1
+            node.last_used = self._tick
+            out.append(node)
+            parent = key
+        return out
+
+    def _match(
+        self, tokens: Sequence[int], max_cached: Optional[int] = None
+    ) -> Tuple[int, Tuple[int, ...], Optional[PrefixNode]]:
+        """(cached_len, pages to install, deepest node) for ``tokens`` —
+        capped so at least one tail token is always prefilled (the sampled
+        first token needs its logits)."""
+        ps = self.geom.page_size
+        if not self.prefix_cache or len(tokens) < ps + 1:
+            return 0, (), None
+        cap = (len(tokens) - 1) // ps
+        if max_cached is not None:
+            cap = min(cap, max_cached // ps)
+        chain = self._walk(tokens, cap)
+        if not chain:
+            return 0, (), None
+        node = chain[-1]
+        if self.prefix_mode == "chain":
+            pages = tuple(nd.pages[0] for nd in chain)
+        else:
+            pages = node.pages
+        return len(chain) * ps, pages, node
+
+    def match_len(self, tokens: Sequence[int]) -> int:
+        """Cached-prefix length a request with this prompt would reuse."""
+        return self._match(tokens)[0]
+
+    def _snapshot_state(self):
+        if self._gather_jit is None:
+            self._gather_jit = jax.jit(PG.gather_slots)
+        return lambda slot: self._gather_jit(
+            self.slots, jnp.asarray([slot], jnp.int32)
+        )
+
+    def _restore_state(self, slot: int, state) -> None:
+        if self._restore_jit is None:
+            self._restore_jit = jax.jit(PG.scatter_slots, donate_argnums=(0,))
+        self.slots = self._restore_jit(
+            self.slots, state, jnp.asarray([slot], jnp.int32)
+        )
+
+    def _cap_nodes(self) -> None:
+        while len(self._index) >= self.max_prefix_nodes:
+            if not self._reclaim_one():
+                break
+
+    def _reclaim_one(self) -> bool:
+        """Evict the least-recently-used *leaf* node. Walks touch every
+        ancestor on the path, so ancestors are never older than their
+        descendants and evicting LRU leaves keeps chains contiguous."""
+        leaves = [n for n in self._index.values() if not n.children]
+        if not leaves:
+            return False
+        self._evict_node(min(leaves, key=lambda n: n.last_used))
+        return True
+
+    def _evict_node(self, node: PrefixNode) -> None:
+        del self._index[node.key]
+        parent = self._index.get(node.parent)
+        if parent is not None:
+            parent.children.discard(node.key)
+        for p in node.pages:
+            self._index_refs[p] -= 1
+            self._decref(p)
+        node.state = None
+        node.pages = ()
+
+    def _evict_page_owners(self, page: int) -> None:
+        """Unregister every node referencing ``page`` (subtrees included:
+        a chain is only walkable through intact parents)."""
+        roots = [n for n in self._index.values() if page in n.pages]
+        while roots:
+            node = roots.pop()
+            if node.key not in self._index:
+                continue
+            stack = [node]
+            order: List[PrefixNode] = []
+            while stack:
+                nd = stack.pop()
+                order.append(nd)
+                stack.extend(
+                    self._index[c] for c in nd.children if c in self._index
+                )
+            for nd in reversed(order):  # children before parents
+                if nd.key in self._index:
+                    self._evict_node(nd)
+
+    def register_prefix(self, slot: int, tokens: Sequence[int]) -> None:
+        """Chain mode: after a prefill, insert one node per full prompt
+        chunk, referencing the immutable page its KV landed in. Existing
+        nodes are just LRU-touched, so a resumed/extended prompt deepens
+        the chain it already hit."""
+        if not self.prefix_cache or self.prefix_mode != "chain":
+            return
+        ps = self.geom.page_size
+        parent = 0
+        for j in range(len(tokens) // ps):
+            chunk = tuple(int(t) for t in tokens[j * ps:(j + 1) * ps])
+            key = rolling_hash(parent, chunk)
+            node = self._index.get(key)
+            if node is not None and (node.parent != parent or node.chunk != chunk):
+                return  # hash collision: stop extending this chain
+            self._tick += 1
+            if node is None:
+                self._cap_nodes()
+                page = int(self.block_tables[slot, j])
+                node = PrefixNode(key, parent, chunk, j, (page,),
+                                  last_used=self._tick)
+                self._index[key] = node
+                self._index_refs[page] += 1
+                self._incref(page)
+                pnode = self._index.get(parent)
+                if pnode is not None:
+                    pnode.children.add(key)
+            else:
+                node.last_used = self._tick
+            parent = key
+
+    def register_boundary(self, slot: int, tokens: Sequence[int]) -> None:
+        """Snapshot mode: register the page boundary at ``len(tokens)``
+        (a page multiple): reference the whole table-row prefix (COW keeps
+        those pages immutable from here on) and snapshot the slot-resident
+        recurrent state."""
+        if not self.prefix_cache or self.prefix_mode != "snapshot":
+            return
+        ps = self.geom.page_size
+        b = len(tokens)
+        if b == 0 or b % ps:
+            return
+        depth = b // ps - 1
+        chain = self._walk(tokens, depth)
+        if len(chain) != depth:
+            return  # parent chain incomplete (collision): unreachable node
+        parent = chain[-1].key if chain else 0
+        chunk = tuple(int(t) for t in tokens[depth * ps:b])
+        key = rolling_hash(parent, chunk)
+        node = self._index.get(key)
+        self._tick += 1
+        if node is not None:
+            node.last_used = self._tick
+            return
+        self._cap_nodes()
+        n_growing = b // ps if self.geom.has_growing else 0
+        n_entries = max(n_growing, self.geom.swa_pages if self.has_ring else 0)
+        pages = tuple(int(self.block_tables[slot, e]) for e in range(n_entries))
+        state = self._snapshot_state()(slot) if self.has_state else None
+        node = PrefixNode(key, parent, chunk, depth, pages, state,
+                          last_used=self._tick)
+        self._index[key] = node
+        for p in pages:
+            self._index_refs[p] += 1
+            self._incref(p)
+        if chain:
+            chain[-1].children.add(key)
+
+    @property
+    def prefix_stats(self) -> Dict[str, int]:
+        return {
+            "lookups": self.prefix_lookups,
+            "hits": self.prefix_hits,
+            "hit_tokens": self.prefix_hit_tokens,
+            "nodes": len(self._index),
+        }
+
+    # -- allocation ---------------------------------------------------------
+
+    def alloc_prompt(
+        self,
+        slot: int,
+        tokens: Sequence[int],
+        max_cached: Optional[int] = None,
+    ) -> Tuple[int, np.ndarray]:
+        """Give ``slot`` its admission pages, reusing cached prefix pages
+        when the index matches. Returns ``(cached_len, block-table row)``:
+        the caller prefills only ``tokens[cached_len:]`` (unallocated
+        entries = trash page 0). Matched pages are installed with a
+        refcount bump and — in snapshot mode — the node's recurrent state
+        is restored into the slot."""
+        cached = 0
+        if self.prefix_cache:
+            self.prefix_lookups += 1
+            cached, pages, node = self._match(tokens, max_cached)
+            if cached:
+                owned = self._owned[slot]
+                assert not owned, "alloc_prompt on a slot with live pages"
+                for i, p in enumerate(pages):
+                    self._incref(p)
+                    self.block_tables[slot, i] = p
+                    owned.append(p)
+                self._bump(slot)
+                if node is not None and node.state is not None:
+                    self._restore_state(slot, node.state)
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += cached
+        target = max(len(self._owned[slot]),
+                     self.geom.admission_pages(len(tokens)))
+        if not self._grow(slot, target):
+            raise RuntimeError("admission without page headroom (can_admit?)")
+        return cached, self.block_tables[slot].copy()
+
+    # -- copy-on-write ------------------------------------------------------
+
+    def _write_entries(self, slot: int, pos: int, n_steps: int) -> List[int]:
+        """Block-table entries the next ``n_steps`` writes starting at
+        ``pos`` will touch (growing entries by position, ring entries by
+        position mod ring capacity)."""
+        ps = self.geom.page_size
+        entries = set()
+        if self.geom.has_growing:
+            lo, hi = pos // ps, (pos + n_steps - 1) // ps
+            entries.update(range(lo, hi + 1))
+        if self.has_ring:
+            w_cap = self.geom.swa_pages * ps
+            for p in range(pos, min(pos + n_steps, pos + w_cap)):
+                if p >= self.geom.max_len:
+                    break  # past-budget writes trash-redirect in-kernel
+                entries.add((p % w_cap) // ps)
+        n_owned = len(self._owned[slot])
+        return [e for e in sorted(entries)
+                if e < self.geom.pages_per_seq and e < n_owned]
+
+    def _copy_pages(self, srcs: List[int], dsts: List[int]) -> None:
+        n = len(srcs)
+        bucket = 1 << max(0, (n - 1).bit_length())
+        pad = bucket - n
+        src = np.asarray(srcs + [PG.TRASH_PAGE] * pad, np.int32)
+        dst = np.asarray(dsts + [PG.TRASH_PAGE] * pad, np.int32)
+        fn = self._copy_jit.get(bucket)
+        if fn is None:
+            def copy(paged, s, d):
+                return PG._map_grouped(
+                    paged,
+                    lambda x: x.at[d].set(x[s]),
+                    lambda x: x.at[:, d].set(x[:, s]),
+                )
+
+            fn = jax.jit(copy, donate_argnums=(0,))
+            self._copy_jit[bucket] = fn
+        self.paged = fn(self.paged, jnp.asarray(src), jnp.asarray(dst))
+
+    def _cow(self, slot: int, pos: int, n_steps: int) -> bool:
+        """Copy-on-write every shared page the coming writes would touch.
+        A page shared only with the index is taken back by unregistering
+        its nodes (no copy needed); a page shared with another slot gets a
+        private copy. False = the pool cannot supply the copies."""
+        shared = [e for e in self._write_entries(slot, pos, n_steps)
+                  if self._refcount[self.block_tables[slot, e]] > 1]
+        if not shared:
+            return True
+        srcs, dsts, entries = [], [], []
+        for e in shared:
+            page = int(self.block_tables[slot, e])
+            dst = self._alloc_page()
+            # _alloc_page may have reclaimed the very nodes sharing this
+            # page, making the write private after all
+            if self._refcount[page] == 1:
+                if dst is not None:
+                    self._free_pages.append(dst)
+                continue
+            if dst is None:
+                if self._refcount[page] == self._index_refs[page] + 1:
+                    # pool too tight to copy, but only this slot + index
+                    # nodes reference the page: drop the cached nodes and
+                    # write in place rather than stall the stream
+                    self._evict_page_owners(page)
+                    if self._refcount[page] == 1:
+                        continue
+                self._free_pages.extend(dsts)  # roll back reservations
+                return False
+            srcs.append(page)
+            dsts.append(dst)
+            entries.append(e)
+        if not srcs:
+            return True
+        self._copy_pages(srcs, dsts)
+        for e, src, dst in zip(entries, srcs, dsts):
+            self._incref(dst)
+            self.block_tables[slot, e] = dst
+            self._owned[slot][e] = dst
+            self._decref(src)  # stays >= 1: someone else still holds it
+        self._bump(slot)
+        return True
+
+    def ensure(self, slot: int, pos: int, n_steps: int = 1) -> bool:
+        """Own (privately, post-COW) every page the next ``n_steps`` writes
+        starting at position ``pos`` need; False means the pool is
+        exhausted (oversubscribed manager)."""
+        if not self._grow(slot, self.geom.pages_for(pos + n_steps - 1)):
+            return False
+        return self._cow(slot, pos, n_steps)
 
     def release(self, slot: int) -> None:
-        self._free_pages.extend(reversed(self._owned[slot]))
+        """Drop the slot's references. Unshared pages return to the free
+        list; pages still referenced (another slot or the prefix index)
+        survive — a released shared page is freed only at refcount 0."""
+        for page in self._owned[slot]:
+            self._decref(page)
         self._owned[slot] = []
         self.block_tables[slot] = 0
+        self._bump(slot)
 
     def table_rows(self, lanes: List[int]) -> np.ndarray:
         """(L, P) block tables for a decode step; trash-slot lanes (batch
-        padding) get an all-trash row."""
-        out = np.zeros((len(lanes), self.geom.pages_per_seq), np.int32)
+        padding) get an all-trash row. Rows are dirty-tracked against
+        per-slot version counters and rebuilt into a reused host buffer
+        only when the slot's table actually changed."""
+        n = len(lanes)
+        buf = self._rows_buf.get(n)
+        if buf is None:
+            buf = np.zeros((n, self.geom.pages_per_seq), np.int32)
+            self._rows_buf[n] = buf
+            self._rows_src[n] = [None] * n
+        src = self._rows_src[n]
         for i, sl in enumerate(lanes):
-            if sl < self.num_slots:
-                out[i] = self.block_tables[sl]
-        return out
+            if sl >= self.num_slots:
+                if src[i] != (-1, 0):
+                    buf[i] = 0
+                    src[i] = (-1, 0)
+            else:
+                key = (sl, int(self._slot_ver[sl]))
+                if src[i] != key:
+                    buf[i] = self.block_tables[sl]
+                    src[i] = key
+        return buf
 
     # -- introspection ------------------------------------------------------
+
+    def accounting(self) -> Dict:
+        """Raw accounting snapshot for invariant checks (tests)."""
+        return {
+            "free": list(self._free_pages),
+            "refcount": self._refcount.copy(),
+            "index_refs": self._index_refs.copy(),
+            "slot_refs": [list(o) for o in self._owned],
+            "node_pages": [list(n.pages) for n in self._index.values()],
+            "num_nodes": len(self._index),
+        }
 
     @property
     def cache_bytes(self) -> int:

@@ -28,7 +28,15 @@ What changed underneath:
   stream ``cache_full``; ``"preempt"`` pushes the *youngest* stream back
   to the queue head instead — its generated tokens ride along and are
   re-prefilled on re-admission, so nothing is lost and the resumed
-  generation is byte-identical to an unpreempted run.
+  generation is byte-identical to an unpreempted run;
+- ``prefix_cache=True`` (DESIGN.md §9) shares prompt-prefix pages across
+  requests through the cache manager's refcounted copy-on-write prefix
+  index: admission prefills only the uncached tail of each prompt
+  (``admit_prefill`` below), so a fleet of requests repeating one system
+  preamble pays its prefill once per engine.
+
+All internal timestamps are ``time.monotonic()`` — TTFT/latency math must
+survive an NTP step mid-run (wall-clock time.time() does not).
 """
 from __future__ import annotations
 
@@ -56,18 +64,22 @@ def ensure_pages(
     policy: str,
     done: List[Completion],
     release: Callable[[int], None],
+    n_steps: int = 1,
     lookahead: int = 0,
 ) -> bool:
-    """Grow ``slot``'s pages so decode may write up to ``pos``; on pool
-    exhaustion apply the oversubscription policy until it can (or the slot
-    itself is reclaimed — returns False). ``"preempt"`` requeues the
-    youngest active stream (finishing it ``cache_full`` only when its
-    re-prefill could never fit the pool); ``"evict"`` finishes the starved
-    stream itself. ``release(victim)`` frees any paired per-slot resources
-    beyond ``cache`` (e.g. a spec engine's drafter pages)."""
-    while not cache.ensure(slot, pos):
+    """Grow ``slot``'s pages (copy-on-write included) so the next
+    ``n_steps`` writes starting at ``pos`` may land; on pool exhaustion
+    apply the oversubscription policy until it can (or the slot itself is
+    reclaimed — returns False). ``"preempt"`` requeues the youngest active
+    stream (finishing it ``cache_full`` only when its re-prefill could
+    never fit the pool); ``"evict"`` finishes the starved stream itself.
+    ``release(victim)`` frees any paired per-slot resources beyond
+    ``cache`` (e.g. a spec engine's drafter pages). Releasing a victim
+    only *decrefs* its pages — pages shared through the prefix index are
+    never freed out from under their other owners."""
+    while not cache.ensure(slot, pos, n_steps):
         victim = sched.youngest_active() if policy == "preempt" else None
-        now = time.time()
+        now = time.monotonic()
         if victim is None:
             done.append(sched.force_finish(slot, "cache_full", now))
             release(slot)
@@ -87,6 +99,76 @@ def ensure_pages(
     return True
 
 
+def admit_prefill(
+    cache: BlockCacheManager,
+    sched: Scheduler,
+    runner: ModelRunner,
+    slot: int,
+    feed: List[int],
+    temperature: float,
+    seed: int,
+    base_key: jax.Array,
+) -> Optional[int]:
+    """Prefill ``feed`` into ``slot`` through the prefix cache (shared by
+    ``ServeEngine`` and ``SpecCoordinator``) and return the sampled first
+    token. Three paths:
+
+    - prefix cache off: the plain fused bucketed prefill (unchanged);
+    - ``chain`` mode (pure attn/mla): fused prefill on a miss, or ONE
+      bucketed partial-prefill dispatch over the uncached tail on a hit;
+      either way the full-page chunks are registered afterwards;
+    - ``snapshot`` mode (swa ring / recurrent state): page-size chunk
+      loop from the cached boundary, registering a (row, state) snapshot
+      node at every full-page boundary it crosses.
+
+    ``None`` means a mid-admission copy-on-write could not get pages (the
+    pool is oversubscribed and other slots hold everything): the caller
+    should requeue the request and let running streams drain first."""
+    cached, bt_row = cache.alloc_prompt(slot, feed)
+    n = len(feed)
+    if not cache.prefix_cache:
+        tok, cache.paged, cache.slots = runner.prefill(
+            cache.paged, cache.slots, feed, bucket=sched.bucket_for(n),
+            slot=slot, bt_row=bt_row, temperature=temperature, seed=seed,
+            base_key=base_key,
+        )
+        return tok
+    if cache.prefix_mode == "chain":
+        if cached == 0:
+            tok, cache.paged, cache.slots = runner.prefill(
+                cache.paged, cache.slots, feed, bucket=sched.bucket_for(n),
+                slot=slot, bt_row=bt_row, temperature=temperature, seed=seed,
+                base_key=base_key,
+            )
+        else:
+            tok, cache.paged, cache.slots = runner.prefill_tail(
+                cache.paged, cache.slots, feed[cached:], start=cached,
+                bucket=sched.bucket_for(n - cached), slot=slot, bt_row=bt_row,
+                temperature=temperature, seed=seed, base_key=base_key,
+            )
+        cache.register_prefix(slot, feed)
+        return tok
+    # snapshot mode: page-size chunks so every boundary's ring pages and
+    # recurrent state exist to snapshot (the price of making mutable-ring
+    # and recurrent prefixes shareable; documented in DESIGN.md §9)
+    ps = cache.geom.page_size
+    t, tok = cached, None
+    while t < n:
+        c = min(ps, n - t)
+        if not cache.ensure(slot, t, c):  # COW shared ring pages
+            cache.release(slot)
+            return None
+        tok, cache.paged, cache.slots = runner.prefill_tail(
+            cache.paged, cache.slots, feed[t:t + c], start=t, bucket=ps,
+            slot=slot, bt_row=cache.block_tables[slot].copy(),
+            temperature=temperature, seed=seed, base_key=base_key,
+        )
+        t += c
+        if t % ps == 0:
+            cache.register_boundary(slot, feed[:t])
+    return tok
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -101,6 +183,7 @@ class ServeEngine:
         num_pages: Optional[int] = None,
         gather_live_lanes: bool = True,
         exhaust_policy: str = "evict",
+        prefix_cache: bool = False,
     ):
         if model.cfg.is_encoder_decoder:
             raise ValueError("engine serves decoder-only configs")
@@ -113,6 +196,7 @@ class ServeEngine:
         self.cache = BlockCacheManager(
             model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
+            prefix_cache=prefix_cache,
         )
         self.scheduler = Scheduler(
             num_slots=max_batch, max_len=max_len, eos_id=eos_id,
@@ -152,20 +236,20 @@ class ServeEngine:
         done: List[Completion] = []
         while True:
             adm = self.scheduler.pop_admission(
-                lambda req: self.cache.can_admit(req.prefill_len)
+                lambda req: self.cache.can_admit(req.prefill_len, req.feed)
             )
             if adm is None:
                 return done
             req, slot = adm
             feed = req.feed  # resumed requests re-prefill prompt + generated
-            bt_row = self.cache.alloc_prompt(slot, len(feed))
-            tok, self.cache.paged, self.cache.slots = self.runner.prefill(
-                self.cache.paged, self.cache.slots, feed,
-                bucket=self.scheduler.bucket_for(len(feed)),
-                slot=slot, bt_row=bt_row, temperature=req.temperature,
-                seed=req.seed, base_key=self.base_key,
+            tok = admit_prefill(
+                self.cache, self.scheduler, self.runner, slot, feed,
+                req.temperature, req.seed, self.base_key,
             )
-            fin = self.scheduler.on_admitted(req, slot, tok, time.time())
+            if tok is None:  # mid-admission COW starved: requeue, drain first
+                self.scheduler.unpop(req, slot)
+                return done
+            fin = self.scheduler.on_admitted(req, slot, tok, time.monotonic())
             if fin is not None:
                 done.append(fin)
                 self.cache.release(slot)
@@ -208,7 +292,7 @@ class ServeEngine:
             base_key=self.base_key,
             n_live=len(live),
         )
-        now = time.time()
+        now = time.monotonic()
         for i, sl in enumerate(live):
             fin = sched.on_token(sl, int(toks[i]), now)
             if fin is not None:
@@ -233,6 +317,10 @@ class ServeEngine:
     @property
     def stats(self) -> RunnerStats:
         return self.runner.stats
+
+    @property
+    def prefix_stats(self) -> Dict[str, int]:
+        return self.cache.prefix_stats
 
     @property
     def num_active(self) -> int:

@@ -21,6 +21,12 @@ across vocabularies during co-tuning.
 Per-request sampling seeds default to the router-wide request id, so a
 generation is byte-identical whether the request rides the router or is
 submitted directly to the target engine (asserted in tests/test_serve.py).
+
+Prefix pools are **per tier**: every engine owns its own refcounted
+prefix index (serve/cache.py, DESIGN.md §9), keyed in that tier's own
+vocabulary. ``prewarm`` pushes a consortium-wide system prompt through
+every tier once, so it is prefilled once per engine and every later
+request that repeats it admits against cached pages.
 """
 from __future__ import annotations
 
@@ -233,6 +239,32 @@ class CloudEdgeRouter:
         self.route_log.append((rid, decision))
         return rid
 
+    def prewarm(
+        self,
+        text: str,
+        *,
+        tiers: Optional[Sequence[str]] = None,
+        max_new: int = 1,
+    ) -> List[int]:
+        """Prefill a consortium-wide system prompt once per tier so its
+        pages land in each engine's prefix pool; later requests repeating
+        the preamble prefill only their uncached tail. Encodes with each
+        tier's own tokenizer and bypasses the routing policy (the point is
+        to touch *every* tier, or the named subset). Returns the router
+        rids; drive ``run()``/``step()`` to drain them as usual."""
+        out: List[int] = []
+        for name in (tiers if tiers is not None else list(self.specs)):
+            spec = self.specs[name]
+            ids = spec.tokenizer.encode(text, bos=True)
+            erid = spec.engine.submit(ids, max_new=max_new)
+            rid = self._next_rid
+            self._next_rid += 1
+            decision = RouteDecision(name, "prewarm")
+            self._pending[(name, erid)] = (rid, text, decision)
+            self.route_log.append((rid, decision))
+            out.append(rid)
+        return out
+
     # -- stepping -----------------------------------------------------------
 
     def step(self) -> List[RouterCompletion]:
@@ -290,6 +322,12 @@ class CloudEdgeRouter:
                 line += (
                     f", draft-accept {st.acceptance_rate:.0%} "
                     f"({st.accepted_per_verify:.2f} tok/verify)"
+                )
+            pstats = getattr(spec.engine, "prefix_stats", None)
+            if pstats and pstats["lookups"]:
+                line += (
+                    f", prefix {pstats['hits']}/{pstats['lookups']} hits "
+                    f"({pstats['hit_tokens']} tok reused)"
                 )
             lines.append(line)
         return " | ".join(lines)

@@ -99,6 +99,7 @@ class ModelRunner:
         self.params = params
         self.stats = RunnerStats()
         self._prefill_jit: Dict[int, object] = {}  # prompt bucket -> program
+        self._tail_jit: Dict[int, object] = {}  # tail bucket -> program
         self._decode_jit: Dict[int, object] = {}  # lane bucket -> program
         self._verify_jit: Dict[Tuple, object] = {}  # (lanes, k, mode) -> prog
         self._draft_jit: Dict[Tuple, object] = {}  # (lanes, k, sample) -> prog
@@ -109,6 +110,10 @@ class ModelRunner:
     @property
     def prefill_programs(self) -> List[int]:
         return sorted(self._prefill_jit)
+
+    @property
+    def tail_programs(self) -> List[int]:
+        return sorted(self._tail_jit)
 
     @property
     def decode_programs(self) -> List[int]:
@@ -161,7 +166,7 @@ class ModelRunner:
         s = len(prompt)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
-        t0 = time.time()
+        t0 = time.monotonic()
         tok, paged, slots = self._prefill_for(bucket)(
             self.params, paged, slots,
             jnp.asarray(padded), jnp.asarray(s, jnp.int32),
@@ -170,7 +175,70 @@ class ModelRunner:
             jnp.asarray(seed, jnp.int32), base_key,
         )
         tok = int(tok)
-        self.stats.prefill_s += time.time() - t0
+        self.stats.prefill_s += time.monotonic() - t0
+        self.stats.prefill_tokens += s
+        return tok, paged, slots
+
+    # -- partial prefill (prefix cache, DESIGN.md §9) -----------------------
+
+    def _tail_for(self, bucket: int):
+        if bucket in self._tail_jit:
+            return self._tail_jit[bucket]
+        model = self.model
+
+        def fn(params, paged, slots, tokens, length, pos, lane, bt_row, temp,
+               seed, base_key):
+            sub = PG.gather_slots(slots, lane)
+            logits, paged, stacked = model.verify_step_paged(
+                params, paged, sub,
+                {"tokens": tokens, "pos": pos, "block_tables": bt_row[None],
+                 "write_len": length},
+            )
+            # slot state after the last real token; padded steps past
+            # `length` wrote to the trash page and are never selected
+            sel = PG.select_slots(stacked, jnp.reshape(length - 1, (1,)))
+            slots = PG.scatter_slots(slots, sel, lane)
+            lg = logits[0, length - 1]
+            key = jax.random.fold_in(jax.random.fold_in(base_key, seed), 0)
+            tok = sample_tokens_keys(lg[None], key[None], temp[None])[0]
+            return tok, paged, slots
+
+        self._tail_jit[bucket] = jax.jit(fn, donate_argnums=(1, 2))
+        return self._tail_jit[bucket]
+
+    def prefill_tail(
+        self,
+        paged: Params,
+        slots: Params,
+        prompt: List[int],  # the UNCACHED tail of the feed
+        *,
+        start: int,  # position of prompt[0] = the cached-prefix length
+        bucket: int,
+        slot: int,
+        bt_row: np.ndarray,
+        temperature: float,
+        seed: int,
+        base_key: jax.Array,
+    ) -> Tuple[int, Params, Params]:
+        """Prefill only the uncached tail of a prompt whose first ``start``
+        tokens were served from the prefix cache: one fused multi-token
+        chunk against the paged pools (the verify program with a
+        ``write_len`` pad mask) reading the cached prefix pages, writing
+        the tail's KV, and sampling the first token with the same
+        (seed, 0) fold_in key as a cold prefill."""
+        s = len(prompt)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :s] = prompt
+        t0 = time.monotonic()
+        tok, paged, slots = self._tail_for(bucket)(
+            self.params, paged, slots,
+            jnp.asarray(padded), jnp.asarray(s, jnp.int32),
+            jnp.asarray([start], jnp.int32), jnp.asarray([slot], jnp.int32),
+            jnp.asarray(bt_row), jnp.asarray(temperature, jnp.float32),
+            jnp.asarray(seed, jnp.int32), base_key,
+        )
+        tok = int(tok)
+        self.stats.prefill_s += time.monotonic() - t0
         self.stats.prefill_tokens += s
         return tok, paged, slots
 
@@ -215,7 +283,7 @@ class ModelRunner:
         base_key: jax.Array,
         n_live: int,
     ) -> Tuple[np.ndarray, Params, Params]:
-        t0 = time.time()
+        t0 = time.monotonic()
         toks, paged, slots = self._decode_for(len(lanes))(
             self.params, paged, slots,
             jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
@@ -224,7 +292,7 @@ class ModelRunner:
             jnp.asarray(ngen, jnp.int32), base_key,
         )
         toks = np.asarray(toks)
-        self.stats.decode_s += time.time() - t0
+        self.stats.decode_s += time.monotonic() - t0
         self.stats.decode_steps += 1
         self.stats.decode_tokens += n_live
         return toks, paged, slots
@@ -299,7 +367,7 @@ class ModelRunner:
         (out_tokens (L, K+1), n_acc (L,), paged, slots); lane i commits
         out_tokens[i, : n_acc[i] + 1]."""
         L, k1 = tokens.shape
-        t0 = time.time()
+        t0 = time.monotonic()
         if q is None:
             q = jnp.zeros((), jnp.float32)  # unused placeholder operand
         out, n_acc, paged, slots = self._verify_for(L, k1 - 1, mode)(
@@ -311,7 +379,7 @@ class ModelRunner:
             base_key,
         )
         out, n_acc = np.asarray(out), np.asarray(n_acc)
-        self.stats.spec_s += time.time() - t0
+        self.stats.spec_s += time.monotonic() - t0
         self.stats.verify_steps += 1
         self.stats.verify_lanes += n_live
         self.stats.draft_tokens += n_live * (k1 - 1)
@@ -399,7 +467,7 @@ class ModelRunner:
         scattered back — ``commit_draft`` applies it once the verifier's
         accepted lengths are known. Returns (drafts (L, K), probs, paged,
         stacked per-step state, ring undo)."""
-        t0 = time.time()
+        t0 = time.monotonic()
         out = self._draft_for(len(lanes), k, sample)(
             self.params, paged, slots,
             jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
@@ -407,7 +475,7 @@ class ModelRunner:
             jnp.asarray(temps, jnp.float32), jnp.asarray(seeds, jnp.int32),
             jnp.asarray(ngen, jnp.int32), base_key,
         )
-        self.stats.spec_s += time.time() - t0
+        self.stats.spec_s += time.monotonic() - t0
         return out
 
     def _commit_for(self, lanes: int):
@@ -436,10 +504,10 @@ class ModelRunner:
     ) -> Tuple[Params, Params]:
         """Roll the drafter back to the verifier's accepted lengths: keep
         ring writes / recurrent state through step n_acc, restore the rest."""
-        t0 = time.time()
+        t0 = time.monotonic()
         paged, slots = self._commit_for(len(lanes))(
             paged, slots, stacked, undo,
             jnp.asarray(n_acc, jnp.int32), jnp.asarray(lanes, jnp.int32),
         )
-        self.stats.spec_s += time.time() - t0
+        self.stats.spec_s += time.monotonic() - t0
         return paged, slots

@@ -2,9 +2,12 @@
 
 Host-side request lifecycle for the serving engine (DESIGN.md §7):
 
-- ``submit`` validates up front — ``len(prompt) + max_new <= max_len`` —
-  so an oversized request fails loudly at the API boundary instead of
-  silently finishing ``cache_full`` mid-stream;
+- ``submit`` validates up front — ``len(prompt) + max_new <= max_len``
+  and ``len(prompt) <= bucket_cap`` — so an oversized request fails
+  loudly at the API boundary instead of silently finishing ``cache_full``
+  mid-stream or truncating to a too-small prefill bucket;
+- all internal timestamps are ``time.monotonic()``: an NTP step mid-run
+  must not produce negative or inflated ``ttft_s`` / ``latency_s``;
 - prompts are padded to power-of-two buckets (floored at ``min_bucket``,
   capped at the page-padded ``max_len``), so the runner compiles
   O(log max_len) prefill programs instead of one per distinct length;
@@ -119,10 +122,17 @@ class Scheduler:
                 f"prompt len {len(prompt)} + max_new {max_new} exceeds "
                 f"max_len {self.max_len}"
             )
+        if len(prompt) > self.bucket_cap:
+            # a longer prompt would be right-truncated into its too-small
+            # prefill bucket and decode from a silently clipped prefix
+            raise ValueError(
+                f"prompt len {len(prompt)} exceeds bucket_cap "
+                f"{self.bucket_cap}; it cannot fit any prefill bucket"
+            )
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(
-            Request(rid, list(prompt), max_new, temperature, time.time(),
+            Request(rid, list(prompt), max_new, temperature, time.monotonic(),
                     seed if seed is not None else rid)
         )
         return rid
@@ -139,7 +149,21 @@ class Scheduler:
             return None
         return self.queue.popleft(), self.free.pop()
 
+    def unpop(self, req: Request, slot: int) -> None:
+        """Inverse of ``pop_admission``: put an un-admitted request back at
+        the queue head and return its slot (used when prefill cannot get
+        pages mid-admission and must wait for running streams to drain)."""
+        self.free.append(slot)
+        self.queue.appendleft(req)
+
     def bucket_for(self, prompt_len: int) -> int:
+        if prompt_len > self.bucket_cap:
+            # belt to submit()'s suspenders: a resumed feed must never be
+            # silently clipped either
+            raise ValueError(
+                f"prefill of {prompt_len} tokens exceeds bucket_cap "
+                f"{self.bucket_cap}"
+            )
         return pow2_bucket(prompt_len, self.min_bucket, self.bucket_cap)
 
     def on_admitted(

@@ -30,6 +30,12 @@ design — it only ever affects the acceptance rate, never the output.
 
 Sampling keys stay per-request (fold_in of seed and token index) on both
 stacks, so generations remain traffic-independent (DESIGN.md §7).
+
+``prefix_cache=True`` (DESIGN.md §9) gives BOTH stacks a refcounted
+copy-on-write prefix pool, walked in lockstep at admission — a shared
+system preamble is prefilled once on the verifier and once on the
+drafter (whose chains key on the vocab-mapped ids), and every later
+request prefills only its uncached tail on each side.
 """
 from __future__ import annotations
 
@@ -42,7 +48,7 @@ import numpy as np
 from repro.core.align import TokenAligner
 from repro.models.model import Model
 from repro.serve.cache import BlockCacheManager
-from repro.serve.engine import ensure_pages
+from repro.serve.engine import admit_prefill, ensure_pages
 from repro.serve.runner import ModelRunner, RunnerStats
 from repro.serve.scheduler import Completion, Scheduler
 
@@ -80,6 +86,7 @@ class SpecCoordinator:
         drafter_tokenizer=None,
         gather_live_lanes: bool = True,
         exhaust_policy: str = "evict",
+        prefix_cache: bool = False,
     ):
         if verifier_model.cfg.is_encoder_decoder or drafter_model.cfg.is_encoder_decoder:
             raise ValueError("speculative decoding serves decoder-only configs")
@@ -114,13 +121,19 @@ class SpecCoordinator:
                 "draft across vocabularies"
             )
 
+        # twin prefix pools in lockstep: both stacks walk their own index
+        # at the same admission point, so a shared system prompt is cached
+        # on the verifier AND the drafter (drafter chains key on the
+        # vocab-mapped ids)
         self.cache_v = BlockCacheManager(
             verifier_model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
+            prefix_cache=prefix_cache,
         )
         self.cache_d = BlockCacheManager(
             drafter_model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=drafter_num_pages,
+            prefix_cache=prefix_cache,
         )
         for name, geom in (("verifier", self.cache_v.geom),
                            ("drafter", self.cache_d.geom)):
@@ -198,21 +211,23 @@ class SpecCoordinator:
         done: List[Completion] = []
         while True:
             adm = self.scheduler.pop_admission(
-                lambda req: self.cache_v.can_admit(req.prefill_len)
-                and self.cache_d.can_admit(req.prefill_len)
+                lambda req: self.cache_v.can_admit(req.prefill_len, req.feed)
+                and self.cache_d.can_admit(
+                    req.prefill_len, self._to_drafter(req.feed)
+                )
             )
             if adm is None:
                 return done
             req, slot = adm
             feed = req.feed  # resumed requests re-prefill prompt + generated
-            bucket = self.scheduler.bucket_for(len(feed))
-            bt_v = self.cache_v.alloc_prompt(slot, len(feed))
-            tok, self.cache_v.paged, self.cache_v.slots = self.runner_v.prefill(
-                self.cache_v.paged, self.cache_v.slots, feed, bucket=bucket,
-                slot=slot, bt_row=bt_v, temperature=req.temperature,
-                seed=req.seed, base_key=self.base_key,
+            tok = admit_prefill(
+                self.cache_v, self.scheduler, self.runner_v, slot, feed,
+                req.temperature, req.seed, self.base_key,
             )
-            fin = self.scheduler.on_admitted(req, slot, tok, time.time())
+            if tok is None:  # mid-admission COW starved: requeue, drain first
+                self.scheduler.unpop(req, slot)
+                return done
+            fin = self.scheduler.on_admitted(req, slot, tok, time.monotonic())
             if fin is not None:  # finished at admission: never draft
                 done.append(fin)
                 self.cache_v.release(slot)
@@ -220,12 +235,15 @@ class SpecCoordinator:
             # the drafter mirrors the stream token-for-token (the vocab map
             # preserves length), so positions stay aligned across stacks
             feed_d = self._to_drafter(feed)
-            bt_d = self.cache_d.alloc_prompt(slot, len(feed_d))
-            _, self.cache_d.paged, self.cache_d.slots = self.runner_d.prefill(
-                self.cache_d.paged, self.cache_d.slots, feed_d, bucket=bucket,
-                slot=slot, bt_row=bt_d, temperature=0.0,
-                seed=req.seed, base_key=self.draft_key,
-            )
+            if admit_prefill(
+                self.cache_d, self.scheduler, self.runner_d, slot, feed_d,
+                0.0, req.seed, self.draft_key,
+            ) is None:
+                # drafter side starved: preempt the freshly admitted stream
+                # (its first token rides along and is restored on resume)
+                self.scheduler.preempt(slot)
+                self.cache_v.release(slot)
+                return done
             cur = int(self.scheduler.cur[slot])
             self.draft_cur[slot] = (
                 int(self.aligner.vocab_a2b[cur]) if self.aligner else cur
@@ -245,14 +263,14 @@ class SpecCoordinator:
             if not self.scheduler.active[sl]:
                 continue
             # both stacks write positions pos..pos+K this round
-            target = int(self.scheduler.pos[sl]) + k
-            if ensure_pages(self.cache_v, self.scheduler, sl, target,
+            pos = int(self.scheduler.pos[sl])
+            if ensure_pages(self.cache_v, self.scheduler, sl, pos,
                             self.exhaust_policy, done, self._release,
-                            lookahead=k) \
+                            n_steps=k + 1, lookahead=k) \
                     and self.scheduler.active[sl] \
-                    and ensure_pages(self.cache_d, self.scheduler, sl, target,
+                    and ensure_pages(self.cache_d, self.scheduler, sl, pos,
                                      self.exhaust_policy, done, self._release,
-                                     lookahead=k):
+                                     n_steps=k + 1, lookahead=k):
                 live.append(sl)
         live = [sl for sl in live if self.scheduler.active[sl]]
         if not live:
@@ -294,7 +312,7 @@ class SpecCoordinator:
             stacked=stacked, undo=undo, n_acc=n_acc, lanes=lanes_np,
         )
 
-        now = time.time()
+        now = time.monotonic()
         committed = 0
         for i, sl in enumerate(live):
             before = sched.ngen(sl)
@@ -337,6 +355,12 @@ class SpecCoordinator:
         out.prefill_s += d.prefill_s
         out.spec_s += d.spec_s
         return out
+
+    @property
+    def prefix_stats(self) -> Dict[str, int]:
+        """Pairwise prefix-pool view: verifier + drafter counters summed."""
+        v, d = self.cache_v.prefix_stats, self.cache_d.prefix_stats
+        return {k_: v[k_] + d[k_] for k_ in v}
 
     @property
     def num_active(self) -> int:

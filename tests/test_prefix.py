@@ -1,0 +1,480 @@
+"""Prefix-sharing tests (DESIGN.md §9): refcounted copy-on-write pages.
+
+Correctness contract:
+
+1. Prefix-HIT generations are byte-identical to cold-cache generations on
+   the same prefix-enabled engine, per cache family — chain mode (attn /
+   MLA), snapshot mode (swa ring / recurrent / mamba hybrid) — for full
+   hits, partial hits, and resumed (preempted) streams.
+2. Chain-mode engines additionally match a prefix-DISABLED engine
+   byte-for-byte (cold prefill is the very same fused program; snapshot
+   mode documents its chunked-prefill numerics in DESIGN.md §9).
+3. The same identity holds under ``exhaust_policy="preempt"`` and under a
+   ``SpecCoordinator`` (twin prefix pools in lockstep).
+4. Page accounting survives adversarial op sequences (hypothesis): no
+   double-free, refcounts partition exactly into slot refs + index refs,
+   the trash page is never allocated, shared pages are freed only at
+   refcount zero, and eviction drains the index cleanly.
+
+Plus the satellite fixes: ``submit`` rejects prompts longer than
+``bucket_cap``; ``table_rows`` reuses its host buffer and only rewrites
+dirty rows.
+
+fp32 params throughout, for the same reason as tests/test_serve.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import ServeEngine, SpecCoordinator
+from repro.serve.cache import BlockCacheManager, rolling_hash
+
+MAX_LEN = 48
+
+
+def _setup(arch, seed=0, vocab=None):
+    if arch == "gemma-2b-swa":
+        from repro.configs.gemma_2b import sliding_variant
+
+        cfg = sliding_variant(get_arch("gemma-2b").reduced(), window=8)
+    else:
+        cfg = get_arch(arch).reduced()
+    if vocab is not None:
+        cfg = dataclasses.replace(cfg, vocab_size=vocab)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _assert_drained(cache: BlockCacheManager):
+    """Every slot released: the only remaining refs are the index's own."""
+    acc = cache.accounting()
+    assert all(not owned for owned in acc["slot_refs"])
+    np.testing.assert_array_equal(acc["refcount"], acc["index_refs"])
+    assert 0 not in acc["free"]
+    for pages in acc["node_pages"]:
+        assert 0 not in pages  # trash page never registered
+
+
+PREFIX_FAMILIES = [
+    ("qwen2-1.5b", "chain"),  # full-attention chunk chains
+    ("deepseek-v3-671b", "chain"),  # MLA latent chunk chains
+    ("gemma-2b-swa", "snapshot"),  # mutable ring: COW-protected snapshots
+    ("xlstm-1.3b", "snapshot"),  # pure recurrent: state-only snapshots
+    ("jamba-1.5-large-398b", "snapshot"),  # hybrid: pages + mamba state
+]
+
+
+@pytest.mark.parametrize("arch,mode", PREFIX_FAMILIES)
+def test_prefix_hit_matches_cold_per_family(arch, mode):
+    """Cold / partial-hit / full-hit submissions of shared-prefix prompts
+    must be byte-identical to each prompt served alone on a fresh
+    prefix-enabled engine — and actually hit."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(3)
+    shared = list(rng.randint(5, cfg.vocab_size, (12,)))
+    prompts = [shared + list(rng.randint(5, cfg.vocab_size, (n,)))
+               for n in (5, 3)]
+
+    ref = {}
+    for i, p in enumerate(prompts):
+        solo = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                           seed=0, prefix_cache=True)
+        solo.submit(p, max_new=6)
+        (c,) = solo.run()
+        ref[i] = c.tokens
+
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+                      prefix_cache=True)
+    assert eng.cache.prefix_mode == mode
+    eng.submit(prompts[0], max_new=6)  # cold
+    eng.submit(prompts[1], max_new=6)  # partial hit (shared prefix)
+    first = {c.rid: c.tokens for c in eng.run()}
+    eng.submit(prompts[0], max_new=6)  # full hit
+    (again,) = eng.run()
+    assert first[0] == ref[0], f"{arch}: cold diverged"
+    assert first[1] == ref[1], f"{arch}: partial hit diverged"
+    assert again.tokens == ref[0], f"{arch}: full hit diverged"
+    stats = eng.prefix_stats
+    assert stats["hits"] >= 2 and stats["hit_tokens"] > 0
+    _assert_drained(eng.cache)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-v3-671b"])
+def test_chain_mode_matches_prefix_disabled(arch):
+    """Chain-mode cold prefill is the unchanged fused program, so the
+    whole prefix-enabled engine must equal a prefix-disabled one."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(5)
+    shared = list(rng.randint(5, cfg.vocab_size, (8,)))
+    prompts = [shared + list(rng.randint(5, cfg.vocab_size, (n,)))
+               for n in (4, 7, 2)]
+    on = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+                     prefix_cache=True)
+    off = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0)
+    for p in prompts:
+        on.submit(p, max_new=5)
+        off.submit(p, max_new=5)
+    assert ({c.rid: c.tokens for c in on.run()}
+            == {c.rid: c.tokens for c in off.run()})
+    assert on.prefix_stats["hit_tokens"] > 0
+
+
+def test_prefix_under_preempt_policy():
+    """Oversubscribed pool + preempt + prefix cache: resumed streams hit
+    their own registered chains and stay byte-identical to an ample
+    pool; released shared pages are decref'd, never freed under the
+    index."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(1)
+    shared = list(rng.randint(5, cfg.vocab_size, (8,)))
+    prompts = [shared + list(rng.randint(5, cfg.vocab_size, (n,)))
+               for n in (4, 6, 3)]
+    ample = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+                        prefix_cache=True)
+    for p in prompts:
+        ample.submit(p, max_new=20)
+    ref = {c.rid: c.tokens for c in ample.run()}
+
+    pre = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                      page_size=8, num_pages=6, seed=0,
+                      exhaust_policy="preempt", prefix_cache=True)
+    for p in prompts:
+        pre.submit(p, max_new=20)
+    done = {c.rid: c for c in pre.run()}
+    assert sorted(done) == [0, 1, 2]
+    for rid, c in done.items():
+        assert c.finish_reason == "length"
+        assert c.tokens == ref[rid], f"request {rid} diverged"
+    _assert_drained(pre.cache)
+
+
+def test_prefix_under_spec_coordinator():
+    """Twin prefix pools in lockstep: greedy speculative decoding with
+    prefix caching on both stacks stays byte-identical to plain decode,
+    cold and hit."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    _, dm, dp = _setup("xlstm-1.3b", seed=7, vocab=cfg.vocab_size)
+    rng = np.random.RandomState(2)
+    shared = list(rng.randint(5, cfg.vocab_size, (8,)))
+    prompts = [shared + list(rng.randint(5, cfg.vocab_size, (n,)))
+               for n in (4, 6)]
+    plain = ServeEngine(vm, vp, max_batch=2, max_len=MAX_LEN, seed=0)
+    for p in prompts:
+        plain.submit(p, max_new=6)
+    ref = {c.rid: c.tokens for c in plain.run()}
+
+    spec = SpecCoordinator(vm, vp, dm, dp, max_batch=2, max_len=MAX_LEN,
+                           k=3, seed=0, prefix_cache=True)
+    for p in prompts:
+        spec.submit(p, max_new=6)
+    assert {c.rid: c.tokens for c in spec.run()} == ref
+    for p in prompts:  # second wave: hits on both stacks
+        spec.submit(p, max_new=6)
+    again = {c.rid: c.tokens for c in spec.run()}
+    for i, p in enumerate(prompts):
+        assert again[len(prompts) + i] == ref[i], f"hit diverged on {i}"
+    assert spec.cache_v.prefix_stats["hit_tokens"] > 0
+    assert spec.cache_d.prefix_stats["hit_tokens"] > 0
+    _assert_drained(spec.cache_v)
+    _assert_drained(spec.cache_d)
+
+
+def test_prefix_eviction_under_pressure():
+    """A tiny oversubscribed pool must cycle cached pages out in LRU order
+    rather than starving admissions, and drain with clean accounting."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                      page_size=8, num_pages=5, seed=0, prefix_cache=True)
+    for i in range(6):
+        p = list(np.random.RandomState(100 + i).randint(
+            5, cfg.vocab_size, (12,)))
+        eng.submit(p, max_new=4)
+    done = eng.run()
+    assert len(done) == 6
+    assert all(c.finish_reason == "length" for c in done)
+    _assert_drained(eng.cache)
+
+
+def test_prefix_saves_prefill_compute():
+    """The runner's computed-prefill-token counter must drop on hits —
+    the multiplicative TTFT win the bench measures."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(4)
+    shared = list(rng.randint(5, cfg.vocab_size, (16,)))
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+                      prefix_cache=True)
+    eng.submit(shared + [7, 8], max_new=2)
+    eng.run()
+    cold_tokens = eng.stats.prefill_tokens
+    eng.submit(shared + [9, 10], max_new=2)
+    eng.run()
+    warm_tokens = eng.stats.prefill_tokens - cold_tokens
+    assert warm_tokens < cold_tokens / 2, (
+        f"hit prefilled {warm_tokens} of {cold_tokens} tokens"
+    )
+
+
+def test_rolling_hash_chains_and_collisions():
+    """Chain keys must separate both chunk content and parent lineage."""
+    a = rolling_hash(0, (1, 2, 3, 4))
+    assert a == rolling_hash(0, (1, 2, 3, 4))
+    assert a != rolling_hash(0, (1, 2, 3, 5))
+    assert rolling_hash(a, (9, 9)) != rolling_hash(0, (9, 9))
+    assert rolling_hash(0, ()) != 0  # root sentinel never collides
+
+
+def test_router_prewarm_seeds_per_tier_prefix_pools():
+    """CloudEdgeRouter.prewarm must prefill a consortium-wide system
+    prompt once per tier (each in its own vocabulary), so later requests
+    sharing it hit every engine's prefix pool — without changing any
+    generation."""
+    from repro.data.synthetic import generate_corpus
+    from repro.data.tokenizer import build_tokenizer
+    from repro.serve import CloudEdgeRouter, EngineSpec, round_robin_policy
+
+    corpus = generate_corpus(40, seed=0)
+    texts = [s.text for s in corpus]
+    toks = {
+        "qwen2-1.5b": build_tokenizer("cloud", texts, max_piece=12,
+                                      budget=1024),
+        "xlstm-1.3b": build_tokenizer("edge", texts, max_piece=4, budget=512),
+    }
+    specs = {}
+    for i, (arch, tok) in enumerate(toks.items()):
+        cfg = dataclasses.replace(
+            get_arch(arch).reduced(), vocab_size=tok.vocab_size
+        )
+        model = build_model(cfg)
+        params = model.init(jax.random.key(i), dtype=jnp.float32)
+        specs[arch] = EngineSpec(
+            arch,
+            ServeEngine(model, params, max_batch=2, max_len=64,
+                        eos_id=tok.eos_id, seed=0, prefix_cache=True),
+            tok,
+        )
+    system = "question : answer briefly :"
+
+    def build_router():
+        return CloudEdgeRouter(
+            specs["qwen2-1.5b"], [specs["xlstm-1.3b"]],
+            policy=round_robin_policy(include_llm=True),
+        )
+
+    router = build_router()
+    router.prewarm(system)
+    warm = {c.rid for c in router.run()}
+    assert len(warm) == 2  # one prewarm completion per tier
+    rids = [
+        router.submit(f"{system} {s.question}", max_new=4)
+        for s in corpus[:4]
+    ]
+    done = {c.rid: c for c in router.run()}
+    assert sorted(done) == rids
+    for spec in specs.values():
+        stats = spec.engine.prefix_stats
+        assert stats["hit_tokens"] > 0, f"{spec.name}: prewarm never paid off"
+    assert "prefix" in router.stats_summary()
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_prompt_over_bucket_cap():
+    """A prompt longer than bucket_cap must be rejected at submit() —
+    previously it was silently right-truncated into a too-small prefill
+    bucket."""
+    from repro.serve import Scheduler
+
+    sched = Scheduler(num_slots=2, max_len=64, bucket_cap=16)
+    sched.submit(list(range(1, 17)), max_new=4)  # 16 fits exactly
+    with pytest.raises(ValueError, match="bucket_cap"):
+        sched.submit(list(range(1, 18)), max_new=4)  # 17 > 16
+    with pytest.raises(ValueError, match="bucket_cap"):
+        sched.bucket_for(17)  # resumed feeds must not clip either
+
+
+def test_table_rows_dirty_tracking():
+    """table_rows must reuse one host buffer per lane count and only
+    rewrite rows whose slot table actually changed."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    cache = BlockCacheManager(model, num_slots=3, max_len=32, page_size=8)
+    cache.alloc_prompt(0, list(range(1, 10)))
+    cache.alloc_prompt(1, list(range(1, 5)))
+    lanes = [0, 1, cache.trash_slot]
+    rows1 = cache.table_rows(lanes)
+    np.testing.assert_array_equal(rows1[0], cache.block_tables[0])
+    np.testing.assert_array_equal(rows1[2], 0)
+    rows2 = cache.table_rows(lanes)
+    assert rows2 is rows1  # same buffer, nothing dirty
+    cache.ensure(1, 9)  # slot 1 grows a page -> its row is dirty
+    rows3 = cache.table_rows(lanes)
+    assert rows3 is rows1
+    np.testing.assert_array_equal(rows3[1], cache.block_tables[1])
+    cache.release(0)
+    rows4 = cache.table_rows(lanes)
+    np.testing.assert_array_equal(rows4[0], 0)
+
+
+# ---------------------------------------------------------------------------
+# Page-accounting property test (hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("prefix", max_examples=25, deadline=None)
+    settings.load_profile("prefix")
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs hypothesis; local images may not
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def managed_models():
+    """One model per prefix mode; managers are rebuilt per example (the
+    device pools are tiny at reduced scale)."""
+    _, attn, _ = _setup("qwen2-1.5b")
+    _, swa, _ = _setup("gemma-2b-swa")
+    return {"chain": attn, "snapshot": swa}
+
+
+def _check_invariants(cache: BlockCacheManager):
+    acc = cache.accounting()
+    slot_refs = np.zeros(cache.num_pages, np.int64)
+    for owned in acc["slot_refs"]:
+        for p in owned:
+            slot_refs[p] += 1
+    node_refs = np.zeros(cache.num_pages, np.int64)
+    for pages in acc["node_pages"]:
+        for p in pages:
+            node_refs[p] += 1
+    # refcounts partition exactly into slot refs + index refs
+    np.testing.assert_array_equal(slot_refs + node_refs, acc["refcount"])
+    np.testing.assert_array_equal(node_refs, acc["index_refs"])
+    free = acc["free"]
+    assert len(set(free)) == len(free), "page double-freed"
+    assert 0 not in free, "trash page freed"
+    for p in free:
+        assert acc["refcount"][p] == 0, "freed page still referenced"
+    for p in range(1, cache.num_pages):
+        assert (acc["refcount"][p] == 0) == (p in free), (
+            f"page {p} neither free nor referenced"
+        )
+    assert cache.pages_in_use == cache.num_pages - 1 - len(free)
+
+
+if HAVE_HYPOTHESIS:
+    ops_strategy = st.lists(
+        st.one_of(
+            st.tuples(st.just("alloc"), st.integers(0, 2), st.integers(0, 5),
+                      st.integers(1, 22)),
+            st.tuples(st.just("decode"), st.integers(0, 2), st.integers(1, 4)),
+            st.tuples(st.just("release"), st.integers(0, 2)),
+        ),
+        min_size=1, max_size=30,
+    )
+else:  # pragma: no cover - placeholder so the decorator below still binds
+    def given(**kw):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    ops_strategy = None
+
+
+def _drive(cache: BlockCacheManager, ops):
+    """Interpret (alloc | decode | release) ops against the manager the
+    way the engine would — registration included — checking the
+    accounting invariants after every op."""
+    # a small prompt alphabet with a few canned prefixes => real hits
+    prefixes = [[1] * 8, [2] * 8, [1] * 8 + [3] * 8]
+    slot_state = {}  # slot -> next write position
+    for op in ops:
+        if op[0] == "alloc":
+            _, slot, pfx, tail = op
+            if slot in slot_state:
+                continue
+            tokens = prefixes[pfx % len(prefixes)][:16] + [
+                5 + (tail + i) % 7 for i in range(tail)
+            ]
+            if not cache.can_admit(len(tokens), tokens):
+                continue
+            cached, _ = cache.alloc_prompt(slot, tokens)
+            # registration as the engine would do it post-prefill
+            if cache.prefix_mode == "chain":
+                cache.register_prefix(slot, tokens)
+            else:
+                ps = cache.geom.page_size
+                b = cached + ps
+                while b <= len(tokens):
+                    if not cache.ensure(slot, b - ps, ps):
+                        break  # as the engine would: stop registering
+                    cache.register_boundary(slot, tokens[:b])
+                    b += ps
+            slot_state[slot] = len(tokens)
+        elif op[0] == "decode":
+            _, slot, steps = op
+            if slot not in slot_state:
+                continue
+            pos = slot_state[slot]
+            if pos + steps >= cache.geom.max_len:
+                continue
+            if cache.ensure(slot, pos, steps):
+                slot_state[slot] = pos + steps
+        else:
+            _, slot = op
+            if slot in slot_state:
+                cache.release(slot)
+                del slot_state[slot]
+        _check_invariants(cache)
+    for slot in list(slot_state):
+        cache.release(slot)
+    _check_invariants(cache)
+    _assert_drained(cache)
+
+
+FIXED_SEQUENCES = [
+    # shared-prefix hits + COW decode + interleaved release/re-admission
+    [("alloc", 0, 0, 4), ("alloc", 1, 0, 7), ("decode", 0, 4),
+     ("decode", 1, 3), ("release", 0), ("alloc", 2, 2, 2),
+     ("decode", 2, 4), ("release", 1), ("release", 2)],
+    # churn: every slot allocs a different prefix, pool must cycle
+    [("alloc", 0, 0, 9), ("alloc", 1, 1, 9), ("alloc", 2, 2, 9),
+     ("release", 1), ("alloc", 1, 0, 2), ("decode", 1, 4),
+     ("decode", 0, 4), ("release", 0), ("release", 1), ("release", 2)],
+    # decode far enough to wrap the swa ring over shared pages
+    [("alloc", 0, 2, 1), ("alloc", 1, 2, 1), ("decode", 0, 4),
+     ("decode", 0, 4), ("decode", 1, 4), ("release", 0), ("release", 1)],
+]
+
+
+@pytest.mark.parametrize("mode", ["chain", "snapshot"])
+@pytest.mark.parametrize("seq", range(len(FIXED_SEQUENCES)))
+def test_page_accounting_fixed_sequences(managed_models, mode, seq):
+    """Deterministic companion to the hypothesis sweep below, so the
+    invariant machinery runs even where hypothesis is not installed."""
+    cache = BlockCacheManager(managed_models[mode], num_slots=3, max_len=32,
+                              page_size=8, num_pages=9, prefix_cache=True,
+                              max_prefix_nodes=6)
+    _drive(cache, FIXED_SEQUENCES[seq])
+
+
+@pytest.mark.parametrize("mode", ["chain", "snapshot"])
+@given(ops=ops_strategy)
+def test_page_accounting_invariants(managed_models, mode, ops):
+    """Random submit/prefill-register/decode/release/prefix-hit sequences
+    must keep the accounting clean after every op: no double-free,
+    refcounts sum to slot+index refs, trash page 0 never allocated,
+    released shared pages only freed at refcount 0."""
+    cache = BlockCacheManager(managed_models[mode], num_slots=3, max_len=32,
+                              page_size=8, num_pages=9, prefix_cache=True,
+                              max_prefix_nodes=6)
+    _drive(cache, ops)
