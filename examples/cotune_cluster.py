@@ -1,65 +1,47 @@
 """Co-PLMs Algorithm 1 end-to-end on a simulated cloud-edge consortium:
 1 server (GPT-J-6B family, reduced) + 3 heterogeneous edge devices
 (Bloom / Sheared-LLaMA / Qwen2.5 families, reduced) with heterogeneous
-tokenizers and Dirichlet-skewed domain shards — then the co-tuned,
-LoRA-merged consortium SERVES traffic through a CloudEdgeRouter: short
-prompts go to the edge SLMs, long ones to the cloud LLM, each tier with
-its own tokenizer (DESIGN.md §7). Train-then-serve, the paper's full
-story.
+tokenizers and Dirichlet-skewed domain shards — trained with the
+scan-compiled rounds of ``repro.train`` (one compiled program per device
+per round), checkpointed, and then SERVED from that checkpoint through
+``CloudEdgeRouter.from_checkpoint``: short prompts go to the edge SLMs,
+long ones to the cloud LLM, each tier LoRA-merged at load with its own
+tokenizer (DESIGN.md §7/§10). Train-then-serve, the paper's full story.
 
   PYTHONPATH=src python examples/cotune_cluster.py [--rounds 2] [--lam 0.1]
 """
 import argparse
+import shutil
 import sys
 
 sys.path.insert(0, "src")
 
 from repro.configs import get_arch
-from repro.core.cotuning import CoPLMs, CoTuneConfig
+from repro.train import CoTuneConfig, CoTuneTrainer
 
 
-def serve_consortium(system: CoPLMs, *, gen: int = 10, threshold: int = 12):
-    """Serve the co-tuned consortium: merge each participant's LoRA into
-    its base weights and front the lot with a prompt-length router."""
-    from repro.core.lora import apply_lora
-    from repro.serve import (
-        CloudEdgeRouter,
-        EngineSpec,
-        ServeEngine,
-        prompt_length_policy,
+def serve_consortium(ckpt: str, eval_samples, *, max_len: int,
+                     gen: int = 10, threshold: int = 12,
+                     n_requests: int = 16):
+    """Serve the co-tuned consortium straight from its checkpoint: every
+    participant's LoRA is merged into its base weights at load and the lot
+    sits behind a prompt-length router."""
+    from repro.serve import CloudEdgeRouter, prompt_length_policy
+
+    router = CloudEdgeRouter.from_checkpoint(
+        ckpt, max_batch=2, max_len=max_len,
+        policy=prompt_length_policy(threshold),
     )
-
-    max_len = system.cfg.seq_len + gen
-    llm_params = apply_lora(
-        system.llm_params, system.llm_lora, system.cfg.lora_alpha
-    )
-    llm = EngineSpec(
-        "server-llm",
-        ServeEngine(system.llm, llm_params, max_batch=2, max_len=max_len,
-                    eos_id=system.server_tok.eos_id, seed=0),
-        system.server_tok,
-    )
-    slms = []
-    for i, dev in enumerate(system.devices):
-        merged = apply_lora(dev.slm_params, dev.slm_lora, system.cfg.lora_alpha)
-        slms.append(EngineSpec(
-            dev.name,
-            ServeEngine(dev.slm, merged, max_batch=2, max_len=max_len,
-                        eos_id=dev.tok.eos_id, seed=1 + i),
-            dev.tok,
-        ))
-    router = CloudEdgeRouter(llm, slms, policy=prompt_length_policy(threshold))
-
     rids = [
         router.submit(f"question : {s.question} answer :", max_new=gen)
-        for s in system.eval_samples[: 4 * (1 + len(slms))]
+        for s in eval_samples[:n_requests]
     ]
     done = {c.rid: c for c in router.run()}
     assert sorted(done) == sorted(rids), "router did not drain all requests"
     per_tier = {name: 0 for name in router.specs}
     for _, decision in router.route_log:
         per_tier[decision.engine] += 1
-    print("serving the co-tuned consortium "
+    print("serving the co-tuned consortium from its checkpoint "
           f"({len(rids)} requests): "
           + ", ".join(f"{k}={v}" for k, v in per_tier.items()))
     for rid in rids[:3]:
@@ -76,6 +58,8 @@ def main():
     ap.add_argument("--dst-steps", type=int, default=3)
     ap.add_argument("--gen", type=int, default=10,
                     help="tokens generated per request when serving")
+    ap.add_argument("--out", default="runs/cotune_cluster",
+                    help="checkpoint directory (wiped each run)")
     ap.add_argument("--no-serve", action="store_true",
                     help="skip the post-co-tuning serving phase")
     args = ap.parse_args()
@@ -91,15 +75,21 @@ def main():
         get_arch("paper-qwen2.5-1.5b"),
     ]
     print("building consortium (distilling DPM from the server LLM)...")
-    system = CoPLMs.build(slms, get_arch("paper-gptj-6b"), get_arch("paper-dpm"), cfg)
-    print("eval BEFORE co-tuning:", system.evaluate())
+    trainer = CoTuneTrainer.build(
+        slms, get_arch("paper-gptj-6b"), get_arch("paper-dpm"), cfg
+    )
+    print("eval BEFORE co-tuning:", trainer.evaluate())
     for t in range(cfg.rounds):
-        m = system.round(t)
+        m = trainer.round(t)
         print(f"round {t}: " + ", ".join(f"{k}={v:.3f}" for k, v in m.items()))
-    print("eval AFTER co-tuning:", system.evaluate())
-    print("comm fraction (Fig.3 metric):", system.comm_fraction())
+    print("eval AFTER co-tuning:", trainer.evaluate())
+    print("comm fraction (Fig.3 metric):", trainer.comm_fraction())
+    shutil.rmtree(args.out, ignore_errors=True)
+    ckpt = trainer.save_checkpoint(args.out)
+    print(f"checkpointed -> {ckpt}")
     if not args.no_serve:
-        serve_consortium(system, gen=args.gen)
+        serve_consortium(args.out, trainer.eval_samples,
+                         max_len=cfg.seq_len + args.gen, gen=args.gen)
 
 
 if __name__ == "__main__":

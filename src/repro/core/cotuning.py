@@ -1,340 +1,36 @@
-"""Co-PLMs Algorithm 1: the full collaborative co-tuning loop.
+"""Compatibility shim: the co-tuning runtime moved to ``repro.train``.
 
-Cloud-edge mapping (DESIGN.md §2): each edge device is a (model-heterogeneous)
-participant holding a Dirichlet-skewed data shard and its own tokenizer; the
-server holds the LLM and a uniformly-sampled shard. The DPM is distilled
-from the LLM once (Eq. 4), then per round:
+The sequential host-loop orchestrator that lived here was split into
 
-  device:  DST (adapters only, Eq. 5)  ->  SAML(DPM_i, SLM_i) (Eqs. 7-9)
-  upload:  phi_lora(DPM_i)                                (only this!)
-  server:  FedAvg LoRA  ->  SAML(DPM_s, LLM)  ->  broadcast phi_lora(DPM_s)
+- ``repro.train.trainer`` — ``CoTuneTrainer`` (consortium construction,
+  FedAvg/broadcast, persistent optimizer state, checkpoints); and
+- ``repro.train.rounds`` — the federated round itself, with host batch
+  gathering hoisted out of the step loop and the DST/SAML inner loops
+  compiled to one ``lax.scan`` program per device per round.
 
-On a real pod the upload/FedAvg is a pmean over the data axis; here the
-orchestrator runs the devices sequentially on one host and averages —
-identical statistics, transport simulated (DESIGN.md §5).
+``CoPLMs`` is kept as an alias of ``CoTuneTrainer`` (same surface:
+``build / round / train / evaluate / comm_fraction``), so existing
+callers and tests keep working. New code should import from
+``repro.train`` directly.
 """
-from __future__ import annotations
+from repro.train.rounds import make_saml_batch
+from repro.train.trainer import (
+    CoTuneConfig,
+    CoTuneTrainer,
+    EdgeDevice,
+    _sized,  # noqa: F401  (core.world / core.baselines import it from here)
+    make_sft_step,
+    sft,
+)
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+CoPLMs = CoTuneTrainer
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.core import saml as S
-from repro.core.adapters import init_adapters
-from repro.core.align import TokenAligner
-from repro.core.distill import distill_dpm
-from repro.core.evalqa import evaluate_qa
-from repro.core.lora import average_lora, init_lora, lora_param_fraction
-from repro.data.partition import dirichlet_partition, uniform_sample
-from repro.data.pipeline import QADataset, make_batches
-from repro.data.synthetic import QASample, generate_corpus
-from repro.data.tokenizer import ToyTokenizer, build_tokenizer
-from repro.models.model import Model, build_model
-from repro.models.transformer import cross_entropy
-from repro.optim.adamw import AdamW
-
-Params = Dict
-
-
-@dataclasses.dataclass
-class CoTuneConfig:
-    rounds: int = 2
-    dst_steps: int = 4
-    saml_steps: int = 8
-    distill_steps: int = 30
-    pretrain_steps: int = 60  # stands in for "pretrained" checkpoints
-    batch_size: int = 8
-    seq_len: int = 48
-    lora_rank: int = 4
-    lora_alpha: float = 16.0
-    saml: S.SamlConfig = dataclasses.field(default_factory=S.SamlConfig)
-    lr: float = 1e-3
-    lam: float = 1.0  # Dirichlet DDS
-    samples_per_client: int = 256
-    n_eval: int = 48
-    seed: int = 0
-    # ablations (Table 2)
-    use_dst: bool = True  # False -> Co-PLMs w/o DST (no domain adapters)
-    use_server_saml: bool = True  # False -> Co-PLMs w/o SAML (aggregate only)
-
-
-def _sized(cfg: ModelConfig, tok: ToyTokenizer) -> ModelConfig:
-    return dataclasses.replace(cfg.reduced(), vocab_size=tok.vocab_size)
-
-
-def make_sft_step(model: Model, optimizer):
-    import functools
-
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, opt_state, batch):
-        def loss_fn(p):
-            logits, _ = model.logits(p, batch)
-            return cross_entropy(logits, batch["targets"], batch["loss_mask"])
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        new_params, new_opt = optimizer.update(grads, opt_state, params)
-        return new_params, new_opt, loss
-
-    return step
-
-
-def sft(model: Model, params: Params, ds: QADataset, steps: int, cfg: CoTuneConfig,
-        seed: int = 0) -> Params:
-    opt = AdamW(learning_rate=cfg.lr, weight_decay=0.01)
-    state = opt.init(params)
-    step_fn = make_sft_step(model, opt)
-    batches = make_batches(ds, cfg.batch_size, seed=seed, epochs=100)
-    for i, batch in enumerate(batches):
-        if i >= steps:
-            break
-        batch = {k: jnp.asarray(v) for k, v in batch.items() if k != "sample_idx"}
-        params, state, _ = step_fn(params, state, batch)
-    return params
-
-
-@dataclasses.dataclass
-class EdgeDevice:
-    name: str
-    slm: Model
-    slm_params: Params
-    slm_lora: Params
-    dpm: Model
-    dpm_base: Params
-    dpm_lora: Params
-    adapters: Params
-    tok: ToyTokenizer
-    aligner: TokenAligner  # (a=DPM tokenizer, b=device tokenizer)
-    samples: List[QASample]
-    ds_dpm: QADataset
-    ds_slm: QADataset
-    dst_step: Optional[object] = None  # cached jit'd steps (built lazily)
-    saml_step: Optional[object] = None
-
-
-def make_saml_batch(
-    device: EdgeDevice, idx: Sequence[int], seq_len: int
-) -> Tuple[Dict, Dict, Dict]:
-    """batch_p (DPM tokenization), batch_l (SLM), align gathers + vocab maps."""
-    samples = [device.samples[i] for i in idx]
-    enc_p = [device.ds_dpm.encode_sample(s) for s in samples]
-    enc_l = [device.ds_slm.encode_sample(s) for s in samples]
-    batch_p = {k: jnp.asarray(np.stack([e[k] for e in enc_p])) for k in enc_p[0]}
-    batch_l = {k: jnp.asarray(np.stack([e[k] for e in enc_l])) for k in enc_l[0]}
-    texts = [s.text for s in samples]
-    # +1 bos offset: token position i corresponds to text piece i-1
-    p2l = device.aligner.batch_positions(texts, seq_len, "a2b") + 1
-    l2p = device.aligner.batch_positions(texts, seq_len, "b2a") + 1
-    align = {
-        "pos_p2l": jnp.asarray(np.minimum(p2l, seq_len - 1)),
-        "pos_l2p": jnp.asarray(np.minimum(l2p, seq_len - 1)),
-        "vm_l2p": jnp.asarray(device.aligner.vocab_b2a),
-        "vm_p2l": jnp.asarray(device.aligner.vocab_a2b),
-    }
-    return batch_p, batch_l, align
-
-
-@dataclasses.dataclass
-class CoPLMs:
-    """End-to-end Co-PLMs runtime over a simulated cloud-edge consortium."""
-
-    cfg: CoTuneConfig
-    llm: Model
-    llm_params: Params
-    llm_lora: Params
-    dpm_proto: Model  # server-side DPM (shares LLM tokenizer)
-    dpm_base: Params
-    server_dpm_lora: Params
-    server_tok: ToyTokenizer
-    server_samples: List[QASample]
-    server_ds: QADataset
-    devices: List[EdgeDevice]
-    eval_samples: List[QASample]
-    history: List[Dict] = dataclasses.field(default_factory=list)
-
-    # -- construction -------------------------------------------------
-    @staticmethod
-    def build(
-        slm_cfgs: Sequence[ModelConfig],
-        llm_cfg: ModelConfig,
-        dpm_cfg: ModelConfig,
-        cfg: CoTuneConfig,
-        *,
-        hetero_tokenizers: bool = True,
-    ) -> "CoPLMs":
-        rng = jax.random.key(cfg.seed)
-        corpus = generate_corpus(400, seed=cfg.seed)
-        texts = [s.text for s in corpus]
-        server_tok = build_tokenizer("server", texts, max_piece=12, budget=1024)
-        tok_variants = [
-            build_tokenizer("edge-a", texts, max_piece=4, budget=512),
-            build_tokenizer("edge-b", texts, max_piece=7, budget=768),
-            build_tokenizer("edge-c", texts, max_piece=10, budget=640),
-        ]
-        n_dev = len(slm_cfgs)
-        shards = dirichlet_partition(
-            corpus, n_dev, cfg.lam, seed=cfg.seed,
-            samples_per_device=cfg.samples_per_client,
-        )
-        server_samples = uniform_sample(corpus, cfg.samples_per_client, cfg.seed + 1)
-        eval_samples = uniform_sample(corpus, cfg.n_eval, cfg.seed + 2)
-
-        # server LLM ("pretrained" by SFT on the server shard)
-        llm = build_model(_sized(llm_cfg, server_tok))
-        k1, k2, rng = jax.random.split(rng, 3)
-        server_ds = QADataset(server_samples, server_tok, cfg.seq_len)
-        llm_params = sft(
-            llm, llm.init(k1), server_ds, cfg.pretrain_steps, cfg, seed=11
-        )
-        llm_lora = init_lora(llm.specs(), k2, cfg.lora_rank)
-
-        # DPM distilled from the LLM (Eq. 4)
-        dpm = build_model(_sized(dpm_cfg, server_tok))
-        kd, rng = jax.random.split(rng)
-        batches = (
-            {k: jnp.asarray(v) for k, v in b.items() if k != "sample_idx"}
-            for b in make_batches(server_ds, cfg.batch_size, seed=7, epochs=100)
-        )
-        dpm_base = distill_dpm(
-            dpm, llm, llm_params, batches, key=kd, steps=cfg.distill_steps, lr=cfg.lr
-        )
-        ks, rng = jax.random.split(rng)
-        server_dpm_lora = init_lora(dpm.specs(), ks, cfg.lora_rank)
-
-        devices: List[EdgeDevice] = []
-        for i, slm_cfg in enumerate(slm_cfgs):
-            tok = tok_variants[i % len(tok_variants)] if hetero_tokenizers else server_tok
-            slm = build_model(_sized(slm_cfg, tok))
-            k1, k2, k3, k4, rng = jax.random.split(rng, 5)
-            ds_l = QADataset(shards[i], tok, cfg.seq_len)
-            slm_params = sft(slm, slm.init(k1), ds_l, cfg.pretrain_steps, cfg, seed=13 + i)
-            devices.append(
-                EdgeDevice(
-                    name=f"device-{i + 1}",
-                    slm=slm,
-                    slm_params=slm_params,
-                    slm_lora=init_lora(slm.specs(), k2, cfg.lora_rank),
-                    dpm=dpm,
-                    dpm_base=dpm_base,
-                    dpm_lora=jax.tree.map(jnp.copy, server_dpm_lora),
-                    adapters=init_adapters(dpm.cfg, k3),
-                    tok=tok,
-                    aligner=TokenAligner(server_tok, tok),
-                    samples=shards[i],
-                    ds_dpm=QADataset(shards[i], server_tok, cfg.seq_len),
-                    ds_slm=ds_l,
-                )
-            )
-        return CoPLMs(
-            cfg=cfg, llm=llm, llm_params=llm_params, llm_lora=llm_lora,
-            dpm_proto=dpm, dpm_base=dpm_base, server_dpm_lora=server_dpm_lora,
-            server_tok=server_tok, server_samples=server_samples,
-            server_ds=server_ds, devices=devices, eval_samples=eval_samples,
-        )
-
-    # -- one federated round (Algorithm 1 lines 3-20) ------------------
-    def round(self, t: int) -> Dict:
-        cfg = self.cfg
-        opt = AdamW(learning_rate=cfg.lr)
-        uploaded: List[Params] = []
-        rng = np.random.RandomState(1000 * t + cfg.seed)
-        metrics: Dict = {}
-
-        for dev in self.devices:
-            # --- DST: domain adapters only (Eq. 5)
-            if dev.dst_step is None:
-                dev.dst_step = S.make_dst_step(dev.dpm, opt, cfg.lora_alpha)
-                dev.saml_step = S.make_saml_step(dev.dpm, dev.slm, opt, cfg.saml)
-            dst_loss = jnp.zeros(())
-            if cfg.use_dst:
-                dst_state = opt.init(dev.adapters)
-                for _ in range(cfg.dst_steps):
-                    idx = rng.randint(0, len(dev.samples), cfg.batch_size)
-                    batch_p, _, _ = make_saml_batch(dev, idx, cfg.seq_len)
-                    dev.adapters, dst_state, dst_loss = dev.dst_step(
-                        dev.adapters, dst_state, dev.dpm_base, dev.dpm_lora, batch_p
-                    )
-            # --- SAML(DPM_i, SLM_i)
-            saml_step = dev.saml_step
-            loras = {"p": dev.dpm_lora, "l": dev.slm_lora}
-            saml_state = opt.init(loras)
-            for _ in range(cfg.saml_steps):
-                idx = rng.randint(0, len(dev.samples), cfg.batch_size)
-                batch_p, batch_l, align = make_saml_batch(dev, idx, cfg.seq_len)
-                loras, saml_state, m = saml_step(
-                    loras, saml_state, dev.dpm_base, dev.slm_params,
-                    dev.adapters, batch_p, batch_l, align,
-                )
-            dev.dpm_lora, dev.slm_lora = loras["p"], loras["l"]
-            uploaded.append(dev.dpm_lora)
-            metrics[f"{dev.name}/kt_lm"] = float(m["kt_lm"])
-            metrics[f"{dev.name}/dst_loss"] = float(dst_loss)
-
-        # --- server: FedAvg of DPM LoRA (line 12), then SAML(DPM_s, LLM)
-        self.server_dpm_lora = average_lora(uploaded)
-        if not cfg.use_server_saml:  # Table-2 'w/o SAML' ablation
-            for dev in self.devices:
-                dev.dpm_lora = jax.tree.map(jnp.copy, self.server_dpm_lora)
-            metrics["server/kt_lm"] = float("nan")
-            return metrics
-        srv_aligner = TokenAligner(self.server_tok, self.server_tok)
-        if not hasattr(self, "_srv_step") or self._srv_step is None:
-            self._srv_step = S.make_saml_step(self.dpm_proto, self.llm, opt, cfg.saml)
-        srv_step = self._srv_step
-        loras = {"p": self.server_dpm_lora, "l": self.llm_lora}
-        srv_state = opt.init(loras)
-        for _ in range(cfg.saml_steps):
-            idx = rng.randint(0, len(self.server_samples), cfg.batch_size)
-            samples = [self.server_samples[i] for i in idx]
-            enc = [self.server_ds.encode_sample(s) for s in samples]
-            batch = {k: jnp.asarray(np.stack([e[k] for e in enc])) for k in enc[0]}
-            texts = [s.text for s in samples]
-            pos = jnp.asarray(
-                np.minimum(
-                    srv_aligner.batch_positions(texts, cfg.seq_len) + 1,
-                    cfg.seq_len - 1,
-                )
-            )
-            ident = jnp.arange(self.server_tok.vocab_size, dtype=jnp.int32)
-            align = {"pos_p2l": pos, "pos_l2p": pos, "vm_l2p": ident, "vm_p2l": ident}
-            loras, srv_state, m = srv_step(
-                loras, srv_state, self.dpm_base, self.llm_params,
-                {}, batch, batch, align,
-            )
-        self.server_dpm_lora, self.llm_lora = loras["p"], loras["l"]
-        metrics["server/kt_lm"] = float(m["kt_lm"])
-
-        # --- broadcast (lines 15-19)
-        for dev in self.devices:
-            dev.dpm_lora = jax.tree.map(jnp.copy, self.server_dpm_lora)
-        return metrics
-
-    # -- evaluation -----------------------------------------------------
-    def evaluate(self) -> Dict[str, Dict[str, float]]:
-        from repro.core.lora import apply_lora
-
-        out: Dict[str, Dict[str, float]] = {}
-        for dev in self.devices:
-            params = apply_lora(dev.slm_params, dev.slm_lora, self.cfg.lora_alpha)
-            out[dev.name] = evaluate_qa(
-                dev.slm, params, dev.tok, self.eval_samples
-            )
-        params = apply_lora(self.llm_params, self.llm_lora, self.cfg.lora_alpha)
-        out["server"] = evaluate_qa(self.llm, params, self.server_tok, self.eval_samples)
-        return out
-
-    def comm_fraction(self) -> Dict[str, float]:
-        """Fig. 3 metric: transmitted params / device model params."""
-        out = {}
-        for dev in self.devices:
-            out[dev.name] = lora_param_fraction(dev.dpm_lora, dev.slm_params)
-        return out
-
-    def train(self) -> List[Dict]:
-        for t in range(self.cfg.rounds):
-            m = self.round(t)
-            self.history.append(m)
-        return self.history
+__all__ = [
+    "CoPLMs",
+    "CoTuneConfig",
+    "CoTuneTrainer",
+    "EdgeDevice",
+    "make_saml_batch",
+    "make_sft_step",
+    "sft",
+]

@@ -1,0 +1,199 @@
+"""Co-tuning CLI: train -> checkpoint -> serve, end to end (DESIGN.md §10).
+
+Runs Algorithm 1 on a reduced cloud-edge consortium with scan-compiled
+rounds (``repro.train``), checkpoints every LoRA/adapter tree, then serves
+the co-tuned consortium from that checkpoint: a ``CloudEdgeRouter`` with
+one tier per participant plus a ``spec-pair`` tier where the co-tuned SLM
+drafts for the LLM verifier. Prints the draft-acceptance lift the rounds
+bought — the paper's claim, measured on the serving stack.
+
+  PYTHONPATH=src python -m repro.launch.cotune --rounds 2 --out runs/cotune
+
+CI smoke (reduced config; asserts the checkpoint round-trips byte-
+identically and that the co-tuned drafter's acceptance clears the untuned
+BENCH_spec floor):
+
+  PYTHONPATH=src python -m repro.launch.cotune --smoke
+
+The consortium defaults to a shared vocabulary (``--hetero`` enables
+per-device tokenizers): greedy cross-vocab acceptance is bounded by
+exact-piece overlap between vocabularies — a coarse-vocab drafter can
+never propose a fine-vocab verifier token in one piece — so the clean
+acceptance-lift reading is the shared-vocab pair. Hetero-tokenizer tiers
+still serve through the router either way.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def acceptance_probe(
+    spec,
+    prompts: List[List[int]],
+    *,
+    max_new: int = 12,
+) -> Tuple[float, float]:
+    """Drain ``prompts`` through a SpecCoordinator and return its
+    (acceptance_rate, accepted_per_verify)."""
+    for p in prompts:
+        spec.submit(p, max_new=max_new)
+    spec.run()
+    st = spec.stats
+    return st.acceptance_rate, st.accepted_per_verify
+
+
+def encode_prompts(tok, samples, seq_len: int, n: int) -> List[List[int]]:
+    return [
+        tok.encode(f"question : {s.question} answer :", bos=True)[:seq_len]
+        for s in samples[:n]
+    ]
+
+
+def trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--devices", type=int, default=2, choices=(1, 2, 3))
+    ap.add_argument("--dst-steps", type=int, default=2)
+    ap.add_argument("--saml-steps", type=int, default=6)
+    ap.add_argument("--distill-steps", type=int, default=12)
+    ap.add_argument("--pretrain-steps", type=int, default=30)
+    ap.add_argument("--seq", type=int, default=40)
+    ap.add_argument("--samples-per-client", type=int, default=128)
+    ap.add_argument("--k", type=int, default=4, help="draft window")
+    ap.add_argument("--gen", type=int, default=12, help="tokens per request")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4, help="engine slots")
+    ap.add_argument("--hetero", action="store_true",
+                    help="per-device tokenizers (see module docstring)")
+    ap.add_argument("--loop-rounds", action="store_true",
+                    help="per-step jits instead of scan-compiled rounds")
+    ap.add_argument("--out", default="runs/cotune")
+    ap.add_argument("--fresh", action="store_true",
+                    help="wipe --out before running")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config + round-trip/acceptance asserts (CI)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.serve import CloudEdgeRouter, SpecCoordinator, explicit_tier_policy
+    from repro.train import CoTuneConfig, CoTuneTrainer
+
+    if args.smoke:
+        args.rounds = max(2, args.rounds)
+        args.devices = 1
+        args.pretrain_steps = 20
+        args.distill_steps = 8
+        args.saml_steps = 4
+        args.dst_steps = 2
+        args.samples_per_client = 96
+        args.seq = 32
+        args.requests = 6
+        args.gen = 8
+
+    cfg = CoTuneConfig(
+        rounds=args.rounds, dst_steps=args.dst_steps,
+        saml_steps=args.saml_steps, distill_steps=args.distill_steps,
+        pretrain_steps=args.pretrain_steps, batch_size=8, seq_len=args.seq,
+        samples_per_client=args.samples_per_client, n_eval=16,
+        scan_rounds=not args.loop_rounds,
+    )
+    slm_archs = ["paper-bloom-1.1b", "paper-llama2-1.3b",
+                 "paper-qwen2.5-1.5b"][: args.devices]
+    print(f"building consortium: paper-gptj-6b + {slm_archs} "
+          f"({'hetero' if args.hetero else 'shared'} vocab)...")
+    trainer = CoTuneTrainer.build(
+        [get_arch(a) for a in slm_archs], get_arch("paper-gptj-6b"),
+        get_arch("paper-dpm"), cfg, hetero_tokenizers=args.hetero,
+    )
+    if args.fresh or args.smoke:
+        shutil.rmtree(args.out, ignore_errors=True)
+    trainer.save_checkpoint(args.out, 0)  # the untuned consortium
+
+    for t in range(cfg.rounds):
+        m = trainer.round(t)
+        print(f"round {t}: " + ", ".join(f"{k}={v:.3f}" for k, v in m.items()))
+    ckpt_dir = trainer.save_checkpoint(args.out)
+    print(f"checkpointed {len(trainer.devices)} devices + server -> {ckpt_dir}")
+
+    # --- serve from the checkpoint: acceptance before vs after ----------
+    prompts = encode_prompts(trainer.server_tok, trainer.eval_samples,
+                             args.seq, args.requests)
+    # spec stacks need the verify lookahead past the generation budget
+    spec_max_len = args.seq + args.gen + args.k + 1
+    results = {}
+    for label, ridx in (("untuned", 0), ("co-tuned", cfg.rounds)):
+        spec = SpecCoordinator.from_checkpoint(
+            args.out, round_idx=ridx, max_batch=args.batch, k=args.k,
+            max_len=spec_max_len,
+        )
+        acc, apv = acceptance_probe(spec, prompts, max_new=args.gen)
+        results[label] = (acc, apv)
+        print(f"[{label} drafter] acceptance {acc:.1%}, "
+              f"{apv:.2f} accepted tok/verify")
+    lift = results["co-tuned"][0] - results["untuned"][0]
+    print(f"co-tuning acceptance lift: {lift:+.1%} "
+          f"(BENCH_spec untuned-SLM floor: 0%)")
+
+    # --- the full consortium behind one front door ----------------------
+    router = CloudEdgeRouter.from_checkpoint(
+        args.out, max_batch=args.batch, max_len=spec_max_len,
+        policy=explicit_tier_policy(default="spec-pair"),
+        spec_device=trainer.devices[0].name, k=args.k,
+    )
+    rids = [router.submit(f"question : {s.question} answer :",
+                          max_new=args.gen)
+            for s in trainer.eval_samples[: args.requests]]
+    done = {c.rid: c for c in router.run()}
+    assert sorted(done) == sorted(rids), "router did not drain all requests"
+    for rid in rids[:2]:
+        c = done[rid]
+        print(f"  [{c.engine}] {c.prompt_text!r} -> {c.text!r}")
+    print(router.stats_summary())
+
+    if args.smoke:
+        reloaded = CoTuneTrainer.load_checkpoint(args.out)
+        assert trees_equal(reloaded.merged_llm(), trainer.merged_llm()), \
+            "checkpoint round-trip: merged LLM params diverged"
+        assert trees_equal(reloaded.merged_slm(), trainer.merged_slm()), \
+            "checkpoint round-trip: merged SLM params diverged"
+        assert trees_equal(reloaded.devices[0].adapters,
+                           trainer.devices[0].adapters), \
+            "checkpoint round-trip: adapter tree diverged"
+        # the BENCH_spec ``slm`` floor is an UNALIGNED (random-init)
+        # independent drafter: ~0% acceptance, deterministically — the
+        # robust thing to assert a lift against. (The pretrained-untuned
+        # number printed above shares corpus statistics with the
+        # verifier, so its gap to the co-tuned number varies run to run
+        # at smoke scale.)
+        dev = trainer.devices[0]
+        floor = SpecCoordinator(
+            trainer.llm, trainer.merged_llm(), dev.slm,
+            dev.slm.init(jax.random.key(99)),
+            max_batch=args.batch, max_len=spec_max_len, k=args.k,
+            eos_id=trainer.server_tok.eos_id,
+        )
+        acc_floor, _ = acceptance_probe(floor, prompts, max_new=args.gen)
+        acc_tuned = results["co-tuned"][0]
+        assert acc_tuned > acc_floor, (
+            f"co-tuned drafter acceptance {acc_tuned:.1%} did not clear "
+            f"the unaligned-drafter floor {acc_floor:.1%}"
+        )
+        print("cotune smoke OK: checkpoint round-trips byte-identically, "
+              f"co-tuned acceptance {acc_tuned:.1%} clears the "
+              f"unaligned floor {acc_floor:.1%}")
+
+
+if __name__ == "__main__":
+    main()

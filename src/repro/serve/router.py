@@ -171,6 +171,73 @@ class CloudEdgeRouter:
         self.route_log: List[Tuple[int, RouteDecision]] = []
         self._next_rid = 0
 
+    # -- the train->serve handoff (DESIGN.md §10) ---------------------------
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        root: str,
+        *,
+        round_idx: Optional[int] = None,
+        policy: Optional[Policy] = None,
+        max_batch: int = 2,
+        max_len: Optional[int] = None,
+        seed: int = 0,
+        spec_device: Optional[str] = None,
+        k: int = 4,
+        **engine_kw,
+    ) -> "CloudEdgeRouter":
+        """Serve a co-tuned consortium straight from a
+        ``train.CoTuneTrainer`` checkpoint: one ``server-llm`` tier plus
+        one tier per edge device, every participant LoRA-merged at load
+        and fronted by its own tokenizer. ``spec_device`` additionally
+        registers a ``spec-pair`` tier — the named device's co-tuned SLM
+        drafting for the LLM verifier (``collaborative_policy`` routes
+        long prompts there). ``round_idx`` defaults to the latest round;
+        round 0 is the untuned consortium."""
+        from repro.serve.engine import ServeEngine
+        from repro.serve.spec import SpecCoordinator
+        from repro.train.trainer import CoTuneTrainer
+
+        tr = CoTuneTrainer.load_checkpoint(root, round_idx)
+        if max_len is None:
+            max_len = tr.cfg.seq_len + 48
+        llm_params = tr.merged_llm()
+        llm = EngineSpec(
+            "server-llm",
+            ServeEngine(tr.llm, llm_params, max_batch=max_batch,
+                        max_len=max_len, eos_id=tr.server_tok.eos_id,
+                        seed=seed, **engine_kw),
+            tr.server_tok,
+        )
+        slm_params = {dev.name: tr.merged_slm(dev.name) for dev in tr.devices}
+        slms = []
+        for i, dev in enumerate(tr.devices):
+            slms.append(EngineSpec(
+                dev.name,
+                ServeEngine(dev.slm, slm_params[dev.name],
+                            max_batch=max_batch, max_len=max_len,
+                            eos_id=dev.tok.eos_id, seed=seed + 1 + i,
+                            **engine_kw),
+                dev.tok,
+            ))
+        spec_pair = None
+        if spec_device is not None:
+            dev = tr.device(spec_device)
+            spec_pair = EngineSpec(
+                "spec-pair",
+                SpecCoordinator(
+                    tr.llm, llm_params, dev.slm, slm_params[dev.name],
+                    max_batch=max_batch, max_len=max_len, k=k,
+                    eos_id=tr.server_tok.eos_id, seed=seed + 101,
+                    verifier_tokenizer=tr.server_tok,
+                    drafter_tokenizer=dev.tok,
+                    **engine_kw,
+                ),
+                tr.server_tok,
+            )
+        return cls(llm, slms, policy=policy, spec_pair=spec_pair)
+
     # -- vocab bridging -----------------------------------------------------
 
     def aligner(self, slm_name: str) -> TokenAligner:

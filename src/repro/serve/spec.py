@@ -36,6 +36,23 @@ copy-on-write prefix pool, walked in lockstep at admission — a shared
 system preamble is prefilled once on the verifier and once on the
 drafter (whose chains key on the vocab-mapped ids), and every later
 request prefills only its uncached tail on each side.
+
+``adaptive_k=True`` lets the draft window track the *running* acceptance
+rate (an EWMA over verify rounds): a well-aligned pair grows toward the
+``k`` passed at construction (now the ceiling), a misaligned one shrinks
+toward ``k_min`` so rejected drafts stop burning drafter steps and
+verifier score positions. Greedy acceptance commits the verifier-argmax
+prefix whatever the window size, so adapting K changes throughput only —
+outputs stay byte-identical (asserted in tests/test_spec.py). Rejection
+mode refuses ``adaptive_k``: there the committed samples depend on the
+window size, and the EWMA aggregates across live lanes, so co-scheduled
+traffic would leak into a stream's generation.
+
+``from_checkpoint`` closes the paper's train->serve loop (DESIGN.md §10):
+it loads a ``train.CoTuneTrainer`` checkpoint and pairs the LoRA-merged
+server LLM (verifier) with a co-tuned, LoRA-merged device SLM (drafter)
+— the consortium that co-tuning aligned is exactly the pair speculative
+decoding wants aligned.
 """
 from __future__ import annotations
 
@@ -87,6 +104,11 @@ class SpecCoordinator:
         gather_live_lanes: bool = True,
         exhaust_policy: str = "evict",
         prefix_cache: bool = False,
+        adaptive_k: bool = False,
+        k_min: int = 1,
+        k_ewma: float = 0.3,
+        k_grow: float = 0.7,
+        k_shrink: float = 0.35,
     ):
         if verifier_model.cfg.is_encoder_decoder or drafter_model.cfg.is_encoder_decoder:
             raise ValueError("speculative decoding serves decoder-only configs")
@@ -96,13 +118,35 @@ class SpecCoordinator:
             raise ValueError(f"unknown exhaust_policy {exhaust_policy!r}")
         if k < 1:
             raise ValueError(f"draft window k={k} < 1")
-        self.k = k
+        if not 1 <= k_min <= k:
+            raise ValueError(f"need 1 <= k_min={k_min} <= k={k}")
+        if adaptive_k and mode == "rejection":
+            raise ValueError(
+                "adaptive_k serves greedy acceptance only: the window "
+                "walks on an acceptance EWMA aggregated across live "
+                "lanes, and under rejection sampling the committed "
+                "tokens depend on the window size — co-scheduled "
+                "traffic would change a stream's samples, breaking "
+                "traffic independence (greedy outputs are "
+                "window-invariant, so adapting K is free there)"
+            )
+        self.k = k  # current draft window (moves when adaptive_k)
+        self.k_max = k  # ring-capacity checks below are sized for this
+        self.k_min = k_min
+        self.adaptive_k = adaptive_k
+        self.k_ewma = k_ewma
+        self.k_grow = k_grow
+        self.k_shrink = k_shrink
+        self.acc_ewma: Optional[float] = None  # running acceptance rate
+        self.k_history: List[int] = []  # window size used per verify round
         self.mode = mode
         self.max_batch = max_batch
         self.max_len = max_len
         self.exhaust_policy = exhaust_policy
 
         # cross-vocab bridge: built only when the tokenizers differ
+        self.verifier_tokenizer = verifier_tokenizer
+        self.drafter_tokenizer = drafter_tokenizer
         self.aligner: Optional[TokenAligner] = None
         if (verifier_tokenizer is not None and drafter_tokenizer is not None
                 and verifier_tokenizer is not drafter_tokenizer):
@@ -156,6 +200,39 @@ class SpecCoordinator:
         # pending drafter-vocab token per slot (the drafter's image of the
         # verifier's pending ``cur`` token)
         self.draft_cur = np.zeros(max_batch, np.int32)
+
+    # -- the train->serve handoff (DESIGN.md §10) ----------------------------
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        root: str,
+        *,
+        device: Optional[str] = None,
+        round_idx: Optional[int] = None,
+        max_batch: int = 4,
+        max_len: Optional[int] = None,
+        k: int = 4,
+        **kw,
+    ) -> "SpecCoordinator":
+        """Build the (co-tuned SLM drafter, LLM verifier) pair from a
+        ``train.CoTuneTrainer`` checkpoint: both sides are LoRA-merged at
+        load (W0 + scaled AB), so the pair serves exactly what Algorithm 1
+        aligned. ``device`` picks the drafter (first device by default);
+        ``round_idx`` picks the federated round (latest by default —
+        round 0 is the untuned consortium, the acceptance floor)."""
+        from repro.train.trainer import CoTuneTrainer
+
+        tr = CoTuneTrainer.load_checkpoint(root, round_idx)
+        dev = tr.device(device)
+        return cls(
+            tr.llm, tr.merged_llm(), dev.slm, tr.merged_slm(dev.name),
+            max_batch=max_batch,
+            max_len=max_len if max_len is not None else tr.cfg.seq_len + 48,
+            k=k, eos_id=tr.server_tok.eos_id,
+            verifier_tokenizer=tr.server_tok, drafter_tokenizer=dev.tok,
+            **kw,
+        )
 
     # -- vocab bridging ------------------------------------------------------
 
@@ -311,6 +388,20 @@ class SpecCoordinator:
             self.cache_d.paged, self.cache_d.slots,
             stacked=stacked, undo=undo, n_acc=n_acc, lanes=lanes_np,
         )
+
+        # per-round adaptive K: track the running acceptance rate and move
+        # the next round's draft window toward what the pair can sustain
+        self.k_history.append(k)
+        window_acc = float(n_acc[: len(live)].sum()) / (len(live) * k)
+        self.acc_ewma = (
+            window_acc if self.acc_ewma is None
+            else (1 - self.k_ewma) * self.acc_ewma + self.k_ewma * window_acc
+        )
+        if self.adaptive_k:
+            if self.acc_ewma >= self.k_grow and self.k < self.k_max:
+                self.k += 1
+            elif self.acc_ewma <= self.k_shrink and self.k > self.k_min:
+                self.k -= 1
 
         now = time.monotonic()
         committed = 0

@@ -1,0 +1,51 @@
+"""Train subsystem: scan-compiled co-tuning rounds + the train->serve
+handoff (DESIGN.md §10).
+
+``CoTuneTrainer`` (train/trainer.py) owns the consortium — persistent
+per-participant AdamW state, device-keyed jit caches, npz checkpoints —
+and ``train/rounds.py`` compiles each federated round's DST/SAML inner
+loops into one ``lax.scan`` program per device over pre-stacked batches.
+
+The serving stack consumes trainer checkpoints directly:
+``serve.SpecCoordinator.from_checkpoint`` pairs the LoRA-merged LLM
+verifier with a co-tuned SLM drafter, and
+``serve.CloudEdgeRouter.from_checkpoint`` fronts the whole consortium.
+``core.cotuning`` remains as a compatibility shim over this package.
+"""
+from repro.train.rounds import (
+    RoundPrograms,
+    draw_indices,
+    make_dst_scan,
+    make_saml_batch,
+    make_saml_scan,
+    run_dst_loop,
+    run_saml_loop,
+    stack_dst_batches,
+    stack_saml_batches,
+    stack_server_batches,
+)
+from repro.train.trainer import (
+    CoTuneConfig,
+    CoTuneTrainer,
+    EdgeDevice,
+    make_sft_step,
+    sft,
+)
+
+__all__ = [
+    "CoTuneConfig",
+    "CoTuneTrainer",
+    "EdgeDevice",
+    "RoundPrograms",
+    "draw_indices",
+    "make_dst_scan",
+    "make_saml_batch",
+    "make_saml_scan",
+    "make_sft_step",
+    "run_dst_loop",
+    "run_saml_loop",
+    "sft",
+    "stack_dst_batches",
+    "stack_saml_batches",
+    "stack_server_batches",
+]

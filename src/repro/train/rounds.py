@@ -1,0 +1,298 @@
+"""The federated round, compiled: scan over pre-stacked batches.
+
+The seed orchestrator ran Algorithm 1's inner loops as host ``for`` loops —
+``dst_steps + saml_steps`` jit re-entries per device per round, each one
+gathering its batch (tokenize + cross-tokenizer alignment) on the host
+*between* dispatches, so the device sat idle on every step boundary.
+
+This module hoists all host work out of the step loop and compiles each
+inner loop into ONE program:
+
+1. **Index pre-draw** (:func:`draw_indices`): the round's every
+   ``rng.randint`` call happens up front, in exactly the order the legacy
+   loop made them — per device: DST draws, then SAML draws; then the
+   server's — so a fixed seed reproduces the legacy batch stream bit for
+   bit.
+2. **Batch pre-stack** (:func:`stack_dst_batches` /
+   :func:`stack_saml_batches`): every step's host-encoded batch (both
+   tokenizations + alignment gathers) is built once and stacked along a
+   leading ``steps`` axis.
+3. **Scan programs** (:func:`make_dst_scan` / :func:`make_saml_scan`): the
+   DST and SAML inner loops become ``lax.scan`` over the stacked batches
+   with the ``(params, opt_state)`` carry donated — one compiled program
+   per device per round instead of one dispatch per step, and the Adam
+   carry never round-trips to the host.
+
+Per-step losses/metrics come back stacked (a free loss curve); the last
+step's values are what the legacy loop reported. The loop runners
+(:func:`run_dst_loop` / :func:`run_saml_loop`) keep the per-step jit path
+alive over the *same* pre-stacked batches — the scan/loop pair is asserted
+metric-equivalent in tests/test_train.py, which is what makes the compiled
+round a refactor rather than a new algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import saml as S
+from repro.core.adapters import merge_adapters
+from repro.core.lora import apply_lora
+from repro.models.model import Model
+from repro.models.transformer import cross_entropy
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# host-side batch gathering (hoisted out of the step loops)
+# ---------------------------------------------------------------------------
+
+def make_saml_batch(device, idx: Sequence[int], seq_len: int) -> Tuple[Dict, Dict, Dict]:
+    """One step's batch pair: batch_p (DPM tokenization), batch_l (SLM),
+    align gathers + vocab maps. Host-side numpy; jnp conversion happens at
+    the stacked level so per-step arrays are never shipped twice."""
+    samples = [device.samples[i] for i in idx]
+    enc_p = [device.ds_dpm.encode_sample(s) for s in samples]
+    enc_l = [device.ds_slm.encode_sample(s) for s in samples]
+    batch_p = {k: np.stack([e[k] for e in enc_p]) for k in enc_p[0]}
+    batch_l = {k: np.stack([e[k] for e in enc_l]) for k in enc_l[0]}
+    texts = [s.text for s in samples]
+    # +1 bos offset: token position i corresponds to text piece i-1
+    p2l = device.aligner.batch_positions(texts, seq_len, "a2b") + 1
+    l2p = device.aligner.batch_positions(texts, seq_len, "b2a") + 1
+    align = {
+        "pos_p2l": np.minimum(p2l, seq_len - 1),
+        "pos_l2p": np.minimum(l2p, seq_len - 1),
+        "vm_l2p": np.asarray(device.aligner.vocab_b2a),
+        "vm_p2l": np.asarray(device.aligner.vocab_a2b),
+    }
+    return batch_p, batch_l, align
+
+
+def draw_indices(rng: np.random.RandomState, n: int, steps: int,
+                 batch_size: int) -> np.ndarray:
+    """``steps`` index draws in the legacy per-step order -> (steps, B)."""
+    return np.stack(
+        [rng.randint(0, n, batch_size) for _ in range(steps)]
+    ) if steps else np.zeros((0, batch_size), np.int64)
+
+
+def stack_dst_batches(device, idx_steps: np.ndarray) -> Dict:
+    """DST consumes only the DPM tokenization -> stacked (T, B, S) trees."""
+    encs = []
+    for idx in idx_steps:
+        samples = [device.samples[i] for i in idx]
+        enc = [device.ds_dpm.encode_sample(s) for s in samples]
+        encs.append({k: np.stack([e[k] for e in enc]) for k in enc[0]})
+    return {
+        k: jnp.asarray(np.stack([e[k] for e in encs])) for k in encs[0]
+    }
+
+
+def stack_saml_batches(device, idx_steps: np.ndarray, seq_len: int
+                       ) -> Tuple[Dict, Dict]:
+    """Stacked SAML xs (scanned axis T) plus the per-device constants.
+
+    Returns ``(xs, const)`` where ``xs = {batch_p, batch_l, pos_p2l,
+    pos_l2p}`` carries a leading steps axis and ``const = {vm_l2p,
+    vm_p2l}`` holds the vocab maps (identical every step — scanning them
+    would ship V-sized arrays T times for nothing)."""
+    bps, bls, p2ls, l2ps = [], [], [], []
+    vm_l2p = vm_p2l = None
+    for idx in idx_steps:
+        bp, bl, align = make_saml_batch(device, idx, seq_len)
+        bps.append(bp)
+        bls.append(bl)
+        p2ls.append(align["pos_p2l"])
+        l2ps.append(align["pos_l2p"])
+        vm_l2p, vm_p2l = align["vm_l2p"], align["vm_p2l"]
+    xs = {
+        "batch_p": {k: jnp.asarray(np.stack([b[k] for b in bps])) for k in bps[0]},
+        "batch_l": {k: jnp.asarray(np.stack([b[k] for b in bls])) for k in bls[0]},
+        "pos_p2l": jnp.asarray(np.stack(p2ls)),
+        "pos_l2p": jnp.asarray(np.stack(l2ps)),
+    }
+    const = {"vm_l2p": jnp.asarray(vm_l2p), "vm_p2l": jnp.asarray(vm_p2l)}
+    return xs, const
+
+
+def stack_server_batches(server_samples, server_ds, aligner, tok,
+                         idx_steps: np.ndarray, seq_len: int
+                         ) -> Tuple[Dict, Dict]:
+    """Server SAML(DPM_s, LLM): both models share the server tokenizer, so
+    batch_l is batch_p and the vocab maps are the identity."""
+    encs, poss = [], []
+    for idx in idx_steps:
+        samples = [server_samples[i] for i in idx]
+        enc = [server_ds.encode_sample(s) for s in samples]
+        encs.append({k: np.stack([e[k] for e in enc]) for k in enc[0]})
+        texts = [s.text for s in samples]
+        poss.append(np.minimum(
+            aligner.batch_positions(texts, seq_len) + 1, seq_len - 1
+        ))
+    batch = {k: jnp.asarray(np.stack([e[k] for e in encs])) for k in encs[0]}
+    pos = jnp.asarray(np.stack(poss))
+    xs = {"batch_p": batch, "batch_l": batch, "pos_p2l": pos, "pos_l2p": pos}
+    ident = jnp.arange(tok.vocab_size, dtype=jnp.int32)
+    return xs, {"vm_l2p": ident, "vm_p2l": ident}
+
+
+# ---------------------------------------------------------------------------
+# scan-compiled inner loops (one program per device round)
+# ---------------------------------------------------------------------------
+
+def make_dst_scan(model_p: Model, optimizer, lora_alpha: float = 16.0):
+    """Compiled DST round (Eq. 5): ``dst_steps`` adapter updates in one
+    ``lax.scan`` program. Math is step-for-step the loss/update of
+    ``saml.make_dst_step``; the (adapters, opt_state) carry is donated."""
+
+    def loss_fn(adapters, base_p, lora_p, batch):
+        params = apply_lora(merge_adapters(base_p, adapters), lora_p, lora_alpha)
+        logits, _ = model_p.logits(params, batch)
+        return cross_entropy(logits, batch["targets"], batch["loss_mask"])
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def run(adapters, opt_state, base_p, lora_p, batches):
+        def body(carry, batch):
+            adapters, opt_state = carry
+            loss, grads = jax.value_and_grad(loss_fn)(
+                adapters, base_p, lora_p, batch
+            )
+            new_adapters, new_opt = optimizer.update(grads, opt_state, adapters)
+            return (new_adapters, new_opt), loss
+
+        (adapters, opt_state), losses = jax.lax.scan(
+            body, (adapters, opt_state), batches
+        )
+        return adapters, opt_state, losses
+
+    return run
+
+
+def make_saml_scan(model_p: Model, model_l: Model, optimizer, cfg: S.SamlConfig):
+    """Compiled SAML round (Eqs. 7-9): ``saml_steps`` joint LoRA updates in
+    one ``lax.scan`` program over the stacked batch pairs. Loss is
+    ``saml.saml_pair_losses`` verbatim; the (loras, opt_state) carry is
+    donated so the Adam moments live on device for the whole round."""
+
+    def loss_fn(loras, base_p, base_l, adapters_p, batch_p, batch_l, align):
+        return S.saml_pair_losses(
+            model_p, model_l, base_p, base_l, loras["p"], loras["l"],
+            adapters_p, batch_p, batch_l, align, cfg,
+        )
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def run(loras, opt_state, base_p, base_l, adapters_p, const, xs):
+        def body(carry, x):
+            loras, opt_state = carry
+            align = {
+                "pos_p2l": x["pos_p2l"], "pos_l2p": x["pos_l2p"],
+                "vm_l2p": const["vm_l2p"], "vm_p2l": const["vm_p2l"],
+            }
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                loras, base_p, base_l, adapters_p,
+                x["batch_p"], x["batch_l"], align,
+            )
+            new_loras, new_opt = optimizer.update(grads, opt_state, loras)
+            return (new_loras, new_opt), metrics
+
+        (loras, opt_state), metrics = jax.lax.scan(
+            body, (loras, opt_state), xs
+        )
+        return loras, opt_state, metrics
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# per-step loop runners (the legacy path, over the same pre-stacked batches)
+# ---------------------------------------------------------------------------
+
+def run_dst_loop(step_fn, adapters, opt_state, base_p, lora_p, batches):
+    """Drive ``saml.make_dst_step`` over the stacked batches one jit call
+    per step. Same return signature as the scan program."""
+    n = jax.tree.leaves(batches)[0].shape[0]
+    losses = []
+    for i in range(n):
+        batch = jax.tree.map(lambda x: x[i], batches)
+        adapters, opt_state, loss = step_fn(
+            adapters, opt_state, base_p, lora_p, batch
+        )
+        losses.append(loss)
+    return adapters, opt_state, jnp.stack(losses)
+
+
+def run_saml_loop(step_fn, loras, opt_state, base_p, base_l, adapters_p,
+                  const, xs):
+    """Drive ``saml.make_saml_step`` over the stacked batches one jit call
+    per step. Same return signature as the scan program."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    metrics = []
+    for i in range(n):
+        x = jax.tree.map(lambda a: a[i], xs)
+        align = {
+            "pos_p2l": x["pos_p2l"], "pos_l2p": x["pos_l2p"],
+            "vm_l2p": const["vm_l2p"], "vm_p2l": const["vm_p2l"],
+        }
+        loras, opt_state, m = step_fn(
+            loras, opt_state, base_p, base_l, adapters_p,
+            x["batch_p"], x["batch_l"], align,
+        )
+        metrics.append(m)
+    stacked = {k: jnp.stack([m[k] for m in metrics]) for k in metrics[0]}
+    return loras, opt_state, stacked
+
+
+# ---------------------------------------------------------------------------
+# per-participant compiled-program bundle (device-keyed in the trainer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoundPrograms:
+    """The jit cache for one participant (a device, or the server pair).
+
+    Built once per (DPM, language-model, optimizer, saml-config) tuple and
+    keyed by participant name in the trainer — the scan and loop variants
+    live side by side so rounds can run either path (tests assert they
+    agree)."""
+
+    dst_step: Optional[object] = None
+    saml_step: Optional[object] = None
+    dst_scan: Optional[object] = None
+    saml_scan: Optional[object] = None
+
+    @staticmethod
+    def build(model_p: Model, model_l: Optional[Model], optimizer,
+              saml_cfg: S.SamlConfig, lora_alpha: float) -> "RoundPrograms":
+        out = RoundPrograms(
+            dst_step=S.make_dst_step(model_p, optimizer, lora_alpha),
+            dst_scan=make_dst_scan(model_p, optimizer, lora_alpha),
+        )
+        if model_l is not None:
+            out.saml_step = S.make_saml_step(model_p, model_l, optimizer, saml_cfg)
+            out.saml_scan = make_saml_scan(model_p, model_l, optimizer, saml_cfg)
+        return out
+
+    def run_dst(self, scan: bool, adapters, opt_state, base_p, lora_p, batches):
+        if scan:
+            return self.dst_scan(adapters, opt_state, base_p, lora_p, batches)
+        return run_dst_loop(
+            self.dst_step, adapters, opt_state, base_p, lora_p, batches
+        )
+
+    def run_saml(self, scan: bool, loras, opt_state, base_p, base_l,
+                 adapters_p, const, xs):
+        if scan:
+            return self.saml_scan(
+                loras, opt_state, base_p, base_l, adapters_p, const, xs
+            )
+        return run_saml_loop(
+            self.saml_step, loras, opt_state, base_p, base_l, adapters_p,
+            const, xs,
+        )

@@ -1,0 +1,575 @@
+"""CoTuneTrainer: Algorithm 1 over a simulated cloud-edge consortium.
+
+Cloud-edge mapping (DESIGN.md §2): each edge device is a (model-
+heterogeneous) participant holding a Dirichlet-skewed data shard and its
+own tokenizer; the server holds the LLM and a uniformly-sampled shard. The
+DPM is distilled from the LLM once (Eq. 4), then per round:
+
+  device:  DST (adapters only, Eq. 5)  ->  SAML(DPM_i, SLM_i) (Eqs. 7-9)
+  upload:  phi_lora(DPM_i)                                (only this!)
+  server:  FedAvg LoRA  ->  SAML(DPM_s, LLM)  ->  broadcast phi_lora(DPM_s)
+
+On a real pod the upload/FedAvg is a pmean over the data axis; here the
+trainer runs the devices sequentially on one host and averages — identical
+statistics, transport simulated (DESIGN.md §5).
+
+What the trainer owns (DESIGN.md §10), versus the seed orchestrator it
+replaced (``core/cotuning.py``, now a compatibility shim):
+
+- **Compiled rounds**: the DST/SAML inner loops run as ONE ``lax.scan``
+  program per device per round (``train/rounds.py``) instead of
+  ``dst_steps + saml_steps`` jit re-entries with host batch gathering in
+  between; ``cfg.scan_rounds=False`` keeps the per-step path (asserted
+  metric-equivalent in tests).
+- **Persistent optimizer state**: AdamW moments for the adapters, each
+  device's SAML pair, and the server pair survive across federated rounds
+  (the seed re-``init``-ed them every round, silently resetting Adam's
+  second-moment statistics each round); ``cfg.reset_opt_per_round=True``
+  restores the old behavior for Table-2 ablations.
+- **Device-keyed jit caches**: one ``RoundPrograms`` bundle per
+  participant (devices by name, the server under ``"server"``) — proper
+  fields, not lazily ``hasattr``-probed attributes.
+- **Checkpoints**: flat-npz save/load of every LoRA + adapter tree (plus
+  the frozen base params once) under ``root/round_*`` directories, with a
+  ``meta.json`` that lets :meth:`load_checkpoint` rebuild the full
+  consortium — tokenizers, shards and eval split are replayed
+  deterministically from the config seed. This is the train->serve
+  handoff: ``serve.SpecCoordinator.from_checkpoint`` /
+  ``serve.CloudEdgeRouter.from_checkpoint`` build LoRA-merged serving
+  stacks straight from these directories.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import latest_round, load_tree, save_round, save_tree
+from repro.configs import get_arch
+from repro.configs.base import ModelConfig
+from repro.core import saml as S
+from repro.core.adapters import init_adapters
+from repro.core.align import TokenAligner
+from repro.core.distill import distill_dpm
+from repro.core.evalqa import evaluate_qa
+from repro.core.lora import average_lora, init_lora, lora_param_fraction
+from repro.data.partition import dirichlet_partition, uniform_sample
+from repro.data.pipeline import QADataset, make_batches
+from repro.data.synthetic import QASample, generate_corpus
+from repro.data.tokenizer import ToyTokenizer, build_tokenizer
+from repro.models.model import Model, build_model
+from repro.models.transformer import cross_entropy
+from repro.optim.adamw import AdamW, OptState
+from repro.train.rounds import (
+    RoundPrograms,
+    draw_indices,
+    stack_dst_batches,
+    stack_saml_batches,
+    stack_server_batches,
+)
+
+Params = Dict
+
+_CORPUS_N = 400  # build-time corpus size; replayed on checkpoint load
+
+# the cfg fields that determine a checkpoint root's frozen base params
+# and data replay (corpus, tokenizers, shards). Runtime knobs — rounds,
+# per-round step counts, scan_rounds, eval size, ablation flags — may
+# differ between runs sharing a root without invalidating the bases.
+_IDENTITY_CFG_FIELDS = (
+    "seed", "lam", "samples_per_client", "seq_len", "batch_size",
+    "pretrain_steps", "distill_steps", "lr", "lora_rank",
+)
+
+
+def _consortium_identity(meta: Dict) -> Dict:
+    return {
+        **{k: meta["cfg"][k] for k in _IDENTITY_CFG_FIELDS},
+        **{k: meta[k] for k in ("llm_arch", "dpm_arch", "slm_archs",
+                                "hetero_tokenizers", "corpus_n")},
+    }
+
+
+@dataclasses.dataclass
+class CoTuneConfig:
+    rounds: int = 2
+    dst_steps: int = 4
+    saml_steps: int = 8
+    distill_steps: int = 30
+    pretrain_steps: int = 60  # stands in for "pretrained" checkpoints
+    batch_size: int = 8
+    seq_len: int = 48
+    lora_rank: int = 4
+    lora_alpha: float = 16.0
+    saml: S.SamlConfig = dataclasses.field(default_factory=S.SamlConfig)
+    lr: float = 1e-3
+    lam: float = 1.0  # Dirichlet DDS
+    samples_per_client: int = 256
+    n_eval: int = 48
+    seed: int = 0
+    # ablations (Table 2)
+    use_dst: bool = True  # False -> Co-PLMs w/o DST (no domain adapters)
+    use_server_saml: bool = True  # False -> Co-PLMs w/o SAML (aggregate only)
+    # round compilation + optimizer persistence (DESIGN.md §10)
+    scan_rounds: bool = True  # lax.scan inner loops (False: per-step jits)
+    reset_opt_per_round: bool = False  # True: seed behavior (Adam reset/round)
+
+
+def _sized(cfg: ModelConfig, tok: ToyTokenizer) -> ModelConfig:
+    return dataclasses.replace(cfg.reduced(), vocab_size=tok.vocab_size)
+
+
+def make_sft_step(model: Model, optimizer):
+    import functools
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, _ = model.logits(p, batch)
+            return cross_entropy(logits, batch["targets"], batch["loss_mask"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return step
+
+
+def sft(model: Model, params: Params, ds: QADataset, steps: int, cfg: CoTuneConfig,
+        seed: int = 0) -> Params:
+    opt = AdamW(learning_rate=cfg.lr, weight_decay=0.01)
+    state = opt.init(params)
+    step_fn = make_sft_step(model, opt)
+    batches = make_batches(ds, cfg.batch_size, seed=seed, epochs=100)
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items() if k != "sample_idx"}
+        params, state, _ = step_fn(params, state, batch)
+    return params
+
+
+@dataclasses.dataclass
+class EdgeDevice:
+    name: str
+    arch: str  # registry name of the SLM config (checkpoint meta)
+    slm: Model
+    slm_params: Params
+    slm_lora: Params
+    dpm: Model
+    dpm_base: Params
+    dpm_lora: Params
+    adapters: Params
+    tok: ToyTokenizer
+    aligner: TokenAligner  # (a=DPM tokenizer, b=device tokenizer)
+    samples: List[QASample]
+    ds_dpm: QADataset
+    ds_slm: QADataset
+    # persistent AdamW state (survives rounds unless reset_opt_per_round)
+    dst_opt: Optional[OptState] = None
+    saml_opt: Optional[OptState] = None
+
+
+@dataclasses.dataclass
+class CoTuneTrainer:
+    """End-to-end Co-PLMs runtime over a simulated cloud-edge consortium."""
+
+    cfg: CoTuneConfig
+    llm: Model
+    llm_params: Params
+    llm_lora: Params
+    dpm_proto: Model  # server-side DPM (shares LLM tokenizer)
+    dpm_base: Params
+    server_dpm_lora: Params
+    server_tok: ToyTokenizer
+    server_samples: List[QASample]
+    server_ds: QADataset
+    devices: List[EdgeDevice]
+    eval_samples: List[QASample]
+    llm_arch: str = "paper-gptj-6b"
+    dpm_arch: str = "paper-dpm"
+    hetero_tokenizers: bool = True
+    history: List[Dict] = dataclasses.field(default_factory=list)
+    # round machinery (device-keyed jit caches + persistent server state):
+    # proper fields, not hasattr-probed lazy attributes
+    opt: Optional[AdamW] = None
+    _programs: Dict[str, RoundPrograms] = dataclasses.field(default_factory=dict)
+    _srv_opt: Optional[OptState] = None
+    _srv_aligner: Optional[TokenAligner] = None
+
+    def __post_init__(self) -> None:
+        if self.opt is None:
+            self.opt = AdamW(learning_rate=self.cfg.lr)
+
+    # -- deterministic data construction (shared by build + load) ------
+    @staticmethod
+    def _build_data(cfg: CoTuneConfig, n_dev: int, corpus_n: int = _CORPUS_N):
+        corpus = generate_corpus(corpus_n, seed=cfg.seed)
+        texts = [s.text for s in corpus]
+        server_tok = build_tokenizer("server", texts, max_piece=12, budget=1024)
+        tok_variants = [
+            build_tokenizer("edge-a", texts, max_piece=4, budget=512),
+            build_tokenizer("edge-b", texts, max_piece=7, budget=768),
+            build_tokenizer("edge-c", texts, max_piece=10, budget=640),
+        ]
+        shards = dirichlet_partition(
+            corpus, n_dev, cfg.lam, seed=cfg.seed,
+            samples_per_device=cfg.samples_per_client,
+        )
+        server_samples = uniform_sample(corpus, cfg.samples_per_client, cfg.seed + 1)
+        eval_samples = uniform_sample(corpus, cfg.n_eval, cfg.seed + 2)
+        return server_tok, tok_variants, shards, server_samples, eval_samples
+
+    # -- construction -------------------------------------------------
+    @staticmethod
+    def build(
+        slm_cfgs: Sequence[ModelConfig],
+        llm_cfg: ModelConfig,
+        dpm_cfg: ModelConfig,
+        cfg: CoTuneConfig,
+        *,
+        hetero_tokenizers: bool = True,
+    ) -> "CoTuneTrainer":
+        rng = jax.random.key(cfg.seed)
+        n_dev = len(slm_cfgs)
+        (server_tok, tok_variants, shards, server_samples,
+         eval_samples) = CoTuneTrainer._build_data(cfg, n_dev)
+
+        # server LLM ("pretrained" by SFT on the server shard)
+        llm = build_model(_sized(llm_cfg, server_tok))
+        k1, k2, rng = jax.random.split(rng, 3)
+        server_ds = QADataset(server_samples, server_tok, cfg.seq_len)
+        llm_params = sft(
+            llm, llm.init(k1), server_ds, cfg.pretrain_steps, cfg, seed=11
+        )
+        llm_lora = init_lora(llm.specs(), k2, cfg.lora_rank)
+
+        # DPM distilled from the LLM (Eq. 4)
+        dpm = build_model(_sized(dpm_cfg, server_tok))
+        kd, rng = jax.random.split(rng)
+        batches = (
+            {k: jnp.asarray(v) for k, v in b.items() if k != "sample_idx"}
+            for b in make_batches(server_ds, cfg.batch_size, seed=7, epochs=100)
+        )
+        dpm_base = distill_dpm(
+            dpm, llm, llm_params, batches, key=kd, steps=cfg.distill_steps, lr=cfg.lr
+        )
+        ks, rng = jax.random.split(rng)
+        server_dpm_lora = init_lora(dpm.specs(), ks, cfg.lora_rank)
+
+        devices: List[EdgeDevice] = []
+        for i, slm_cfg in enumerate(slm_cfgs):
+            tok = tok_variants[i % len(tok_variants)] if hetero_tokenizers else server_tok
+            slm = build_model(_sized(slm_cfg, tok))
+            k1, k2, k3, k4, rng = jax.random.split(rng, 5)
+            ds_l = QADataset(shards[i], tok, cfg.seq_len)
+            slm_params = sft(slm, slm.init(k1), ds_l, cfg.pretrain_steps, cfg, seed=13 + i)
+            devices.append(
+                EdgeDevice(
+                    name=f"device-{i + 1}",
+                    arch=slm_cfg.name,
+                    slm=slm,
+                    slm_params=slm_params,
+                    slm_lora=init_lora(slm.specs(), k2, cfg.lora_rank),
+                    dpm=dpm,
+                    dpm_base=dpm_base,
+                    dpm_lora=jax.tree.map(jnp.copy, server_dpm_lora),
+                    adapters=init_adapters(dpm.cfg, k3),
+                    tok=tok,
+                    aligner=TokenAligner(server_tok, tok),
+                    samples=shards[i],
+                    ds_dpm=QADataset(shards[i], server_tok, cfg.seq_len),
+                    ds_slm=ds_l,
+                )
+            )
+        return CoTuneTrainer(
+            cfg=cfg, llm=llm, llm_params=llm_params, llm_lora=llm_lora,
+            dpm_proto=dpm, dpm_base=dpm_base, server_dpm_lora=server_dpm_lora,
+            server_tok=server_tok, server_samples=server_samples,
+            server_ds=server_ds, devices=devices, eval_samples=eval_samples,
+            llm_arch=llm_cfg.name, dpm_arch=dpm_cfg.name,
+            hetero_tokenizers=hetero_tokenizers,
+        )
+
+    # -- compiled-program inventory (device-keyed jit caches) -----------
+    def programs_for(self, name: str, model_p: Model,
+                     model_l: Optional[Model]) -> RoundPrograms:
+        if name not in self._programs:
+            self._programs[name] = RoundPrograms.build(
+                model_p, model_l, self.opt, self.cfg.saml, self.cfg.lora_alpha
+            )
+        return self._programs[name]
+
+    # -- one federated round (Algorithm 1 lines 3-20) ------------------
+    def round(self, t: int) -> Dict:
+        """Run federated round ``t`` and record its metrics in
+        ``history`` (whose length is what checkpoint round indices
+        default to — callers drive rounds without extra bookkeeping)."""
+        cfg = self.cfg
+        if cfg.saml_steps < 1:
+            raise ValueError("a co-tuning round needs saml_steps >= 1")
+        uploaded: List[Params] = []
+        rng = np.random.RandomState(1000 * t + cfg.seed)
+        metrics: Dict = {}
+
+        for dev in self.devices:
+            metrics.update(self._device_round(dev, rng))
+            uploaded.append(dev.dpm_lora)
+
+        # --- server: FedAvg of DPM LoRA (line 12), then SAML(DPM_s, LLM)
+        self.server_dpm_lora = average_lora(uploaded)
+        if not cfg.use_server_saml:  # Table-2 'w/o SAML' ablation
+            self._broadcast()
+            metrics["server/kt_lm"] = float("nan")
+            self.history.append(metrics)
+            return metrics
+        metrics["server/kt_lm"] = self._server_round(rng)
+
+        # --- broadcast (lines 15-19)
+        self._broadcast()
+        self.history.append(metrics)
+        return metrics
+
+    def _device_round(self, dev: EdgeDevice, rng: np.random.RandomState) -> Dict:
+        """DST (Eq. 5) then SAML(DPM_i, SLM_i): the round's host work is
+        the index pre-draw + batch pre-stack; the math runs as one scan
+        program each (or the per-step jits when ``scan_rounds=False``)."""
+        cfg = self.cfg
+        progs = self.programs_for(dev.name, dev.dpm, dev.slm)
+        dst_losses = None
+        if cfg.use_dst and cfg.dst_steps > 0:
+            idx = draw_indices(rng, len(dev.samples), cfg.dst_steps,
+                               cfg.batch_size)
+            batches = stack_dst_batches(dev, idx)
+            if dev.dst_opt is None or cfg.reset_opt_per_round:
+                dev.dst_opt = self.opt.init(dev.adapters)
+            dev.adapters, dev.dst_opt, dst_losses = progs.run_dst(
+                cfg.scan_rounds, dev.adapters, dev.dst_opt,
+                dev.dpm_base, dev.dpm_lora, batches,
+            )
+        idx = draw_indices(rng, len(dev.samples), cfg.saml_steps, cfg.batch_size)
+        xs, const = stack_saml_batches(dev, idx, cfg.seq_len)
+        loras = {"p": dev.dpm_lora, "l": dev.slm_lora}
+        if dev.saml_opt is None or cfg.reset_opt_per_round:
+            dev.saml_opt = self.opt.init(loras)
+        loras, dev.saml_opt, sm = progs.run_saml(
+            cfg.scan_rounds, loras, dev.saml_opt, dev.dpm_base,
+            dev.slm_params, dev.adapters, const, xs,
+        )
+        dev.dpm_lora, dev.slm_lora = loras["p"], loras["l"]
+        return {
+            f"{dev.name}/kt_lm": float(sm["kt_lm"][-1]),
+            f"{dev.name}/dst_loss": (
+                float(dst_losses[-1]) if dst_losses is not None else 0.0
+            ),
+        }
+
+    def _server_round(self, rng: np.random.RandomState) -> float:
+        cfg = self.cfg
+        if self._srv_aligner is None:
+            self._srv_aligner = TokenAligner(self.server_tok, self.server_tok)
+        idx = draw_indices(rng, len(self.server_samples), cfg.saml_steps,
+                           cfg.batch_size)
+        xs, const = stack_server_batches(
+            self.server_samples, self.server_ds, self._srv_aligner,
+            self.server_tok, idx, cfg.seq_len,
+        )
+        progs = self.programs_for("server", self.dpm_proto, self.llm)
+        loras = {"p": self.server_dpm_lora, "l": self.llm_lora}
+        if self._srv_opt is None or cfg.reset_opt_per_round:
+            self._srv_opt = self.opt.init(loras)
+        loras, self._srv_opt, sm = progs.run_saml(
+            cfg.scan_rounds, loras, self._srv_opt, self.dpm_base,
+            self.llm_params, {}, const, xs,
+        )
+        self.server_dpm_lora, self.llm_lora = loras["p"], loras["l"]
+        return float(sm["kt_lm"][-1])
+
+    def _broadcast(self) -> None:
+        for dev in self.devices:
+            dev.dpm_lora = jax.tree.map(jnp.copy, self.server_dpm_lora)
+
+    # -- evaluation -----------------------------------------------------
+    def evaluate(self) -> Dict[str, Dict[str, float]]:
+        from repro.core.lora import apply_lora
+
+        out: Dict[str, Dict[str, float]] = {}
+        for dev in self.devices:
+            params = apply_lora(dev.slm_params, dev.slm_lora, self.cfg.lora_alpha)
+            out[dev.name] = evaluate_qa(
+                dev.slm, params, dev.tok, self.eval_samples
+            )
+        params = apply_lora(self.llm_params, self.llm_lora, self.cfg.lora_alpha)
+        out["server"] = evaluate_qa(self.llm, params, self.server_tok, self.eval_samples)
+        return out
+
+    def comm_fraction(self) -> Dict[str, float]:
+        """Fig. 3 metric: transmitted params / device model params."""
+        out = {}
+        for dev in self.devices:
+            out[dev.name] = lora_param_fraction(dev.dpm_lora, dev.slm_params)
+        return out
+
+    def train(self) -> List[Dict]:
+        """Run federated rounds up to ``cfg.rounds`` total. Continues
+        from wherever ``history`` stands, so a trainer restored via
+        ``load_checkpoint`` picks up at its next round instead of
+        re-consuming the rng/batch streams of rounds already trained."""
+        for t in range(len(self.history), self.cfg.rounds):
+            self.round(t)  # appends to history itself
+        return self.history
+
+    # -- merged serving views (the train->serve handoff) ----------------
+    def device(self, name: Optional[str] = None) -> EdgeDevice:
+        if name is None:
+            return self.devices[0]
+        for dev in self.devices:
+            if dev.name == name:
+                return dev
+        raise KeyError(f"unknown device {name!r}; have "
+                       f"{[d.name for d in self.devices]}")
+
+    def merged_llm(self) -> Params:
+        from repro.core.lora import apply_lora
+
+        return apply_lora(self.llm_params, self.llm_lora, self.cfg.lora_alpha)
+
+    def merged_slm(self, name: Optional[str] = None) -> Params:
+        from repro.core.lora import apply_lora
+
+        dev = self.device(name)
+        return apply_lora(dev.slm_params, dev.slm_lora, self.cfg.lora_alpha)
+
+    # -- checkpoints ----------------------------------------------------
+    def save_checkpoint(self, root: str, round_idx: Optional[int] = None) -> str:
+        """Write ``meta.json`` + frozen base params (once) + this round's
+        LoRA/adapter trees under ``root/round_{idx:05d}``. ``round_idx``
+        defaults to the number of completed rounds in ``history`` —
+        saving before any round records the untuned (zero-LoRA)
+        consortium, which is the acceptance floor the co-tuned drafter is
+        benchmarked against.
+
+        A checkpoint root belongs to ONE consortium: if ``root`` already
+        holds a ``meta.json`` from a different config, this raises rather
+        than silently mixing new LoRA trees with the stale base params a
+        prior run froze under ``root/base``."""
+        if round_idx is None:
+            round_idx = len(self.history)
+        os.makedirs(root, exist_ok=True)
+        meta = {
+            "cfg": dataclasses.asdict(self.cfg),
+            "llm_arch": self.llm_arch,
+            "dpm_arch": self.dpm_arch,
+            "slm_archs": [d.arch for d in self.devices],
+            "hetero_tokenizers": self.hetero_tokenizers,
+            "corpus_n": _CORPUS_N,
+        }
+        meta_path = os.path.join(root, "meta.json")
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                prior = json.load(f)
+            if _consortium_identity(prior) != _consortium_identity(meta):
+                raise ValueError(
+                    f"{root} already holds a checkpoint for a different "
+                    "consortium (its frozen base params / data replay "
+                    "would not match this trainer); use a fresh "
+                    "directory or delete the stale one. differing: "
+                    f"{_consortium_identity(prior)} vs "
+                    f"{_consortium_identity(meta)}"
+                )
+        with open(meta_path, "w") as f:
+            json.dump(meta, f, indent=1)
+        base_dir = os.path.join(root, "base")
+        # bases are frozen for the life of a run (LoRA-only training):
+        # (re)write them at the run's first save, skip afterwards
+        if round_idx == 0 or not os.path.isdir(base_dir):
+            save_tree(os.path.join(base_dir, "llm.npz"), self.llm_params)
+            save_tree(os.path.join(base_dir, "dpm.npz"), self.dpm_base)
+            for dev in self.devices:
+                save_tree(os.path.join(base_dir, f"{dev.name}.npz"),
+                          dev.slm_params)
+        roles = {
+            "server": {"llm_lora": self.llm_lora,
+                       "dpm_lora": self.server_dpm_lora},
+        }
+        for dev in self.devices:
+            roles[dev.name] = {
+                "slm_lora": dev.slm_lora,
+                "dpm_lora": dev.dpm_lora,
+                "adapters": dev.adapters,
+            }
+        return save_round(root, round_idx, roles)
+
+    @staticmethod
+    def load_checkpoint(root: str, round_idx: Optional[int] = None
+                        ) -> "CoTuneTrainer":
+        """Rebuild the consortium from a checkpoint directory: models and
+        data are replayed deterministically from ``meta.json`` (arch
+        registry + config seed), base params and the requested round's
+        LoRA/adapter trees come from the npz files. The result evaluates
+        byte-identically to the trainer that saved it (asserted in
+        tests/test_train.py); optimizer state is not checkpointed — a
+        resumed run starts its Adam moments fresh."""
+        with open(os.path.join(root, "meta.json")) as f:
+            meta = json.load(f)
+        cfg_d = dict(meta["cfg"])
+        cfg_d["saml"] = S.SamlConfig(**cfg_d["saml"])
+        cfg = CoTuneConfig(**cfg_d)
+        if round_idx is None:
+            round_idx = latest_round(root)
+            if round_idx is None:
+                raise FileNotFoundError(f"no round_* directories under {root}")
+        rdir = os.path.join(root, f"round_{round_idx:05d}")
+
+        n_dev = len(meta["slm_archs"])
+        (server_tok, tok_variants, shards, server_samples,
+         eval_samples) = CoTuneTrainer._build_data(
+            cfg, n_dev, corpus_n=meta["corpus_n"])
+        hetero = meta["hetero_tokenizers"]
+
+        llm = build_model(_sized(get_arch(meta["llm_arch"]), server_tok))
+        dpm = build_model(_sized(get_arch(meta["dpm_arch"]), server_tok))
+        llm_params = load_tree(os.path.join(root, "base", "llm"))
+        dpm_base = load_tree(os.path.join(root, "base", "dpm"))
+        server = load_tree(os.path.join(rdir, "server"))
+
+        devices: List[EdgeDevice] = []
+        for i, arch in enumerate(meta["slm_archs"]):
+            tok = tok_variants[i % len(tok_variants)] if hetero else server_tok
+            name = f"device-{i + 1}"
+            slm = build_model(_sized(get_arch(arch), tok))
+            dev_trees = load_tree(os.path.join(rdir, name))
+            devices.append(
+                EdgeDevice(
+                    name=name,
+                    arch=arch,
+                    slm=slm,
+                    slm_params=load_tree(os.path.join(root, "base", name)),
+                    slm_lora=dev_trees["slm_lora"],
+                    dpm=dpm,
+                    dpm_base=dpm_base,
+                    dpm_lora=dev_trees["dpm_lora"],
+                    adapters=dev_trees["adapters"],
+                    tok=tok,
+                    aligner=TokenAligner(server_tok, tok),
+                    samples=shards[i],
+                    ds_dpm=QADataset(shards[i], server_tok, cfg.seq_len),
+                    ds_slm=QADataset(shards[i], tok, cfg.seq_len),
+                )
+            )
+        return CoTuneTrainer(
+            cfg=cfg, llm=llm, llm_params=llm_params,
+            llm_lora=server["llm_lora"], dpm_proto=dpm, dpm_base=dpm_base,
+            server_dpm_lora=server["dpm_lora"], server_tok=server_tok,
+            server_samples=server_samples,
+            server_ds=QADataset(server_samples, server_tok, cfg.seq_len),
+            devices=devices, eval_samples=eval_samples,
+            llm_arch=meta["llm_arch"], dpm_arch=meta["dpm_arch"],
+            hetero_tokenizers=hetero,
+            history=[{} for _ in range(round_idx)],
+        )

@@ -130,6 +130,57 @@ def test_self_speculation_accepts_every_draft():
     assert st.accepted_per_verify == pytest.approx(3.0)
 
 
+def test_adaptive_k_shrinks_on_rejection_and_stays_exact():
+    """A misaligned drafter drives the acceptance EWMA to ~0, so the
+    adaptive window must walk down to k_min — and because greedy
+    acceptance commits the verifier-argmax prefix whatever the window
+    size, the output stays byte-identical to plain decoding."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    _, dm, dp = _setup("qwen2-1.5b", seed=7, vocab=cfg.vocab_size)
+    prompts = _prompts(cfg)
+    ref = _plain_ref(vm, vp, prompts, max_new=8)
+
+    spec = SpecCoordinator(vm, vp, dm, dp, max_batch=2, max_len=MAX_LEN,
+                           k=4, seed=0, adaptive_k=True)
+    for p in prompts:
+        spec.submit(p, max_new=8)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref
+    assert spec.k == spec.k_min, f"window never shrank: {spec.k_history}"
+    assert spec.k_history[0] == 4  # started at the configured ceiling
+    assert sorted(spec.k_history, reverse=True) == spec.k_history
+
+
+def test_adaptive_k_holds_ceiling_for_aligned_pair():
+    """Self-speculation accepts everything, so the EWMA pins at 1.0 and
+    the adaptive window never leaves the configured ceiling."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    prompts = _prompts(cfg)
+    ref = _plain_ref(vm, vp, prompts, max_new=8)
+
+    spec = SpecCoordinator(vm, vp, vm, vp, max_batch=2, max_len=MAX_LEN,
+                           k=3, seed=0, adaptive_k=True)
+    for p in prompts:
+        spec.submit(p, max_new=8)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref
+    assert spec.acc_ewma == pytest.approx(1.0)
+    assert spec.k_history == [3] * len(spec.k_history)
+
+
+def test_adaptive_k_validates_bounds():
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    with pytest.raises(ValueError, match="k_min"):
+        SpecCoordinator(vm, vp, vm, vp, max_batch=2, max_len=MAX_LEN,
+                        k=3, k_min=5, seed=0)
+    # rejection sampling commits window-size-dependent samples and the
+    # EWMA is cross-lane, so adapting K would leak co-traffic into a
+    # stream's generation — refused at construction
+    with pytest.raises(ValueError, match="adaptive_k"):
+        SpecCoordinator(vm, vp, vm, vp, max_batch=2, max_len=MAX_LEN,
+                        k=3, seed=0, mode="rejection", adaptive_k=True)
+
+
 def test_rejection_sampling_tied_drafter_and_traffic_independence():
     """mode='rejection' with q == p accepts every draft; a sampled stream's
     output depends only on its seed, not on co-scheduled traffic."""
