@@ -1,0 +1,148 @@
+"""Fleet-scale serving benchmark: FIFO vs SLO lanes under offered load
+(DESIGN.md §11).
+
+Sweeps offered load (requests / virtual second) over the same generated
+workload and serves it twice per point — ``admission="fifo"`` vs
+``admission="slo"`` — on otherwise identical chunked-prefill engines, so
+any difference is attributable to the scheduling policy alone. Everything
+runs on the virtual clock + cost model from ``serve/fleet.py``: results
+are bit-deterministic for a fixed seed (asserted below by running the
+highest-load point twice), on any machine, at any wall speed.
+
+Emits ``BENCH_fleet.json``:
+
+- goodput (SLO-met completions / virtual second) vs offered load,
+- TTFT/TPOT p50/p95/p99 trajectories, overall and per tier,
+- preemption counts and SLO-violation rates,
+
+and ASSERTS the headline claim: at the highest offered load, SLO lanes
+strictly improve interactive-tier p95 TTFT over FIFO. Batch traffic is
+expected to get *worse* — that is the policy working: it trades batch
+latency (no deadline) for interactive latency (tight deadline).
+
+  PYTHONPATH=src python benchmarks/fleet_bench.py [--rates 4,10,20] \
+      [--horizon 8] [--seed 0] [--out BENCH_fleet.json]
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import (
+    CostModel,
+    FleetSimulator,
+    ServeEngine,
+    VirtualClock,
+    WorkloadConfig,
+    generate_workload,
+    summarize,
+)
+
+
+def build(seed=0):
+    cfg = dataclasses.replace(get_arch("qwen2-1.5b").reduced(), vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed), dtype=jnp.float32)
+    return model, params
+
+
+def run_point(model, params, *, rate, horizon, seed, admission, arrival):
+    clock = VirtualClock()
+    eng = ServeEngine(
+        model, params, max_batch=4, max_len=128, seed=0,
+        admission=admission, chunked_prefill=16, exhaust_policy="preempt",
+        clock=clock,
+    )
+    wl = generate_workload(WorkloadConfig(
+        rate=rate, horizon=horizon, seed=seed, arrival=arrival,
+        vocab_size=63, prompt_max=64,
+    ))
+    sim = FleetSimulator(eng, clock, CostModel())
+    comps = sim.run(wl)
+    assert len(comps) == len(wl), "fleet run did not drain"
+    return summarize(
+        comps, clock.now, eng.scheduler.num_preempted, offered=len(wl)
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default="4,10,20")
+    ap.add_argument("--horizon", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival", default="poisson", choices=["poisson", "bursty"])
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_fleet.json"))
+    args = ap.parse_args()
+
+    rates = [float(r) for r in args.rates.split(",")]
+    model, params = build()
+    kw = dict(horizon=args.horizon, seed=args.seed, arrival=args.arrival)
+
+    print("name,us_per_call,derived")
+    points = []
+    for rate in rates:
+        pt = {"offered_rps": rate}
+        for admission in ("fifo", "slo"):
+            rep = run_point(model, params, rate=rate, admission=admission, **kw)
+            pt[admission] = rep
+            inter = rep["tiers"].get("interactive", rep["overall"])
+            print(f"fleet_ttft_p95_{admission}@r{rate:g},"
+                  f"{inter['ttft_s']['p95'] * 1e6:.0f},"
+                  f"{rep['goodput_rps']:.3f}")
+        points.append(pt)
+
+    # determinism: the highest-load slo point, re-run from scratch, must
+    # reproduce every number bit-for-bit (virtual clock + fixed seed)
+    again = run_point(model, params, rate=rates[-1], admission="slo", **kw)
+    assert again == points[-1]["slo"], "fleet simulation is not deterministic"
+
+    # headline: at the highest offered load, SLO lanes strictly improve
+    # interactive p95 TTFT over FIFO
+    top = points[-1]
+    fifo_p95 = top["fifo"]["tiers"]["interactive"]["ttft_s"]["p95"]
+    slo_p95 = top["slo"]["tiers"]["interactive"]["ttft_s"]["p95"]
+    assert slo_p95 < fifo_p95, (
+        f"SLO lanes did not improve interactive p95 TTFT at load "
+        f"{rates[-1]}: fifo={fifo_p95:.4f}s slo={slo_p95:.4f}s"
+    )
+
+    report = {
+        "config": {
+            "rates_rps": rates, "horizon_s": args.horizon,
+            "seed": args.seed, "arrival": args.arrival,
+            "engine": {"max_batch": 4, "max_len": 128,
+                       "chunked_prefill": 16, "exhaust_policy": "preempt"},
+            "cost_model": dataclasses.asdict(CostModel()),
+        },
+        "points": points,
+        "determinism_checked": True,
+        "slo_improves_interactive_p95_ttft_at_top_load": True,
+        "interactive_p95_ttft_at_top_load_s": {"fifo": fifo_p95, "slo": slo_p95},
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for pt in points:
+        print(
+            f"# r={pt['offered_rps']:g}rps: goodput fifo "
+            f"{pt['fifo']['goodput_rps']:.2f} -> slo "
+            f"{pt['slo']['goodput_rps']:.2f} rps; interactive p95 ttft "
+            f"{pt['fifo']['tiers'].get('interactive', {}).get('ttft_s', {}).get('p95', float('nan')) * 1e3:.1f} -> "
+            f"{pt['slo']['tiers'].get('interactive', {}).get('ttft_s', {}).get('p95', float('nan')) * 1e3:.1f} ms; "
+            f"preempts {pt['fifo']['num_preempted']} -> {pt['slo']['num_preempted']}",
+            file=sys.stderr,
+        )
+    print(f"# wrote {os.path.abspath(args.out)}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

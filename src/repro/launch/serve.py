@@ -25,6 +25,13 @@ prefill compute (the CI prefix smoke):
 
   PYTHONPATH=src python -m repro.launch.serve --prefix --gen 8
 
+Fleet mode (DESIGN.md §11) — deterministic traffic simulation on the
+virtual clock; asserts chunked prefill is byte-identical to fused
+prefill, that SLO lanes admit strictly by priority under a burst, and
+that the simulation reproduces bit-for-bit (the CI fleet smoke):
+
+  PYTHONPATH=src python -m repro.launch.serve --fleet --gen 8
+
 Runs the REDUCED configs on CPU; the full configs' serve path is exercised
 by the dry-run. Prompts are admitted through the engine's request queue, so
 more prompts than --batch slots simply stream through the pool.
@@ -42,10 +49,16 @@ from repro.data.tokenizer import build_tokenizer
 from repro.models.model import build_model
 from repro.serve import (
     CloudEdgeRouter,
+    CostModel,
     EngineSpec,
+    FleetSimulator,
     ServeEngine,
     SpecCoordinator,
+    VirtualClock,
+    WorkloadConfig,
+    generate_workload,
     prompt_length_policy,
+    summarize,
 )
 
 
@@ -264,6 +277,80 @@ def run_prefix(args) -> None:
     print("prefix smoke OK: byte-identical to cold cache")
 
 
+def run_fleet(args) -> None:
+    """Fleet smoke: (1) chunked prefill must be byte-identical to fused
+    prefill on the same traffic; (2) SLO lanes must admit a same-instant
+    burst strictly by priority (interactive before standard before
+    batch); (3) the virtual-clock simulation must reproduce bit-for-bit
+    across two fresh runs."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    cfg = dataclasses.replace(get_arch(args.arch).reduced(), vocab_size=64)
+    model = build_model(cfg)
+    # fp32 for the byte-identity assertion (same caveat as --prefix)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+
+    # 1. chunked == fused on a mixed-length wave
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(1, 64, (n,))) for n in (19, 3, 26, 9)]
+    outs = {}
+    for chunk in (None, 8):
+        eng = ServeEngine(model, params, max_batch=2, max_len=64, seed=0,
+                          chunked_prefill=chunk)
+        for p in prompts:
+            eng.submit(p, max_new=args.gen)
+        outs[chunk] = {c.rid: c.tokens for c in eng.run()}
+    assert outs[8] == outs[None], (
+        f"chunked prefill diverged from fused: {outs[8]} != {outs[None]}"
+    )
+    print(f"chunked==fused over {len(prompts)} mixed-length prompts "
+          f"(chunk=8, {sum(len(p) for p in prompts)} prompt tokens)")
+
+    # 2. SLO-lane ordering: a same-instant burst on a 1-slot engine must
+    # be served strictly by priority regardless of submission order
+    clock = VirtualClock()
+    eng = ServeEngine(model, params, max_batch=1, max_len=64, seed=0,
+                      admission="slo", clock=clock)
+    lanes = [("batch", 2), ("standard", 1), ("interactive", 0)]
+    for name, prio in lanes:  # worst-case order: batch submitted first
+        for i in range(2):
+            eng.submit([1 + prio * 3 + i], max_new=2, tier=name,
+                       priority=prio, slo_ttft=0.1 * (prio + 1))
+    sim = FleetSimulator(eng, clock, CostModel())
+    comps = sim.run([])  # burst already queued; just drain it
+    ttft = {name: [c.ttft_s for c in comps if c.tier == name]
+            for name, _ in lanes}
+    assert max(ttft["interactive"]) < min(ttft["standard"]) < max(
+        ttft["standard"]) < min(ttft["batch"]), f"SLO lane ordering broken: {ttft}"
+    print(f"slo lanes ordered: interactive p100 {max(ttft['interactive']):.3f}s "
+          f"< standard {min(ttft['standard']):.3f}s "
+          f"< batch {min(ttft['batch']):.3f}s")
+
+    # 3. deterministic simulation: two fresh runs, identical numbers
+    def one_run():
+        clk = VirtualClock()
+        e = ServeEngine(model, params, max_batch=4, max_len=128, seed=0,
+                        admission="slo", chunked_prefill=16, clock=clk)
+        wl = generate_workload(WorkloadConfig(
+            rate=args.fleet_rate, horizon=args.fleet_horizon,
+            vocab_size=63, prompt_max=64))
+        s = FleetSimulator(e, clk, CostModel())
+        comps = s.run(wl)
+        assert len(comps) == len(wl), "fleet run did not drain"
+        return summarize(comps, clk.now, e.scheduler.num_preempted,
+                         offered=len(wl))
+    rep1, rep2 = one_run(), one_run()
+    assert rep1 == rep2, "fleet simulation is not deterministic"
+    ov = rep1["overall"]["ttft_s"]
+    print(f"fleet sim deterministic: {rep1['completed']} reqs in "
+          f"{rep1['duration_s']:.2f} virtual s, goodput "
+          f"{rep1['goodput_rps']:.2f} rps, ttft p50/p95 "
+          f"{ov['p50'] * 1e3:.1f}/{ov['p95'] * 1e3:.1f}ms")
+    print("fleet smoke OK: chunked==fused, slo lanes ordered, "
+          "simulation deterministic")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -274,6 +361,13 @@ def main() -> None:
     ap.add_argument("--prefix", action="store_true",
                     help="prefix-cache mode (shared-preamble wave, "
                          "byte-identity vs cold cache asserted)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="fleet mode (chunked==fused, SLO-lane ordering, "
+                         "deterministic virtual-clock simulation asserted)")
+    ap.add_argument("--fleet-rate", type=float, default=8.0,
+                    help="offered load (req/virtual-second) for --fleet")
+    ap.add_argument("--fleet-horizon", type=float, default=4.0,
+                    help="arrival window (virtual seconds) for --fleet")
     ap.add_argument("--spec-drafter", default="xlstm-1.3b",
                     help="drafter arch for --spec")
     ap.add_argument("--k", type=int, default=3,
@@ -293,6 +387,8 @@ def main() -> None:
         run_spec(args)
     elif args.prefix:
         run_prefix(args)
+    elif args.fleet:
+        run_fleet(args)
     else:
         run_single(args)
 

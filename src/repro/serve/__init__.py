@@ -20,15 +20,34 @@ drafts K tokens, the LLM scores them in one fused verify against the
 paged cache and commits the accepted prefix, with rollback on rejection
 per cache family; ``collaborative_policy`` routes long prompts to such a
 pair instead of a single tier.
+
+The fleet layer (serve/fleet.py + serve/metrics.py, DESIGN.md §11) makes
+scheduling measurable: a deterministic traffic simulator (Poisson/bursty
+arrivals, tiered SLOs, shared-prefix populations) driving any engine on
+an injected ``VirtualClock``, with ``admission="slo"`` priority lanes,
+``chunked_prefill`` (byte-identical to fused prefill, interleaved with
+decode), and ``deadline_aware_policy`` routing as the features under
+test.
 """
 from repro.serve.cache import BlockCacheManager
 from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.fleet import (
+    CostModel,
+    FleetSimulator,
+    TierSpec,
+    VirtualClock,
+    WorkloadConfig,
+    generate_workload,
+    summarize,
+)
+from repro.serve.metrics import LatencyWindow, min_tail_samples, percentile, percentiles
 from repro.serve.router import (
     CloudEdgeRouter,
     EngineSpec,
     RouteDecision,
     RouterCompletion,
     collaborative_policy,
+    deadline_aware_policy,
     explicit_tier_policy,
     prompt_length_policy,
     round_robin_policy,
@@ -47,7 +66,10 @@ __all__ = [
     "BlockCacheManager",
     "CloudEdgeRouter",
     "Completion",
+    "CostModel",
     "EngineSpec",
+    "FleetSimulator",
+    "LatencyWindow",
     "ModelRunner",
     "Request",
     "RouteDecision",
@@ -55,10 +77,19 @@ __all__ = [
     "Scheduler",
     "ServeEngine",
     "SpecCoordinator",
+    "TierSpec",
+    "VirtualClock",
+    "WorkloadConfig",
     "collaborative_policy",
+    "deadline_aware_policy",
     "explicit_tier_policy",
+    "generate_workload",
+    "min_tail_samples",
+    "percentile",
+    "percentiles",
     "prompt_length_policy",
     "round_robin_policy",
+    "summarize",
     "sample_tokens",
     "sample_tokens_keys",
     "sampling_dist",

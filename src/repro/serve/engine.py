@@ -33,13 +33,26 @@ What changed underneath:
   requests through the cache manager's refcounted copy-on-write prefix
   index: admission prefills only the uncached tail of each prompt
   (``admit_prefill`` below), so a fleet of requests repeating one system
-  preamble pays its prefill once per engine.
+  preamble pays its prefill once per engine;
+- ``chunked_prefill=N`` (DESIGN.md §11) caps prefill work at N tokens per
+  ``step()``: a long prompt is prefilled in page-aligned chunks through
+  the §9 ``prefill_tail`` program (``write_len``-masked partial prefill
+  against the paged pools) with **decode interleaved between chunks**, so
+  one long-prompt arrival no longer stalls every live stream's next token
+  — the TTFT-tail fix production traffic needs. Chunked output is
+  byte-identical to fused prefill per cache family (the final chunk
+  samples with the same (seed, 0) fold_in key from the same last-token
+  logits; asserted in tests/test_fleet.py);
+- ``admission="slo"`` routes the scheduler's admission through priority
+  lanes with earliest-deadline-first ordering instead of FIFO (§11).
 
-All internal timestamps are ``time.monotonic()`` — TTFT/latency math must
-survive an NTP step mid-run (wall-clock time.time() does not).
+All internal timestamps come from the injectable ``clock`` (default
+``time.monotonic`` — TTFT/latency math must survive an NTP step mid-run);
+the fleet simulator injects a virtual clock for deterministic CI runs.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -66,6 +79,7 @@ def ensure_pages(
     release: Callable[[int], None],
     n_steps: int = 1,
     lookahead: int = 0,
+    clock: Callable[[], float] = time.monotonic,
 ) -> bool:
     """Grow ``slot``'s pages (copy-on-write included) so the next
     ``n_steps`` writes starting at ``pos`` may land; on pool exhaustion
@@ -79,7 +93,7 @@ def ensure_pages(
     never freed out from under their other owners."""
     while not cache.ensure(slot, pos, n_steps):
         victim = sched.youngest_active() if policy == "preempt" else None
-        now = time.monotonic()
+        now = clock()
         if victim is None:
             done.append(sched.force_finish(slot, "cache_full", now))
             release(slot)
@@ -169,6 +183,21 @@ def admit_prefill(
     return tok
 
 
+@dataclasses.dataclass
+class PartialPrefill:
+    """A chunked admission in flight: the request holds its slot and
+    pages, ``t`` tokens of ``feed`` are already in the cache, and ``tok``
+    is the token sampled by the most recent chunk (only the final chunk's
+    sample — drawn from the last real token's logits with the (seed, 0)
+    fold_in key — survives into ``on_admitted``)."""
+
+    req: Request
+    slot: int
+    feed: List[int]
+    t: int
+    tok: Optional[int] = None
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -184,15 +213,30 @@ class ServeEngine:
         gather_live_lanes: bool = True,
         exhaust_policy: str = "evict",
         prefix_cache: bool = False,
+        chunked_prefill: Optional[int] = None,
+        admission: str = "fifo",
+        clock: Callable[[], float] = time.monotonic,
     ):
         if model.cfg.is_encoder_decoder:
             raise ValueError("engine serves decoder-only configs")
         if exhaust_policy not in ("evict", "preempt"):
             raise ValueError(f"unknown exhaust_policy {exhaust_policy!r}")
+        if chunked_prefill is not None and (
+            chunked_prefill < page_size or chunked_prefill % page_size
+        ):
+            # chunk boundaries must stay page-aligned: snapshot-mode
+            # prefix registration and the ring-write COW both reason in
+            # whole pages
+            raise ValueError(
+                f"chunked_prefill {chunked_prefill} must be a positive "
+                f"multiple of page_size {page_size}"
+            )
         self.model = model
         self.max_batch = max_batch
         self.max_len = max_len
         self.exhaust_policy = exhaust_policy
+        self.chunked_prefill = chunked_prefill
+        self.clock = clock
         self.cache = BlockCacheManager(
             model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
@@ -203,9 +247,11 @@ class ServeEngine:
             bucket_cap=self.cache.geom.max_len,
             min_bucket=max(8, page_size),
             gather_live_lanes=gather_live_lanes,
+            admission=admission, clock=clock,
         )
-        self.runner = ModelRunner(model, params)
+        self.runner = ModelRunner(model, params, clock=clock)
         self.base_key = jax.random.key(seed)
+        self._partial: Optional[PartialPrefill] = None
 
     # -- admission ----------------------------------------------------------
 
@@ -216,12 +262,19 @@ class ServeEngine:
         max_new: int = 32,
         temperature: float = 0.0,
         seed: Optional[int] = None,
+        tier: str = "standard",
+        priority: int = 1,
+        slo_ttft: Optional[float] = None,
+        slo_tpot: Optional[float] = None,
     ) -> int:
         """Queue a request. ``seed`` pins the sampling stream (defaults to
         the request id), making sampled generations reproducible across
-        engines. Raises if ``len(prompt) + max_new > max_len``, or if the
-        prompt could never be admitted on this engine's page pool (an
-        oversubscribed ``num_pages``) — otherwise it would queue forever."""
+        engines. ``tier`` / ``priority`` / ``slo_ttft`` / ``slo_tpot``
+        feed the SLO admission lanes (ignored under FIFO beyond riding
+        along into the Completion). Raises if ``len(prompt) + max_new >
+        max_len``, or if the prompt could never be admitted on this
+        engine's page pool (an oversubscribed ``num_pages``) — otherwise
+        it would queue forever."""
         need = self.cache.geom.admission_pages(len(prompt))
         if need > self.cache.num_pages - 1:
             raise ValueError(
@@ -229,7 +282,9 @@ class ServeEngine:
                 f"{self.cache.num_pages - 1}; it could never be admitted"
             )
         return self.scheduler.submit(
-            prompt, max_new=max_new, temperature=temperature, seed=seed
+            prompt, max_new=max_new, temperature=temperature, seed=seed,
+            tier=tier, priority=priority,
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot,
         )
 
     def _admit(self) -> List[Completion]:
@@ -249,24 +304,87 @@ class ServeEngine:
             if tok is None:  # mid-admission COW starved: requeue, drain first
                 self.scheduler.unpop(req, slot)
                 return done
-            fin = self.scheduler.on_admitted(req, slot, tok, time.monotonic())
+            fin = self.scheduler.on_admitted(req, slot, tok, self.clock())
             if fin is not None:
                 done.append(fin)
                 self.cache.release(slot)
+
+    def _admit_chunked(self, done: List[Completion]) -> None:
+        """Spend at most ``chunked_prefill`` prompt tokens on admissions
+        this step — continuing the in-flight partial prefill first, then
+        starting new ones while budget remains — so decode always runs
+        within one chunk of a long-prompt arrival. Non-final chunks end on
+        page boundaries; the final chunk's sampled token becomes the first
+        generated token, exactly as fused prefill would have sampled it."""
+        budget = self.chunked_prefill
+        ps = self.cache.geom.page_size
+        while budget > 0:
+            if self._partial is None:
+                adm = self.scheduler.pop_admission(
+                    lambda req: self.cache.can_admit(req.prefill_len, req.feed)
+                )
+                if adm is None:
+                    return
+                req, slot = adm
+                feed = req.feed
+                cached, _ = self.cache.alloc_prompt(slot, feed)
+                self._partial = PartialPrefill(req, slot, feed, cached)
+            part = self._partial
+            n = len(part.feed)
+            c = min(budget, n - part.t)
+            if part.t + c < n:
+                # keep intermediate boundaries page-aligned; a remnant
+                # smaller than a page waits for the next step's budget
+                c -= (part.t + c) % ps
+                if c <= 0:
+                    return
+            if not self.cache.ensure(part.slot, part.t, c):
+                # pool starved mid-admission (COW under pressure): abandon
+                # the partial work and requeue, let running streams drain
+                self.cache.release(part.slot)
+                self.scheduler.unpop(part.req, part.slot)
+                self._partial = None
+                return
+            part.tok, self.cache.paged, self.cache.slots = \
+                self.runner.prefill_tail(
+                    self.cache.paged, self.cache.slots,
+                    part.feed[part.t:part.t + c], start=part.t,
+                    bucket=self.scheduler.bucket_for(c), slot=part.slot,
+                    bt_row=self.cache.block_tables[part.slot].copy(),
+                    temperature=part.req.temperature, seed=part.req.seed,
+                    base_key=self.base_key,
+                )
+            part.t += c
+            budget -= c
+            if part.t % ps == 0:
+                self.cache.register_boundary(part.slot, part.feed[:part.t])
+            if part.t == n:
+                self.cache.register_prefix(part.slot, part.feed)
+                fin = self.scheduler.on_admitted(
+                    part.req, part.slot, part.tok, self.clock()
+                )
+                self._partial = None
+                if fin is not None:
+                    done.append(fin)
+                    self.cache.release(part.slot)
 
     # -- stepping -----------------------------------------------------------
 
     def step(self) -> List[Completion]:
         """Admit whatever fits, then one live-lane decode step. Returns the
         requests that finished during this step."""
-        done = self._admit()
+        if self.chunked_prefill is not None:
+            done: List[Completion] = []
+            self._admit_chunked(done)
+        else:
+            done = self._admit()
         live = []
         for sl in self.scheduler.live_slots():
             if not self.scheduler.active[sl]:
                 continue  # preempted as a victim earlier in this step
             if ensure_pages(self.cache, self.scheduler, sl,
                             int(self.scheduler.pos[sl]), self.exhaust_policy,
-                            done, self.cache.release):
+                            done, self.cache.release, clock=self.clock):
                 live.append(sl)
         # a later slot's reclaim may have preempted an earlier survivor
         live = [sl for sl in live if self.scheduler.active[sl]]
@@ -292,7 +410,7 @@ class ServeEngine:
             base_key=self.base_key,
             n_live=len(live),
         )
-        now = time.monotonic()
+        now = self.clock()
         for i, sl in enumerate(live):
             fin = sched.on_token(sl, int(toks[i]), now)
             if fin is not None:
@@ -305,7 +423,8 @@ class ServeEngine:
         finish order."""
         out: List[Completion] = []
         steps = 0
-        while self.scheduler.queue or self.scheduler.active.any():
+        while (self.scheduler.queue or self._partial is not None
+               or self.scheduler.active.any()):
             out.extend(self.step())
             steps += 1
             if max_steps is not None and steps >= max_steps:
@@ -328,7 +447,9 @@ class ServeEngine:
 
     @property
     def num_queued(self) -> int:
-        return self.scheduler.num_queued
+        # a chunked admission in flight is still queued work: the router
+        # and run() must keep stepping until its request goes live
+        return self.scheduler.num_queued + (self._partial is not None)
 
     @property
     def free_slots(self) -> List[int]:

@@ -1,0 +1,308 @@
+"""Fleet-scale traffic simulation for the serve stack (DESIGN.md §11).
+
+The serve stack's scheduling features — SLO priority lanes, chunked
+prefill, deadline-aware routing — only matter under *load*, and load is
+exactly what hand-rolled benchmark loops never model. This module closes
+that gap with a deterministic discrete-event simulator:
+
+- **workload generator** (``generate_workload``): Poisson or bursty
+  (Markov-modulated Poisson) arrivals, exponential prompt/output length
+  distributions, shared-prefix client populations (a fraction of traffic
+  opens with one of a few long common preambles, exercising the PR-4
+  prefix pool), and tiered user classes (``TierSpec``) carrying per-tier
+  priorities and TTFT/TPOT SLOs;
+- **virtual clock** (``VirtualClock``): every engine/scheduler/router
+  timestamp comes from one injected callable, advanced by the simulator
+  — never by wall time — so the whole simulation is bit-reproducible on
+  CPU CI regardless of machine speed;
+- **cost model** (``CostModel``): virtual seconds per engine step, priced
+  from the runner's own accounting deltas (prefill tokens processed,
+  batched decode dispatches). Service time is booked at step granularity:
+  a completion's timestamps reflect the virtual time at the *start* of
+  the step that produced its final token, so queueing delay — the
+  quantity scheduling policies actually move — is captured exactly, while
+  a request's own final-step cost is not charged to itself. The error is
+  one step, identical across policies, so FIFO-vs-SLO comparisons are
+  apples-to-apples;
+- **simulator** (``FleetSimulator``): feeds arrivals to a ``ServeEngine``
+  at their true arrival timestamps (the clock is momentarily set to the
+  arrival time while stamping ``submit_time``, so TTFT includes the full
+  queueing delay even though admission happens at step boundaries),
+  steps the engine while it has work, and fast-forwards across idle gaps.
+
+``summarize`` reduces the completion stream to the report
+``benchmarks/fleet_bench.py`` serializes: goodput (SLO-met completions
+per virtual second), TTFT/TPOT p50/p95/p99 overall and per tier,
+preemption and SLO-violation rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.metrics import percentiles
+
+__all__ = [
+    "VirtualClock",
+    "TierSpec",
+    "DEFAULT_TIERS",
+    "FleetRequest",
+    "WorkloadConfig",
+    "generate_workload",
+    "CostModel",
+    "FleetSimulator",
+    "summarize",
+]
+
+
+class VirtualClock:
+    """Injectable monotonic time source: ``clock()`` reads, the simulator
+    advances. Engines built with ``clock=VirtualClock(...)`` never touch
+    wall time, which is what makes the fleet simulation deterministic."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot go backward (dt={dt})")
+        self.now += dt
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One user class: an admission lane (priority; 0 = most urgent) plus
+    the latency budgets its completions are judged against. ``weight`` is
+    the tier's share of generated traffic."""
+
+    name: str
+    priority: int
+    slo_ttft: Optional[float]  # seconds; None = best-effort
+    slo_tpot: Optional[float]
+    weight: float = 1.0
+
+
+# The canonical three-class mix the cloud-edge serving literature uses:
+# latency-critical interactive traffic, soft-deadline standard traffic,
+# and throughput-oriented batch traffic that should absorb all queueing.
+DEFAULT_TIERS = (
+    TierSpec("interactive", 0, 0.25, 0.10, weight=0.45),
+    TierSpec("standard", 1, 1.00, None, weight=0.35),
+    TierSpec("batch", 2, None, None, weight=0.20),
+)
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    t: float  # arrival time, virtual seconds
+    prompt: List[int]
+    max_new: int
+    tier: TierSpec
+    seed: int  # sampling stream; fixed per request for reproducibility
+
+
+@dataclasses.dataclass
+class WorkloadConfig:
+    """Knobs of the traffic generator. Defaults describe a small but
+    non-trivial mix: mostly short interactive prompts, a tail of long
+    ones, half the traffic opening with a shared preamble."""
+
+    rate: float = 8.0  # mean offered load, requests / virtual second
+    horizon: float = 20.0  # generate arrivals in [0, horizon)
+    arrival: str = "poisson"  # "poisson" | "bursty"
+    # bursty = Markov-modulated Poisson: exponentially-distributed regimes
+    # alternating between rate*burst_factor and rate/burst_factor (mean
+    # regime length burst_period). Mean offered load exceeds ``rate`` by
+    # (burst_factor + 1/burst_factor)/2 — bursts add load, by design.
+    burst_factor: float = 4.0
+    burst_period: float = 2.0
+    prompt_mean: float = 24.0  # exponential, clipped to [min, max]
+    prompt_min: int = 4
+    prompt_max: int = 96
+    out_mean: float = 12.0
+    out_min: int = 2
+    out_max: int = 32
+    vocab_size: int = 64
+    num_prefix_pops: int = 3  # shared-prefix client populations
+    prefix_len: int = 16
+    shared_prob: float = 0.5  # fraction of requests opening with a preamble
+    tiers: Sequence[TierSpec] = DEFAULT_TIERS
+    seed: int = 0
+
+
+def _clipped_exp(rng: np.random.Generator, mean: float, lo: int, hi: int) -> int:
+    return int(min(hi, max(lo, round(rng.exponential(mean)))))
+
+
+def generate_workload(cfg: WorkloadConfig) -> List[FleetRequest]:
+    """Materialize the full arrival sequence up front — a pure function
+    of ``cfg`` (including its seed), so the same config always produces
+    the same traffic regardless of how the simulation interleaves."""
+    if cfg.arrival not in ("poisson", "bursty"):
+        raise ValueError(f"unknown arrival process {cfg.arrival!r}")
+    rng = np.random.default_rng(cfg.seed)
+    tiers = list(cfg.tiers)
+    w = np.asarray([t.weight for t in tiers], np.float64)
+    w = w / w.sum()
+    pops = [
+        rng.integers(1, cfg.vocab_size, size=cfg.prefix_len).tolist()
+        for _ in range(cfg.num_prefix_pops)
+    ]
+
+    out: List[FleetRequest] = []
+    t = 0.0
+    hi_rate, lo_rate = cfg.rate * cfg.burst_factor, cfg.rate / cfg.burst_factor
+    in_burst = False
+    regime_end = (
+        rng.exponential(cfg.burst_period) if cfg.arrival == "bursty" else math.inf
+    )
+    while True:
+        cur = cfg.rate if cfg.arrival == "poisson" else (
+            hi_rate if in_burst else lo_rate
+        )
+        gap = rng.exponential(1.0 / cur)
+        if t + gap >= regime_end:
+            # regime flips mid-gap; exponential gaps are memoryless, so
+            # restarting the draw at the boundary is exact MMPP sampling
+            t = regime_end
+            in_burst = not in_burst
+            regime_end = t + rng.exponential(cfg.burst_period)
+            continue
+        t += gap
+        if t >= cfg.horizon:
+            break
+        tier = tiers[int(rng.choice(len(tiers), p=w))]
+        n = _clipped_exp(rng, cfg.prompt_mean, cfg.prompt_min, cfg.prompt_max)
+        if pops and rng.random() < cfg.shared_prob:
+            pop = pops[int(rng.integers(len(pops)))]
+            tail = max(1, n - len(pop))  # always >= 1 unique token
+            prompt = pop + rng.integers(1, cfg.vocab_size, size=tail).tolist()
+        else:
+            prompt = rng.integers(1, cfg.vocab_size, size=max(1, n)).tolist()
+        max_new = _clipped_exp(rng, cfg.out_mean, cfg.out_min, cfg.out_max)
+        out.append(FleetRequest(t, prompt, max_new, tier, seed=len(out)))
+    return out
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Virtual seconds per engine step, priced from runner-stats deltas.
+
+    ``decode_step_s`` charges per batched decode *dispatch*, not per
+    token — all live lanes share one program launch, which is exactly why
+    a monolithic long prefill (one step, many tokens) stalls every other
+    lane while chunked prefill (bounded tokens per step) does not."""
+
+    prefill_tok_s: float = 2000.0
+    decode_step_s: float = 0.02
+    step_overhead_s: float = 0.002
+
+    def step_cost(self, d_prefill_tokens: int, d_decode_steps: int) -> float:
+        return (
+            self.step_overhead_s
+            + d_prefill_tokens / self.prefill_tok_s
+            + d_decode_steps * self.decode_step_s
+        )
+
+
+class FleetSimulator:
+    """Drive one ``ServeEngine`` (built with ``clock=`` this simulator's
+    ``VirtualClock``) through a generated workload. The engine must share
+    the clock — the simulator asserts nothing about wall time."""
+
+    def __init__(self, engine, clock: VirtualClock, cost: Optional[CostModel] = None):
+        self.engine = engine
+        self.clock = clock
+        self.cost = cost or CostModel()
+        self.completions: List = []
+        self.num_submitted = 0
+
+    def _submit(self, fr: FleetRequest) -> None:
+        # stamp submit_time with the true arrival instant: arrivals land
+        # between steps, but their queueing delay starts when they arrived
+        saved = self.clock.now
+        self.clock.now = fr.t
+        try:
+            self.engine.submit(
+                fr.prompt,
+                max_new=fr.max_new,
+                seed=fr.seed,
+                tier=fr.tier.name,
+                priority=fr.tier.priority,
+                slo_ttft=fr.tier.slo_ttft,
+                slo_tpot=fr.tier.slo_tpot,
+            )
+        finally:
+            self.clock.now = saved
+        self.num_submitted += 1
+
+    def run(self, requests: Sequence[FleetRequest], max_steps: int = 200_000) -> List:
+        pending = sorted(requests, key=lambda r: (r.t, r.seed))
+        i = 0
+        stats = self.engine.stats
+        steps = 0
+        while i < len(pending) or self.engine.num_queued or self.engine.num_active:
+            while i < len(pending) and pending[i].t <= self.clock.now:
+                self._submit(pending[i])
+                i += 1
+            if self.engine.num_queued or self.engine.num_active:
+                pf0, ds0 = stats.prefill_tokens, stats.decode_steps
+                done = self.engine.step()
+                self.clock.advance(self.cost.step_cost(
+                    stats.prefill_tokens - pf0, stats.decode_steps - ds0
+                ))
+                self.completions.extend(done)
+                steps += 1
+                if steps >= max_steps:
+                    raise RuntimeError(
+                        f"fleet simulation did not drain in {max_steps} steps"
+                    )
+            else:
+                # idle: fast-forward to the next arrival
+                self.clock.now = max(self.clock.now, pending[i].t)
+        return self.completions
+
+
+def _lat_block(comps: Sequence) -> Dict[str, object]:
+    met = sum(1 for c in comps if c.slo_ok)
+    return {
+        "count": len(comps),
+        "slo_met": met,
+        "slo_violation_rate": (1.0 - met / len(comps)) if comps else 0.0,
+        "ttft_s": percentiles([c.ttft_s for c in comps]),
+        "tpot_s": percentiles(
+            [c.tpot_s for c in comps if len(c.tokens) > 1]
+        ),
+    }
+
+
+def summarize(
+    completions: Sequence,
+    duration_s: float,
+    num_preempted: int = 0,
+    offered: Optional[int] = None,
+) -> Dict[str, object]:
+    """Reduce a completion stream to the fleet report: goodput = SLO-met
+    completions per virtual second (the paper-standard serving metric),
+    plus TTFT/TPOT percentile blocks overall and per tier. ``nan``
+    percentiles mean an empty tier — serialized as-is, never faked."""
+    tiers: Dict[str, List] = {}
+    for c in completions:
+        tiers.setdefault(c.tier, []).append(c)
+    met = sum(1 for c in completions if c.slo_ok)
+    return {
+        "offered": offered if offered is not None else len(completions),
+        "completed": len(completions),
+        "duration_s": duration_s,
+        "throughput_rps": len(completions) / duration_s if duration_s else 0.0,
+        "goodput_rps": met / duration_s if duration_s else 0.0,
+        "num_preempted": num_preempted,
+        "overall": _lat_block(list(completions)),
+        "tiers": {name: _lat_block(cs) for name, cs in sorted(tiers.items())},
+    }

@@ -1,0 +1,122 @@
+"""Latency/percentile math for the serve stack (DESIGN.md §11).
+
+One shared implementation for every consumer — router ``stats_summary``,
+the fleet simulator's TTFT/TPOT trajectories, and the benchmark scripts —
+so the edge cases are fixed in exactly one place:
+
+- **empty window**: ``percentile([], q)`` returns ``nan`` (and the
+  formatted summaries print ``-``) instead of raising inside
+  ``np.percentile`` or, worse, fabricating a 0 ms latency;
+- **single sample**: every percentile IS that sample (interpolating
+  against a phantom second point is meaningless);
+- **short histories**: p99 of 5 samples interpolates between the two
+  largest samples (NumPy's ``linear`` definition) rather than silently
+  returning the max of a window too short to have a tail — callers that
+  need to know the tail is under-resolved check ``len(xs)`` against
+  ``min_tail_samples(q)``.
+
+Percentile definition: the ``linear`` (inclusive) interpolation NumPy
+defaults to — rank ``r = q/100 * (n-1)`` on the sorted samples, linear
+between ``floor(r)`` and ``ceil(r)`` — asserted against ``np.percentile``
+in tests/test_metrics.py.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "percentile",
+    "percentiles",
+    "min_tail_samples",
+    "LatencyWindow",
+]
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile of ``xs`` (unsorted ok).
+
+    Edge cases are explicit: empty input -> ``nan``; one sample -> that
+    sample for any q; q clamps to [0, 100]."""
+    n = len(xs)
+    if n == 0:
+        return math.nan
+    if n == 1:
+        return float(xs[0])
+    q = min(100.0, max(0.0, float(q)))
+    s = sorted(float(x) for x in xs)
+    r = q / 100.0 * (n - 1)
+    lo = int(math.floor(r))
+    hi = min(lo + 1, n - 1)
+    frac = r - lo
+    return s[lo] + (s[hi] - s[lo]) * frac
+
+
+def percentiles(
+    xs: Sequence[float], qs: Sequence[float] = (50, 95, 99)
+) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` over one sort of ``xs``."""
+    n = len(xs)
+    if n == 0:
+        return {f"p{_qname(q)}": math.nan for q in qs}
+    s = sorted(float(x) for x in xs)
+    out = {}
+    for q in qs:
+        qq = min(100.0, max(0.0, float(q)))
+        r = qq / 100.0 * (n - 1)
+        lo = int(math.floor(r))
+        hi = min(lo + 1, n - 1)
+        out[f"p{_qname(q)}"] = s[lo] + (s[hi] - s[lo]) * (r - lo)
+    return out
+
+
+def _qname(q: float) -> str:
+    qf = float(q)
+    return str(int(qf)) if qf == int(qf) else str(qf).replace(".", "_")
+
+
+def min_tail_samples(q: float) -> int:
+    """Fewest samples for which the q-th percentile is resolved by more
+    than interpolation toward the max: the sorted rank ``q/100 * (n-1)``
+    must clear ``n-2``. p99 needs 100 samples, p95 needs 20, p50 needs 2.
+    Below this the percentile is still *defined* (see ``percentile``) but
+    only reflects the two largest samples."""
+    q = min(100.0, max(0.0, float(q)))
+    if q >= 100.0:
+        return 1
+    return max(2, int(math.ceil(100.0 / (100.0 - q))))
+
+
+class LatencyWindow:
+    """Rolling window of latency samples with percentile summaries.
+
+    Bounded (``maxlen``) so a long-lived router cannot grow its TTFT
+    history without bound; the summary is over the most recent samples."""
+
+    def __init__(self, maxlen: int = 4096):
+        self._xs: Deque[float] = deque(maxlen=maxlen)
+        self.count = 0  # lifetime samples, window evictions included
+
+    def record(self, x: float) -> None:
+        self._xs.append(float(x))
+        self.count += 1
+
+    def __len__(self) -> int:
+        return len(self._xs)
+
+    def values(self) -> List[float]:
+        return list(self._xs)
+
+    def percentile(self, q: float) -> float:
+        return percentile(self._xs, q)
+
+    def summary_ms(self, qs: Sequence[float] = (50, 95, 99)) -> str:
+        """``"p50/p95/p99 3.1/9.2/12.0ms"`` — ``-`` for an empty window,
+        never a crash or a fabricated zero."""
+        if not self._xs:
+            return "p" + "/p".join(_qname(q) for q in qs) + " -"
+        vals = percentiles(self._xs, qs)
+        head = "p" + "/p".join(_qname(q) for q in qs)
+        body = "/".join(f"{v * 1e3:.1f}" for v in vals.values())
+        return f"{head} {body}ms"

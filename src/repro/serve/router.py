@@ -31,11 +31,13 @@ request that repeats it admits against cached pages.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.align import TokenAligner
 from repro.data.tokenizer import ToyTokenizer
 from repro.serve.engine import ServeEngine
+from repro.serve.metrics import LatencyWindow
 
 
 @dataclasses.dataclass
@@ -55,12 +57,18 @@ class RouteDecision:
 
 @dataclasses.dataclass
 class RouteRequest:
-    """What a policy sees: the raw request plus its canonical-vocab length."""
+    """What a policy sees: the raw request plus its canonical-vocab length
+    and latency budget (deadline-aware policies route on these)."""
 
     text: Optional[str]
     tokens: Optional[List[int]]
     tier: Optional[str]
     llm_len: int  # prompt length in the LLM (canonical) tokenizer
+    max_new: int = 32
+    slo_ttft: Optional[float] = None  # seconds; None = best-effort
+    slo_tpot: Optional[float] = None
+    tier_class: str = "standard"  # SLO lane name (engine-side accounting)
+    priority: int = 1  # 0 = most urgent admission lane
 
 
 Policy = Callable[[RouteRequest, "CloudEdgeRouter"], RouteDecision]
@@ -130,6 +138,71 @@ def collaborative_policy(threshold: int = 32) -> Policy:
     return policy
 
 
+def estimated_queue_delay(
+    engine, new_tokens: int, prefill_tok_s: float, decode_tok_s: float
+) -> float:
+    """Seconds until a request submitted now would produce its first token
+    on ``engine``: queued + in-flight prefill work ahead of it, the decode
+    work of the active lanes' remaining budgets (they share every step),
+    and its own prefill — all priced at the given service rates. The rates
+    are explicit (measured offline or modeled) so the estimate is
+    deterministic under a virtual clock; it deliberately ignores admission
+    order beyond FIFO (a conservative bound under SLO lanes, where an
+    urgent request admits earlier than this assumes)."""
+    sched = engine.scheduler
+    backlog = sum(r.prefill_len for r in sched.queue) + new_tokens
+    part = getattr(engine, "_partial", None)
+    if part is not None:
+        backlog += len(part.feed) - part.t
+    remaining = sum(
+        sched.slot_req[s].max_new - sched.ngen(s)
+        for s in sched.live_slots()
+    )
+    return backlog / prefill_tok_s + remaining / decode_tok_s
+
+
+def deadline_aware_policy(
+    *,
+    prefill_tok_s: float,
+    decode_tok_s: float,
+    default_slo_ttft: float = 1.0,
+    margin: float = 1.0,
+) -> Policy:
+    """Deadline-aware spill (DESIGN.md §11): send a request to the cloud
+    LLM only when the LLM's estimated queue delay leaves its TTFT budget
+    intact; otherwise spill to the speculative (SLM-draft, LLM-verify)
+    pair when the router has one, else to the least-loaded edge SLM —
+    LLM-quality answers when the queue allows, bounded-latency answers
+    when it does not (the SLM/LLM collaboration spectrum the cloud-edge
+    surveys frame). ``margin`` scales the budget (margin < 1 spills
+    earlier). Requests without an SLO use ``default_slo_ttft``."""
+
+    def policy(req: RouteRequest, router: "CloudEdgeRouter") -> RouteDecision:
+        budget = (req.slo_ttft if req.slo_ttft is not None
+                  else default_slo_ttft) * margin
+        est = estimated_queue_delay(
+            router.llm.engine, req.llm_len, prefill_tok_s, decode_tok_s
+        )
+        if est <= budget:
+            return RouteDecision(
+                router.llm.name, f"est wait {est:.3f}s <= budget {budget:.3f}s"
+            )
+        if router.spec_pair is not None:
+            return RouteDecision(
+                router.spec_pair.name,
+                f"est wait {est:.3f}s > budget {budget:.3f}s: draft+verify",
+            )
+        name = min(
+            router.slms,
+            key=lambda s: (s.engine.num_queued + s.engine.num_active, s.name),
+        ).name
+        return RouteDecision(
+            name, f"est wait {est:.3f}s > budget {budget:.3f}s: edge spill"
+        )
+
+    return policy
+
+
 @dataclasses.dataclass
 class RouterCompletion:
     rid: int  # router-wide request id
@@ -141,6 +214,10 @@ class RouterCompletion:
     ttft_s: float
     latency_s: float
     decision: RouteDecision
+    # SLO accounting (carried from the engine Completion)
+    tier_class: str = "standard"
+    slo_ok: bool = True
+    tpot_s: float = 0.0
 
 
 class CloudEdgeRouter:
@@ -150,11 +227,15 @@ class CloudEdgeRouter:
         slms: Sequence[EngineSpec],
         policy: Optional[Policy] = None,
         spec_pair: Optional[EngineSpec] = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         """``spec_pair`` registers one extra tier whose engine is a
         ``serve.spec.SpecCoordinator`` — an (SLM-drafter, LLM-verifier)
         pair behind the ServeEngine surface; ``collaborative_policy``
-        routes long prompts to it. Its tokenizer is the verifier's."""
+        routes long prompts to it. Its tokenizer is the verifier's.
+        ``clock`` stamps router-level events; the member engines take
+        their own (pass the same callable to both for a coherent
+        virtual-time simulation — ``fleet.py`` does)."""
         if not slms:
             raise ValueError("a consortium needs at least one SLM tier")
         tiers = [llm] + list(slms) + ([spec_pair] if spec_pair else [])
@@ -166,9 +247,13 @@ class CloudEdgeRouter:
         self.spec_pair = spec_pair
         self.specs: Dict[str, EngineSpec] = {s.name: s for s in tiers}
         self.policy = policy or prompt_length_policy()
+        self.clock = clock
         self._aligners: Dict[str, TokenAligner] = {}  # slm name -> aligner
         self._pending: Dict[Tuple[str, int], Tuple[int, Optional[str], RouteDecision]] = {}
         self.route_log: List[Tuple[int, RouteDecision]] = []
+        self._ttft: Dict[str, LatencyWindow] = {
+            s.name: LatencyWindow() for s in tiers
+        }
         self._next_rid = 0
 
     # -- the train->serve handoff (DESIGN.md §10) ---------------------------
@@ -236,7 +321,8 @@ class CloudEdgeRouter:
                 ),
                 tr.server_tok,
             )
-        return cls(llm, slms, policy=policy, spec_pair=spec_pair)
+        return cls(llm, slms, policy=policy, spec_pair=spec_pair,
+                   clock=engine_kw.get("clock", time.monotonic))
 
     # -- vocab bridging -----------------------------------------------------
 
@@ -275,6 +361,10 @@ class CloudEdgeRouter:
         temperature: float = 0.0,
         seed: Optional[int] = None,
         tier: Optional[str] = None,
+        tier_class: str = "standard",
+        priority: int = 1,
+        slo_ttft: Optional[float] = None,
+        slo_tpot: Optional[float] = None,
     ) -> int:
         """Route one request and queue it on its tier's engine.
 
@@ -282,14 +372,20 @@ class CloudEdgeRouter:
         ``tokens`` + ``vocab`` (ids in the named tier's vocabulary, mapped
         to the target's through the aligner). ``seed`` pins the sampling
         stream; default is the router-wide rid, so co-scheduled traffic
-        never changes a request's generation."""
+        never changes a request's generation. ``tier_class``/``priority``/
+        ``slo_*`` carry the SLO lane through to the target engine's
+        scheduler (and to deadline-aware policies, which route on them)."""
         if (text is None) == (tokens is None):
             raise ValueError("exactly one of text / tokens")
         llm_len = (
             len(self.llm.tokenizer.encode(text)) if text is not None
             else len(tokens)
         )
-        req = RouteRequest(text, list(tokens) if tokens else None, tier, llm_len)
+        req = RouteRequest(
+            text, list(tokens) if tokens else None, tier, llm_len,
+            max_new=max_new, slo_ttft=slo_ttft, slo_tpot=slo_tpot,
+            tier_class=tier_class, priority=priority,
+        )
         decision = self.policy(req, self)
         spec = self.specs[decision.engine]
         if text is not None:
@@ -301,6 +397,8 @@ class CloudEdgeRouter:
         erid = spec.engine.submit(
             ids, max_new=max_new, temperature=temperature,
             seed=seed if seed is not None else rid,
+            tier=tier_class, priority=priority,
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot,
         )
         self._pending[(spec.name, erid)] = (rid, text, decision)
         self.route_log.append((rid, decision))
@@ -342,11 +440,13 @@ class CloudEdgeRouter:
                 continue
             for c in spec.engine.step():
                 rid, text, decision = self._pending.pop((spec.name, c.rid))
+                self._ttft[spec.name].record(c.ttft_s)
                 out.append(RouterCompletion(
                     rid=rid, engine=spec.name, prompt_text=text,
                     text=spec.tokenizer.decode(c.tokens), tokens=c.tokens,
                     finish_reason=c.finish_reason, ttft_s=c.ttft_s,
                     latency_s=c.latency_s, decision=decision,
+                    tier_class=c.tier, slo_ok=c.slo_ok, tpot_s=c.tpot_s,
                 ))
         return out
 
@@ -371,7 +471,9 @@ class CloudEdgeRouter:
         return sum(s.engine.num_queued for s in self.specs.values())
 
     def stats_summary(self) -> str:
-        """One line per tier: prefill/generated token throughput, and for
+        """One line per tier: prefill/generated token throughput, TTFT
+        percentiles over the recent completion window (``serve/metrics.py``
+        handles the empty/single-sample/short-history edge cases), and for
         speculative tiers the draft-acceptance rate — the number that says
         whether the consortium pairing is actually paying off."""
         lines = []
@@ -385,6 +487,9 @@ class CloudEdgeRouter:
                 f"{name}: prefill {st.prefill_tokens} tok ({pf:.1f} tok/s), "
                 f"gen {gen_tok} tok ({gen:.1f} tok/s)"
             )
+            win = self._ttft[name]
+            if len(win):
+                line += f", ttft {win.summary_ms()}"
             if st.draft_tokens:
                 line += (
                     f", draft-accept {st.acceptance_rate:.0%} "

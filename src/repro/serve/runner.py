@@ -29,7 +29,7 @@ the cache manager owns *where* it lives.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,9 +94,15 @@ class RunnerStats:
 
 
 class ModelRunner:
-    def __init__(self, model: Model, params: Params):
+    def __init__(
+        self,
+        model: Model,
+        params: Params,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.model = model
         self.params = params
+        self.clock = clock  # injectable for deterministic simulation
         self.stats = RunnerStats()
         self._prefill_jit: Dict[int, object] = {}  # prompt bucket -> program
         self._tail_jit: Dict[int, object] = {}  # tail bucket -> program
@@ -166,7 +172,7 @@ class ModelRunner:
         s = len(prompt)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
-        t0 = time.monotonic()
+        t0 = self.clock()
         tok, paged, slots = self._prefill_for(bucket)(
             self.params, paged, slots,
             jnp.asarray(padded), jnp.asarray(s, jnp.int32),
@@ -175,7 +181,7 @@ class ModelRunner:
             jnp.asarray(seed, jnp.int32), base_key,
         )
         tok = int(tok)
-        self.stats.prefill_s += time.monotonic() - t0
+        self.stats.prefill_s += self.clock() - t0
         self.stats.prefill_tokens += s
         return tok, paged, slots
 
@@ -229,7 +235,7 @@ class ModelRunner:
         s = len(prompt)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
-        t0 = time.monotonic()
+        t0 = self.clock()
         tok, paged, slots = self._tail_for(bucket)(
             self.params, paged, slots,
             jnp.asarray(padded), jnp.asarray(s, jnp.int32),
@@ -238,7 +244,7 @@ class ModelRunner:
             jnp.asarray(seed, jnp.int32), base_key,
         )
         tok = int(tok)
-        self.stats.prefill_s += time.monotonic() - t0
+        self.stats.prefill_s += self.clock() - t0
         self.stats.prefill_tokens += s
         return tok, paged, slots
 
@@ -283,7 +289,7 @@ class ModelRunner:
         base_key: jax.Array,
         n_live: int,
     ) -> Tuple[np.ndarray, Params, Params]:
-        t0 = time.monotonic()
+        t0 = self.clock()
         toks, paged, slots = self._decode_for(len(lanes))(
             self.params, paged, slots,
             jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
@@ -292,7 +298,7 @@ class ModelRunner:
             jnp.asarray(ngen, jnp.int32), base_key,
         )
         toks = np.asarray(toks)
-        self.stats.decode_s += time.monotonic() - t0
+        self.stats.decode_s += self.clock() - t0
         self.stats.decode_steps += 1
         self.stats.decode_tokens += n_live
         return toks, paged, slots
@@ -367,7 +373,7 @@ class ModelRunner:
         (out_tokens (L, K+1), n_acc (L,), paged, slots); lane i commits
         out_tokens[i, : n_acc[i] + 1]."""
         L, k1 = tokens.shape
-        t0 = time.monotonic()
+        t0 = self.clock()
         if q is None:
             q = jnp.zeros((), jnp.float32)  # unused placeholder operand
         out, n_acc, paged, slots = self._verify_for(L, k1 - 1, mode)(
@@ -379,7 +385,7 @@ class ModelRunner:
             base_key,
         )
         out, n_acc = np.asarray(out), np.asarray(n_acc)
-        self.stats.spec_s += time.monotonic() - t0
+        self.stats.spec_s += self.clock() - t0
         self.stats.verify_steps += 1
         self.stats.verify_lanes += n_live
         self.stats.draft_tokens += n_live * (k1 - 1)
@@ -467,7 +473,7 @@ class ModelRunner:
         scattered back — ``commit_draft`` applies it once the verifier's
         accepted lengths are known. Returns (drafts (L, K), probs, paged,
         stacked per-step state, ring undo)."""
-        t0 = time.monotonic()
+        t0 = self.clock()
         out = self._draft_for(len(lanes), k, sample)(
             self.params, paged, slots,
             jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
@@ -475,7 +481,7 @@ class ModelRunner:
             jnp.asarray(temps, jnp.float32), jnp.asarray(seeds, jnp.int32),
             jnp.asarray(ngen, jnp.int32), base_key,
         )
-        self.stats.spec_s += time.monotonic() - t0
+        self.stats.spec_s += self.clock() - t0
         return out
 
     def _commit_for(self, lanes: int):
@@ -504,10 +510,10 @@ class ModelRunner:
     ) -> Tuple[Params, Params]:
         """Roll the drafter back to the verifier's accepted lengths: keep
         ring writes / recurrent state through step n_acc, restore the rest."""
-        t0 = time.monotonic()
+        t0 = self.clock()
         paged, slots = self._commit_for(len(lanes))(
             paged, slots, stacked, undo,
             jnp.asarray(n_acc, jnp.int32), jnp.asarray(lanes, jnp.int32),
         )
-        self.stats.spec_s += time.monotonic() - t0
+        self.stats.spec_s += self.clock() - t0
         return paged, slots

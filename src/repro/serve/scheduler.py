@@ -1,13 +1,15 @@
 """Scheduler: admission, eviction, and compile-size bucketing.
 
-Host-side request lifecycle for the serving engine (DESIGN.md §7):
+Host-side request lifecycle for the serving engine (DESIGN.md §7, §11):
 
 - ``submit`` validates up front — ``len(prompt) + max_new <= max_len``
   and ``len(prompt) <= bucket_cap`` — so an oversized request fails
   loudly at the API boundary instead of silently finishing ``cache_full``
   mid-stream or truncating to a too-small prefill bucket;
-- all internal timestamps are ``time.monotonic()``: an NTP step mid-run
-  must not produce negative or inflated ``ttft_s`` / ``latency_s``;
+- all internal timestamps come from an **injectable** ``clock`` callable
+  (default ``time.monotonic`` — NTP-step-proof); the fleet simulator
+  (serve/fleet.py) injects a virtual clock so latency/SLO behavior is
+  deterministic on CPU CI;
 - prompts are padded to power-of-two buckets (floored at ``min_bucket``,
   capped at the page-padded ``max_len``), so the runner compiles
   O(log max_len) prefill programs instead of one per distinct length;
@@ -15,6 +17,21 @@ Host-side request lifecycle for the serving engine (DESIGN.md §7):
   lane bucket (O(log num_slots) decode programs). ``gather_live_lanes=
   False`` restores the PR-1 dead-lane behavior (every slot decodes every
   step) — kept as the benchmark baseline.
+
+Admission order is pluggable (``admission=``):
+
+- ``"fifo"`` (default, the PR-2 behavior): strict arrival order; the
+  head waits rather than being skipped when pages are short, so a long
+  prompt cannot be starved by short ones behind it;
+- ``"slo"`` (DESIGN.md §11): **priority lanes** — requests carry a
+  ``priority`` (0 = most urgent; tiers map onto it) and a TTFT deadline
+  (``submit_time + slo_ttft``); admission picks the lowest-priority-value
+  lane first and, within a lane, the earliest deadline (EDF). The chosen
+  candidate still blocks (never skipped) when pages are short — the same
+  no-starvation guarantee FIFO gives its head, per lane. Preemption under
+  page pressure also becomes priority-aware: the victim is the lowest-
+  priority (then youngest) active stream, so batch traffic is requeued
+  before interactive traffic.
 
 The scheduler owns all per-slot stream state (position, last token,
 temperature, per-request sampling seed) and builds Completions; device
@@ -24,6 +41,7 @@ memory lives in ``BlockCacheManager``, compiled programs in
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Callable, Deque, List, Optional, Tuple
@@ -44,6 +62,21 @@ class Request:
     # first-token time (TTFT must not reset on resume)
     done: List[int] = dataclasses.field(default_factory=list)
     first_tok_t: float = 0.0
+    # SLO metadata (DESIGN.md §11): the admission lane and the per-request
+    # latency budgets. priority 0 is the most urgent lane; slo_ttft /
+    # slo_tpot are seconds (None = best-effort, sorts after every dated
+    # deadline within its lane)
+    tier: str = "standard"
+    priority: int = 1
+    slo_ttft: Optional[float] = None
+    slo_tpot: Optional[float] = None
+
+    @property
+    def deadline(self) -> float:
+        """Absolute TTFT deadline; +inf when the request carries no SLO."""
+        if self.slo_ttft is None:
+            return math.inf
+        return self.submit_time + self.slo_ttft
 
     @property
     def feed(self) -> List[int]:
@@ -65,6 +98,28 @@ class Completion:
     finish_reason: str  # eos | length | cache_full
     ttft_s: float  # submit -> first token (includes queueing)
     latency_s: float  # submit -> finish
+    # SLO accounting (carried from the Request; defaults keep old callers)
+    tier: str = "standard"
+    slo_ttft: Optional[float] = None
+    slo_tpot: Optional[float] = None
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean time per output token after the first (0 for 1-token
+        generations — there is no inter-token gap to measure)."""
+        if len(self.tokens) <= 1:
+            return 0.0
+        return (self.latency_s - self.ttft_s) / (len(self.tokens) - 1)
+
+    @property
+    def slo_ok(self) -> bool:
+        """Did the completion meet every budget it carried? Requests
+        without SLOs always count as met (best-effort goodput)."""
+        if self.slo_ttft is not None and self.ttft_s > self.slo_ttft:
+            return False
+        if self.slo_tpot is not None and self.tpot_s > self.slo_tpot:
+            return False
+        return True
 
 
 def pow2_bucket(n: int, lo: int, hi: int) -> int:
@@ -83,13 +138,20 @@ class Scheduler:
         bucket_cap: Optional[int] = None,
         min_bucket: int = 8,
         gather_live_lanes: bool = True,
+        admission: str = "fifo",
+        clock: Callable[[], float] = time.monotonic,
     ):
+        if admission not in ("fifo", "slo"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.num_slots = num_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.bucket_cap = bucket_cap or max_len
         self.min_bucket = min(min_bucket, self.bucket_cap)
         self.gather_live_lanes = gather_live_lanes
+        self.admission = admission
+        self.clock = clock
+        self.num_preempted = 0  # lifetime preempt-and-requeue count
 
         self.queue: Deque[Request] = deque()
         self.free: List[int] = list(range(num_slots))[::-1]  # pop() -> slot 0
@@ -112,11 +174,17 @@ class Scheduler:
         max_new: int = 32,
         temperature: float = 0.0,
         seed: Optional[int] = None,
+        tier: str = "standard",
+        priority: int = 1,
+        slo_ttft: Optional[float] = None,
+        slo_tpot: Optional[float] = None,
     ) -> int:
         if not prompt:
             raise ValueError("empty prompt")
         if max_new < 1:
             raise ValueError(f"max_new {max_new} < 1")
+        if priority < 0:
+            raise ValueError(f"priority {priority} < 0")
         if len(prompt) + max_new > self.max_len:
             raise ValueError(
                 f"prompt len {len(prompt)} + max_new {max_new} exceeds "
@@ -132,22 +200,46 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(
-            Request(rid, list(prompt), max_new, temperature, time.monotonic(),
-                    seed if seed is not None else rid)
+            Request(rid, list(prompt), max_new, temperature, self.clock(),
+                    seed if seed is not None else rid,
+                    tier=tier, priority=priority,
+                    slo_ttft=slo_ttft, slo_tpot=slo_tpot)
         )
         return rid
+
+    def _select_admission(self) -> int:
+        """Index into ``queue`` of the next candidate. FIFO: the head.
+        SLO: lowest priority value first, earliest TTFT deadline within a
+        lane (EDF), arrival order as the tiebreak — preempted requests
+        keep their original submit_time, so a resumed stream never loses
+        its place to a later arrival of the same lane."""
+        if self.admission == "fifo" or len(self.queue) <= 1:
+            return 0
+        return min(
+            range(len(self.queue)),
+            key=lambda i: (
+                self.queue[i].priority,
+                self.queue[i].deadline,
+                self.queue[i].submit_time,
+                self.queue[i].rid,
+            ),
+        )
 
     def pop_admission(
         self, can_admit: Callable[[Request], bool]
     ) -> Optional[Tuple[Request, int]]:
-        """Next (request, slot) to prefill, or None. FIFO order; the head
-        waits (rather than being skipped) when pages are short, so a long
-        prompt cannot be starved by short ones behind it."""
+        """Next (request, slot) to prefill, or None. The selected
+        candidate (FIFO head, or the SLO lanes' most urgent request) waits
+        rather than being skipped when pages are short, so a long prompt
+        cannot be starved by short ones behind it."""
         if not self.free or not self.queue:
             return None
-        if not can_admit(self.queue[0]):
+        i = self._select_admission()
+        if not can_admit(self.queue[i]):
             return None
-        return self.queue.popleft(), self.free.pop()
+        req = self.queue[i]
+        del self.queue[i]
+        return req, self.free.pop()
 
     def unpop(self, req: Request, slot: int) -> None:
         """Inverse of ``pop_admission``: put an un-admitted request back at
@@ -224,13 +316,17 @@ class Scheduler:
     # -- preemption / eviction ---------------------------------------------
 
     def youngest_active(self) -> Optional[int]:
-        """The most recently submitted active slot — the preemption victim
-        on page-pool exhaustion (least progress lost; FIFO order of the
-        older streams preserved)."""
+        """The preemption victim on page-pool exhaustion. FIFO: the most
+        recently submitted active slot (least progress lost; FIFO order of
+        the older streams preserved). SLO: the lowest-priority lane first,
+        youngest within it — batch traffic is requeued before interactive
+        traffic regardless of arrival order."""
         best, best_key = None, None
         for slot in np.nonzero(self.active)[0]:
             req = self.slot_req[slot]
             key = (req.submit_time, req.rid)
+            if self.admission == "slo":
+                key = (req.priority,) + key
             if best_key is None or key > best_key:
                 best, best_key = int(slot), key
         return best
@@ -246,6 +342,7 @@ class Scheduler:
         self.slot_req[slot] = None
         self.free.append(slot)
         self.queue.appendleft(req)
+        self.num_preempted += 1
         return req
 
     def _maybe_finish(self, slot: int, now: float) -> Optional[Completion]:
@@ -279,6 +376,9 @@ class Scheduler:
             finish_reason=reason,
             ttft_s=self.first_tok_t[slot] - req.submit_time,
             latency_s=now - req.submit_time,
+            tier=req.tier,
+            slo_ttft=req.slo_ttft,
+            slo_tpot=req.slo_tpot,
         )
 
     # -- introspection ------------------------------------------------------

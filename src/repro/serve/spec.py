@@ -57,7 +57,7 @@ decoding wants aligned.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -109,6 +109,8 @@ class SpecCoordinator:
         k_ewma: float = 0.3,
         k_grow: float = 0.7,
         k_shrink: float = 0.35,
+        admission: str = "fifo",
+        clock: Callable[[], float] = time.monotonic,
     ):
         if verifier_model.cfg.is_encoder_decoder or drafter_model.cfg.is_encoder_decoder:
             raise ValueError("speculative decoding serves decoder-only configs")
@@ -143,6 +145,7 @@ class SpecCoordinator:
         self.max_batch = max_batch
         self.max_len = max_len
         self.exhaust_policy = exhaust_policy
+        self.clock = clock
 
         # cross-vocab bridge: built only when the tokenizers differ
         self.verifier_tokenizer = verifier_tokenizer
@@ -192,9 +195,10 @@ class SpecCoordinator:
             bucket_cap=self.cache_v.geom.max_len,
             min_bucket=max(8, page_size),
             gather_live_lanes=gather_live_lanes,
+            admission=admission, clock=clock,
         )
-        self.runner_v = ModelRunner(verifier_model, verifier_params)
-        self.runner_d = ModelRunner(drafter_model, drafter_params)
+        self.runner_v = ModelRunner(verifier_model, verifier_params, clock=clock)
+        self.runner_d = ModelRunner(drafter_model, drafter_params, clock=clock)
         self.base_key = jax.random.key(seed)
         self.draft_key = jax.random.key(seed + 1)
         # pending drafter-vocab token per slot (the drafter's image of the
@@ -260,6 +264,10 @@ class SpecCoordinator:
         max_new: int = 32,
         temperature: float = 0.0,
         seed: Optional[int] = None,
+        tier: str = "standard",
+        priority: int = 1,
+        slo_ttft: Optional[float] = None,
+        slo_tpot: Optional[float] = None,
     ) -> int:
         """Queue a request (verifier-vocab ids). Greedy acceptance serves
         temperature-0 streams only — sampled streams need ``mode=
@@ -277,7 +285,9 @@ class SpecCoordinator:
                     f"{cache.num_pages - 1}; it could never be admitted"
                 )
         return self.scheduler.submit(
-            prompt, max_new=max_new, temperature=temperature, seed=seed
+            prompt, max_new=max_new, temperature=temperature, seed=seed,
+            tier=tier, priority=priority,
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot,
         )
 
     def _release(self, slot: int) -> None:
@@ -304,7 +314,7 @@ class SpecCoordinator:
             if tok is None:  # mid-admission COW starved: requeue, drain first
                 self.scheduler.unpop(req, slot)
                 return done
-            fin = self.scheduler.on_admitted(req, slot, tok, time.monotonic())
+            fin = self.scheduler.on_admitted(req, slot, tok, self.clock())
             if fin is not None:  # finished at admission: never draft
                 done.append(fin)
                 self.cache_v.release(slot)
@@ -343,11 +353,12 @@ class SpecCoordinator:
             pos = int(self.scheduler.pos[sl])
             if ensure_pages(self.cache_v, self.scheduler, sl, pos,
                             self.exhaust_policy, done, self._release,
-                            n_steps=k + 1, lookahead=k) \
+                            n_steps=k + 1, lookahead=k, clock=self.clock) \
                     and self.scheduler.active[sl] \
                     and ensure_pages(self.cache_d, self.scheduler, sl, pos,
                                      self.exhaust_policy, done, self._release,
-                                     n_steps=k + 1, lookahead=k):
+                                     n_steps=k + 1, lookahead=k,
+                                     clock=self.clock):
                 live.append(sl)
         live = [sl for sl in live if self.scheduler.active[sl]]
         if not live:
@@ -403,7 +414,7 @@ class SpecCoordinator:
             elif self.acc_ewma <= self.k_shrink and self.k > self.k_min:
                 self.k -= 1
 
-        now = time.monotonic()
+        now = self.clock()
         committed = 0
         for i, sl in enumerate(live):
             before = sched.ngen(sl)

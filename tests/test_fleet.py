@@ -1,0 +1,342 @@
+"""Fleet simulation, chunked prefill, SLO lanes, deadline routing
+(DESIGN.md §11).
+
+1. Chunked prefill is byte-identical to fused prefill per cache family
+   (attn/MLA chunk chains, swa ring, recurrent, hybrid) — it reuses the
+   PR-4 ``prefill_tail``/``write_len`` machinery, and the final chunk
+   samples with the same (seed, 0) fold_in key fused prefill uses.
+2. Chunked prefill actually interleaves: decode lanes keep producing
+   tokens while a long prompt's chunks are in flight.
+3. SLO admission picks lanes by (priority, deadline, arrival); FIFO
+   stays strict arrival order. Preemption under slo picks the lowest-
+   priority victim.
+4. Deadline-aware routing spills away from a backlogged LLM exactly when
+   the estimated queue delay exceeds the request's TTFT budget.
+5. The fleet simulation is deterministic: same seed + virtual clock =>
+   identical completions AND identical latency numbers, twice.
+6. The workload generator is a pure function of its config.
+
+fp32 params throughout (byte-identity assertions; see test_serve.py).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import (
+    ServeEngine,
+    CloudEdgeRouter,
+    CostModel,
+    EngineSpec,
+    FleetSimulator,
+    Scheduler,
+    TierSpec,
+    VirtualClock,
+    WorkloadConfig,
+    deadline_aware_policy,
+    generate_workload,
+    summarize,
+)
+from repro.serve.router import estimated_queue_delay
+
+MAX_LEN = 48
+
+PREFIX_FAMILIES = [
+    ("qwen2-1.5b", "chain"),  # full-attention chunk chains
+    ("deepseek-v3-671b", "chain"),  # MLA latent chunk chains
+    ("gemma-2b-swa", "snapshot"),  # mutable ring: COW-protected snapshots
+    ("xlstm-1.3b", "snapshot"),  # pure recurrent: state-only snapshots
+    ("jamba-1.5-large-398b", "snapshot"),  # hybrid: pages + mamba state
+]
+
+
+def _setup(arch, seed=0):
+    if arch == "gemma-2b-swa":
+        from repro.configs.gemma_2b import sliding_variant
+
+        cfg = sliding_variant(get_arch("gemma-2b").reduced(), window=8)
+    else:
+        cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed), dtype=jnp.float32)
+    return cfg, model, params
+
+
+# -- chunked prefill ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,mode", PREFIX_FAMILIES)
+def test_chunked_equals_fused_per_family(arch, mode):
+    """Mixed-length traffic through a chunk-8 engine must produce the
+    same bytes as the fused-prefill engine, for every cache family —
+    including with the prefix pool on (chunk boundaries register
+    snapshots / chains exactly like fused prefill does)."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(7)
+    shared = list(rng.randint(5, cfg.vocab_size, (12,)))
+    prompts = [
+        shared + list(rng.randint(5, cfg.vocab_size, (5,))),  # long, shared
+        list(rng.randint(5, cfg.vocab_size, (3,))),  # short, unique
+        shared + list(rng.randint(5, cfg.vocab_size, (9,))),  # prefix hit
+    ]
+    outs = {}
+    for chunk in (None, 8):
+        eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                          seed=0, prefix_cache=True, chunked_prefill=chunk)
+        assert eng.cache.prefix_mode == mode
+        for p in prompts:
+            eng.submit(p, max_new=6)
+        outs[chunk] = {c.rid: c.tokens for c in eng.run()}
+        assert len(outs[chunk]) == len(prompts)
+    assert outs[8] == outs[None], f"{arch}: chunked prefill diverged"
+
+
+def test_chunked_interleaves_decode():
+    """While a long prompt's chunks are in flight, already-admitted lanes
+    keep decoding — the TTFT-tail fix chunking exists for. A fused engine
+    admits the same prompt in one step (no interleaving to observe)."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+                      chunked_prefill=8)
+    eng.submit([1, 2, 3], max_new=12)
+    eng.step()  # admit the short request; it starts decoding
+    long_prompt = list(range(1, 25))  # 24 tokens = 3 chunks of 8
+    eng.submit(long_prompt, max_new=4)
+    interleaved_steps = 0
+    while eng._partial is not None or eng.scheduler.num_queued:
+        ngen0 = eng.stats.decode_tokens
+        eng.step()
+        if eng._partial is not None and eng.stats.decode_tokens > ngen0:
+            interleaved_steps += 1
+    assert interleaved_steps >= 2, "decode stalled during chunked prefill"
+    comps = {c.rid: c for c in eng.run()}
+    assert len(comps) == 2 and len(comps[1].tokens) == 4
+
+
+def test_chunked_prefill_validation():
+    cfg, model, params = _setup("qwen2-1.5b")
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                    chunked_prefill=6)  # not a page-size multiple
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                    chunked_prefill=0)
+
+
+# -- SLO lanes (pure scheduler: no model) ------------------------------------
+
+
+def test_slo_admission_order():
+    sched = Scheduler(num_slots=1, max_len=64, admission="slo",
+                      clock=VirtualClock())
+    batch = sched.submit([1] * 4, priority=2)
+    standard = sched.submit([2] * 4, priority=1, slo_ttft=5.0)
+    urgent_late = sched.submit([3] * 4, priority=0, slo_ttft=9.0)
+    urgent_soon = sched.submit([4] * 4, priority=0, slo_ttft=1.0)
+    order = []
+    while sched.queue:
+        req, slot = sched.pop_admission(lambda r: True)
+        order.append(req.rid)
+        sched.free.append(slot)  # recycle the single slot
+    # lane 0 first, EDF inside the lane; then lane 1; batch last
+    assert order == [urgent_soon, urgent_late, standard, batch]
+
+
+def test_fifo_admission_unchanged():
+    sched = Scheduler(num_slots=1, max_len=64, admission="fifo",
+                      clock=VirtualClock())
+    rids = [sched.submit([1] * 4, priority=p) for p in (2, 0, 1)]
+    order = []
+    while sched.queue:
+        req, slot = sched.pop_admission(lambda r: True)
+        order.append(req.rid)
+        sched.free.append(slot)
+    assert order == rids  # arrival order, priorities ignored
+
+
+def test_slo_admission_blocks_never_skips():
+    """The most urgent candidate waits when pages are short; nothing
+    behind it is admitted over its head (per-lane no-starvation)."""
+    sched = Scheduler(num_slots=2, max_len=64, admission="slo",
+                      clock=VirtualClock())
+    big = sched.submit([1] * 32, priority=0, slo_ttft=0.1)
+    small = sched.submit([2] * 2, priority=1)
+    assert sched.pop_admission(lambda r: len(r.prompt) < 10) is None
+    assert sched.num_queued == 2 and sched.queue[0].rid == big
+
+
+def test_slo_preemption_victim_is_lowest_priority():
+    clock = VirtualClock()
+    sched = Scheduler(num_slots=3, max_len=64, admission="slo", clock=clock)
+    rids = [
+        sched.submit([1] * 4, priority=0, slo_ttft=1.0),
+        sched.submit([2] * 4, priority=2),  # batch: the victim
+        sched.submit([3] * 4, priority=1),
+    ]
+    for _ in range(3):
+        req, slot = sched.pop_admission(lambda r: True)
+        sched.on_admitted(req, slot, first_token=9, now=clock())
+        clock.advance(0.01)
+    victim = sched.youngest_active()
+    assert sched.slot_req[victim].rid == rids[1]
+    req = sched.preempt(victim)
+    assert req.rid == rids[1] and sched.num_preempted == 1
+
+
+# -- deadline-aware routing --------------------------------------------------
+
+
+def _tiny_router(policy, clock, admission="fifo"):
+    from repro.data.synthetic import generate_corpus
+    from repro.data.tokenizer import build_tokenizer
+
+    tok = build_tokenizer(
+        "t", [s.text for s in generate_corpus(20, seed=0)],
+        max_piece=6, budget=64,
+    )
+    cfg = dataclasses.replace(
+        get_arch("qwen2-1.5b").reduced(), vocab_size=tok.vocab_size
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    kw = dict(max_batch=2, max_len=MAX_LEN, seed=0, admission=admission,
+              clock=clock)
+    llm = EngineSpec("llm", ServeEngine(model, params, **kw), tok)
+    slm = EngineSpec("slm", ServeEngine(model, params, **kw), tok)
+    return CloudEdgeRouter(llm, [slm], policy=policy, clock=clock)
+
+
+def test_deadline_routing_spills_on_backlog():
+    clock = VirtualClock()
+    policy = deadline_aware_policy(prefill_tok_s=100.0, decode_tok_s=100.0)
+    router = _tiny_router(policy, clock)
+    # empty LLM: a tight budget still beats the ~0 estimated wait
+    r0 = router.submit(tokens=[1, 2, 3], max_new=2, slo_ttft=0.5)
+    assert router.route_log[r0][1].engine == "llm"
+    # pile prompt tokens into the LLM queue until the estimate blows the
+    # budget: 100 tok/s prefill => 40 queued tokens = 0.4s > 0.2s budget
+    for _ in range(4):
+        router.submit(tokens=[5] * 10, max_new=2, slo_ttft=60.0)
+    est = estimated_queue_delay(router.llm.engine, 3, 100.0, 100.0)
+    assert est > 0.2
+    spill = router.submit(tokens=[1, 2, 3], max_new=2, slo_ttft=0.2)
+    decision = router.route_log[spill][1]
+    assert decision.engine == "slm" and "spill" in decision.reason
+    # a best-effort request (no SLO) uses the default budget (1s) and stays
+    stay = router.submit(tokens=[1, 2, 3], max_new=2)
+    assert router.route_log[stay][1].engine == "llm"
+    for c in router.run():
+        assert c.finish_reason in ("length", "eos")
+
+
+def test_estimated_queue_delay_counts_all_work():
+    clock = VirtualClock()
+    router = _tiny_router(deadline_aware_policy(
+        prefill_tok_s=1000.0, decode_tok_s=1000.0), clock)
+    eng = router.llm.engine
+    assert estimated_queue_delay(eng, 0, 1000.0, 1000.0) == 0.0
+    router.submit(tokens=[1] * 8, max_new=4)
+    # queued prefill work is visible before any step runs
+    assert estimated_queue_delay(eng, 0, 1000.0, 1000.0) == pytest.approx(8 / 1000.0)
+    eng.step()  # admits (1 prefill token sampled) + decodes 1 more
+    est = estimated_queue_delay(eng, 0, 1000.0, 1000.0)
+    assert est == pytest.approx((4 - 2) / 1000.0)  # remaining decode tokens
+    router.run()
+
+
+# -- fleet simulation --------------------------------------------------------
+
+
+def _run_fleet(admission, *, chunk=16, seed=0, rate=6.0):
+    cfg = dataclasses.replace(get_arch("qwen2-1.5b").reduced(), vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    clock = VirtualClock()
+    eng = ServeEngine(model, params, max_batch=4, max_len=128, seed=0,
+                      admission=admission, chunked_prefill=chunk, clock=clock)
+    wl = generate_workload(WorkloadConfig(
+        rate=rate, horizon=4.0, seed=seed, vocab_size=63, prompt_max=64))
+    sim = FleetSimulator(eng, clock, CostModel())
+    comps = sim.run(wl)
+    return wl, comps, clock.now, eng
+
+
+def test_fleet_deterministic_under_virtual_clock():
+    wl1, comps1, dur1, _ = _run_fleet("slo")
+    wl2, comps2, dur2, _ = _run_fleet("slo")
+    assert [dataclasses.astuple(r) for r in wl1] == [
+        dataclasses.astuple(r) for r in wl2]
+    assert dur1 == dur2  # bit-identical virtual time
+    assert [(c.rid, c.tokens, c.ttft_s, c.latency_s) for c in comps1] == [
+        (c.rid, c.tokens, c.ttft_s, c.latency_s) for c in comps2]
+    rep1 = summarize(comps1, dur1)
+    rep2 = summarize(comps2, dur2)
+    assert rep1 == rep2
+
+
+def test_fleet_drains_every_request():
+    wl, comps, dur, eng = _run_fleet("slo")
+    assert len(comps) == len(wl)  # every request reaches a terminal state
+    assert sorted(c.rid for c in comps) == list(range(len(wl)))
+    assert eng.num_queued == 0 and eng.num_active == 0
+    rep = summarize(comps, dur, eng.scheduler.num_preempted, offered=len(wl))
+    assert rep["completed"] == len(wl)
+    assert 0.0 <= rep["overall"]["slo_violation_rate"] <= 1.0
+    assert set(rep["tiers"]) <= {"interactive", "standard", "batch"}
+    for c in comps:
+        assert c.ttft_s >= 0.0 and c.latency_s >= c.ttft_s
+
+
+def test_fleet_arrival_time_stamps_queueing_delay():
+    """submit_time is the true arrival instant even though admission
+    happens at step boundaries — TTFT includes the queueing delay."""
+    cfg = dataclasses.replace(get_arch("qwen2-1.5b").reduced(), vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    clock = VirtualClock()
+    eng = ServeEngine(model, params, max_batch=1, max_len=MAX_LEN, seed=0,
+                      clock=clock)
+    tier = TierSpec("t", 0, None, None)
+    from repro.serve.fleet import FleetRequest
+
+    sim = FleetSimulator(eng, clock, CostModel(step_overhead_s=0.01))
+    comps = sim.run([
+        FleetRequest(0.0, [1, 2, 3], 4, tier, seed=0),
+        FleetRequest(0.0, [4, 5, 6], 4, tier, seed=1),  # waits: 1 slot
+    ])
+    by_rid = {c.rid: c for c in comps}
+    assert by_rid[1].ttft_s > by_rid[0].ttft_s  # second paid queueing delay
+
+
+def test_virtual_clock_monotonic():
+    clock = VirtualClock(5.0)
+    clock.advance(1.5)
+    assert clock() == 6.5
+    with pytest.raises(ValueError):
+        clock.advance(-0.1)
+
+
+def test_workload_generator_pure_and_bounded():
+    cfg = WorkloadConfig(rate=10.0, horizon=6.0, seed=3, arrival="bursty")
+    wl1, wl2 = generate_workload(cfg), generate_workload(cfg)
+    assert [dataclasses.astuple(r) for r in wl1] == [
+        dataclasses.astuple(r) for r in wl2]
+    assert len(wl1) > 0
+    ts = [r.t for r in wl1]
+    assert ts == sorted(ts) and ts[-1] < cfg.horizon
+    for r in wl1:
+        assert cfg.prompt_min - cfg.prefix_len <= len(r.prompt) <= \
+            cfg.prompt_max + cfg.prefix_len
+        assert cfg.out_min <= r.max_new <= cfg.out_max
+        assert all(0 < t < cfg.vocab_size for t in r.prompt)
+    # shared-prefix populations: some pair of prompts shares a full preamble
+    heads = [tuple(r.prompt[:cfg.prefix_len]) for r in wl1
+             if len(r.prompt) > cfg.prefix_len]
+    assert len(heads) != len(set(heads)), "no shared prefixes generated"
+    with pytest.raises(ValueError):
+        generate_workload(dataclasses.replace(cfg, arrival="uniform"))

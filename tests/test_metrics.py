@@ -1,0 +1,108 @@
+"""Percentile/latency-window math (serve/metrics.py, DESIGN.md §11).
+
+Until now percentile behavior was only exercised incidentally through
+benchmark scripts; these are the direct unit tests. The contract:
+
+1. the interpolation definition matches ``np.percentile`` (the
+   ``linear`` method) on arbitrary data for arbitrary q;
+2. edge cases are explicit — empty input returns nan (never raises,
+   never fabricates 0), a single sample IS every percentile, q clamps
+   to [0, 100];
+3. p99 on short histories interpolates between the two largest samples
+   (defined, but under-resolved — ``min_tail_samples`` names the
+   threshold callers check);
+4. ``LatencyWindow`` is bounded, keeps a lifetime count across
+   evictions, and formats an empty window as ``-``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve.metrics import (
+    LatencyWindow,
+    min_tail_samples,
+    percentile,
+    percentiles,
+)
+
+
+def test_matches_numpy_linear():
+    rng = np.random.default_rng(0)
+    for n in (2, 3, 5, 17, 100):
+        xs = rng.normal(size=n).tolist()
+        for q in (0, 1, 25, 50, 75, 90, 95, 99, 99.9, 100):
+            ours = percentile(xs, q)
+            ref = float(np.percentile(xs, q))
+            assert ours == pytest.approx(ref, rel=1e-12, abs=1e-12), (n, q)
+
+
+def test_empty_is_nan_not_crash():
+    assert math.isnan(percentile([], 50))
+    assert math.isnan(percentile([], 99))
+    vals = percentiles([])
+    assert set(vals) == {"p50", "p95", "p99"}
+    assert all(math.isnan(v) for v in vals.values())
+
+
+def test_single_sample_is_every_percentile():
+    for q in (0, 50, 95, 99, 100):
+        assert percentile([7.25], q) == 7.25
+
+
+def test_q_clamps():
+    xs = [1.0, 2.0, 3.0]
+    assert percentile(xs, -5) == 1.0
+    assert percentile(xs, 150) == 3.0
+
+
+def test_p99_short_history_interpolates_top_two():
+    # 5 samples: rank 0.99 * 4 = 3.96 -> between s[3] and s[4]
+    xs = [1.0, 2.0, 3.0, 4.0, 10.0]
+    expect = 4.0 + (10.0 - 4.0) * 0.96
+    assert percentile(xs, 99) == pytest.approx(expect)
+    # ...and is capped by the max, never beyond
+    assert percentile(xs, 99) <= max(xs)
+
+
+def test_percentiles_batch_matches_scalar():
+    xs = [5.0, 1.0, 9.0, 3.0]
+    vals = percentiles(xs, qs=(50, 95, 99))
+    for q, key in ((50, "p50"), (95, "p95"), (99, "p99")):
+        assert vals[key] == pytest.approx(percentile(xs, q))
+
+
+def test_fractional_q_key_naming():
+    vals = percentiles([1.0, 2.0], qs=(99.9,))
+    assert list(vals) == ["p99_9"]
+
+
+def test_min_tail_samples():
+    assert min_tail_samples(50) == 2
+    assert min_tail_samples(95) == 20
+    assert min_tail_samples(99) == 100
+    assert min_tail_samples(100) == 1
+    # below the threshold the percentile only reflects the top two samples
+    n = min_tail_samples(99) - 1
+    xs = list(range(n))
+    assert percentile(xs, 99) >= xs[-2]
+
+
+def test_latency_window_bounded_and_counts():
+    w = LatencyWindow(maxlen=4)
+    assert len(w) == 0
+    assert w.summary_ms() == "p50/p95/p99 -"
+    assert math.isnan(w.percentile(50))
+    for i in range(10):
+        w.record(float(i))
+    assert len(w) == 4  # bounded window
+    assert w.count == 10  # lifetime samples
+    assert w.values() == [6.0, 7.0, 8.0, 9.0]
+    assert w.percentile(0) == 6.0
+    assert "ms" in w.summary_ms()
+
+
+def test_latency_window_single_sample_summary():
+    w = LatencyWindow()
+    w.record(0.0123)
+    assert w.summary_ms() == "p50/p95/p99 12.3/12.3/12.3ms"

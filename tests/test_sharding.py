@@ -1,10 +1,14 @@
-"""Sharding-rule engine tests (+ hypothesis properties)."""
+"""Sharding-rule engine tests (+ hypothesis properties).
+
+The fixed tests always run (previously the module-level importorskip
+skipped them wholesale wherever hypothesis was missing); the random
+sweep shares its checker with a fixed-case sweep and rides on top where
+hypothesis is installed.
+"""
 import jax
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.common.sharding import (
@@ -13,6 +17,13 @@ from repro.common.sharding import (
     logical_to_spec,
     sharding_for_tree,
 )
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs hypothesis; local images may not
+    HAVE_HYPOTHESIS = False
 
 
 def fake_mesh(shape, axes):
@@ -26,9 +37,17 @@ MESH = fake_mesh((16, 16), ("data", "model"))
 MESH3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
+def _norm(spec):
+    """Unwrap 1-element axis tuples: jax versions differ on whether
+    ``P(("data",), ...)`` normalizes to ``P("data", ...)`` — the sharding
+    is identical either way."""
+    return tuple(e[0] if isinstance(e, tuple) and len(e) == 1 else e
+                 for e in spec)
+
+
 def test_divisible_dims_shard():
     spec = logical_to_spec((256, 4096, 2048), ("batch", "seq", "ffn"), MESH)
-    assert spec == P(("data",), None, "model")
+    assert _norm(spec) == _norm(P(("data",), None, "model"))
 
 
 def test_indivisible_falls_back_to_replication():
@@ -66,22 +85,13 @@ def test_sharding_for_tree_zips_correctly():
               "b": {"c": jax.ShapeDtypeStruct((16,), np.float32)}}
     axes = {"a": ("batch", "ffn"), "b": {"c": (None,)}}
     out = sharding_for_tree(shapes, axes, MESH)
-    assert out["a"].spec == P(("data",), "model")
+    assert _norm(out["a"].spec) == _norm(P(("data",), "model"))
     assert out["b"]["c"].spec == P()
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    dims=st.lists(st.integers(1, 8192), min_size=1, max_size=4),
-    axes=st.lists(
-        st.sampled_from([None, "batch", "seq", "ffn", "heads", "kv_heads",
-                         "vocab", "experts", "d_model", "layers"]),
-        min_size=1, max_size=4,
-    ),
-)
-def test_spec_always_valid(dims, axes):
-    """Property: every resolved spec (a) never reuses a mesh axis, (b) only
-    shards dims divisibly."""
+def _assert_spec_valid(dims, axes):
+    """Every resolved spec (a) never reuses a mesh axis, (b) only shards
+    dims divisibly."""
     n = min(len(dims), len(axes))
     dims, axes = tuple(dims[:n]), tuple(axes[:n])
     spec = logical_to_spec(dims, axes, MESH3, DEFAULT_RULES)
@@ -96,3 +106,55 @@ def test_spec_always_valid(dims, axes):
             used.append(g)
         total = int(np.prod([sizes[g] for g in group]))
         assert dim % total == 0
+
+
+FIXED_SPEC_CASES = [
+    # adversarial hand-picked shapes: indivisible dims, axis contention,
+    # replicated tails, single-dim tensors
+    ((256, 4096, 2048, 64), ("batch", "seq", "ffn", "heads")),
+    ((7, 13), ("batch", "ffn")),  # nothing divides: fully replicated
+    ((2048, 2048, 2048), ("ffn", "vocab", "d_model")),  # 3-way contention
+    ((8192,), ("d_model",)),
+    ((1, 1, 1, 1), ("batch", "seq", "heads", "vocab")),
+    ((512, 96), (None, "experts")),
+    ((4096, 32000), ("layers", "vocab")),
+]
+
+
+@pytest.mark.parametrize("dims,axes", FIXED_SPEC_CASES)
+def test_spec_always_valid_fixed(dims, axes):
+    """Deterministic companion to the hypothesis sweep below, so the
+    validity checker runs even where hypothesis is not installed."""
+    _assert_spec_valid(list(dims), list(axes))
+
+
+if not HAVE_HYPOTHESIS:  # pragma: no cover - placeholders keep decorators bound
+    def settings(*a, **kw):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*a, **kw):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        lists = staticmethod(lambda *a, **kw: None)
+        integers = staticmethod(lambda *a, **kw: None)
+        sampled_from = staticmethod(lambda *a, **kw: None)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 8192), min_size=1, max_size=4),
+    axes=st.lists(
+        st.sampled_from([None, "batch", "seq", "ffn", "heads", "kv_heads",
+                         "vocab", "experts", "d_model", "layers"]),
+        min_size=1, max_size=4,
+    ),
+)
+def test_spec_always_valid(dims, axes):
+    _assert_spec_valid(dims, axes)
