@@ -1,0 +1,164 @@
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# ruff: noqa: E402  (the lines above MUST precede any jax import)
+"""Sharded-serving benchmark: per-device pool memory vs mesh size
+(DESIGN.md §12).
+
+Sweeps the tensor axis (1, 2, 4, 8 simulated host CPU devices) for a
+pure-attention config widened to 8 kv heads, and (1, 2, 4) for the MLA
+config, serving the SAME prompts at every point. At each point it
+records per-device page-pool bytes and ASSERTS:
+
+- greedy tokens are byte-identical to the single-device engine — the
+  sweep is a correctness sweep first;
+- per-device pool bytes equal the placement policy's prediction, which
+  for the attention family is EXACTLY total/tensor (the acceptance
+  metric: pool memory scales ~1/N along the tensor axis; the MLA point
+  keeps a replicated rope-cache sliver, reported as its fraction).
+
+Wall-clock decode time is recorded for context but NOT asserted: eight
+simulated devices on one CPU share the same silicon, so sharding speeds
+nothing up here — the bench measures memory geometry and correctness,
+which is what transfers to a real mesh.
+
+Emits ``BENCH_shard.json``.
+
+  PYTHONPATH=src python benchmarks/shard_bench.py [--gen 4] \
+      [--out BENCH_shard.json]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import ServeEngine, ServeMesh
+
+
+def expected_device_bytes(sm, model, paged):
+    """Predicted per-device bytes: nbytes / (product of sharded axes)."""
+    sizes = sm.sizes
+    shardings = sm.pool_shardings(model, paged)
+    total = 0
+    for leaf, ns in zip(jax.tree.leaves(paged), jax.tree.leaves(shardings)):
+        denom = 1
+        for entry in ns.spec:
+            if entry is None:
+                continue
+            for a in (entry,) if isinstance(entry, str) else entry:
+                denom *= sizes[a]
+        total += leaf.nbytes // denom
+    return total
+
+
+def sweep(name, cfg, tensors, gen):
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    rng = np.random.RandomState(3)
+    prompts = [list(rng.randint(5, cfg.vocab_size, (n,))) for n in (9, 6)]
+    max_len = 24
+
+    def run(mesh):
+        eng = ServeEngine(model, params, max_batch=2, max_len=max_len,
+                          seed=0, mesh=mesh)
+        for p in prompts:
+            eng.submit(p, max_new=gen)
+        toks = {c.rid: c.tokens for c in eng.run()}
+        return toks, eng
+
+    ref, ref_eng = run(None)
+    total = sum(leaf.nbytes for leaf in jax.tree.leaves(ref_eng.cache.paged))
+
+    points = []
+    for t in tensors:
+        sm = ServeMesh.build(tensor=t, expert=1)
+        got, eng = run(sm)
+        assert got == ref, (
+            f"{name} tensor={t} diverged from single-device: {got} != {ref}"
+        )
+        dev = sm.device_pool_bytes(eng.cache.paged)
+        exp = expected_device_bytes(sm, model, eng.cache.paged)
+        # measured AFTER serving: GSPMD may propagate a finer-than-policy
+        # layout to program outputs (e.g. the MLA rope cache riding the
+        # latent pool's split) — never a coarser one, which is the
+        # direction that would break the 1/N memory claim
+        assert dev <= exp, (
+            f"{name} tensor={t}: {dev} bytes on device 0, layout "
+            f"predicts at most {exp}"
+        )
+        points.append({
+            "tensor": t,
+            "device_pool_bytes": dev,
+            "total_pool_bytes": total,
+            "fraction_of_single_device": dev / total if total else 0.0,
+            "byte_identical": True,
+            "decode_s": eng.stats.decode_s,
+        })
+        print(f"shard_pool_bytes_{name}@t{t},{dev},{dev / total:.4f}"
+              if total else f"shard_pool_bytes_{name}@t{t},{dev},0")
+    return points
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gen", type=int, default=4)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_shard.json"))
+    args = ap.parse_args()
+
+    print("name,device_pool_bytes,fraction")
+
+    # attention family widened so the kv-head dim splits 8 ways; head_dim
+    # shrinks to keep d_model: pool bytes per point stay comparable
+    qcfg = get_arch("qwen2-1.5b").reduced()
+    qcfg = dataclasses.replace(qcfg, num_heads=8, num_kv_heads=8,
+                               head_dim=qcfg.d_model // 8)
+    attn_points = sweep("qwen2_attn", qcfg, (1, 2, 4, 8), args.gen)
+    for pt in attn_points:
+        # the headline: pool memory is EXACTLY 1/tensor for attn pools
+        assert pt["device_pool_bytes"] * pt["tensor"] == pt["total_pool_bytes"]
+
+    mla_points = sweep("deepseek_mla", get_arch("deepseek-v3-671b").reduced(),
+                       (1, 2, 4), args.gen)
+    for pt in mla_points:
+        # latent pool shards 1/tensor; the small rope cache stays replicated
+        assert pt["fraction_of_single_device"] <= 1.0 / pt["tensor"] + 0.25
+
+    report = {
+        "config": {
+            "gen": args.gen,
+            "attn_arch": "qwen2-1.5b (reduced, 8 kv heads)",
+            "mla_arch": "deepseek-v3-671b (reduced)",
+            "simulated_devices": 8,
+        },
+        "attn_tensor_sweep": attn_points,
+        "mla_tensor_sweep": mla_points,
+        "byte_identity_checked": True,
+        "attn_pool_bytes_scale_inverse_with_tensor": True,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for pt in attn_points + mla_points:
+        print(f"# tensor={pt['tensor']}: {pt['device_pool_bytes']} "
+              f"bytes/device ({pt['fraction_of_single_device']:.2%} of "
+              f"single-device)", file=sys.stderr)
+    print(f"# wrote {os.path.abspath(args.out)}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -66,6 +66,34 @@ PARAM_RULES: RuleTable = dict(
     d_model=[("pod", "data"), ("data",), None],
 )
 
+# Serving mesh (serve/shard.py): axes are ("tensor", "expert") — no data
+# axis, requests batch on the host side. Head dims (and the MLA latent
+# rank) shard over the tensor axis; routed experts shard over the expert
+# axis; everything recurrent / elementwise stays replicated so the
+# recurrent cache families serve unchanged on any mesh shape.
+SERVE_RULES: RuleTable = {
+    k: [None] for k in DEFAULT_RULES
+}
+SERVE_RULES.update({
+    "heads": [("tensor",), None],
+    "kv_heads": [("tensor",), None],
+    # MLA latent pool: product-shard the rank over BOTH axes. On a true 2-D
+    # mesh the subgroup-replicated layout (sharded on tensor, replicated on
+    # expert) is miscompiled by the XLA CPU SPMD partitioner for the paged
+    # MLA programs (wrong cache bytes, diverging tokens); fully sharding the
+    # rank avoids that state entirely and is also the finer layout. Falls
+    # back to tensor-only on single-axis meshes (expert absent/=1 divides
+    # everything, so the first entry still matches there).
+    "kv_lora": [("tensor", "expert"), ("tensor",), None],
+    "experts": [("expert",), None],
+})
+
+# Parameter placement on the serve mesh: replicate everything except the
+# routed-expert stacks (the shard_map dispatch consumes them pre-sharded
+# over the expert axis, so no per-step weight collectives appear).
+SERVE_PARAM_RULES: RuleTable = {k: [None] for k in DEFAULT_RULES}
+SERVE_PARAM_RULES["experts"] = [("expert",), None]
+
 _local = threading.local()
 
 
@@ -189,3 +217,51 @@ def logical_constraint(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Arr
     mesh, rules = ctx[0], ctx[1]
     spec = logical_to_spec(tuple(x.shape), axes, mesh, rules)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Serving mesh construction (bayespec-style CPU-simulated meshes included)
+# ---------------------------------------------------------------------------
+
+def ensure_host_device_count(n: int) -> None:
+    """Request >= ``n`` simulated host devices from the CPU platform.
+
+    Only effective BEFORE the jax backend initializes (first ``jax.
+    devices()`` / first dispatch): XLA reads ``--xla_force_host_platform_
+    device_count`` once at client creation. Appends the flag when absent;
+    an existing force (conftest, CI env, dryrun) is left alone."""
+    import os
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+def make_serve_mesh(
+    tensor: int = 1,
+    expert: int = 1,
+    *,
+    devices: Optional[Sequence] = None,
+) -> Mesh:
+    """A ``(tensor, expert)`` serving mesh over the first tensor*expert
+    visible devices. On a not-yet-initialized CPU backend the host device
+    count is forced up to the requested size (CI simulates an 8-device
+    mesh this way); if the backend is already up with too few devices the
+    error says which flag to set."""
+    if tensor < 1 or expert < 1:
+        raise ValueError(f"mesh axes must be >= 1, got ({tensor}, {expert})")
+    need = tensor * expert
+    if devices is None:
+        ensure_host_device_count(need)
+        devices = jax.devices()
+    if len(devices) < need:
+        raise ValueError(
+            f"serve mesh ({tensor} tensor x {expert} expert) needs {need} "
+            f"devices but only {len(devices)} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax "
+            "initializes (tests force 8 in conftest.py)"
+        )
+    grid = np.asarray(devices[:need], dtype=object).reshape(tensor, expert)
+    return Mesh(grid, ("tensor", "expert"))

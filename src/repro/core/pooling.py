@@ -68,7 +68,10 @@ def distributed_top_k(y: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
 
     spec_in = P(batch_axes if batch_axes else None, *([None] * (y.ndim - 2)), "model", None)
     spec_out = P(batch_axes if batch_axes else None, *([None] * (y.ndim - 2)), "model", None)
-    v1, i1 = jax.shard_map(
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # pre-graduation jax: experimental namespace
+        from jax.experimental.shard_map import shard_map
+    v1, i1 = shard_map(
         local_topk, mesh=mesh, in_specs=(spec_in,), out_specs=(spec_out, spec_out),
     )(yr)
     v1 = v1.reshape(*y.shape[:-1], n * k)  # (.., n*k) — tiny gather

@@ -32,6 +32,13 @@ that the simulation reproduces bit-for-bit (the CI fleet smoke):
 
   PYTHONPATH=src python -m repro.launch.serve --fleet --gen 8
 
+Sharded mode (DESIGN.md §12) — the same engines over a simulated
+(tensor, expert) device mesh (8 forced host CPU devices); asserts greedy
+byte-identity against the single-device engines and that the page pools
+actually split across devices (the CI sharded smoke):
+
+  PYTHONPATH=src python -m repro.launch.serve --sharded --gen 8
+
 Runs the REDUCED configs on CPU; the full configs' serve path is exercised
 by the dry-run. Prompts are admitted through the engine's request queue, so
 more prompts than --batch slots simply stream through the pool.
@@ -351,6 +358,63 @@ def run_fleet(args) -> None:
           "simulation deterministic")
 
 
+def run_sharded(args) -> None:
+    """Sharded-serving smoke (DESIGN.md §12): the same engine laid out
+    over a simulated (tensor, expert) device mesh must produce
+    byte-identical greedy tokens, with the page pools actually split —
+    per-device pool bytes ~1/tensor. Runs a pure-attention config on a
+    tensor-only mesh and an MoE config on a full 2-D mesh."""
+    from repro.common.sharding import ensure_host_device_count
+
+    # before any jax dispatch: the CPU backend reads the device-count
+    # force once at client creation (no-op when CI/conftest already set it)
+    ensure_host_device_count(8)
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve import ServeMesh
+
+    for arch, tensor, expert in (
+        ("qwen2-1.5b", 2, 1),
+        ("phi3.5-moe-42b-a6.6b", 2, 2),
+    ):
+        cfg = get_arch(arch).reduced()
+        model = build_model(cfg)
+        # fp32 for the byte-identity assertion (same caveat as --prefix)
+        params = model.init(jax.random.key(0), dtype=jnp.float32)
+        rng = np.random.RandomState(3)
+        max_len = args.prompt_len + args.gen
+        prompts = [list(rng.randint(5, cfg.vocab_size, (n,)))
+                   for n in (9, 6, 11)]
+
+        plain = ServeEngine(model, params, max_batch=args.batch,
+                            max_len=max_len, seed=0)
+        for p in prompts:
+            plain.submit(p, max_new=args.gen)
+        ref = {c.rid: c.tokens for c in plain.run()}
+        total = sum(leaf.nbytes
+                    for leaf in jax.tree.leaves(plain.cache.paged))
+
+        sm = ServeMesh.build(tensor=tensor, expert=expert)
+        eng = ServeEngine(model, params, max_batch=args.batch,
+                          max_len=max_len, seed=0, mesh=sm)
+        for p in prompts:
+            eng.submit(p, max_new=args.gen)
+        got = {c.rid: c.tokens for c in eng.run()}
+        assert got == ref, (
+            f"{arch} on {sm.describe()} diverged from single-device: "
+            f"{got} != {ref}"
+        )
+        dev = sm.device_pool_bytes(eng.cache.paged)
+        if tensor > 1 and total:
+            assert dev < total, "pools never left device 0"
+        print(f"[{arch}] {sm.describe()}: byte-identical over "
+              f"{len(prompts)} requests; pool bytes/device {dev} "
+              f"vs {total} single-device")
+    print("sharded smoke OK: mesh engines byte-identical, pools split")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -364,6 +428,9 @@ def main() -> None:
     ap.add_argument("--fleet", action="store_true",
                     help="fleet mode (chunked==fused, SLO-lane ordering, "
                          "deterministic virtual-clock simulation asserted)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded mode (tensor/expert mesh engines, "
+                         "byte-identity vs single-device asserted)")
     ap.add_argument("--fleet-rate", type=float, default=8.0,
                     help="offered load (req/virtual-second) for --fleet")
     ap.add_argument("--fleet-horizon", type=float, default=4.0,
@@ -389,6 +456,8 @@ def main() -> None:
         run_prefix(args)
     elif args.fleet:
         run_fleet(args)
+    elif args.sharded:
+        run_sharded(args)
     else:
         run_single(args)
 

@@ -102,10 +102,17 @@ def moe_ffn(
     from repro.common.sharding import current_mesh
 
     mesh = current_mesh()
-    if mesh is not None and "model" in mesh.axis_names:
-        ncols = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
-        if cfg.num_experts % ncols == 0 and ncols > 1:
-            return moe_ffn_sharded(cfg, p, x, mesh, dropless=dropless)
+    if mesh is not None:
+        # Production training meshes call the EP axis 'model'; serving
+        # meshes (serve/shard.py) call it 'expert'. Same dispatch either way.
+        names = mesh.axis_names
+        ep_axis = "expert" if "expert" in names else "model"
+        if ep_axis in names:
+            ncols = dict(zip(names, mesh.devices.shape))[ep_axis]
+            if cfg.num_experts % ncols == 0 and ncols > 1:
+                return moe_ffn_sharded(
+                    cfg, p, x, mesh, dropless=dropless, axis=ep_axis
+                )
     return moe_ffn_dense(cfg, p, x, dropless=dropless)
 
 
@@ -161,11 +168,16 @@ def moe_ffn_dense(
 # ---------------------------------------------------------------------------
 
 def moe_ffn_sharded(
-    cfg: ModelConfig, p: Params, x: jax.Array, mesh, dropless: bool = False
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    mesh,
+    dropless: bool = False,
+    axis: str = "model",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Expert parallelism via shard_map.
+    """Expert parallelism via shard_map over mesh axis ``axis``.
 
-    Activations are replicated across the 'model' axis (standard TP layout),
+    Activations are replicated across the expert axis (standard TP layout),
     so each model column routes ALL of its data-shard's tokens but keeps
     only the top-k choices that land on its own E/ncols experts; partial
     outputs (and the model-column slice of the shared expert) are combined
@@ -175,11 +187,14 @@ def moe_ffn_sharded(
     tracks). FSDP all-gathers of the expert weights are forced explicitly
     by the shard_map in_specs.
     """
-    shard_map = jax.shard_map
+    # jax.shard_map graduated from jax.experimental after 0.4.x
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    ncols = sizes["model"]
+    ncols = sizes[axis]
     e, k = cfg.num_experts, cfg.top_k
     e_local = e // ncols
     b, s, d = x.shape
@@ -202,7 +217,7 @@ def moe_ffn_sharded(
         xt = xl.reshape(t, d)
         weights, topi, aux = route(cfg, {"router": router}, xt)
 
-        col = jax.lax.axis_index("model")
+        col = jax.lax.axis_index(axis)
         local_id = topi - col * e_local  # (t, k)
         keep_col = (local_id >= 0) & (local_id < e_local)
         lid = jnp.where(keep_col, local_id, 0).reshape(t * k)
@@ -246,8 +261,8 @@ def moe_ffn_sharded(
             h = jax.nn.silu(xt @ sh_g.astype(xl.dtype)) * (xt @ sh_u.astype(xl.dtype))
             yt = yt + h @ sh_d.astype(xl.dtype)
 
-        yt = jax.lax.psum(yt, "model")
-        if batch_axes:  # aux is already invariant along 'model'
+        yt = jax.lax.psum(yt, axis)
+        if batch_axes:  # aux is already invariant along the expert axis
             aux = jax.lax.pmean(aux, batch_axes)
         return yt.reshape(bl, sl, d), aux
 
@@ -255,7 +270,7 @@ def moe_ffn_sharded(
     if has_shared:
         sh = p["shared"]
         shared_args = (sh["gate"], sh["up"], sh["down"])
-        shared_specs = (P(None, "model"), P(None, "model"), P("model", None))
+        shared_specs = (P(None, axis), P(None, axis), P(axis, None))
     else:
         z = jnp.zeros((1, 1), x.dtype)
         shared_args = (z, z, z)
@@ -275,7 +290,7 @@ def moe_ffn_sharded(
         )
         fsdp_axes = w_spec[1] if len(w_spec) > 1 and w_spec[1] else None
     else:
-        w_spec = P("model", None, None)
+        w_spec = P(axis, None, None)
         fsdp_axes = None
 
     def wrapped(xl, router, gate, up, down, sh_g, sh_u, sh_d):

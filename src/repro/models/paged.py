@@ -149,6 +149,50 @@ def block_slot_specs(cfg: ModelConfig, block: str, num_slots: int) -> Params:
     return {}
 
 
+def block_paged_axes(cfg: ModelConfig, block: str) -> Params:
+    """Logical sharding axes for one block's page pools, mirroring
+    ``block_paged_specs``. Pages/offsets never shard (block tables index
+    them host-side); attn/swa pools shard over kv heads and the MLA
+    latent pool over its rank — both map to the serve mesh's tensor axis
+    (``common.sharding.SERVE_RULES``) with replicate-on-indivisible
+    fallback."""
+    mixer, _ = cfg.block_parts(block)
+    if mixer in ("attn", "swa"):
+        ax = (None, None, "kv_heads", "head_dim")
+        return {"k": ax, "v": ax}
+    if mixer == "mla":
+        return {
+            "c_kv": (None, None, "kv_lora"),
+            "k_rope": (None, None, "qk_dim"),
+        }
+    return {}
+
+
+def paged_cache_axes(cfg: ModelConfig) -> Params:
+    """Logical-axes tree parallel to the pools of ``paged_cache_specs``
+    (scanned-unit leaves carry the leading layer dim). Slot-resident
+    recurrent state has no axes tree: it is replicated by design — O(1)
+    per stream, mutated every step, and the recurrent reductions would
+    reassociate under any split."""
+
+    def per_block(blk: str, layered: bool) -> Params:
+        axes = block_paged_axes(cfg, blk)
+        if layered:
+            axes = {k: ("layers",) + ax for k, ax in axes.items()}
+        return axes
+
+    tree: Params = {}
+    if cfg.prefix_pattern:
+        tree["prefix"] = {
+            f"l{i}": per_block(blk, False)
+            for i, blk in enumerate(cfg.prefix_pattern)
+        }
+    tree["units"] = {
+        f"b{i}": per_block(blk, True) for i, blk in enumerate(cfg.unit_pattern)
+    }
+    return tree
+
+
 def paged_cache_specs(
     cfg: ModelConfig, num_slots: int, num_pages: int, page_size: int
 ) -> Tuple[Params, Params]:

@@ -21,6 +21,14 @@ paged cache and commits the accepted prefix, with rollback on rejection
 per cache family; ``collaborative_policy`` routes long prompts to such a
 pair instead of a single tier.
 
+``ServeMesh`` (serve/shard.py, DESIGN.md §12) lays the same stack out
+over a (tensor, expert) device mesh: attn/MLA page pools shard over
+their head/rank dims, MoE expert stacks shard over the expert axis,
+recurrent state and block tables stay replicated/host-side — and the
+sharded engine is byte-identical to the single-device one per cache
+family. ``PromptLookupDrafter`` (serve/drafters.py) is the model-free
+draft source: zero-training n-gram lookup over the stream's own tokens.
+
 The fleet layer (serve/fleet.py + serve/metrics.py, DESIGN.md §11) makes
 scheduling measurable: a deterministic traffic simulator (Poisson/bursty
 arrivals, tiered SLOs, shared-prefix populations) driving any engine on
@@ -30,6 +38,7 @@ decode), and ``deadline_aware_policy`` routing as the features under
 test.
 """
 from repro.serve.cache import BlockCacheManager
+from repro.serve.drafters import PromptLookupDrafter
 from repro.serve.engine import Completion, Request, ServeEngine
 from repro.serve.fleet import (
     CostModel,
@@ -60,6 +69,7 @@ from repro.serve.sampling import (
     speculative_accept,
 )
 from repro.serve.scheduler import Scheduler
+from repro.serve.shard import ServeMesh
 from repro.serve.spec import SpecCoordinator
 
 __all__ = [
@@ -71,11 +81,13 @@ __all__ = [
     "FleetSimulator",
     "LatencyWindow",
     "ModelRunner",
+    "PromptLookupDrafter",
     "Request",
     "RouteDecision",
     "RouterCompletion",
     "Scheduler",
     "ServeEngine",
+    "ServeMesh",
     "SpecCoordinator",
     "TierSpec",
     "VirtualClock",

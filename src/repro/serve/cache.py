@@ -86,6 +86,7 @@ class BlockCacheManager:
         num_pages: Optional[int] = None,
         prefix_cache: bool = False,
         max_prefix_nodes: int = 1024,
+        mesh=None,
     ):
         if page_size < 1 or page_size & (page_size - 1):
             # pow2 prompt buckets must be page multiples for the whole-page
@@ -117,6 +118,15 @@ class BlockCacheManager:
         self.paged, self.slots = model.init_paged_cache(
             num_slots + 1, num_pages, page_size
         )
+        # sharded serving (DESIGN.md §12): pools live sharded on-device
+        # (kv heads / MLA rank over the tensor axis), slot state is
+        # replicated; block tables stay host-side numpy either way
+        self.mesh = mesh
+        if mesh is not None:
+            mesh.validate(model.cfg)
+            self.paged, self.slots = mesh.shard_cache(
+                model, self.paged, self.slots
+            )
         self.block_tables = np.zeros(
             (num_slots, self.geom.pages_per_seq), np.int32
         )
@@ -572,3 +582,11 @@ class BlockCacheManager:
     def cache_bytes(self) -> int:
         leaves = jax.tree.leaves(self.paged) + jax.tree.leaves(self.slots)
         return sum(x.nbytes for x in leaves)
+
+    @property
+    def pool_bytes_per_device(self) -> int:
+        """Page-pool bytes resident on one device: the whole pool when
+        single-device, ~1/tensor of it on a serve mesh (BENCH_shard)."""
+        if self.mesh is None:
+            return sum(x.nbytes for x in jax.tree.leaves(self.paged))
+        return self.mesh.device_pool_bytes(self.paged)

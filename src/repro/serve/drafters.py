@@ -1,0 +1,69 @@
+"""Model-free draft sources for speculative decoding (DESIGN.md §8).
+
+``PromptLookupDrafter`` implements zero-training prompt-lookup decoding
+(PLD): instead of running an SLM, the draft window is copied from the
+stream's own history — find the most recent earlier occurrence of the
+trailing n-gram of (prompt + generated) and propose the tokens that
+followed it. Summarization/extraction/code-edit traffic repeats long
+spans of its prompt, so the copy is often exactly what the verifier
+would have decoded; elsewhere the drafts miss and the verifier falls
+back to committing one token per round.
+
+Under greedy acceptance the drafts only ever set the acceptance rate,
+never the output (the committed prefix is the verifier argmax by
+construction), so PLD is byte-identical to plain decoding like every
+other drafter — but costs zero FLOPs, zero pages, and zero training.
+The ``SpecCoordinator`` runs it in place of the drafter stack with
+``drafter="prompt_lookup"`` (no drafter model, no drafter cache).
+
+Positions that propose nothing are -1, the coordinator's standard
+auto-reject sentinel (the same one unmappable cross-vocab drafts use):
+-1 never equals a verifier token, so short or absent matches simply
+shrink the accepted prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+__all__ = ["PromptLookupDrafter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PromptLookupDrafter:
+    """Longest-suffix n-gram lookup over the stream's own tokens.
+
+    ``max_ngram``..``min_ngram`` are tried longest-first (a longer match
+    is stronger evidence the continuation will repeat); within one n the
+    MOST RECENT earlier occurrence wins — recent spans dominate in
+    chat/edit traffic where the model is quoting its own context.
+    """
+
+    max_ngram: int = 3
+    min_ngram: int = 1
+
+    def __post_init__(self):
+        if not 1 <= self.min_ngram <= self.max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram={self.min_ngram} "
+                f"<= max_ngram={self.max_ngram}"
+            )
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        """Draft up to ``k`` tokens continuing ``context``; -1-padded.
+
+        Pure host-side Python on ints — no device work. O(n * len) worst
+        case per call, with len the context so far; serving contexts are
+        thousands of tokens, so this is noise next to a verify dispatch.
+        """
+        ctx = list(context)
+        n_ctx = len(ctx)
+        for n in range(min(self.max_ngram, n_ctx - 1), self.min_ngram - 1, -1):
+            suffix = ctx[n_ctx - n:]
+            # most recent earlier occurrence: scan right-to-left, and don't
+            # match the suffix against itself
+            for i in range(n_ctx - n - 1, -1, -1):
+                if ctx[i:i + n] == suffix:
+                    out = ctx[i + n:i + n + k]
+                    return out + [-1] * (k - len(out))
+        return [-1] * k

@@ -63,6 +63,7 @@ from repro.models.model import Model
 from repro.serve.cache import BlockCacheManager
 from repro.serve.runner import ModelRunner, RunnerStats
 from repro.serve.scheduler import Completion, Request, Scheduler
+from repro.serve.shard import ServeMesh
 
 Params = Dict
 
@@ -215,6 +216,8 @@ class ServeEngine:
         prefix_cache: bool = False,
         chunked_prefill: Optional[int] = None,
         admission: str = "fifo",
+        decode_budget: Optional[int] = None,
+        mesh: Optional[ServeMesh] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if model.cfg.is_encoder_decoder:
@@ -231,16 +234,23 @@ class ServeEngine:
                 f"chunked_prefill {chunked_prefill} must be a positive "
                 f"multiple of page_size {page_size}"
             )
+        if decode_budget is not None and decode_budget < 1:
+            raise ValueError(f"decode_budget {decode_budget} < 1")
         self.model = model
         self.max_batch = max_batch
         self.max_len = max_len
         self.exhaust_policy = exhaust_policy
         self.chunked_prefill = chunked_prefill
+        self.decode_budget = decode_budget
+        self.mesh = mesh
         self.clock = clock
+        if mesh is not None:
+            mesh.validate(model.cfg)
+            params = mesh.shard_params(model, params)
         self.cache = BlockCacheManager(
             model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
-            prefix_cache=prefix_cache,
+            prefix_cache=prefix_cache, mesh=mesh,
         )
         self.scheduler = Scheduler(
             num_slots=max_batch, max_len=max_len, eos_id=eos_id,
@@ -249,7 +259,7 @@ class ServeEngine:
             gather_live_lanes=gather_live_lanes,
             admission=admission, clock=clock,
         )
-        self.runner = ModelRunner(model, params, clock=clock)
+        self.runner = ModelRunner(model, params, clock=clock, mesh=mesh)
         self.base_key = jax.random.key(seed)
         self._partial: Optional[PartialPrefill] = None
 
@@ -378,8 +388,14 @@ class ServeEngine:
             self._admit_chunked(done)
         else:
             done = self._admit()
+        # TPOT-aware ordering: under a decode budget only the lanes with
+        # the nearest inter-token deadlines decode this step (pages are
+        # reserved for those lanes only — skipped lanes hold what they have)
+        cand = self.scheduler.select_decode(
+            self.scheduler.live_slots(), self.decode_budget
+        )
         live = []
-        for sl in self.scheduler.live_slots():
+        for sl in cand:
             if not self.scheduler.active[sl]:
                 continue  # preempted as a victim earlier in this step
             if ensure_pages(self.cache, self.scheduler, sl,

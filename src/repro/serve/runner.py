@@ -28,6 +28,7 @@ the cache manager owns *where* it lives.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -99,10 +100,12 @@ class ModelRunner:
         model: Model,
         params: Params,
         clock: Callable[[], float] = time.monotonic,
+        mesh=None,
     ):
         self.model = model
         self.params = params
         self.clock = clock  # injectable for deterministic simulation
+        self.mesh = mesh  # ServeMesh: programs trace under its axis rules
         self.stats = RunnerStats()
         self._prefill_jit: Dict[int, object] = {}  # prompt bucket -> program
         self._tail_jit: Dict[int, object] = {}  # tail bucket -> program
@@ -110,6 +113,16 @@ class ModelRunner:
         self._verify_jit: Dict[Tuple, object] = {}  # (lanes, k, mode) -> prog
         self._draft_jit: Dict[Tuple, object] = {}  # (lanes, k, sample) -> prog
         self._commit_jit: Dict[int, object] = {}  # lanes -> program
+
+    def _trace_ctx(self):
+        """Context wrapped around every program call: on a ServeMesh it
+        installs (mesh, SERVE_RULES) so the first call — the trace — sees
+        the logical-axis rules (head-sharded activation constraints, the
+        expert-parallel MoE dispatch). Later calls hit the jit cache and
+        the context is a cheap no-op."""
+        return self.mesh.ctx() if self.mesh is not None else (
+            contextlib.nullcontext()
+        )
 
     # -- compiled-program inventory (asserted in tests) ---------------------
 
@@ -173,13 +186,14 @@ class ModelRunner:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
         t0 = self.clock()
-        tok, paged, slots = self._prefill_for(bucket)(
-            self.params, paged, slots,
-            jnp.asarray(padded), jnp.asarray(s, jnp.int32),
-            jnp.asarray(slot, jnp.int32), jnp.asarray(bt_row),
-            jnp.asarray(temperature, jnp.float32),
-            jnp.asarray(seed, jnp.int32), base_key,
-        )
+        with self._trace_ctx():
+            tok, paged, slots = self._prefill_for(bucket)(
+                self.params, paged, slots,
+                jnp.asarray(padded), jnp.asarray(s, jnp.int32),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(bt_row),
+                jnp.asarray(temperature, jnp.float32),
+                jnp.asarray(seed, jnp.int32), base_key,
+            )
         tok = int(tok)
         self.stats.prefill_s += self.clock() - t0
         self.stats.prefill_tokens += s
@@ -236,13 +250,15 @@ class ModelRunner:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
         t0 = self.clock()
-        tok, paged, slots = self._tail_for(bucket)(
-            self.params, paged, slots,
-            jnp.asarray(padded), jnp.asarray(s, jnp.int32),
-            jnp.asarray([start], jnp.int32), jnp.asarray([slot], jnp.int32),
-            jnp.asarray(bt_row), jnp.asarray(temperature, jnp.float32),
-            jnp.asarray(seed, jnp.int32), base_key,
-        )
+        with self._trace_ctx():
+            tok, paged, slots = self._tail_for(bucket)(
+                self.params, paged, slots,
+                jnp.asarray(padded), jnp.asarray(s, jnp.int32),
+                jnp.asarray([start], jnp.int32),
+                jnp.asarray([slot], jnp.int32),
+                jnp.asarray(bt_row), jnp.asarray(temperature, jnp.float32),
+                jnp.asarray(seed, jnp.int32), base_key,
+            )
         tok = int(tok)
         self.stats.prefill_s += self.clock() - t0
         self.stats.prefill_tokens += s
@@ -290,13 +306,15 @@ class ModelRunner:
         n_live: int,
     ) -> Tuple[np.ndarray, Params, Params]:
         t0 = self.clock()
-        toks, paged, slots = self._decode_for(len(lanes))(
-            self.params, paged, slots,
-            jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
-            jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
-            jnp.asarray(temps, jnp.float32), jnp.asarray(seeds, jnp.int32),
-            jnp.asarray(ngen, jnp.int32), base_key,
-        )
+        with self._trace_ctx():
+            toks, paged, slots = self._decode_for(len(lanes))(
+                self.params, paged, slots,
+                jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
+                jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
+                jnp.asarray(temps, jnp.float32),
+                jnp.asarray(seeds, jnp.int32),
+                jnp.asarray(ngen, jnp.int32), base_key,
+            )
         toks = np.asarray(toks)
         self.stats.decode_s += self.clock() - t0
         self.stats.decode_steps += 1
@@ -376,14 +394,17 @@ class ModelRunner:
         t0 = self.clock()
         if q is None:
             q = jnp.zeros((), jnp.float32)  # unused placeholder operand
-        out, n_acc, paged, slots = self._verify_for(L, k1 - 1, mode)(
-            self.params, paged, slots,
-            jnp.asarray(tokens, jnp.int32), jnp.asarray(draft_cmp, jnp.int32),
-            q, jnp.asarray(pos, jnp.int32), jnp.asarray(block_tables),
-            jnp.asarray(lanes, jnp.int32), jnp.asarray(temps, jnp.float32),
-            jnp.asarray(seeds, jnp.int32), jnp.asarray(ngen, jnp.int32),
-            base_key,
-        )
+        with self._trace_ctx():
+            out, n_acc, paged, slots = self._verify_for(L, k1 - 1, mode)(
+                self.params, paged, slots,
+                jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(draft_cmp, jnp.int32),
+                q, jnp.asarray(pos, jnp.int32), jnp.asarray(block_tables),
+                jnp.asarray(lanes, jnp.int32),
+                jnp.asarray(temps, jnp.float32),
+                jnp.asarray(seeds, jnp.int32), jnp.asarray(ngen, jnp.int32),
+                base_key,
+            )
         out, n_acc = np.asarray(out), np.asarray(n_acc)
         self.stats.spec_s += self.clock() - t0
         self.stats.verify_steps += 1
@@ -474,13 +495,15 @@ class ModelRunner:
         accepted lengths are known. Returns (drafts (L, K), probs, paged,
         stacked per-step state, ring undo)."""
         t0 = self.clock()
-        out = self._draft_for(len(lanes), k, sample)(
-            self.params, paged, slots,
-            jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
-            jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
-            jnp.asarray(temps, jnp.float32), jnp.asarray(seeds, jnp.int32),
-            jnp.asarray(ngen, jnp.int32), base_key,
-        )
+        with self._trace_ctx():
+            out = self._draft_for(len(lanes), k, sample)(
+                self.params, paged, slots,
+                jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
+                jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
+                jnp.asarray(temps, jnp.float32),
+                jnp.asarray(seeds, jnp.int32),
+                jnp.asarray(ngen, jnp.int32), base_key,
+            )
         self.stats.spec_s += self.clock() - t0
         return out
 
@@ -511,9 +534,10 @@ class ModelRunner:
         """Roll the drafter back to the verifier's accepted lengths: keep
         ring writes / recurrent state through step n_acc, restore the rest."""
         t0 = self.clock()
-        paged, slots = self._commit_for(len(lanes))(
-            paged, slots, stacked, undo,
-            jnp.asarray(n_acc, jnp.int32), jnp.asarray(lanes, jnp.int32),
-        )
+        with self._trace_ctx():
+            paged, slots = self._commit_for(len(lanes))(
+                paged, slots, stacked, undo,
+                jnp.asarray(n_acc, jnp.int32), jnp.asarray(lanes, jnp.int32),
+            )
         self.stats.spec_s += self.clock() - t0
         return paged, slots

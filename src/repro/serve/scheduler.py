@@ -163,6 +163,9 @@ class Scheduler:
         self.slot_req: List[Optional[Request]] = [None] * num_slots
         self.slot_gen: List[List[int]] = [[] for _ in range(num_slots)]
         self.first_tok_t = np.zeros(num_slots, np.float64)
+        # last time each slot emitted a token — drives TPOT-aware decode
+        # ordering (select_decode); refreshed by on_admitted/on_token
+        self.last_tok_t = np.zeros(num_slots, np.float64)
         self._next_rid = 0
 
     # -- admission ----------------------------------------------------------
@@ -274,6 +277,7 @@ class Scheduler:
         self.slot_req[slot] = req
         self.slot_gen[slot] = list(req.done) if req.done else [first_token]
         self.first_tok_t[slot] = req.first_tok_t if req.done else now
+        self.last_tok_t[slot] = now
         return self._maybe_finish(slot, now)
 
     # -- decode -------------------------------------------------------------
@@ -294,10 +298,32 @@ class Scheduler:
     def ngen(self, slot: int) -> int:
         return len(self.slot_gen[slot])
 
+    def select_decode(self, slots: List[int], budget: Optional[int]) -> List[int]:
+        """TPOT-aware decode ordering (DESIGN.md §11): when the engine caps
+        the decode batch at ``budget`` lanes per step, pick the lanes whose
+        next-token TPOT deadline (``last_tok_t + slo_tpot``) is nearest —
+        EDF over inter-token deadlines. Lanes without a TPOT budget sort
+        after every dated deadline, ordered by ``last_tok_t`` (LRU), so
+        best-effort traffic round-robins fairly behind SLO lanes instead of
+        starving by slot index. No budget (or enough budget): all lanes
+        decode, order preserved."""
+        if budget is None or len(slots) <= budget:
+            return slots
+
+        def key(sl: int) -> Tuple[float, float, int]:
+            req = self.slot_req[sl]
+            t_last = float(self.last_tok_t[sl])
+            dl = math.inf if req.slo_tpot is None else t_last + req.slo_tpot
+            return (dl, t_last, req.rid)
+
+        chosen = sorted(slots, key=key)[:budget]
+        return sorted(chosen)  # lane arrays stay slot-ordered
+
     def on_token(self, slot: int, token: int, now: float) -> Optional[Completion]:
         self.pos[slot] += 1
         self.cur[slot] = token
         self.slot_gen[slot].append(token)
+        self.last_tok_t[slot] = now
         return self._maybe_finish(slot, now)
 
     def on_tokens(

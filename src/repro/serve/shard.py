@@ -1,0 +1,207 @@
+"""ServeMesh: the sharded serving subsystem (DESIGN.md §12).
+
+Lays the paged serving stack out over a jax device mesh with two axes:
+
+- **tensor** — attn/swa page pools shard over their kv-head dim and the
+  MLA latent pool over its rank (``models.paged.paged_cache_axes`` +
+  ``common.sharding.SERVE_RULES``); the bucketed decode/verify/prefill
+  programs pick the split up through GSPMD propagation plus the logical
+  activation constraints already in the model code, so attention runs
+  head-parallel with one output-projection psum per layer;
+- **expert** — the routed-expert weight stacks of the MoE configs
+  (deepseek-v3, phi3.5-moe, jamba) shard over their expert dim and the
+  dropless dispatch runs through the ``moe_ffn_sharded`` shard_map path
+  (per-device local scatter, one psum to combine columns).
+
+Everything else is replicated: recurrent slot state (mLSTM/sLSTM/Mamba
+state is O(1)/stream, mutated every step, and its reductions would
+reassociate under any split), non-expert parameters, and sampling. Block
+tables never leave the host — the cache manager keeps them as numpy rows
+and the programs receive them as replicated operands, so page indirection
+stays free of collectives and only the K/V pages themselves live sharded
+on-device.
+
+The engine/spec/runner/cache layers take ``mesh=ServeMesh(...)`` and stay
+byte-identical (same greedy tokens; asserted per cache family in
+tests/test_shard.py) to their single-device selves: fp32 math reorders
+only at psum boundaries, the same reassociation budget every other
+engine-equivalence test in this repo already carries.
+
+``SpecCoordinator(mesh=...)`` shards the **verifier only** — the SLM
+drafter stays whole (replicated-drafter / sharded-verifier topology):
+the drafter is small enough to live on one device and its draft loop is
+latency-bound, while the verifier's K+1-token verify is the compute that
+scales with devices.
+
+CI exercises all of it on a simulated mesh: 8 host CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (forced in
+tests/conftest.py and by ``common.sharding.make_serve_mesh`` when the
+backend is not yet up).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.sharding import (
+    SERVE_PARAM_RULES,
+    SERVE_RULES,
+    axis_rules,
+    make_serve_mesh,
+    sharding_for_tree,
+)
+from repro.models import paged as PG
+from repro.models.model import Model
+
+Params = Dict
+
+__all__ = ["ServeMesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMesh:
+    """A serving mesh spec: the (tensor, expert) device grid plus the
+    placement policy for pools, slot state, and parameters."""
+
+    mesh: Mesh
+
+    @classmethod
+    def build(
+        cls, tensor: int = 1, expert: int = 1, *, devices=None
+    ) -> "ServeMesh":
+        return cls(make_serve_mesh(tensor, expert, devices=devices))
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def sizes(self) -> Dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def tensor(self) -> int:
+        return self.sizes.get("tensor", 1)
+
+    @property
+    def expert(self) -> int:
+        return self.sizes.get("expert", 1)
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- validation ---------------------------------------------------------
+
+    def validate(self, cfg) -> None:
+        """Loud divisibility errors at construction instead of a silent
+        replicate-fallback deep in the rules engine: a mesh whose tensor
+        axis cannot split the config's heads (or whose expert axis cannot
+        split its experts) is a deployment mistake, not a layout choice."""
+        mixers = set(PG._mixers(cfg))
+        errs: List[str] = []
+        if self.tensor > 1:
+            if mixers & {"attn", "swa"} and cfg.num_kv_heads % self.tensor:
+                errs.append(
+                    f"num_kv_heads {cfg.num_kv_heads} % tensor {self.tensor}"
+                )
+            if mixers & {"attn", "swa", "mla"} and cfg.num_heads % self.tensor:
+                errs.append(
+                    f"num_heads {cfg.num_heads} % tensor {self.tensor}"
+                )
+            if "mla" in mixers and cfg.kv_lora_rank % self.tensor:
+                errs.append(
+                    f"kv_lora_rank {cfg.kv_lora_rank} % tensor {self.tensor}"
+                )
+        if self.tensor > 1 and self.expert > 1 and "mla" in mixers:
+            # the latent pool MUST product-shard on a true 2-D mesh: the
+            # tensor-only fallback leaves it subgroup-replicated along the
+            # expert axis, a layout the XLA CPU SPMD partitioner miscompiles
+            # for the paged MLA programs (see SERVE_RULES["kv_lora"])
+            if cfg.kv_lora_rank % (self.tensor * self.expert):
+                errs.append(
+                    f"kv_lora_rank {cfg.kv_lora_rank} % (tensor*expert) "
+                    f"{self.tensor * self.expert}"
+                )
+        if self.expert > 1:
+            if not cfg.num_experts:
+                errs.append(
+                    f"expert axis {self.expert} on a config with no experts"
+                )
+            elif cfg.num_experts % self.expert:
+                errs.append(
+                    f"num_experts {cfg.num_experts} % expert {self.expert}"
+                )
+            if cfg.num_experts and cfg.num_shared_experts:
+                fs = (cfg.d_ff_moe or cfg.d_ff) * cfg.num_shared_experts
+                if fs % self.expert:
+                    errs.append(
+                        f"shared-expert ffn {fs} % expert {self.expert}"
+                    )
+        if errs:
+            raise ValueError(
+                f"config {cfg.name!r} does not divide over serve mesh "
+                f"(tensor={self.tensor}, expert={self.expert}): "
+                + "; ".join(errs)
+            )
+
+    # -- placement ----------------------------------------------------------
+
+    def ctx(self):
+        """Trace-time context for the runner's jitted programs: installs
+        (mesh, SERVE_RULES) so logical activation constraints bind to the
+        tensor axis and ``moe_ffn`` dispatches to the expert-parallel
+        shard_map path."""
+        return axis_rules(self.mesh, SERVE_RULES)
+
+    def pool_shardings(self, model: Model, paged: Params) -> Params:
+        return sharding_for_tree(
+            paged, PG.paged_cache_axes(model.cfg), self.mesh, SERVE_RULES
+        )
+
+    def shard_cache(self, model: Model, paged: Params, slots: Params):
+        """Place (pools sharded per family, slot state replicated)."""
+        paged = jax.device_put(paged, self.pool_shardings(model, paged))
+        slots = jax.device_put(
+            slots, jax.tree.map(lambda _: self.replicated, slots)
+        )
+        return paged, slots
+
+    def shard_params(self, model: Model, params: Params) -> Params:
+        """Replicate parameters except routed-expert stacks (expert axis):
+        decode is latency-bound, so weight collectives per step are worth
+        more than the memory a full tensor-parallel split would save at
+        this scale; the expert stacks ARE split because the shard_map
+        dispatch consumes them column-local with no gather at all."""
+        from repro.common.module import axes_of
+
+        shardings = sharding_for_tree(
+            params, axes_of(model.specs()), self.mesh, SERVE_PARAM_RULES
+        )
+        return jax.device_put(params, shardings)
+
+    # -- introspection ------------------------------------------------------
+
+    def device_pool_bytes(self, paged: Params, device=None) -> int:
+        """Page-pool bytes resident on one device (the acceptance metric:
+        ~1/tensor of the single-device pool for attn/MLA families)."""
+        if device is None:
+            device = self.mesh.devices.flat[0]
+        total = 0
+        for leaf in jax.tree.leaves(paged):
+            for s in leaf.addressable_shards:
+                if s.device == device:
+                    total += s.data.nbytes
+        return total
+
+    def describe(self) -> str:
+        return (
+            f"ServeMesh(tensor={self.tensor}, expert={self.expert}, "
+            f"devices={self.num_devices})"
+        )

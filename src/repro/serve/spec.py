@@ -65,9 +65,11 @@ import numpy as np
 from repro.core.align import TokenAligner
 from repro.models.model import Model
 from repro.serve.cache import BlockCacheManager
+from repro.serve.drafters import PromptLookupDrafter
 from repro.serve.engine import admit_prefill, ensure_pages
 from repro.serve.runner import ModelRunner, RunnerStats
 from repro.serve.scheduler import Completion, Scheduler
+from repro.serve.shard import ServeMesh
 
 Params = Dict
 
@@ -87,13 +89,14 @@ class SpecCoordinator:
         self,
         verifier_model: Model,
         verifier_params: Params,
-        drafter_model: Model,
-        drafter_params: Params,
+        drafter_model: Optional[Model] = None,
+        drafter_params: Optional[Params] = None,
         *,
         max_batch: int,
         max_len: int,
         k: int = 4,
         mode: str = "greedy",
+        drafter: Optional[str] = None,
         eos_id: Optional[int] = None,
         seed: int = 0,
         page_size: int = 8,
@@ -110,9 +113,34 @@ class SpecCoordinator:
         k_grow: float = 0.7,
         k_shrink: float = 0.35,
         admission: str = "fifo",
+        mesh: Optional[ServeMesh] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
-        if verifier_model.cfg.is_encoder_decoder or drafter_model.cfg.is_encoder_decoder:
+        # model-free drafting (serve/drafters.py): no drafter stack at all —
+        # drafts come from prompt lookup over the stream's own tokens
+        if drafter is not None and drafter != "prompt_lookup":
+            raise ValueError(f"unknown drafter {drafter!r}")
+        self.pld: Optional[PromptLookupDrafter] = None
+        if drafter == "prompt_lookup":
+            if drafter_model is not None or drafter_params is not None:
+                raise ValueError(
+                    "drafter='prompt_lookup' is model-free; drop the "
+                    "drafter model/params (they would never run)"
+                )
+            if mode == "rejection":
+                raise ValueError(
+                    "prompt lookup proposes tokens, not distributions; "
+                    "rejection acceptance needs drafter logits — use "
+                    "greedy mode"
+                )
+            self.pld = PromptLookupDrafter()
+        elif drafter_model is None or drafter_params is None:
+            raise ValueError(
+                "pass a drafter model + params, or drafter='prompt_lookup'"
+            )
+        if verifier_model.cfg.is_encoder_decoder or (
+            drafter_model is not None and drafter_model.cfg.is_encoder_decoder
+        ):
             raise ValueError("speculative decoding serves decoder-only configs")
         if mode not in ("greedy", "rejection"):
             raise ValueError(f"unknown acceptance mode {mode!r}")
@@ -148,10 +176,13 @@ class SpecCoordinator:
         self.clock = clock
 
         # cross-vocab bridge: built only when the tokenizers differ
+        # (prompt lookup drafts in the verifier vocab — never any bridge)
         self.verifier_tokenizer = verifier_tokenizer
         self.drafter_tokenizer = drafter_tokenizer
         self.aligner: Optional[TokenAligner] = None
-        if (verifier_tokenizer is not None and drafter_tokenizer is not None
+        if self.pld is not None:
+            pass
+        elif (verifier_tokenizer is not None and drafter_tokenizer is not None
                 and verifier_tokenizer is not drafter_tokenizer):
             self.aligner = TokenAligner(verifier_tokenizer, drafter_tokenizer)
             if mode == "rejection":
@@ -168,6 +199,13 @@ class SpecCoordinator:
                 "draft across vocabularies"
             )
 
+        # replicated-drafter / sharded-verifier topology (DESIGN.md §12):
+        # the mesh shards the verifier stack only — the SLM drafter is
+        # small and latency-bound, so it stays whole on every device
+        if mesh is not None:
+            mesh.validate(verifier_model.cfg)
+            verifier_params = mesh.shard_params(verifier_model, verifier_params)
+
         # twin prefix pools in lockstep: both stacks walk their own index
         # at the same admission point, so a shared system prompt is cached
         # on the verifier AND the drafter (drafter chains key on the
@@ -175,15 +213,17 @@ class SpecCoordinator:
         self.cache_v = BlockCacheManager(
             verifier_model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
-            prefix_cache=prefix_cache,
+            prefix_cache=prefix_cache, mesh=mesh,
         )
-        self.cache_d = BlockCacheManager(
+        self.cache_d = None if self.pld is not None else BlockCacheManager(
             drafter_model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=drafter_num_pages,
             prefix_cache=prefix_cache,
         )
-        for name, geom in (("verifier", self.cache_v.geom),
-                           ("drafter", self.cache_d.geom)):
+        stacks = [("verifier", self.cache_v.geom)]
+        if self.cache_d is not None:
+            stacks.append(("drafter", self.cache_d.geom))
+        for name, geom in stacks:
             if geom.swa_pages and k + 1 > geom.swa_pages * page_size:
                 raise ValueError(
                     f"{name} swa ring capacity {geom.swa_pages * page_size} "
@@ -197,8 +237,12 @@ class SpecCoordinator:
             gather_live_lanes=gather_live_lanes,
             admission=admission, clock=clock,
         )
-        self.runner_v = ModelRunner(verifier_model, verifier_params, clock=clock)
-        self.runner_d = ModelRunner(drafter_model, drafter_params, clock=clock)
+        self.runner_v = ModelRunner(
+            verifier_model, verifier_params, clock=clock, mesh=mesh
+        )
+        self.runner_d = None if self.pld is not None else ModelRunner(
+            drafter_model, drafter_params, clock=clock
+        )
         self.base_key = jax.random.key(seed)
         self.draft_key = jax.random.key(seed + 1)
         # pending drafter-vocab token per slot (the drafter's image of the
@@ -277,7 +321,7 @@ class SpecCoordinator:
                 "greedy acceptance is exact only for temperature-0 streams; "
                 "build the coordinator with mode='rejection' to sample"
             )
-        for cache in (self.cache_v, self.cache_d):
+        for cache in filter(None, (self.cache_v, self.cache_d)):
             need = cache.geom.admission_pages(len(prompt))
             if need > cache.num_pages - 1:
                 raise ValueError(
@@ -292,16 +336,17 @@ class SpecCoordinator:
 
     def _release(self, slot: int) -> None:
         self.cache_v.release(slot)
-        self.cache_d.release(slot)
+        if self.cache_d is not None:
+            self.cache_d.release(slot)
 
     def _admit(self) -> List[Completion]:
         done: List[Completion] = []
         while True:
             adm = self.scheduler.pop_admission(
                 lambda req: self.cache_v.can_admit(req.prefill_len, req.feed)
-                and self.cache_d.can_admit(
+                and (self.cache_d is None or self.cache_d.can_admit(
                     req.prefill_len, self._to_drafter(req.feed)
-                )
+                ))
             )
             if adm is None:
                 return done
@@ -318,6 +363,8 @@ class SpecCoordinator:
             if fin is not None:  # finished at admission: never draft
                 done.append(fin)
                 self.cache_v.release(slot)
+                continue
+            if self.runner_d is None:  # prompt lookup: no drafter stack
                 continue
             # the drafter mirrors the stream token-for-token (the vocab map
             # preserves length), so positions stay aligned across stacks
@@ -355,10 +402,11 @@ class SpecCoordinator:
                             self.exhaust_policy, done, self._release,
                             n_steps=k + 1, lookahead=k, clock=self.clock) \
                     and self.scheduler.active[sl] \
-                    and ensure_pages(self.cache_d, self.scheduler, sl, pos,
-                                     self.exhaust_policy, done, self._release,
-                                     n_steps=k + 1, lookahead=k,
-                                     clock=self.clock):
+                    and (self.cache_d is None
+                         or ensure_pages(self.cache_d, self.scheduler, sl,
+                                         pos, self.exhaust_policy, done,
+                                         self._release, n_steps=k + 1,
+                                         lookahead=k, clock=self.clock)):
                 live.append(sl)
         live = [sl for sl in live if self.scheduler.active[sl]]
         if not live:
@@ -377,14 +425,25 @@ class SpecCoordinator:
         )
         sample = self.mode == "rejection"
 
-        drafts, q, self.cache_d.paged, stacked, undo = self.runner_d.draft(
-            self.cache_d.paged, self.cache_d.slots,
-            token=np.concatenate([self.draft_cur[live], pad]),
-            pos=pos, block_tables=self.cache_d.table_rows(lanes),
-            lanes=lanes_np, temps=temps, seeds=seeds, ngen=ngen,
-            base_key=self.draft_key, k=k, sample=sample,
-        )
-        feed, cmp = self._map_drafts(np.asarray(drafts))
+        if self.pld is not None:
+            # model-free drafts: prompt lookup over each lane's own tokens
+            # (prompt + generated, pending token included); -1 positions
+            # auto-reject in the verifier compare but feed a valid id 0
+            props = np.full((bucket, k), -1, np.int32)
+            for i, sl in enumerate(live):
+                ctx = sched.slot_req[sl].prompt + sched.slot_gen[sl]
+                props[i] = self.pld.propose(ctx, k)
+            feed = np.where(props < 0, 0, props).astype(np.int32)
+            cmp, q = props, None
+        else:
+            drafts, q, self.cache_d.paged, stacked, undo = self.runner_d.draft(
+                self.cache_d.paged, self.cache_d.slots,
+                token=np.concatenate([self.draft_cur[live], pad]),
+                pos=pos, block_tables=self.cache_d.table_rows(lanes),
+                lanes=lanes_np, temps=temps, seeds=seeds, ngen=ngen,
+                base_key=self.draft_key, k=k, sample=sample,
+            )
+            feed, cmp = self._map_drafts(np.asarray(drafts))
         tokens = np.concatenate(
             [np.concatenate([sched.cur[live], pad])[:, None], feed], axis=1
         )
@@ -395,10 +454,11 @@ class SpecCoordinator:
             lanes=lanes_np, temps=temps, seeds=seeds, ngen=ngen,
             base_key=self.base_key, mode=self.mode, n_live=len(live),
         )
-        self.cache_d.paged, self.cache_d.slots = self.runner_d.commit_draft(
-            self.cache_d.paged, self.cache_d.slots,
-            stacked=stacked, undo=undo, n_acc=n_acc, lanes=lanes_np,
-        )
+        if self.runner_d is not None:
+            self.cache_d.paged, self.cache_d.slots = self.runner_d.commit_draft(
+                self.cache_d.paged, self.cache_d.slots,
+                stacked=stacked, undo=undo, n_acc=n_acc, lanes=lanes_np,
+            )
 
         # per-round adaptive K: track the running acceptance rate and move
         # the next round's draft window toward what the pair can sustain
@@ -451,17 +511,22 @@ class SpecCoordinator:
         """Merged pair view: the verifier's counters (verify stats live
         there) with the drafter's wall time folded in, so throughput is
         end-to-end for the pair, not verifier-only."""
-        v, d = self.runner_v.stats, self.runner_d.stats
+        v = self.runner_v.stats
         out = RunnerStats()
         out.__dict__.update(v.__dict__)
-        out.prefill_s += d.prefill_s
-        out.spec_s += d.spec_s
+        if self.runner_d is not None:
+            d = self.runner_d.stats
+            out.prefill_s += d.prefill_s
+            out.spec_s += d.spec_s
         return out
 
     @property
     def prefix_stats(self) -> Dict[str, int]:
         """Pairwise prefix-pool view: verifier + drafter counters summed."""
-        v, d = self.cache_v.prefix_stats, self.cache_d.prefix_stats
+        v = self.cache_v.prefix_stats
+        if self.cache_d is None:
+            return dict(v)
+        d = self.cache_d.prefix_stats
         return {k_: v[k_] + d[k_] for k_ in v}
 
     @property
@@ -478,4 +543,6 @@ class SpecCoordinator:
 
     @property
     def cache_bytes(self) -> int:
+        if self.cache_d is None:
+            return self.cache_v.cache_bytes
         return self.cache_v.cache_bytes + self.cache_d.cache_bytes

@@ -1,8 +1,17 @@
 import os
 import sys
 
-# smoke tests and benches must see ONE device (dryrun.py alone forces 512)
+# smoke tests and benches run on CPU (dryrun.py alone forces 512 devices)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# the sharded-serving tests (test_shard.py) build real 2/4/8-device meshes
+# in-process, so the whole suite sees 8 simulated host devices; uncommitted
+# arrays still live on device 0, so single-device tests are unaffected
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

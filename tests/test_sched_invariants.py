@@ -34,7 +34,7 @@ import pytest
 
 from repro.configs import get_arch
 from repro.models import build_model
-from repro.serve import ServeEngine, VirtualClock
+from repro.serve import Scheduler, ServeEngine, VirtualClock
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -221,3 +221,92 @@ def test_scheduler_invariants_hypothesis(tiny_model, chunked, ops):
     per request."""
     eng, clock = _make_engine(tiny_model, chunked=chunked)
     _drive(eng, clock, ops)
+
+
+# ---------------------------------------------------------------------------
+# TPOT-aware decode ordering under a decode budget (DESIGN.md §11/§12)
+# ---------------------------------------------------------------------------
+
+def _admit_three_lanes(clock):
+    """Three live slots on a bare Scheduler: one interactive stream with a
+    tight TPOT budget, two best-effort batch streams."""
+    sched = Scheduler(num_slots=4, max_len=64, admission="slo", clock=clock)
+    sched.submit([1, 2, 3], max_new=32, tier="interactive", priority=0,
+                 slo_tpot=0.05)
+    sched.submit([4, 5, 6], max_new=32)  # batch, no TPOT budget
+    sched.submit([7, 8, 9], max_new=32)  # batch, no TPOT budget
+    slots = []
+    for _ in range(3):
+        req, slot = sched.pop_admission(lambda r: True)
+        sched.on_admitted(req, slot, 11, clock())
+        slots.append(slot)
+    return sched, slots
+
+
+def test_select_decode_passthrough_without_budget():
+    clock = VirtualClock()
+    sched, slots = _admit_three_lanes(clock)
+    live = sched.live_slots()
+    assert sched.select_decode(live, None) == live
+    assert sched.select_decode(live, 3) == live
+    assert sched.select_decode(live, 8) == live
+
+
+def test_starved_interactive_lane_overtakes_batch():
+    """The satellite scenario: under ``decode_budget=2`` the batch lanes
+    have been decoding (fresh last_tok_t) while the interactive lane sits
+    starved past its TPOT deadline — the next selection MUST include the
+    interactive lane, bumping a batch lane that just got a token."""
+    clock = VirtualClock()
+    sched, (s_int, s_b1, s_b2) = _admit_three_lanes(clock)
+    # batch lanes emit tokens late; the interactive lane last emitted at
+    # t=0 and its deadline (0 + 0.05) is long gone by t=1.0
+    clock.advance(1.0)
+    sched.on_token(s_b1, 12, clock())
+    sched.on_token(s_b2, 13, clock())
+    chosen = sched.select_decode(sched.live_slots(), 2)
+    assert len(chosen) == 2 and s_int in chosen
+    assert chosen == sorted(chosen)  # lane arrays stay slot-ordered
+
+
+def test_select_decode_lru_round_robins_best_effort():
+    """Among budget-less lanes the least-recently-served decodes first, so
+    best-effort traffic cannot starve by slot index."""
+    clock = VirtualClock()
+    sched, (s_int, s_b1, s_b2) = _admit_three_lanes(clock)
+    # serve the interactive lane and the FIRST batch lane; the second
+    # batch lane is now the oldest
+    clock.advance(0.5)
+    sched.on_token(s_int, 12, clock())
+    sched.on_token(s_b1, 13, clock())
+    chosen = sched.select_decode(sched.live_slots(), 2)
+    assert s_b2 in chosen  # the starved batch lane got a turn
+    # the interactive lane's deadline (0.5 + 0.05) still beats both
+    # batch lanes' +inf, so it rides along too
+    assert s_int in chosen
+
+
+def test_decode_budget_engine_outputs_are_traffic_independent(tiny_model):
+    """decode_budget reorders WHICH lanes step, never what a stream
+    generates: per-request fold_in sampling keys make each greedy stream's
+    tokens identical with and without the budget."""
+    model, params = tiny_model
+    rng = np.random.RandomState(3)
+    prompts = [list(rng.randint(1, 30, (n,))) for n in (9, 6, 11)]
+
+    def run(budget):
+        eng = ServeEngine(model, params, max_batch=4, max_len=48, seed=0,
+                          admission="slo", decode_budget=budget,
+                          clock=VirtualClock())
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new=6, priority=i % 2,
+                       slo_tpot=0.05 if i == 0 else None)
+        return {c.rid: c.tokens for c in eng.run()}
+
+    assert run(None) == run(1) == run(2)
+
+
+def test_engine_rejects_bad_decode_budget(tiny_model):
+    model, params = tiny_model
+    with pytest.raises(ValueError, match="decode_budget"):
+        ServeEngine(model, params, max_batch=2, max_len=32, decode_budget=0)

@@ -1,0 +1,351 @@
+"""Sharded serving subsystem tests (DESIGN.md §12).
+
+Everything runs on a SIMULATED mesh: conftest.py forces 8 host CPU
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), so CI
+exercises real GSPMD partitioning with real collectives — just on one
+machine. The contract, per cache family:
+
+1. A ``ServeEngine(mesh=ServeMesh.build(...))`` is BYTE-IDENTICAL to the
+   single-device engine — attn/swa pools sharded over kv heads, the MLA
+   latent pool over its rank, MoE expert stacks over the expert axis,
+   recurrent slot state replicated. Greedy tokens must match exactly.
+2. Per-device page-pool bytes equal the layout's prediction — for the
+   pure-attention family exactly 1/tensor of the single-device pool
+   (the ISSUE's acceptance metric).
+3. ``SpecCoordinator(mesh=...)`` shards the VERIFIER only (replicated-
+   drafter / sharded-verifier topology) and greedy speculative output
+   stays byte-identical, including the swa-ring and MLA rollback paths.
+4. Prefix-cache hits (copy-on-write shared pages) survive sharding.
+5. Mesh/config mismatches fail LOUDLY at validate() — including the MLA
+   product-divisibility rule a true 2-D mesh needs (the tensor-only
+   fallback layout is miscompiled by the XLA CPU SPMD partitioner; see
+   SERVE_RULES["kv_lora"] in common/sharding.py).
+
+Plus the model-free prompt-lookup drafter: unit behavior of the n-gram
+lookup, constructor validation, and byte-identity of the full
+PLD-drafted speculative stack (greedy acceptance makes drafts
+output-invariant by construction, sharded verifier included).
+
+fp32 params throughout, for the same reason as tests/test_serve.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.sharding import make_serve_mesh
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import (
+    PromptLookupDrafter,
+    ServeEngine,
+    ServeMesh,
+    SpecCoordinator,
+)
+
+MAX_LEN = 32
+
+_CACHE = {}
+
+
+def _cfg(arch, kv_heads=None):
+    if arch == "gemma-2b-swa":
+        from repro.configs.gemma_2b import sliding_variant
+
+        cfg = sliding_variant(get_arch("gemma-2b").reduced(), window=8)
+    else:
+        cfg = get_arch(arch).reduced()
+    if kv_heads is not None:
+        cfg = dataclasses.replace(cfg, num_kv_heads=kv_heads)
+    return cfg
+
+
+def _setup(arch, seed=0, kv_heads=None, vocab=None):
+    key = (arch, seed, kv_heads, vocab)
+    if key not in _CACHE:
+        cfg = _cfg(arch, kv_heads)
+        if vocab is not None:
+            cfg = dataclasses.replace(cfg, vocab_size=vocab)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(seed), dtype=jnp.float32)
+        _CACHE[key] = (cfg, model, params)
+    return _CACHE[key]
+
+
+def _prompts(cfg, lengths=(9, 6, 11), seed=3):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(5, cfg.vocab_size, (n,))) for n in lengths]
+
+
+def _run(model, params, prompts, max_new=6, **kw):
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0, **kw)
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    return {c.rid: c.tokens for c in eng.run()}, eng
+
+
+def _expected_device_bytes(sm, model, paged):
+    """Per-device pool bytes predicted from the placement policy itself:
+    each leaf contributes nbytes / (product of its sharded mesh axes)."""
+    sizes = sm.sizes
+    shardings = sm.pool_shardings(model, paged)
+    total = 0
+    for leaf, ns in zip(jax.tree.leaves(paged), jax.tree.leaves(shardings)):
+        denom = 1
+        for entry in ns.spec:
+            if entry is None:
+                continue
+            for a in (entry,) if isinstance(entry, str) else entry:
+                denom *= sizes[a]
+        total += leaf.nbytes // denom
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction + validation
+# ---------------------------------------------------------------------------
+
+def test_make_serve_mesh_geometry():
+    m = make_serve_mesh(4, 2)
+    assert m.axis_names == ("tensor", "expert")
+    assert m.devices.shape == (4, 2)
+    sm = ServeMesh.build(tensor=2, expert=2)
+    assert sm.tensor == 2 and sm.expert == 2 and sm.num_devices == 4
+    assert "tensor=2" in sm.describe() and "expert=2" in sm.describe()
+
+
+def test_make_serve_mesh_rejects_bad_axes():
+    with pytest.raises(ValueError, match=">= 1"):
+        make_serve_mesh(0, 1)
+
+
+def test_make_serve_mesh_too_few_devices_names_the_flag():
+    # 16 devices > the 8 conftest forces; the error must say how to get more
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_serve_mesh(4, 4)
+
+
+def test_validate_rejects_indivisible_kv_heads():
+    # reduced gemma-swa is MQA (num_kv_heads == 1): un-shardable at tensor=2
+    sm = ServeMesh.build(tensor=2, expert=1)
+    with pytest.raises(ValueError, match="num_kv_heads"):
+        sm.validate(_cfg("gemma-2b-swa"))
+
+
+def test_validate_rejects_expert_axis_without_experts():
+    sm = ServeMesh.build(tensor=1, expert=2)
+    with pytest.raises(ValueError, match="no experts"):
+        sm.validate(_cfg("qwen2-1.5b"))
+
+
+def test_validate_rejects_indivisible_experts():
+    sm = ServeMesh.build(tensor=1, expert=8)
+    with pytest.raises(ValueError, match="num_experts"):
+        sm.validate(_cfg("phi3.5-moe-42b-a6.6b"))
+
+
+def test_validate_requires_mla_product_divisibility():
+    # a rank that divides tensor but not tensor*expert would silently fall
+    # back to the subgroup-replicated layout the XLA CPU partitioner
+    # miscompiles — validate refuses it up front
+    bad = dataclasses.replace(_cfg("deepseek-v3-671b"), kv_lora_rank=2)
+    sm = ServeMesh.build(tensor=2, expert=2)
+    with pytest.raises(ValueError, match=r"tensor\*expert"):
+        sm.validate(bad)
+
+
+# ---------------------------------------------------------------------------
+# Byte-identity per cache family + per-device pool accounting
+# ---------------------------------------------------------------------------
+
+FAMILIES = [
+    # (arch, tensor, expert, prompt_seed, kv_heads override)
+    ("qwen2-1.5b", 2, 1, 3, None),  # full attention, kv-head sharded
+    ("gemma-2b-swa", 2, 1, 3, 2),  # swa ring (GQA'd so heads divide)
+    ("deepseek-v3-671b", 2, 2, 3, None),  # MLA latent pool + MoE, 2-D mesh
+    ("phi3.5-moe-42b-a6.6b", 2, 2, 3, None),  # attn + expert-parallel MoE
+    ("xlstm-1.3b", 2, 1, 3, None),  # recurrent: state replicated, no pools
+    ("jamba-1.5-large-398b", 1, 2, 6, None),  # mamba hybrid on expert axis
+]
+
+
+@pytest.mark.parametrize("arch,tensor,expert,pseed,kvh", FAMILIES)
+def test_sharded_engine_byte_identical(arch, tensor, expert, pseed, kvh):
+    cfg, model, params = _setup(arch, kv_heads=kvh)
+    prompts = _prompts(cfg, seed=pseed)
+    ref, _ = _run(model, params, prompts)
+
+    sm = ServeMesh.build(tensor=tensor, expert=expert)
+    got, eng = _run(model, params, prompts, mesh=sm)
+    assert got == ref, f"{arch}: sharded {got} != single-device {ref}"
+
+    paged = eng.cache.paged
+    total = sum(leaf.nbytes for leaf in jax.tree.leaves(paged))
+    dev = sm.device_pool_bytes(paged)
+    # measured after serving: GSPMD may propagate a FINER layout to the
+    # program-output pools than the placement policy (e.g. the MLA rope
+    # cache riding the latent pool's split on a 2-D mesh) — never a
+    # coarser one, which would break the 1/N memory scaling
+    assert dev <= _expected_device_bytes(sm, model, paged)
+    if arch == "qwen2-1.5b":
+        # pure-attn pools shard entirely over kv_heads: exactly 1/tensor
+        assert dev * tensor == total
+    if tensor > 1 and total:
+        assert dev < total  # something actually moved off-device
+
+
+def test_engine_validates_mesh_at_construction():
+    cfg, model, params = _setup("gemma-2b-swa")  # MQA: kv_heads == 1
+    sm = ServeMesh.build(tensor=2, expert=1)
+    with pytest.raises(ValueError, match="num_kv_heads"):
+        ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, mesh=sm)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-verifier speculative decoding (replicated drafter)
+# ---------------------------------------------------------------------------
+
+SPEC_FAMILIES = [
+    ("qwen2-1.5b", 2, 1, None),
+    ("gemma-2b-swa", 2, 1, 2),  # ring undo/restore under the mesh
+    ("deepseek-v3-671b", 2, 2, None),  # MLA rollback on the 2-D mesh
+]
+
+
+@pytest.mark.parametrize("arch,tensor,expert,kvh", SPEC_FAMILIES)
+def test_sharded_verifier_spec_byte_identical(arch, tensor, expert, kvh):
+    """Mismatched drafter -> near-constant rejection: every round runs
+    verify-side rollback against SHARDED pools, and the output must still
+    equal plain single-device decoding."""
+    cfg, vm, vp = _setup(arch, kv_heads=kvh)
+    _, dm, dp = _setup("qwen2-1.5b", seed=7, vocab=cfg.vocab_size)
+    prompts = _prompts(cfg)
+    ref, _ = _run(vm, vp, prompts)
+
+    sm = ServeMesh.build(tensor=tensor, expert=expert)
+    spec = SpecCoordinator(vm, vp, dm, dp, max_batch=2, max_len=MAX_LEN,
+                           k=3, seed=0, mesh=sm)
+    for p in prompts:
+        spec.submit(p, max_new=6)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref, f"{arch}: sharded spec {got} != plain {ref}"
+    # drafter stays whole: its runner carries no mesh
+    assert spec.runner_d is not None and spec.runner_d.mesh is None
+    assert spec.runner_v.mesh is sm
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache under sharding
+# ---------------------------------------------------------------------------
+
+def test_sharded_prefix_cache_byte_identical():
+    """Shared-prefix admissions hit the copy-on-write prefix index on the
+    sharded engine exactly as on the single-device one — partial-prefill
+    tails splice into sharded pools byte-identically."""
+    cfg, model, params = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(3)
+    head = list(rng.randint(5, cfg.vocab_size, (8,)))
+    prompts = [head + list(rng.randint(5, cfg.vocab_size, (n,)))
+               for n in (4, 6, 2)]
+    ref, ref_eng = _run(model, params, prompts, prefix_cache=True)
+
+    sm = ServeMesh.build(tensor=2, expert=1)
+    got, eng = _run(model, params, prompts, prefix_cache=True, mesh=sm)
+    assert got == ref
+    assert eng.prefix_stats["hits"] > 0
+    assert eng.prefix_stats == ref_eng.prefix_stats
+
+
+# ---------------------------------------------------------------------------
+# Prompt-lookup drafting (model-free speculative decoding)
+# ---------------------------------------------------------------------------
+
+def test_prompt_lookup_proposes_continuation_of_recent_match():
+    d = PromptLookupDrafter()
+    # trailing [7, 8] occurred at index 1; propose what followed it
+    assert d.propose([1, 7, 8, 9, 4, 7, 8], 3) == [9, 4, 7]
+
+
+def test_prompt_lookup_most_recent_occurrence_wins():
+    d = PromptLookupDrafter()
+    # [7, 8] occurs twice; the LATER one (followed by 2) must win
+    assert d.propose([7, 8, 1, 7, 8, 2, 7, 8], 2) == [2, 7]
+
+
+def test_prompt_lookup_longest_ngram_tried_first():
+    d = PromptLookupDrafter()
+    # 3-gram [5, 7, 8] matches at index 0 -> continuation 9; a 2-gram
+    # match ([7, 8] at index 4, continuation 1) must NOT preempt it
+    ctx = [5, 7, 8, 9, 7, 8, 1, 5, 7, 8]
+    assert d.propose(ctx, 2) == [9, 7]
+
+
+def test_prompt_lookup_no_match_and_padding():
+    d = PromptLookupDrafter()
+    assert d.propose([1, 2, 3, 4], 3) == [-1, -1, -1]  # nothing repeats
+    assert d.propose([5], 2) == [-1, -1]  # too short for any n-gram
+    # match near the end: short continuation, -1-padded to k
+    assert d.propose([3, 9, 3], 3) == [9, 3, -1]
+
+
+def test_prompt_lookup_validates_bounds():
+    with pytest.raises(ValueError, match="min_ngram"):
+        PromptLookupDrafter(max_ngram=2, min_ngram=3)
+    with pytest.raises(ValueError, match="min_ngram"):
+        PromptLookupDrafter(min_ngram=0)
+
+
+def test_spec_drafter_kwarg_validation():
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    with pytest.raises(ValueError, match="unknown drafter"):
+        SpecCoordinator(vm, vp, max_batch=1, max_len=MAX_LEN, k=2,
+                        drafter="bogus")
+    with pytest.raises(ValueError, match="model-free"):
+        SpecCoordinator(vm, vp, vm, vp, max_batch=1, max_len=MAX_LEN, k=2,
+                        drafter="prompt_lookup")
+    with pytest.raises(ValueError, match="prompt_lookup"):
+        SpecCoordinator(vm, vp, max_batch=1, max_len=MAX_LEN, k=2)
+    with pytest.raises(ValueError, match="greedy"):
+        SpecCoordinator(vm, vp, max_batch=1, max_len=MAX_LEN, k=2,
+                        drafter="prompt_lookup", mode="rejection")
+
+
+def test_prompt_lookup_spec_byte_identical_and_model_free():
+    """Zero-training drafting: no drafter stack at all, drafts copied
+    from each stream's own history, greedy output byte-identical."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    # self-repeating prompts so lookups actually land (greedy tiny-model
+    # streams loop, and the prompts themselves carry repeated n-grams)
+    rng = np.random.RandomState(3)
+    base = list(rng.randint(5, cfg.vocab_size, (5,)))
+    prompts = [base + base[:4], base[:3] + base[:3], base + base]
+    ref, _ = _run(vm, vp, prompts, max_new=8)
+
+    spec = SpecCoordinator(vm, vp, max_batch=2, max_len=MAX_LEN, k=3,
+                           seed=0, drafter="prompt_lookup")
+    for p in prompts:
+        spec.submit(p, max_new=8)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref
+    assert spec.cache_d is None and spec.runner_d is None  # truly model-free
+    assert spec.stats.acceptance_rate > 0, "no lookup draft ever landed"
+
+
+def test_prompt_lookup_on_sharded_verifier():
+    """The full stack: model-free drafts verified by a tensor-sharded
+    verifier — still byte-identical to plain single-device decoding."""
+    cfg, vm, vp = _setup("qwen2-1.5b")
+    rng = np.random.RandomState(3)
+    base = list(rng.randint(5, cfg.vocab_size, (5,)))
+    prompts = [base + base[:4], base[:3] + base[:3]]
+    ref, _ = _run(vm, vp, prompts, max_new=8)
+
+    sm = ServeMesh.build(tensor=2, expert=1)
+    spec = SpecCoordinator(vm, vp, max_batch=2, max_len=MAX_LEN, k=3,
+                           seed=0, drafter="prompt_lookup", mesh=sm)
+    for p in prompts:
+        spec.submit(p, max_new=8)
+    got = {c.rid: c.tokens for c in spec.run()}
+    assert got == ref
