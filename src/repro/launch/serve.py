@@ -39,6 +39,14 @@ actually split across devices (the CI sharded smoke):
 
   PYTHONPATH=src python -m repro.launch.serve --sharded --gen 8
 
+Trace mode (DESIGN.md §13) — one traced run covering the whole event
+taxonomy (prefix hits, preemption, chunked prefill, decode, draft/verify
+/accept, compiles), schema-validated (span balance, per-track monotone
+timestamps, request conservation) and exported as Perfetto JSON for
+ui.perfetto.dev (the CI observability smoke):
+
+  PYTHONPATH=src python -m repro.launch.serve --trace trace.json --gen 8
+
 Runs the REDUCED configs on CPU; the full configs' serve path is exercised
 by the dry-run. Prompts are admitted through the engine's request queue, so
 more prompts than --batch slots simply stream through the pool.
@@ -415,6 +423,80 @@ def run_sharded(args) -> None:
     print("sharded smoke OK: mesh engines byte-identical, pools split")
 
 
+def run_trace(args) -> None:
+    """Observability smoke (DESIGN.md §13): drive one shared Tracer
+    through (1) a shared-preamble wave on a prefix-cache engine with an
+    oversubscribed page pool (prefix hits, preempt-and-requeue, chunked
+    prefill) and (2) a self-speculation wave (draft/verify/accept), then
+    schema-validate the stream — taxonomy, per-track monotone timestamps,
+    balanced spans, submit == finish + evict conservation, full event
+    coverage — and export Perfetto trace_event JSON."""
+    import json
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve import (
+        MetricsRegistry,
+        SpecCoordinator,
+        Tracer,
+        validate_events,
+        write_perfetto,
+    )
+
+    cfg = dataclasses.replace(get_arch(args.arch).reduced(), vocab_size=64)
+    model = build_model(cfg)
+    # fp32 so the traced run matches the byte-identity suite's conditions
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    registry = MetricsRegistry()
+    tracer = Tracer()  # wall clock; coherence, not determinism, is the point
+
+    # 1. prefix + preempt wave: shared preamble through a prefix-cache
+    # engine whose page pool cannot hold all admitted requests at once
+    rng = np.random.RandomState(0)
+    system = list(rng.randint(1, 64, (12,)))
+    eng = ServeEngine(model, params, max_batch=4, max_len=64, seed=0,
+                      prefix_cache=True, exhaust_policy="preempt",
+                      page_size=4, num_pages=14, chunked_prefill=8,
+                      registry=registry, tracer=tracer, name="llm")
+    for i in range(6):
+        eng.submit(system + list(rng.randint(1, 64, (4 + i,))),
+                   max_new=args.gen)
+    eng.run()
+
+    # 2. speculative wave on the same tracer: self-speculation so accepts
+    # are guaranteed (drafter distribution == verifier distribution)
+    spec = SpecCoordinator(model, params, model, params, max_batch=2,
+                           max_len=64, k=3, seed=0,
+                           registry=registry, tracer=tracer, name="spec")
+    for i in range(3):
+        spec.submit(list(rng.randint(1, 64, (6 + i,))), max_new=args.gen)
+    spec.run()
+
+    rep = validate_events(tracer.events, require=(
+        "submit", "admit", "prefill_chunk", "decode_step", "prefix_hit",
+        "preempt", "resume", "compile", "draft", "verify", "accept",
+        "finish",
+    ))
+    write_perfetto(tracer.events, args.trace)
+    with open(args.trace) as f:
+        doc = json.load(f)
+    assert doc["traceEvents"], "empty Perfetto export"
+    print(f"validated {rep['events']} events on {rep['tracks']} tracks, "
+          f"{rep['requests']} requests conserved")
+    print("event counts: "
+          + ", ".join(f"{k}={v}" for k, v in rep["counts"].items()))
+    print(f"wrote {args.trace}: {len(doc['traceEvents'])} trace_event "
+          f"records (open at ui.perfetto.dev)")
+    text = registry.prometheus_text()
+    print("registry sample:")
+    for line in text.splitlines():
+        if line.startswith(("serve_decode_steps", "cache_prefix_hits",
+                            "fleet_", "# TYPE serve_decode_steps")):
+            print(f"  {line}")
+    print("trace smoke OK: schema-valid, full event coverage")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -431,6 +513,9 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="sharded mode (tensor/expert mesh engines, "
                          "byte-identity vs single-device asserted)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="observability mode: traced prefix+spec run, "
+                         "schema validation, Perfetto JSON written to PATH")
     ap.add_argument("--fleet-rate", type=float, default=8.0,
                     help="offered load (req/virtual-second) for --fleet")
     ap.add_argument("--fleet-horizon", type=float, default=4.0,
@@ -458,6 +543,8 @@ def main() -> None:
         run_fleet(args)
     elif args.sharded:
         run_sharded(args)
+    elif args.trace:
+        run_trace(args)
     else:
         run_single(args)
 

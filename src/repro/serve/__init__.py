@@ -36,6 +36,17 @@ an injected ``VirtualClock``, with ``admission="slo"`` priority lanes,
 ``chunked_prefill`` (byte-identical to fused prefill, interleaved with
 decode), and ``deadline_aware_policy`` routing as the features under
 test.
+
+The observability layer (serve/obs.py + serve/trace.py, DESIGN.md §13)
+makes the whole stack inspectable without perturbing it: one
+``MetricsRegistry`` of labeled counter/gauge/histogram series behind
+`RunnerStats`, the router's stats, and the fleet report; a ``Tracer``
+stamping typed request-lifecycle events (submit/admit/prefill_chunk/
+decode_step/draft/verify/accept/preempt/compile/...) on the injected
+clock, with ``NullTracer`` as the zero-cost default; ``validate_events``
+checking span balance, per-track monotonicity, and request conservation;
+and ``perfetto_trace``/``write_perfetto`` exporting Chrome trace_event
+JSON loadable at ui.perfetto.dev.
 """
 from repro.serve.cache import BlockCacheManager
 from repro.serve.drafters import PromptLookupDrafter
@@ -50,6 +61,7 @@ from repro.serve.fleet import (
     summarize,
 )
 from repro.serve.metrics import LatencyWindow, min_tail_samples, percentile, percentiles
+from repro.serve.obs import Counter, Gauge, Histogram, MetricsRegistry
 from repro.serve.router import (
     CloudEdgeRouter,
     EngineSpec,
@@ -71,15 +83,32 @@ from repro.serve.sampling import (
 from repro.serve.scheduler import Scheduler
 from repro.serve.shard import ServeMesh
 from repro.serve.spec import SpecCoordinator
+from repro.serve.trace import (
+    EVENT_TYPES,
+    NULL_TRACER,
+    NullTracer,
+    TraceEvent,
+    Tracer,
+    perfetto_trace,
+    validate_events,
+    write_perfetto,
+)
 
 __all__ = [
     "BlockCacheManager",
     "CloudEdgeRouter",
     "Completion",
     "CostModel",
+    "Counter",
+    "EVENT_TYPES",
     "EngineSpec",
     "FleetSimulator",
+    "Gauge",
+    "Histogram",
     "LatencyWindow",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
     "ModelRunner",
     "PromptLookupDrafter",
     "Request",
@@ -90,6 +119,8 @@ __all__ = [
     "ServeMesh",
     "SpecCoordinator",
     "TierSpec",
+    "TraceEvent",
+    "Tracer",
     "VirtualClock",
     "WorkloadConfig",
     "collaborative_policy",
@@ -99,6 +130,7 @@ __all__ = [
     "min_tail_samples",
     "percentile",
     "percentiles",
+    "perfetto_trace",
     "prompt_length_policy",
     "round_robin_policy",
     "summarize",
@@ -106,4 +138,6 @@ __all__ = [
     "sample_tokens_keys",
     "sampling_dist",
     "speculative_accept",
+    "validate_events",
+    "write_perfetto",
 ]

@@ -48,6 +48,8 @@ import numpy as np
 
 from repro.models import paged as PG
 from repro.models.model import Model
+from repro.serve.obs import MetricsRegistry
+from repro.serve.trace import NULL_TRACER
 
 _FNV_OFFSET = 0xCBF29CE484222325
 _FNV_PRIME = 0x100000001B3
@@ -87,6 +89,9 @@ class BlockCacheManager:
         prefix_cache: bool = False,
         max_prefix_nodes: int = 1024,
         mesh=None,
+        registry: Optional[MetricsRegistry] = None,
+        tracer=NULL_TRACER,
+        name: str = "engine",
     ):
         if page_size < 1 or page_size & (page_size - 1):
             # pow2 prompt buckets must be page multiples for the whole-page
@@ -146,9 +151,21 @@ class BlockCacheManager:
         self._copy_jit: Dict[int, object] = {}
         self._gather_jit = None
         self._restore_jit = None
-        self.prefix_lookups = 0
-        self.prefix_hits = 0
-        self.prefix_hit_tokens = 0
+        # Observability (DESIGN.md §13): prefix/COW counters live in the
+        # registry (series cache_*{engine=...}); the legacy attribute
+        # names (prefix_lookups etc.) are properties over them. The
+        # tracer gets prefix_hit / cow_copy instants on the cache track.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        self._c_lookups = self.registry.counter("cache_prefix_lookups", engine=name)
+        self._c_hits = self.registry.counter("cache_prefix_hits", engine=name)
+        self._c_hit_tokens = self.registry.counter(
+            "cache_prefix_hit_tokens", engine=name
+        )
+        self._c_cow = self.registry.counter("cache_cow_copies", engine=name)
+        self._c_node_evict = self.registry.counter(
+            "cache_node_evictions", engine=name
+        )
 
     # -- page accounting ----------------------------------------------------
 
@@ -297,6 +314,7 @@ class BlockCacheManager:
         return True
 
     def _evict_node(self, node: PrefixNode) -> None:
+        self._c_node_evict.value += 1
         del self._index[node.key]
         parent = self._index.get(node.parent)
         if parent is not None:
@@ -395,6 +413,19 @@ class BlockCacheManager:
         if chain:
             chain[-1].children.add(key)
 
+    # legacy attribute surface over the registry counters
+    @property
+    def prefix_lookups(self) -> int:
+        return self._c_lookups.value
+
+    @property
+    def prefix_hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return self._c_hit_tokens.value
+
     @property
     def prefix_stats(self) -> Dict[str, int]:
         return {
@@ -420,7 +451,7 @@ class BlockCacheManager:
         is restored into the slot."""
         cached = 0
         if self.prefix_cache:
-            self.prefix_lookups += 1
+            self._c_lookups.value += 1
             cached, pages, node = self._match(tokens, max_cached)
             if cached:
                 owned = self._owned[slot]
@@ -432,8 +463,12 @@ class BlockCacheManager:
                 self._bump(slot)
                 if node is not None and node.state is not None:
                     self._restore_state(slot, node.state)
-                self.prefix_hits += 1
-                self.prefix_hit_tokens += cached
+                self._c_hits.value += 1
+                self._c_hit_tokens.value += cached
+                self.tracer.instant(
+                    "prefix_hit", track="cache", slot=slot, tokens=cached,
+                    pages=len(pages),
+                )
         target = max(len(self._owned[slot]),
                      self.geom.admission_pages(len(tokens)))
         if not self._grow(slot, target):
@@ -515,6 +550,8 @@ class BlockCacheManager:
         if not srcs:
             return True
         self._copy_pages(srcs, dsts)
+        self._c_cow.value += len(srcs)
+        self.tracer.instant("cow_copy", track="cache", slot=slot, pages=len(srcs))
         for e, src, dst in zip(entries, srcs, dsts):
             self._incref(dst)
             self.block_tables[slot, e] = dst

@@ -61,9 +61,11 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.serve.cache import BlockCacheManager
+from repro.serve.obs import MetricsRegistry
 from repro.serve.runner import ModelRunner, RunnerStats
 from repro.serve.scheduler import Completion, Request, Scheduler
 from repro.serve.shard import ServeMesh
+from repro.serve.trace import NULL_TRACER
 
 Params = Dict
 
@@ -219,6 +221,10 @@ class ServeEngine:
         decode_budget: Optional[int] = None,
         mesh: Optional[ServeMesh] = None,
         clock: Callable[[], float] = time.monotonic,
+        registry: Optional[MetricsRegistry] = None,
+        tracer=NULL_TRACER,
+        name: str = "engine",
+        xla_annotate: bool = False,
     ):
         if model.cfg.is_encoder_decoder:
             raise ValueError("engine serves decoder-only configs")
@@ -244,6 +250,14 @@ class ServeEngine:
         self.decode_budget = decode_budget
         self.mesh = mesh
         self.clock = clock
+        # Observability (DESIGN.md §13): one registry shared by the
+        # runner/cache/engine gauges; the tracer is scoped to this
+        # engine's name so tracks from co-resident engines (router tiers,
+        # spec drafter+verifier) stay distinct on one shared timeline.
+        # Build a real Tracer on the same `clock` as the engine.
+        self.name = name
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer.scoped(name)
         if mesh is not None:
             mesh.validate(model.cfg)
             params = mesh.shard_params(model, params)
@@ -251,15 +265,25 @@ class ServeEngine:
             model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
             prefix_cache=prefix_cache, mesh=mesh,
+            registry=self.registry, tracer=self.tracer, name=name,
         )
         self.scheduler = Scheduler(
             num_slots=max_batch, max_len=max_len, eos_id=eos_id,
             bucket_cap=self.cache.geom.max_len,
             min_bucket=max(8, page_size),
             gather_live_lanes=gather_live_lanes,
-            admission=admission, clock=clock,
+            admission=admission, clock=clock, tracer=self.tracer,
         )
-        self.runner = ModelRunner(model, params, clock=clock, mesh=mesh)
+        self.runner = ModelRunner(
+            model, params, clock=clock, mesh=mesh,
+            registry=self.registry, tracer=self.tracer, name=name,
+            xla_annotate=xla_annotate,
+        )
+        self._g_active = self.registry.gauge("engine_active", engine=name)
+        self._g_queued = self.registry.gauge("engine_queued", engine=name)
+        self._g_free_pages = self.registry.gauge(
+            "engine_free_pages", engine=name
+        )
         self.base_key = jax.random.key(seed)
         self._partial: Optional[PartialPrefill] = None
 
@@ -383,6 +407,14 @@ class ServeEngine:
     def step(self) -> List[Completion]:
         """Admit whatever fits, then one live-lane decode step. Returns the
         requests that finished during this step."""
+        done = self._step()
+        # point-in-time gauges, refreshed once per step (not per event)
+        self._g_active.set(self.scheduler.num_active)
+        self._g_queued.set(self.num_queued)
+        self._g_free_pages.set(self.cache.free_page_count)
+        return done
+
+    def _step(self) -> List[Completion]:
         if self.chunked_prefill is not None:
             done: List[Completion] = []
             self._admit_chunked(done)
@@ -452,6 +484,11 @@ class ServeEngine:
     @property
     def stats(self) -> RunnerStats:
         return self.runner.stats
+
+    def metrics(self) -> Dict[str, Dict]:
+        """Machine-readable dump of every metric series this engine owns
+        (runner counters, cache prefix/COW counters, step gauges)."""
+        return self.registry.snapshot()
 
     @property
     def prefix_stats(self) -> Dict[str, int]:

@@ -43,7 +43,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serve.metrics import percentiles
+from repro.serve.metrics import LatencyWindow, percentiles
+from repro.serve.obs import MetricsRegistry
 
 __all__ = [
     "VirtualClock",
@@ -216,12 +217,30 @@ class FleetSimulator:
     ``VirtualClock``) through a generated workload. The engine must share
     the clock — the simulator asserts nothing about wall time."""
 
-    def __init__(self, engine, clock: VirtualClock, cost: Optional[CostModel] = None):
+    def __init__(
+        self,
+        engine,
+        clock: VirtualClock,
+        cost: Optional[CostModel] = None,
+        registry: Optional[MetricsRegistry] = None,
+    ):
         self.engine = engine
         self.clock = clock
         self.cost = cost or CostModel()
         self.completions: List = []
         self.num_submitted = 0
+        # Shares the engine's registry by default so one snapshot covers
+        # the whole stack; fleet_* histograms are unbounded (maxlen=None)
+        # so summarize() is exact, not a sliding-window approximation.
+        self.registry = registry or getattr(engine, "registry", None) or MetricsRegistry()
+
+    def _record(self, c) -> None:
+        self.registry.counter("fleet_completed", tier=c.tier).inc()
+        if c.slo_ok:
+            self.registry.counter("fleet_slo_met", tier=c.tier).inc()
+        self.registry.histogram("fleet_ttft_s", maxlen=None, tier=c.tier).record(c.ttft_s)
+        if len(c.tokens) > 1:
+            self.registry.histogram("fleet_tpot_s", maxlen=None, tier=c.tier).record(c.tpot_s)
 
     def _submit(self, fr: FleetRequest) -> None:
         # stamp submit_time with the true arrival instant: arrivals land
@@ -257,6 +276,8 @@ class FleetSimulator:
                 self.clock.advance(self.cost.step_cost(
                     stats.prefill_tokens - pf0, stats.decode_steps - ds0
                 ))
+                for c in done:
+                    self._record(c)
                 self.completions.extend(done)
                 steps += 1
                 if steps >= max_steps:
@@ -267,6 +288,62 @@ class FleetSimulator:
                 # idle: fast-forward to the next arrival
                 self.clock.now = max(self.clock.now, pending[i].t)
         return self.completions
+
+    def summarize(
+        self,
+        duration_s: Optional[float] = None,
+        num_preempted: Optional[int] = None,
+        offered: Optional[int] = None,
+    ) -> Dict[str, object]:
+        """Registry view of the fleet report: identical dict to the
+        module-level ``summarize`` over ``self.completions`` (asserted in
+        tests/test_obs.py), but reconstructed from ``fleet_*`` series —
+        the completion list itself is no longer the source of truth."""
+        if duration_s is None:
+            duration_s = self.clock.now
+        if num_preempted is None:
+            num_preempted = getattr(
+                getattr(self.engine, "scheduler", None), "num_preempted", 0
+            )
+        if offered is None:
+            offered = self.num_submitted
+
+        def _block(tier_names: Sequence[str]) -> Dict[str, object]:
+            count = met = 0
+            ttft = LatencyWindow(maxlen=None)
+            tpot = LatencyWindow(maxlen=None)
+            for t in tier_names:
+                count += self.registry.value("fleet_completed", tier=t) or 0
+                met += self.registry.value("fleet_slo_met", tier=t) or 0
+                ttft.merge(self.registry.histogram("fleet_ttft_s", maxlen=None, tier=t).window)
+                tpot.merge(self.registry.histogram("fleet_tpot_s", maxlen=None, tier=t).window)
+            return {
+                "count": count,
+                "slo_met": met,
+                "slo_violation_rate": (1.0 - met / count) if count else 0.0,
+                "ttft_s": ttft.percentiles(),
+                "tpot_s": tpot.percentiles(),
+            }
+
+        tier_names = sorted(
+            labels["tier"] for labels, _ in self.registry.series("fleet_completed")
+        )
+        completed = sum(
+            self.registry.value("fleet_completed", tier=t) or 0 for t in tier_names
+        )
+        met = sum(
+            self.registry.value("fleet_slo_met", tier=t) or 0 for t in tier_names
+        )
+        return {
+            "offered": offered,
+            "completed": completed,
+            "duration_s": duration_s,
+            "throughput_rps": completed / duration_s if duration_s else 0.0,
+            "goodput_rps": met / duration_s if duration_s else 0.0,
+            "num_preempted": num_preempted,
+            "overall": _block(tier_names),
+            "tiers": {t: _block([t]) for t in tier_names},
+        }
 
 
 def _lat_block(comps: Sequence) -> Dict[str, object]:

@@ -1,8 +1,9 @@
-"""Latency/percentile math for the serve stack (DESIGN.md §11).
+"""Latency/percentile math for the serve stack (DESIGN.md §11, §13).
 
 One shared implementation for every consumer — router ``stats_summary``,
-the fleet simulator's TTFT/TPOT trajectories, and the benchmark scripts —
-so the edge cases are fixed in exactly one place:
+the fleet simulator's TTFT/TPOT trajectories, the metrics registry's
+histograms (serve/obs.py), and the benchmark scripts — so the edge cases
+are fixed in exactly one place:
 
 - **empty window**: ``percentile([], q)`` returns ``nan`` (and the
   formatted summaries print ``-``) instead of raising inside
@@ -18,7 +19,8 @@ so the edge cases are fixed in exactly one place:
 Percentile definition: the ``linear`` (inclusive) interpolation NumPy
 defaults to — rank ``r = q/100 * (n-1)`` on the sorted samples, linear
 between ``floor(r)`` and ``ceil(r)`` — asserted against ``np.percentile``
-in tests/test_metrics.py.
+in tests/test_metrics.py. ``percentile`` and ``percentiles`` share one
+``_interp`` implementation; ``percentiles`` pays for a single sort.
 """
 from __future__ import annotations
 
@@ -34,6 +36,17 @@ __all__ = [
 ]
 
 
+def _interp(s: List[float], q: float) -> float:
+    """Linear-interpolated rank lookup on an already-sorted ``s`` with
+    ``len(s) >= 2`` — the one place the rank/interpolation math lives."""
+    n = len(s)
+    q = min(100.0, max(0.0, float(q)))
+    r = q / 100.0 * (n - 1)
+    lo = int(math.floor(r))
+    hi = min(lo + 1, n - 1)
+    return s[lo] + (s[hi] - s[lo]) * (r - lo)
+
+
 def percentile(xs: Sequence[float], q: float) -> float:
     """Linear-interpolated percentile of ``xs`` (unsorted ok).
 
@@ -44,31 +57,23 @@ def percentile(xs: Sequence[float], q: float) -> float:
         return math.nan
     if n == 1:
         return float(xs[0])
-    q = min(100.0, max(0.0, float(q)))
-    s = sorted(float(x) for x in xs)
-    r = q / 100.0 * (n - 1)
-    lo = int(math.floor(r))
-    hi = min(lo + 1, n - 1)
-    frac = r - lo
-    return s[lo] + (s[hi] - s[lo]) * frac
+    return _interp(sorted(float(x) for x in xs), q)
 
 
 def percentiles(
     xs: Sequence[float], qs: Sequence[float] = (50, 95, 99)
 ) -> Dict[str, float]:
-    """``{"p50": ..., "p95": ..., "p99": ...}`` over one sort of ``xs``."""
+    """``{"p50": ..., "p95": ..., "p99": ...}`` over one sort of ``xs`` —
+    same definition as ``percentile`` (shared ``_interp``), amortizing
+    the sort across the requested quantiles."""
     n = len(xs)
     if n == 0:
         return {f"p{_qname(q)}": math.nan for q in qs}
+    if n == 1:
+        v = float(xs[0])
+        return {f"p{_qname(q)}": v for q in qs}
     s = sorted(float(x) for x in xs)
-    out = {}
-    for q in qs:
-        qq = min(100.0, max(0.0, float(q)))
-        r = qq / 100.0 * (n - 1)
-        lo = int(math.floor(r))
-        hi = min(lo + 1, n - 1)
-        out[f"p{_qname(q)}"] = s[lo] + (s[hi] - s[lo]) * (r - lo)
-    return out
+    return {f"p{_qname(q)}": _interp(s, q) for q in qs}
 
 
 def _qname(q: float) -> str:
@@ -92,15 +97,28 @@ class LatencyWindow:
     """Rolling window of latency samples with percentile summaries.
 
     Bounded (``maxlen``) so a long-lived router cannot grow its TTFT
-    history without bound; the summary is over the most recent samples."""
+    history without bound; the summary is over the most recent samples.
+    ``maxlen=None`` keeps everything (the fleet simulator's registry
+    histograms need the full run to reproduce ``summarize`` exactly)."""
 
-    def __init__(self, maxlen: int = 4096):
+    def __init__(self, maxlen: Optional[int] = 4096):
         self._xs: Deque[float] = deque(maxlen=maxlen)
         self.count = 0  # lifetime samples, window evictions included
 
     def record(self, x: float) -> None:
         self._xs.append(float(x))
         self.count += 1
+
+    def merge(self, other: "LatencyWindow") -> "LatencyWindow":
+        """Fold another window's retained samples and lifetime count into
+        this one — cross-engine aggregation (the router combining per-tier
+        TTFT windows) without re-recording the samples at their sources.
+        Own ``maxlen`` still bounds the result; returns ``self`` so merges
+        chain."""
+        for x in other._xs:
+            self._xs.append(x)
+        self.count += other.count
+        return self
 
     def __len__(self) -> int:
         return len(self._xs)
@@ -110,6 +128,9 @@ class LatencyWindow:
 
     def percentile(self, q: float) -> float:
         return percentile(self._xs, q)
+
+    def percentiles(self, qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+        return percentiles(self._xs, qs)
 
     def summary_ms(self, qs: Sequence[float] = (50, 95, 99)) -> str:
         """``"p50/p95/p99 3.1/9.2/12.0ms"`` — ``-`` for an empty window,

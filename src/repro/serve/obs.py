@@ -1,0 +1,224 @@
+"""Unified metrics registry for the serve stack (DESIGN.md §13).
+
+One ``MetricsRegistry`` per engine (or shared across a router/fleet)
+holds every counter, gauge, and histogram as a *labeled series* —
+``(metric name, frozen label set) -> metric`` — so the stats that used
+to live in ad-hoc attribute bags (`RunnerStats` fields, the router's
+per-tier `LatencyWindow` dict, the fleet simulator's completion lists)
+become views over one store with a machine-readable ``snapshot()`` and
+a Prometheus-style text exposition (a *formatter*, no server).
+
+Design constraints, in order:
+
+- **Hot-path cost is one attribute add.** `RunnerStats.prefill_tokens
+  += s` must stay a Python int add; a registry counter is therefore a
+  bare ``value`` slot mutated in place, not a method-call pipeline with
+  label hashing per increment. Series resolution (the dict lookup on
+  ``(name, labels)``) happens once at construction, and the resolved
+  `Counter` object is held by the emitter.
+- **Ints stay ints.** Counters start at int 0 and token/step counters
+  stay exact ints (`72`, not `72.0`) so existing f-string summaries and
+  test assertions are unchanged; timing accumulators become floats on
+  first add, as before.
+- **Histograms are `metrics.LatencyWindow`s** — same percentile math,
+  same bounded-window semantics, plus `merge()` for cross-series
+  aggregation (router "overall" = merge of per-tier windows).
+
+Determinism: the registry never reads a clock and never feeds back into
+scheduling; recording into it cannot perturb engine outputs (asserted
+per cache family in tests/test_obs.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from repro.serve.metrics import LatencyWindow, _qname, percentiles
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+]
+
+LabelsT = Tuple[Tuple[str, str], ...]
+
+
+class Counter:
+    """Monotonic accumulator. ``value`` is public and mutated in place by
+    hot paths (``ctr.value += n``) — see module docstring for why."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: Union[int, float] = 0
+
+    def inc(self, n: Union[int, float] = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value (active requests, free pages, occupancy)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+
+class Histogram:
+    """A labeled series over ``metrics.LatencyWindow``.
+
+    Exposes the window's full read API (``record``/``observe``,
+    ``percentile(s)``, ``summary_ms``, ``values``, ``len``) so call
+    sites that held a raw `LatencyWindow` — the router's TTFT dict —
+    take a registry histogram as a drop-in replacement."""
+
+    __slots__ = ("window",)
+
+    def __init__(self, maxlen: Optional[int] = 4096) -> None:
+        self.window = LatencyWindow(maxlen=maxlen)
+
+    def observe(self, x: float) -> None:
+        self.window.record(x)
+
+    # LatencyWindow drop-in surface
+    def record(self, x: float) -> None:
+        self.window.record(x)
+
+    def __len__(self) -> int:
+        return len(self.window)
+
+    @property
+    def count(self) -> int:
+        return self.window.count
+
+    def values(self) -> List[float]:
+        return self.window.values()
+
+    def percentile(self, q: float) -> float:
+        return self.window.percentile(q)
+
+    def percentiles(self, qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+        return self.window.percentiles(qs)
+
+    def summary_ms(self, qs: Sequence[float] = (50, 95, 99)) -> str:
+        return self.window.summary_ms(qs)
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class MetricsRegistry:
+    """Get-or-create store of labeled metric series.
+
+    ``registry.counter("serve_prefill_tokens", engine="llm")`` returns
+    the same `Counter` object on every call with the same name+labels;
+    a name is bound to one kind for the registry's lifetime (asking for
+    ``gauge`` on a name registered as ``counter`` raises)."""
+
+    def __init__(self) -> None:
+        self._series: Dict[Tuple[str, LabelsT], object] = {}
+        self._kind: Dict[str, str] = {}
+
+    def _get(self, kind: str, name: str, labels: Dict[str, str], **kw):
+        key = (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+        m = self._series.get(key)
+        if m is None:
+            bound = self._kind.setdefault(name, kind)
+            if bound != kind:
+                raise ValueError(
+                    f"metric {name!r} already registered as {bound}, not {kind}"
+                )
+            m = _KINDS[kind](**kw)
+            self._series[key] = m
+        return m
+
+    def counter(self, name: str, **labels: str) -> Counter:
+        return self._get("counter", name, labels)
+
+    def gauge(self, name: str, **labels: str) -> Gauge:
+        return self._get("gauge", name, labels)
+
+    def histogram(
+        self, name: str, maxlen: Optional[int] = 4096, **labels: str
+    ) -> Histogram:
+        return self._get("histogram", name, labels, maxlen=maxlen)
+
+    # ----- read side ----------------------------------------------------
+
+    def series(self, name: str) -> List[Tuple[Dict[str, str], object]]:
+        """All ``(labels, metric)`` pairs under ``name``, label-sorted."""
+        out = [
+            (dict(lbls), m)
+            for (n, lbls), m in self._series.items()
+            if n == name
+        ]
+        out.sort(key=lambda p: tuple(sorted(p[0].items())))
+        return out
+
+    def value(self, name: str, **labels: str):
+        """Scalar value of a counter/gauge series, or None if absent."""
+        key = (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+        m = self._series.get(key)
+        return None if m is None else getattr(m, "value", None)
+
+    def names(self) -> List[str]:
+        return sorted(self._kind)
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Machine-readable dump: ``{name: {"type": kind, "series":
+        [{"labels": {...}, ...values...}]}}``, deterministically ordered.
+        Histogram series carry ``count`` (lifetime), ``n`` (retained
+        window) and p50/p95/p99 over the retained window."""
+        out: Dict[str, Dict[str, object]] = {}
+        for name in self.names():
+            kind = self._kind[name]
+            rows = []
+            for labels, m in self.series(name):
+                row: Dict[str, object] = {"labels": labels}
+                if kind == "histogram":
+                    row["count"] = m.count
+                    row["n"] = len(m)
+                    row.update(m.percentiles())
+                else:
+                    row["value"] = m.value
+                rows.append(row)
+            out[name] = {"type": kind, "series": rows}
+        return out
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the registry — a stringification
+        of ``snapshot()``, not a server. Histograms render as summaries
+        (per-quantile sample lines plus ``_count``)."""
+        lines: List[str] = []
+        for name in self.names():
+            kind = self._kind[name]
+            lines.append(f"# TYPE {name} {'summary' if kind == 'histogram' else kind}")
+            for labels, m in self.series(name):
+                if kind == "histogram":
+                    vals = m.percentiles()
+                    for q, v in zip((0.5, 0.95, 0.99), vals.values()):
+                        lines.append(
+                            f"{name}{_fmt_labels({**labels, 'quantile': str(q)})} {v}"
+                        )
+                    lines.append(f"{name}_count{_fmt_labels(labels)} {m.count}")
+                else:
+                    lines.append(f"{name}{_fmt_labels(labels)} {m.value}")
+        return "\n".join(lines) + "\n"
+
+
+def _fmt_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    body = ",".join(
+        f'{k}="{_escape(str(v))}"' for k, v in sorted(labels.items())
+    )
+    return "{" + body + "}"
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")

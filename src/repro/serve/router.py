@@ -38,6 +38,8 @@ from repro.core.align import TokenAligner
 from repro.data.tokenizer import ToyTokenizer
 from repro.serve.engine import ServeEngine
 from repro.serve.metrics import LatencyWindow
+from repro.serve.obs import Histogram, MetricsRegistry
+from repro.serve.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -228,6 +230,8 @@ class CloudEdgeRouter:
         policy: Optional[Policy] = None,
         spec_pair: Optional[EngineSpec] = None,
         clock: Callable[[], float] = time.monotonic,
+        registry: Optional[MetricsRegistry] = None,
+        tracer=NULL_TRACER,
     ):
         """``spec_pair`` registers one extra tier whose engine is a
         ``serve.spec.SpecCoordinator`` — an (SLM-drafter, LLM-verifier)
@@ -248,11 +252,24 @@ class CloudEdgeRouter:
         self.specs: Dict[str, EngineSpec] = {s.name: s for s in tiers}
         self.policy = policy or prompt_length_policy()
         self.clock = clock
+        # Observability (DESIGN.md §13): the router's own registry holds
+        # routing counters and per-tier TTFT histograms; ``stats_dict``
+        # additionally reads each tier engine's registry-backed stats.
+        # Routing decisions land on the tracer's "router" track. To see
+        # tier engines on the SAME timeline, build them with this tracer
+        # (launch/serve.py --trace does).
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
         self._aligners: Dict[str, TokenAligner] = {}  # slm name -> aligner
         self._pending: Dict[Tuple[str, int], Tuple[int, Optional[str], RouteDecision]] = {}
         self.route_log: List[Tuple[int, RouteDecision]] = []
-        self._ttft: Dict[str, LatencyWindow] = {
-            s.name: LatencyWindow() for s in tiers
+        self._ttft: Dict[str, Histogram] = {
+            s.name: self.registry.histogram("router_ttft_s", tier=s.name)
+            for s in tiers
+        }
+        self._routed = {
+            s.name: self.registry.counter("router_requests", tier=s.name)
+            for s in tiers
         }
         self._next_rid = 0
 
@@ -292,7 +309,7 @@ class CloudEdgeRouter:
             "server-llm",
             ServeEngine(tr.llm, llm_params, max_batch=max_batch,
                         max_len=max_len, eos_id=tr.server_tok.eos_id,
-                        seed=seed, **engine_kw),
+                        seed=seed, name="server-llm", **engine_kw),
             tr.server_tok,
         )
         slm_params = {dev.name: tr.merged_slm(dev.name) for dev in tr.devices}
@@ -303,7 +320,7 @@ class CloudEdgeRouter:
                 ServeEngine(dev.slm, slm_params[dev.name],
                             max_batch=max_batch, max_len=max_len,
                             eos_id=dev.tok.eos_id, seed=seed + 1 + i,
-                            **engine_kw),
+                            name=dev.name, **engine_kw),
                 dev.tok,
             ))
         spec_pair = None
@@ -317,12 +334,15 @@ class CloudEdgeRouter:
                     eos_id=tr.server_tok.eos_id, seed=seed + 101,
                     verifier_tokenizer=tr.server_tok,
                     drafter_tokenizer=dev.tok,
+                    name="spec-pair",
                     **engine_kw,
                 ),
                 tr.server_tok,
             )
         return cls(llm, slms, policy=policy, spec_pair=spec_pair,
-                   clock=engine_kw.get("clock", time.monotonic))
+                   clock=engine_kw.get("clock", time.monotonic),
+                   registry=engine_kw.get("registry"),
+                   tracer=engine_kw.get("tracer", NULL_TRACER))
 
     # -- vocab bridging -----------------------------------------------------
 
@@ -402,6 +422,11 @@ class CloudEdgeRouter:
         )
         self._pending[(spec.name, erid)] = (rid, text, decision)
         self.route_log.append((rid, decision))
+        self._routed[spec.name].value += 1
+        self.tracer.instant(
+            "route", track="router", router_rid=rid, engine=spec.name,
+            reason=decision.reason,
+        )
         return rid
 
     def prewarm(
@@ -427,6 +452,11 @@ class CloudEdgeRouter:
             decision = RouteDecision(name, "prewarm")
             self._pending[(name, erid)] = (rid, text, decision)
             self.route_log.append((rid, decision))
+            self._routed[name].value += 1
+            self.tracer.instant(
+                "route", track="router", router_rid=rid, engine=name,
+                reason="prewarm",
+            )
             out.append(rid)
         return out
 
@@ -470,36 +500,84 @@ class CloudEdgeRouter:
     def num_queued(self) -> int:
         return sum(s.engine.num_queued for s in self.specs.values())
 
+    def stats_dict(self) -> Dict[str, Dict]:
+        """Machine-readable router stats (DESIGN.md §13): per-tier token
+        throughput from each engine's registry-backed counters, routed/
+        completed request counts, TTFT percentiles from the router's
+        registry histograms, plus draft-acceptance and prefix-reuse blocks
+        where those subsystems ran. ``overall`` merges the per-tier TTFT
+        windows through ``LatencyWindow.merge`` — no re-recording.
+        ``stats_summary()`` is a string formatter over exactly this dict;
+        benchmarks should read the dict, not parse the string."""
+        tiers: Dict[str, Dict] = {}
+        overall = LatencyWindow(maxlen=None)
+        for name, spec in self.specs.items():
+            st = spec.engine.stats
+            gen_tok = st.decode_tokens + st.spec_tokens
+            gen_s = st.decode_s + st.spec_s
+            win = self._ttft[name]
+            d: Dict[str, object] = {
+                "routed": self._routed[name].value,
+                "completed": win.count,
+                "prefill_tokens": st.prefill_tokens,
+                "prefill_tok_s": (
+                    st.prefill_tokens / st.prefill_s if st.prefill_s else 0.0
+                ),
+                "gen_tokens": gen_tok,
+                "gen_tok_s": gen_tok / gen_s if gen_s else 0.0,
+            }
+            if len(win):
+                d["ttft_s"] = win.percentiles()
+            if st.draft_tokens:
+                d["draft"] = {
+                    "offered": st.draft_tokens,
+                    "accepted": st.accepted_tokens,
+                    "acceptance_rate": st.acceptance_rate,
+                    "accepted_per_verify": st.accepted_per_verify,
+                }
+            pstats = getattr(spec.engine, "prefix_stats", None)
+            if pstats and pstats["lookups"]:
+                d["prefix"] = dict(pstats)
+            tiers[name] = d
+            overall.merge(win.window)
+        out: Dict[str, Dict] = {
+            "tiers": tiers,
+            "overall": {"completed": overall.count},
+        }
+        if len(overall):
+            out["overall"]["ttft_s"] = overall.percentiles()
+        return out
+
     def stats_summary(self) -> str:
         """One line per tier: prefill/generated token throughput, TTFT
         percentiles over the recent completion window (``serve/metrics.py``
         handles the empty/single-sample/short-history edge cases), and for
         speculative tiers the draft-acceptance rate — the number that says
-        whether the consortium pairing is actually paying off."""
+        whether the consortium pairing is actually paying off. A pure
+        formatter over ``stats_dict()``."""
+        stats = self.stats_dict()
         lines = []
-        for name, spec in self.specs.items():
-            st = spec.engine.stats
-            pf = st.prefill_tokens / st.prefill_s if st.prefill_s else 0.0
-            gen_tok = st.decode_tokens + st.spec_tokens
-            gen_s = st.decode_s + st.spec_s
-            gen = gen_tok / gen_s if gen_s else 0.0
+        for name, d in stats["tiers"].items():
             line = (
-                f"{name}: prefill {st.prefill_tokens} tok ({pf:.1f} tok/s), "
-                f"gen {gen_tok} tok ({gen:.1f} tok/s)"
+                f"{name}: prefill {d['prefill_tokens']} tok "
+                f"({d['prefill_tok_s']:.1f} tok/s), "
+                f"gen {d['gen_tokens']} tok ({d['gen_tok_s']:.1f} tok/s)"
             )
-            win = self._ttft[name]
-            if len(win):
-                line += f", ttft {win.summary_ms()}"
-            if st.draft_tokens:
-                line += (
-                    f", draft-accept {st.acceptance_rate:.0%} "
-                    f"({st.accepted_per_verify:.2f} tok/verify)"
+            if "ttft_s" in d:
+                ms = "/".join(
+                    f"{d['ttft_s'][q] * 1e3:.1f}" for q in ("p50", "p95", "p99")
                 )
-            pstats = getattr(spec.engine, "prefix_stats", None)
-            if pstats and pstats["lookups"]:
+                line += f", ttft p50/p95/p99 {ms}ms"
+            if "draft" in d:
                 line += (
-                    f", prefix {pstats['hits']}/{pstats['lookups']} hits "
-                    f"({pstats['hit_tokens']} tok reused)"
+                    f", draft-accept {d['draft']['acceptance_rate']:.0%} "
+                    f"({d['draft']['accepted_per_verify']:.2f} tok/verify)"
+                )
+            if "prefix" in d:
+                p = d["prefix"]
+                line += (
+                    f", prefix {p['hits']}/{p['lookups']} hits "
+                    f"({p['hit_tokens']} tok reused)"
                 )
             lines.append(line)
         return " | ".join(lines)

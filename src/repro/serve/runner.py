@@ -38,32 +38,55 @@ import numpy as np
 
 from repro.models import paged as PG
 from repro.models.model import Model
+from repro.serve.obs import MetricsRegistry
 from repro.serve.sampling import (
     sample_tokens_keys,
     sampling_dist,
     speculative_accept,
 )
+from repro.serve.trace import NULL_TRACER, _Nested
 
 Params = Dict
 
+# The runner's stat surface, in declaration order. Token/step fields stay
+# exact ints; *_s fields accumulate wall (or virtual) seconds.
+_STAT_FIELDS = (
+    "prefill_tokens",  # real prompt tokens (padding excluded)
+    "prefill_s",
+    "decode_tokens",  # sampled tokens (live lanes only)
+    "decode_steps",
+    "decode_s",
+    # speculative decoding (DESIGN.md §8)
+    "verify_steps",  # verify dispatches
+    "verify_lanes",  # live lanes summed over verify steps
+    "draft_tokens",  # drafts offered to the verifier (K * lanes)
+    "accepted_tokens",  # drafts the verifier accepted
+    # tokens actually committed by the scheduler (booked by the
+    # coordinator AFTER mid-window EOS/max_new truncation, so spec
+    # throughput is comparable to plain decode_tokens)
+    "spec_tokens",
+    "spec_s",  # draft + verify + commit wall time
+)
+
 
 class RunnerStats:
-    def __init__(self):
-        self.prefill_tokens = 0  # real prompt tokens (padding excluded)
-        self.prefill_s = 0.0
-        self.decode_tokens = 0  # sampled tokens (live lanes only)
-        self.decode_steps = 0
-        self.decode_s = 0.0
-        # speculative decoding (DESIGN.md §8)
-        self.verify_steps = 0  # verify dispatches
-        self.verify_lanes = 0  # live lanes summed over verify steps
-        self.draft_tokens = 0  # drafts offered to the verifier (K * lanes)
-        self.accepted_tokens = 0  # drafts the verifier accepted
-        # tokens actually committed by the scheduler (booked by the
-        # coordinator AFTER mid-window EOS/max_new truncation, so spec
-        # throughput is comparable to plain decode_tokens)
-        self.spec_tokens = 0
-        self.spec_s = 0.0  # draft + verify + commit wall time
+    """The runner's counters, as a view over a `MetricsRegistry`.
+
+    Each field in `_STAT_FIELDS` is a property over a registry counter
+    (series ``serve_<field>{engine=...}``), so ``stats.prefill_tokens``
+    and ``registry.value("serve_prefill_tokens", engine=...)`` are the
+    same number by construction — the attribute-bag API (`+=` in hot
+    paths, `.summary()`, the CostModel's delta reads) is unchanged, and
+    the registry gains the series for snapshot/exposition for free."""
+
+    def __init__(
+        self, registry: Optional[MetricsRegistry] = None, engine: str = "engine"
+    ):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._c = {
+            f: self.registry.counter(f"serve_{f}", engine=engine)
+            for f in _STAT_FIELDS
+        }
 
     @property
     def acceptance_rate(self) -> float:
@@ -94,6 +117,20 @@ class RunnerStats:
         return out
 
 
+def _stat_prop(field: str) -> property:
+    def _get(self):
+        return self._c[field].value
+
+    def _set(self, v):
+        self._c[field].value = v
+
+    return property(_get, _set)
+
+
+for _f in _STAT_FIELDS:
+    setattr(RunnerStats, _f, _stat_prop(_f))
+
+
 class ModelRunner:
     def __init__(
         self,
@@ -101,12 +138,25 @@ class ModelRunner:
         params: Params,
         clock: Callable[[], float] = time.monotonic,
         mesh=None,
+        *,
+        registry: Optional[MetricsRegistry] = None,
+        tracer=NULL_TRACER,
+        name: str = "engine",
+        xla_annotate: bool = False,
     ):
         self.model = model
         self.params = params
         self.clock = clock  # injectable for deterministic simulation
         self.mesh = mesh  # ServeMesh: programs trace under its axis rules
-        self.stats = RunnerStats()
+        self.stats = RunnerStats(registry, engine=name)
+        self.tracer = tracer
+        # Optional XLA-profile alignment: wrap each dispatch in a
+        # jax.profiler.TraceAnnotation so device traces captured with
+        # jax.profiler line up with our spans by name.
+        self._annot = (
+            getattr(jax.profiler, "TraceAnnotation", None) if xla_annotate
+            else None
+        )
         self._prefill_jit: Dict[int, object] = {}  # prompt bucket -> program
         self._tail_jit: Dict[int, object] = {}  # tail bucket -> program
         self._decode_jit: Dict[int, object] = {}  # lane bucket -> program
@@ -123,6 +173,27 @@ class ModelRunner:
         return self.mesh.ctx() if self.mesh is not None else (
             contextlib.nullcontext()
         )
+
+    def _dispatch_ctx(self, op: str, family: str, key, fresh: bool, **args):
+        """The context stack around one program call: a ``compile`` span
+        on its own track when the jit cache misses (the span covers trace
+        + compile + first run — the cold-start cost a client actually
+        sees), the dispatch span, the optional profiler annotation, and
+        the mesh axis-rule context. With the NullTracer, no mesh, and no
+        annotation this degenerates to a single cached no-op context."""
+        cms = []
+        if fresh and self.tracer.enabled:
+            cms.append(
+                self.tracer.span(
+                    "compile", track="compile", family=family, key=str(key)
+                )
+            )
+        cms.append(self.tracer.span(op, track="dispatch", **args))
+        if self._annot is not None:
+            cms.append(self._annot(f"{family}[{key}]"))
+        if self.mesh is not None:
+            cms.append(self.mesh.ctx())
+        return cms[0] if len(cms) == 1 else _Nested(cms)
 
     # -- compiled-program inventory (asserted in tests) ---------------------
 
@@ -186,7 +257,10 @@ class ModelRunner:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
         t0 = self.clock()
-        with self._trace_ctx():
+        fresh = bucket not in self._prefill_jit
+        with self._dispatch_ctx(
+            "prefill_chunk", "prefill", bucket, fresh, bucket=bucket, tokens=s
+        ):
             tok, paged, slots = self._prefill_for(bucket)(
                 self.params, paged, slots,
                 jnp.asarray(padded), jnp.asarray(s, jnp.int32),
@@ -250,7 +324,11 @@ class ModelRunner:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
         t0 = self.clock()
-        with self._trace_ctx():
+        fresh = bucket not in self._tail_jit
+        with self._dispatch_ctx(
+            "prefill_chunk", "prefill_tail", bucket, fresh,
+            bucket=bucket, tokens=s, start=start,
+        ):
             tok, paged, slots = self._tail_for(bucket)(
                 self.params, paged, slots,
                 jnp.asarray(padded), jnp.asarray(s, jnp.int32),
@@ -306,7 +384,11 @@ class ModelRunner:
         n_live: int,
     ) -> Tuple[np.ndarray, Params, Params]:
         t0 = self.clock()
-        with self._trace_ctx():
+        fresh = len(lanes) not in self._decode_jit
+        with self._dispatch_ctx(
+            "decode_step", "decode", len(lanes), fresh,
+            lanes=len(lanes), live=n_live,
+        ):
             toks, paged, slots = self._decode_for(len(lanes))(
                 self.params, paged, slots,
                 jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
@@ -394,7 +476,11 @@ class ModelRunner:
         t0 = self.clock()
         if q is None:
             q = jnp.zeros((), jnp.float32)  # unused placeholder operand
-        with self._trace_ctx():
+        fresh = (L, k1 - 1, mode) not in self._verify_jit
+        with self._dispatch_ctx(
+            "verify", "verify", (L, k1 - 1, mode), fresh,
+            lanes=L, k=k1 - 1, live=n_live,
+        ):
             out, n_acc, paged, slots = self._verify_for(L, k1 - 1, mode)(
                 self.params, paged, slots,
                 jnp.asarray(tokens, jnp.int32),
@@ -495,7 +581,11 @@ class ModelRunner:
         accepted lengths are known. Returns (drafts (L, K), probs, paged,
         stacked per-step state, ring undo)."""
         t0 = self.clock()
-        with self._trace_ctx():
+        fresh = (len(lanes), k, sample) not in self._draft_jit
+        with self._dispatch_ctx(
+            "draft", "draft", (len(lanes), k, sample), fresh,
+            lanes=len(lanes), k=k,
+        ):
             out = self._draft_for(len(lanes), k, sample)(
                 self.params, paged, slots,
                 jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
@@ -534,7 +624,10 @@ class ModelRunner:
         """Roll the drafter back to the verifier's accepted lengths: keep
         ring writes / recurrent state through step n_acc, restore the rest."""
         t0 = self.clock()
-        with self._trace_ctx():
+        fresh = len(lanes) not in self._commit_jit
+        with self._dispatch_ctx(
+            "commit", "commit", len(lanes), fresh, lanes=len(lanes)
+        ):
             paged, slots = self._commit_for(len(lanes))(
                 paged, slots, stacked, undo,
                 jnp.asarray(n_acc, jnp.int32), jnp.asarray(lanes, jnp.int32),

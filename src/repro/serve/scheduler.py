@@ -48,6 +48,8 @@ from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.trace import NULL_TRACER
+
 
 @dataclasses.dataclass
 class Request:
@@ -140,6 +142,7 @@ class Scheduler:
         gather_live_lanes: bool = True,
         admission: str = "fifo",
         clock: Callable[[], float] = time.monotonic,
+        tracer=NULL_TRACER,
     ):
         if admission not in ("fifo", "slo"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -151,6 +154,11 @@ class Scheduler:
         self.gather_live_lanes = gather_live_lanes
         self.admission = admission
         self.clock = clock
+        # Lifecycle event emitter (DESIGN.md §13). The default NullTracer
+        # makes every emit a no-op attribute call; a real Tracer must be
+        # built on the same clock as the scheduler or its timestamps will
+        # not cohere with submit_time/first_tok_t.
+        self.tracer = tracer
         self.num_preempted = 0  # lifetime preempt-and-requeue count
 
         self.queue: Deque[Request] = deque()
@@ -208,6 +216,11 @@ class Scheduler:
                     tier=tier, priority=priority,
                     slo_ttft=slo_ttft, slo_tpot=slo_tpot)
         )
+        self.tracer.instant(
+            "submit", rid=rid, tier=tier, priority=priority,
+            prompt_len=len(prompt), max_new=max_new,
+        )
+        self.tracer.begin("queued", rid=rid)
         return rid
 
     def _select_admission(self) -> int:
@@ -269,6 +282,11 @@ class Scheduler:
         plus the already-generated tokens; the runner's sampled token is
         discarded — the pending token is the one sampled before preemption,
         so the resumed stream is byte-identical to an unpreempted run."""
+        self.tracer.end("queued", rid=req.rid)
+        self.tracer.instant(
+            "resume" if req.done else "admit", rid=req.rid, slot=slot
+        )
+        self.tracer.begin("running", rid=req.rid, slot=slot)
         self.pos[slot] = req.prefill_len
         self.active[slot] = True
         self.cur[slot] = req.done[-1] if req.done else first_token
@@ -369,6 +387,11 @@ class Scheduler:
         self.free.append(slot)
         self.queue.appendleft(req)
         self.num_preempted += 1
+        self.tracer.end("running", rid=req.rid)
+        self.tracer.instant(
+            "preempt", rid=req.rid, slot=slot, generated=len(req.done)
+        )
+        self.tracer.begin("queued", rid=req.rid)
         return req
 
     def _maybe_finish(self, slot: int, now: float) -> Optional[Completion]:
@@ -395,6 +418,14 @@ class Scheduler:
         self.active[slot] = False
         self.slot_req[slot] = None
         self.free.append(slot)
+        self.tracer.end("running", rid=req.rid)
+        # "finish" = the request ran to its natural end (eos/length);
+        # "evict" = the engine pushed it out (cache_full). The schema's
+        # conservation law counts both as terminal: submit == finish+evict.
+        self.tracer.instant(
+            "evict" if reason == "cache_full" else "finish",
+            rid=req.rid, reason=reason, tokens=len(self.slot_gen[slot]),
+        )
         return Completion(
             rid=req.rid,
             prompt=req.prompt,

@@ -67,9 +67,11 @@ from repro.models.model import Model
 from repro.serve.cache import BlockCacheManager
 from repro.serve.drafters import PromptLookupDrafter
 from repro.serve.engine import admit_prefill, ensure_pages
-from repro.serve.runner import ModelRunner, RunnerStats
+from repro.serve.obs import MetricsRegistry
+from repro.serve.runner import _STAT_FIELDS, ModelRunner, RunnerStats
 from repro.serve.scheduler import Completion, Scheduler
 from repro.serve.shard import ServeMesh
+from repro.serve.trace import NULL_TRACER
 
 Params = Dict
 
@@ -115,6 +117,9 @@ class SpecCoordinator:
         admission: str = "fifo",
         mesh: Optional[ServeMesh] = None,
         clock: Callable[[], float] = time.monotonic,
+        registry: Optional[MetricsRegistry] = None,
+        tracer=NULL_TRACER,
+        name: str = "spec",
     ):
         # model-free drafting (serve/drafters.py): no drafter stack at all —
         # drafts come from prompt lookup over the stream's own tokens
@@ -174,6 +179,12 @@ class SpecCoordinator:
         self.max_len = max_len
         self.exhaust_policy = exhaust_policy
         self.clock = clock
+        # Observability (DESIGN.md §13): one registry for the pair; the
+        # tracer is scoped per side so verifier/drafter dispatches get
+        # their own tracks while request lifecycles share `<name>/reqN`.
+        self.name = name
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer.scoped(name)
 
         # cross-vocab bridge: built only when the tokenizers differ
         # (prompt lookup drafts in the verifier vocab — never any bridge)
@@ -214,11 +225,15 @@ class SpecCoordinator:
             verifier_model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=num_pages,
             prefix_cache=prefix_cache, mesh=mesh,
+            registry=self.registry, tracer=self.tracer.scoped("verifier"),
+            name="verifier",
         )
         self.cache_d = None if self.pld is not None else BlockCacheManager(
             drafter_model, num_slots=max_batch, max_len=max_len,
             page_size=page_size, num_pages=drafter_num_pages,
             prefix_cache=prefix_cache,
+            registry=self.registry, tracer=self.tracer.scoped("drafter"),
+            name="drafter",
         )
         stacks = [("verifier", self.cache_v.geom)]
         if self.cache_d is not None:
@@ -235,13 +250,17 @@ class SpecCoordinator:
             bucket_cap=self.cache_v.geom.max_len,
             min_bucket=max(8, page_size),
             gather_live_lanes=gather_live_lanes,
-            admission=admission, clock=clock,
+            admission=admission, clock=clock, tracer=self.tracer,
         )
         self.runner_v = ModelRunner(
-            verifier_model, verifier_params, clock=clock, mesh=mesh
+            verifier_model, verifier_params, clock=clock, mesh=mesh,
+            registry=self.registry, tracer=self.tracer.scoped("verifier"),
+            name="verifier",
         )
         self.runner_d = None if self.pld is not None else ModelRunner(
-            drafter_model, drafter_params, clock=clock
+            drafter_model, drafter_params, clock=clock,
+            registry=self.registry, tracer=self.tracer.scoped("drafter"),
+            name="drafter",
         )
         self.base_key = jax.random.key(seed)
         self.draft_key = jax.random.key(seed + 1)
@@ -477,6 +496,14 @@ class SpecCoordinator:
         now = self.clock()
         committed = 0
         for i, sl in enumerate(live):
+            n = int(n_acc[i])
+            # "accept" = at least one draft survived verification this
+            # round; "reject" = the whole window was thrown away and only
+            # the correction token advanced the stream
+            self.tracer.instant(
+                "accept" if n else "reject", rid=sched.slot_req[sl].rid,
+                accepted=n, window=k,
+            )
             before = sched.ngen(sl)
             fin = sched.on_tokens(sl, list(out[i, : n_acc[i] + 1]), now)
             if fin is not None:
@@ -512,13 +539,19 @@ class SpecCoordinator:
         there) with the drafter's wall time folded in, so throughput is
         end-to-end for the pair, not verifier-only."""
         v = self.runner_v.stats
-        out = RunnerStats()
-        out.__dict__.update(v.__dict__)
+        out = RunnerStats(engine="pair")  # detached view: own registry
+        for f in _STAT_FIELDS:
+            setattr(out, f, getattr(v, f))
         if self.runner_d is not None:
             d = self.runner_d.stats
             out.prefill_s += d.prefill_s
             out.spec_s += d.spec_s
         return out
+
+    def metrics(self) -> Dict[str, Dict]:
+        """Machine-readable dump of the pair's registry (verifier and
+        drafter series side by side under their engine labels)."""
+        return self.registry.snapshot()
 
     @property
     def prefix_stats(self) -> Dict[str, int]:

@@ -1,0 +1,459 @@
+"""Request-lifecycle tracing for the serve stack (DESIGN.md §13).
+
+A `Tracer` collects typed, clock-stamped events from every layer of the
+stack — scheduler lifecycle instants, runner dispatch spans, cache
+prefix/COW instants, router decisions — into one append-only list that
+can be (a) validated against the event schema (`validate_events`) and
+(b) exported as Chrome/Perfetto ``trace_event`` JSON (`perfetto_trace`)
+for ui.perfetto.dev.
+
+Event taxonomy (the schema; names outside it fail validation):
+
+- instants (``ph="i"``): ``submit``, ``admit``, ``resume``, ``preempt``,
+  ``finish``, ``evict``, ``prefix_hit``, ``cow_copy``, ``accept``,
+  ``reject``, ``route``.
+- spans (``ph="B"``/``"E"``, strictly nested per track): ``queued`` and
+  ``running`` (request residency), ``prefill_chunk``, ``decode_step``,
+  ``verify``, ``draft``, ``commit`` (program dispatches), ``compile``
+  (jit-cache misses — their own track, so the O(log max_len) bucket
+  story is visible as a row of slices that stops once buckets warm).
+
+Clock semantics: events are stamped on the tracer's *injected clock* —
+``time.monotonic`` in prod, the fleet's `VirtualClock` in sim. Clock
+*reads* are pure (`VirtualClock.now` does not advance), so stamping an
+event can never perturb scheduling decisions or model outputs; pass the
+same clock to the tracer as to the engine or timestamps from different
+layers won't be coherent. Timestamps are monotone **per track**, not
+globally: the fleet simulator deliberately back-dates ``submit``
+instants to the request's true arrival time (DESIGN.md §11), which may
+precede dispatch events already emitted on other tracks.
+
+Tracks: each request gets its own track (``req<rid>``, scoped by engine
+name — ``llm/req3``), dispatches land on ``<engine>/dispatch``, compiles
+on ``<engine>/compile``, cache events on ``<engine>/cache``, router
+decisions on ``router``. `Tracer.scoped(prefix)` returns a lightweight
+view that prefixes track names — how a router or spec coordinator gives
+each engine its own track namespace over one shared event list.
+
+The disabled path is `NULL_TRACER`: every emit is a constant-attribute
+no-op and `span()` returns a cached null context manager, so an
+untraced engine runs the same instruction stream it did before this
+module existed (byte-identity asserted per cache family in
+tests/test_obs.py).
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "INSTANT_EVENTS",
+    "SPAN_EVENTS",
+    "EVENT_TYPES",
+    "TraceEvent",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "validate_events",
+    "perfetto_trace",
+    "write_perfetto",
+]
+
+INSTANT_EVENTS = frozenset(
+    {
+        "submit",
+        "admit",
+        "resume",
+        "preempt",
+        "finish",
+        "evict",
+        "prefix_hit",
+        "cow_copy",
+        "accept",
+        "reject",
+        "route",
+    }
+)
+SPAN_EVENTS = frozenset(
+    {
+        "queued",
+        "running",
+        "prefill_chunk",
+        "decode_step",
+        "draft",
+        "verify",
+        "commit",
+        "compile",
+    }
+)
+EVENT_TYPES = INSTANT_EVENTS | SPAN_EVENTS
+
+
+class TraceEvent:
+    """One emitted record: ``ph`` is ``"i"`` (instant), ``"B"`` or ``"E"``
+    (span begin/end); ``ts`` is in the tracer clock's seconds; ``track``
+    is the resolved display row; ``rid`` is the engine-local request id
+    for lifecycle events (None for dispatch/cache/router rows)."""
+
+    __slots__ = ("name", "ph", "ts", "track", "rid", "args")
+
+    def __init__(
+        self,
+        name: str,
+        ph: str,
+        ts: float,
+        track: str,
+        rid: Optional[int],
+        args: Dict[str, object],
+    ):
+        self.name = name
+        self.ph = ph
+        self.ts = ts
+        self.track = track
+        self.rid = rid
+        self.args = args
+
+    def __repr__(self) -> str:  # debugging aid only
+        return (
+            f"TraceEvent({self.name!r}, {self.ph!r}, ts={self.ts:.6f}, "
+            f"track={self.track!r}, rid={self.rid}, args={self.args!r})"
+        )
+
+
+def _resolve_track(prefix: str, track: Optional[str], rid: Optional[int]) -> str:
+    t = track if track is not None else (f"req{rid}" if rid is not None else "main")
+    return f"{prefix}/{t}" if prefix else t
+
+
+class _Span:
+    """Context manager emitting a B on enter and a matching E on exit."""
+
+    __slots__ = ("_t", "_name", "_track", "_rid", "_args")
+
+    def __init__(self, tracer, name, track, rid, args):
+        self._t = tracer
+        self._name = name
+        self._track = track
+        self._rid = rid
+        self._args = args
+
+    def __enter__(self):
+        self._t._emit(self._name, "B", self._track, self._rid, self._args)
+        return self
+
+    def __exit__(self, *exc):
+        self._t._emit(self._name, "E", self._track, self._rid, {})
+        return False
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """The default tracer: every method is a no-op, ``span()`` hands back
+    one cached null context manager, ``scoped()`` returns itself. Kept
+    deliberately dumb so the untraced hot path costs one attribute call
+    per would-be event."""
+
+    enabled = False
+    events: List[TraceEvent] = []  # always empty; shared sentinel
+
+    def instant(self, name: str, *, rid=None, track=None, **args) -> None:
+        pass
+
+    def begin(self, name: str, *, rid=None, track=None, **args) -> None:
+        pass
+
+    def end(self, name: str, *, rid=None, track=None, **args) -> None:
+        pass
+
+    def span(self, name: str, *, rid=None, track=None, **args) -> _NullSpan:
+        return _NULL_SPAN
+
+    def scoped(self, prefix: str) -> "NullTracer":
+        return self
+
+
+NULL_TRACER = NullTracer()
+
+
+class Tracer:
+    """Collects `TraceEvent`s stamped on the injected ``clock``.
+
+    One tracer is shared by every component of a serve stack (engine,
+    spec coordinator, router) so their events interleave on one
+    timeline; components get namespaced views via ``scoped()``."""
+
+    enabled = True
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.events: List[TraceEvent] = []
+
+    # The single append point — scoped views resolve tracks then call this.
+    def _emit(
+        self,
+        name: str,
+        ph: str,
+        track: str,
+        rid: Optional[int],
+        args: Dict[str, object],
+    ) -> None:
+        self.events.append(TraceEvent(name, ph, self.clock(), track, rid, args))
+
+    def instant(self, name: str, *, rid=None, track=None, **args) -> None:
+        self._emit(name, "i", _resolve_track("", track, rid), rid, args)
+
+    def begin(self, name: str, *, rid=None, track=None, **args) -> None:
+        self._emit(name, "B", _resolve_track("", track, rid), rid, args)
+
+    def end(self, name: str, *, rid=None, track=None, **args) -> None:
+        self._emit(name, "E", _resolve_track("", track, rid), rid, args)
+
+    def span(self, name: str, *, rid=None, track=None, **args) -> _Span:
+        return _Span(self, name, _resolve_track("", track, rid), rid, args)
+
+    def scoped(self, prefix: str) -> "_ScopedTracer":
+        return _ScopedTracer(self, prefix)
+
+    def clear(self) -> None:
+        self.events.clear()
+
+
+class _ScopedTracer:
+    """Namespace view over a base `Tracer`: same emit API, tracks get a
+    ``prefix/`` and events land in the base tracer's list."""
+
+    enabled = True
+    __slots__ = ("_base", "_prefix")
+
+    def __init__(self, base: Tracer, prefix: str):
+        self._base = base
+        self._prefix = prefix
+
+    @property
+    def events(self) -> List[TraceEvent]:
+        return self._base.events
+
+    @property
+    def clock(self) -> Callable[[], float]:
+        return self._base.clock
+
+    def _emit(self, name, ph, track, rid, args) -> None:
+        self._base._emit(name, ph, track, rid, args)
+
+    def instant(self, name: str, *, rid=None, track=None, **args) -> None:
+        self._base._emit(
+            name, "i", _resolve_track(self._prefix, track, rid), rid, args
+        )
+
+    def begin(self, name: str, *, rid=None, track=None, **args) -> None:
+        self._base._emit(
+            name, "B", _resolve_track(self._prefix, track, rid), rid, args
+        )
+
+    def end(self, name: str, *, rid=None, track=None, **args) -> None:
+        self._base._emit(
+            name, "E", _resolve_track(self._prefix, track, rid), rid, args
+        )
+
+    def span(self, name: str, *, rid=None, track=None, **args) -> _Span:
+        return _Span(
+            self._base, name, _resolve_track(self._prefix, track, rid), rid, args
+        )
+
+    def scoped(self, prefix: str) -> "_ScopedTracer":
+        return _ScopedTracer(self._base, f"{self._prefix}/{prefix}")
+
+
+class _Nested:
+    """Enter several context managers in order, exit in reverse — used by
+    the runner to stack compile span + dispatch span + profiler
+    annotation + mesh context without per-call ExitStack overhead."""
+
+    __slots__ = ("_cms",)
+
+    def __init__(self, cms: Sequence):
+        self._cms = cms
+
+    def __enter__(self):
+        for cm in self._cms:
+            cm.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        ok = False
+        for cm in reversed(self._cms):
+            ok = cm.__exit__(*exc) or ok
+        return ok
+
+
+# --------------------------------------------------------------------------
+# Schema validation
+# --------------------------------------------------------------------------
+
+
+def validate_events(
+    events: Sequence[TraceEvent], *, require: Iterable[str] = ()
+) -> Dict[str, object]:
+    """Check an event stream against the schema; raise ValueError on the
+    first violation, return a summary dict on success.
+
+    Checks: (1) every name is in the taxonomy and used with its declared
+    phase (instants as ``i``, spans as ``B``/``E``); (2) timestamps are
+    non-decreasing per track (global monotonicity is deliberately NOT
+    required — the fleet simulator back-dates ``submit`` to arrival
+    time); (3) span begin/end are balanced and well-nested per track;
+    (4) request conservation: every submitted rid-track ends in exactly
+    one terminal event, and #submit == #finish + #evict overall;
+    (5) every name in ``require`` appears at least once."""
+    counts: Dict[str, int] = {}
+    last_ts: Dict[str, float] = {}
+    stacks: Dict[str, List[str]] = {}
+    submits: Dict[str, int] = {}
+    terminals: Dict[str, int] = {}
+    for i, ev in enumerate(events):
+        if ev.name not in EVENT_TYPES:
+            raise ValueError(f"event {i}: unknown event type {ev.name!r}")
+        if ev.name in INSTANT_EVENTS:
+            if ev.ph != "i":
+                raise ValueError(
+                    f"event {i}: instant {ev.name!r} emitted with ph={ev.ph!r}"
+                )
+        elif ev.ph not in ("B", "E"):
+            raise ValueError(
+                f"event {i}: span {ev.name!r} emitted with ph={ev.ph!r}"
+            )
+        if not isinstance(ev.ts, (int, float)) or math.isnan(ev.ts):
+            raise ValueError(f"event {i}: bad timestamp {ev.ts!r}")
+        prev = last_ts.get(ev.track)
+        if prev is not None and ev.ts < prev:
+            raise ValueError(
+                f"event {i}: timestamp regressed on track {ev.track!r} "
+                f"({ev.ts} < {prev})"
+            )
+        last_ts[ev.track] = ev.ts
+        if ev.ph == "B":
+            stacks.setdefault(ev.track, []).append(ev.name)
+        elif ev.ph == "E":
+            st = stacks.get(ev.track)
+            if not st:
+                raise ValueError(
+                    f"event {i}: end of {ev.name!r} with no open span on "
+                    f"track {ev.track!r}"
+                )
+            if st[-1] != ev.name:
+                raise ValueError(
+                    f"event {i}: end of {ev.name!r} but innermost open span "
+                    f"on track {ev.track!r} is {st[-1]!r}"
+                )
+            st.pop()
+        if ev.ph != "E":  # count spans once (their B), instants once
+            counts[ev.name] = counts.get(ev.name, 0) + 1
+        if ev.name == "submit":
+            submits[ev.track] = submits.get(ev.track, 0) + 1
+        elif ev.name in ("finish", "evict"):
+            terminals[ev.track] = terminals.get(ev.track, 0) + 1
+    for track, st in stacks.items():
+        if st:
+            raise ValueError(f"unbalanced spans on track {track!r}: {st}")
+    n_submit = counts.get("submit", 0)
+    n_done = counts.get("finish", 0) + counts.get("evict", 0)
+    if n_submit != n_done:
+        raise ValueError(
+            f"request conservation violated: {n_submit} submits vs "
+            f"{n_done} finish+evict"
+        )
+    for track, n in submits.items():
+        if terminals.get(track, 0) != n:
+            raise ValueError(
+                f"track {track!r}: {n} submits but "
+                f"{terminals.get(track, 0)} terminal events"
+            )
+    missing = [name for name in require if counts.get(name, 0) == 0]
+    if missing:
+        raise ValueError(f"required event types never emitted: {missing}")
+    return {
+        "events": len(events),
+        "counts": dict(sorted(counts.items())),
+        "tracks": len(last_ts),
+        "requests": sum(submits.values()),
+    }
+
+
+# --------------------------------------------------------------------------
+# Perfetto export
+# --------------------------------------------------------------------------
+
+
+def perfetto_trace(
+    events: Sequence[TraceEvent], *, process_name: str = "serve"
+) -> Dict[str, object]:
+    """Render events as a Chrome/Perfetto ``trace_event`` JSON object.
+
+    Mapping: one pid (the serve stack); each track becomes a tid with a
+    ``thread_name`` metadata record, so requests show as one row each,
+    dispatch slices on the ``<engine>/dispatch`` rows, and compiles on
+    their own ``<engine>/compile`` row. Timestamps are rebased to the
+    earliest event and converted to microseconds (the trace_event unit).
+    Open in https://ui.perfetto.dev via "Open trace file"."""
+    out: List[Dict[str, object]] = [
+        {
+            "ph": "M",
+            "name": "process_name",
+            "pid": 1,
+            "tid": 0,
+            "args": {"name": process_name},
+        }
+    ]
+    t0 = min((ev.ts for ev in events), default=0.0)
+    tids: Dict[str, int] = {}
+    for ev in events:
+        tid = tids.get(ev.track)
+        if tid is None:
+            tid = tids[ev.track] = len(tids) + 1
+            out.append(
+                {
+                    "ph": "M",
+                    "name": "thread_name",
+                    "pid": 1,
+                    "tid": tid,
+                    "args": {"name": ev.track},
+                }
+            )
+        rec: Dict[str, object] = {
+            "name": ev.name,
+            "ph": ev.ph,
+            "cat": "serve",
+            "pid": 1,
+            "tid": tid,
+            "ts": (ev.ts - t0) * 1e6,
+        }
+        if ev.ph == "i":
+            rec["s"] = "t"  # thread-scoped instant
+        args = dict(ev.args) if ev.args else {}
+        if ev.rid is not None:
+            args.setdefault("rid", ev.rid)
+        if args and ev.ph != "E":
+            rec["args"] = args
+        out.append(rec)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_perfetto(
+    events: Sequence[TraceEvent], path: str, *, process_name: str = "serve"
+) -> None:
+    with open(path, "w") as f:
+        json.dump(perfetto_trace(events, process_name=process_name), f)

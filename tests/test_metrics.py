@@ -106,3 +106,35 @@ def test_latency_window_single_sample_summary():
     w = LatencyWindow()
     w.record(0.0123)
     assert w.summary_ms() == "p50/p95/p99 12.3/12.3/12.3ms"
+
+
+def test_latency_window_unbounded():
+    w = LatencyWindow(maxlen=None)
+    for i in range(10_000):
+        w.record(float(i))
+    assert len(w) == 10_000 and w.count == 10_000
+    assert w.percentile(100) == 9999.0
+
+
+def test_latency_window_merge():
+    a, b = LatencyWindow(maxlen=None), LatencyWindow(maxlen=None)
+    for x in (1.0, 3.0):
+        a.record(x)
+    for x in (2.0, 4.0):
+        b.record(x)
+    out = a.merge(b)
+    assert out is a  # chains
+    assert sorted(a.values()) == [1.0, 2.0, 3.0, 4.0]
+    assert a.count == 4
+    assert b.values() == [2.0, 4.0]  # source untouched
+    # merged percentiles == percentiles of the pooled samples
+    assert a.percentiles() == percentiles([1.0, 2.0, 3.0, 4.0])
+
+
+def test_latency_window_merge_respects_bound():
+    a = LatencyWindow(maxlen=3)
+    b = LatencyWindow()
+    for x in (1.0, 2.0, 3.0, 4.0):
+        b.record(x)
+    a.merge(b)
+    assert len(a) == 3 and a.count == 4  # window bounded, count lifetime

@@ -1,0 +1,458 @@
+"""Observability: metrics registry, lifecycle tracing, Perfetto export
+(serve/obs.py + serve/trace.py, DESIGN.md §13).
+
+The load-bearing invariant: observability must be *free to refuse* and
+*harmless to accept*. Concretely —
+
+1. `NULL_TRACER` (the default) emits nothing and engines built with it
+   behave exactly as before this subsystem existed;
+2. a live `Tracer` only *reads* the injected clock, so enabling it
+   changes no engine output: byte-identity is asserted per cache family
+   for the plain engine and the speculative pair, and the fleet
+   simulation produces an identical `summarize()` report traced vs not;
+3. the emitted stream is schema-valid — taxonomy names only, balanced
+   well-nested spans per track, per-track monotone timestamps, and
+   request conservation (#submit == #finish + #evict);
+4. `RunnerStats` / the router's stats / the fleet report are now *views*
+   over one `MetricsRegistry` — asserted by comparing the views against
+   the registry series they claim to summarize.
+
+fp32 params throughout (byte-identity assertions; see test_serve.py).
+"""
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import (
+    EVENT_TYPES,
+    NULL_TRACER,
+    CostModel,
+    FleetSimulator,
+    MetricsRegistry,
+    NullTracer,
+    ServeEngine,
+    SpecCoordinator,
+    TraceEvent,
+    Tracer,
+    VirtualClock,
+    WorkloadConfig,
+    generate_workload,
+    perfetto_trace,
+    summarize,
+    validate_events,
+)
+
+MAX_LEN = 48
+
+PREFIX_FAMILIES = [
+    ("qwen2-1.5b", "chain"),
+    ("deepseek-v3-671b", "chain"),
+    ("gemma-2b-swa", "snapshot"),
+    ("xlstm-1.3b", "snapshot"),
+    ("jamba-1.5-large-398b", "snapshot"),
+]
+
+
+def _setup(arch, seed=0):
+    if arch == "gemma-2b-swa":
+        from repro.configs.gemma_2b import sliding_variant
+
+        cfg = sliding_variant(get_arch("gemma-2b").reduced(), window=8)
+    else:
+        cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed), dtype=jnp.float32)
+    return cfg, model, params
+
+
+# -- metrics registry --------------------------------------------------------
+
+
+def test_registry_get_or_create_identity():
+    reg = MetricsRegistry()
+    a = reg.counter("reqs", engine="llm")
+    b = reg.counter("reqs", engine="llm")
+    c = reg.counter("reqs", engine="slm")
+    assert a is b and a is not c
+    a.inc()
+    a.value += 2
+    assert reg.value("reqs", engine="llm") == 3
+    assert reg.value("reqs", engine="slm") == 0
+    assert reg.value("reqs", engine="nope") is None
+
+
+def test_registry_counters_keep_ints_int():
+    """Token/step counters must print `72`, not `72.0` — existing stats
+    summaries and assertions rely on int arithmetic staying int."""
+    reg = MetricsRegistry()
+    c = reg.counter("toks")
+    c.value += 72
+    assert isinstance(c.value, int) and f"{c.value}" == "72"
+
+
+def test_registry_name_bound_to_one_kind():
+    reg = MetricsRegistry()
+    reg.counter("x", engine="a")
+    reg.counter("x", engine="b")  # same kind, new labels: fine
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+    with pytest.raises(ValueError):
+        reg.histogram("x", engine="c")
+
+
+def test_registry_snapshot_and_prometheus():
+    reg = MetricsRegistry()
+    reg.counter("reqs", engine="llm").inc(4)
+    reg.gauge("occupancy").set(0.5)
+    h = reg.histogram("ttft_s", tier="interactive")
+    for x in (0.1, 0.2, 0.3):
+        h.record(x)
+    snap = reg.snapshot()
+    assert snap["reqs"]["type"] == "counter"
+    assert snap["reqs"]["series"] == [
+        {"labels": {"engine": "llm"}, "value": 4}
+    ]
+    assert snap["occupancy"]["series"][0]["value"] == 0.5
+    row = snap["ttft_s"]["series"][0]
+    assert row["labels"] == {"tier": "interactive"}
+    assert row["count"] == 3 and row["n"] == 3
+    assert row["p50"] == pytest.approx(0.2)
+    text = reg.prometheus_text()
+    assert "# TYPE reqs counter" in text
+    assert 'reqs{engine="llm"} 4' in text
+    assert "# TYPE ttft_s summary" in text
+    assert 'ttft_s{quantile="0.5",tier="interactive"}' in text
+    assert 'ttft_s_count{tier="interactive"} 3' in text
+
+
+def test_registry_histogram_is_latency_window_dropin():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", maxlen=2)
+    for x in (1.0, 2.0, 3.0):
+        h.observe(x)
+    assert len(h) == 2 and h.count == 3  # bounded window, lifetime count
+    assert h.values() == [2.0, 3.0]
+    assert "ms" in h.summary_ms()
+
+
+# -- tracer ------------------------------------------------------------------
+
+
+def test_tracer_spans_balance_and_stamp_clock():
+    clock = VirtualClock()
+    tr = Tracer(clock=clock)
+    tr.instant("submit", rid=0, prompt_len=3)
+    clock.advance(1.0)
+    with tr.span("decode_step", track="dispatch", lanes=2):
+        clock.advance(0.5)
+    tr.instant("finish", rid=0)
+    names = [(e.name, e.ph, e.ts) for e in tr.events]
+    assert names == [
+        ("submit", "i", 0.0),
+        ("decode_step", "B", 1.0),
+        ("decode_step", "E", 1.5),
+        ("finish", "i", 1.5),
+    ]
+    assert tr.events[0].track == "req0" and tr.events[1].track == "dispatch"
+    rep = validate_events(tr.events)
+    assert rep["counts"] == {"submit": 1, "decode_step": 1, "finish": 1}
+    tr.clear()
+    assert tr.events == []
+
+
+def test_scoped_tracer_prefixes_tracks():
+    tr = Tracer(clock=lambda: 0.0)
+    sc = tr.scoped("llm")
+    sc.instant("submit", rid=3)
+    sc.scoped("verifier").instant("prefix_hit", track="cache")
+    assert [e.track for e in tr.events] == ["llm/req3", "llm/verifier/cache"]
+    assert sc.events is tr.events  # one shared list
+
+
+def test_null_tracer_is_inert():
+    nt = NullTracer()
+    nt.instant("submit", rid=0)
+    with nt.span("decode_step"):
+        pass
+    assert nt.events == [] and NULL_TRACER.events == []
+    assert nt.scoped("x") is nt and not nt.enabled
+
+
+# -- schema validation -------------------------------------------------------
+
+
+def _ev(name, ph, ts, track="t", rid=None):
+    return TraceEvent(name, ph, ts, track, rid, {})
+
+
+def test_validate_rejects_unknown_and_misphased():
+    with pytest.raises(ValueError, match="unknown event"):
+        validate_events([_ev("teleport", "i", 0.0)])
+    with pytest.raises(ValueError, match="ph="):
+        validate_events([_ev("submit", "B", 0.0)])  # instant as span
+    with pytest.raises(ValueError, match="ph="):
+        validate_events([_ev("decode_step", "i", 0.0)])  # span as instant
+
+
+def test_validate_rejects_time_regression_per_track_only():
+    # regression on one track: error
+    with pytest.raises(ValueError, match="regressed"):
+        validate_events([
+            _ev("prefix_hit", "i", 1.0), _ev("prefix_hit", "i", 0.5),
+        ])
+    # same timestamps interleaved across DIFFERENT tracks: fine (the
+    # fleet simulator back-dates submit instants to arrival time)
+    validate_events([
+        _ev("cow_copy", "i", 1.0, track="cache"),
+        _ev("prefix_hit", "i", 0.2, track="other"),
+    ])
+
+
+def test_validate_rejects_unbalanced_spans():
+    with pytest.raises(ValueError, match="unbalanced"):
+        validate_events([_ev("decode_step", "B", 0.0)])
+    with pytest.raises(ValueError, match="no open span"):
+        validate_events([_ev("decode_step", "E", 0.0)])
+    with pytest.raises(ValueError, match="innermost"):
+        validate_events([
+            _ev("draft", "B", 0.0), _ev("verify", "B", 0.1),
+            _ev("draft", "E", 0.2), _ev("verify", "E", 0.3),
+        ])
+
+
+def test_validate_requires_conservation_and_coverage():
+    ok = [
+        _ev("submit", "i", 0.0, track="req0"),
+        _ev("finish", "i", 1.0, track="req0"),
+    ]
+    rep = validate_events(ok)
+    assert rep["requests"] == 1 and rep["tracks"] == 1
+    with pytest.raises(ValueError, match="conservation"):
+        validate_events(ok[:1])
+    with pytest.raises(ValueError, match="never emitted"):
+        validate_events(ok, require=("preempt",))
+    # evict is as terminal as finish
+    validate_events([
+        _ev("submit", "i", 0.0, track="req1"),
+        _ev("evict", "i", 1.0, track="req1"),
+    ])
+
+
+# -- perfetto export ---------------------------------------------------------
+
+
+def test_perfetto_export_structure():
+    tr = Tracer(clock=lambda: tr._now)
+    tr._now = 5.0
+    tr.instant("submit", rid=0)
+    tr._now = 5.001
+    with tr.span("decode_step", track="dispatch", lanes=2):
+        tr._now = 5.002
+    doc = perfetto_trace(tr.events, process_name="unit")
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {"process_name", "thread_name"} <= {m["name"] for m in meta}
+    assert meta[0]["args"]["name"] == "unit"
+    tracks = {m["args"]["name"] for m in meta if m["name"] == "thread_name"}
+    assert tracks == {"req0", "dispatch"}
+    body = [e for e in evs if e["ph"] != "M"]
+    assert body[0]["ts"] == 0.0  # rebased to the earliest event
+    assert body[0]["s"] == "t" and body[0]["args"]["rid"] == 0
+    assert body[1]["ph"] == "B" and body[1]["args"] == {"lanes": 2}
+    assert body[2]["ts"] == pytest.approx(2000.0)  # 2ms in microseconds
+    json.dumps(doc)  # serializable
+
+
+# -- tracing changes nothing (the invariant) ---------------------------------
+
+
+@pytest.mark.parametrize("arch,mode", PREFIX_FAMILIES)
+def test_traced_engine_byte_identical_per_family(arch, mode):
+    """Same traffic, same seeds: a fully traced engine (registry + live
+    tracer) must emit byte-identical tokens to the default engine, for
+    every cache family — tracing reads clocks, never schedules."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(3)
+    shared = list(rng.randint(5, cfg.vocab_size, (12,)))
+    prompts = [
+        shared + list(rng.randint(5, cfg.vocab_size, (5,))),
+        list(rng.randint(5, cfg.vocab_size, (3,))),
+        shared + list(rng.randint(5, cfg.vocab_size, (9,))),
+    ]
+    outs = {}
+    for traced in (False, True):
+        tracer = Tracer() if traced else NULL_TRACER
+        eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN,
+                          seed=0, prefix_cache=True,
+                          tracer=tracer, name="llm")
+        assert eng.cache.prefix_mode == mode
+        for p in prompts:
+            eng.submit(p, max_new=6)
+        outs[traced] = {c.rid: c.tokens for c in eng.run()}
+    assert outs[True] == outs[False], f"{arch}: tracing changed outputs"
+    rep = validate_events(tracer.events, require=(
+        "submit", "admit", "prefill_chunk", "decode_step", "prefix_hit",
+        "compile", "finish",
+    ))
+    assert rep["requests"] == len(prompts)
+
+
+def test_traced_spec_byte_identical():
+    cfg, model, params = _setup("qwen2-1.5b")
+    dcfg, dmodel, dparams = _setup("xlstm-1.3b", seed=1)
+    rng = np.random.RandomState(5)
+    prompts = [list(rng.randint(5, 60, (n,))) for n in (6, 9)]
+    outs = {}
+    for traced in (False, True):
+        tracer = Tracer() if traced else NULL_TRACER
+        spec = SpecCoordinator(model, params, dmodel, dparams, max_batch=2,
+                               max_len=MAX_LEN, k=3, seed=0, tracer=tracer)
+        for p in prompts:
+            spec.submit(p, max_new=6)
+        outs[traced] = {c.rid: c.tokens for c in spec.run()}
+    assert outs[True] == outs[False], "tracing changed speculative outputs"
+    rep = validate_events(tracer.events, require=(
+        "submit", "draft", "verify", "finish",
+    ))
+    assert rep["counts"].get("accept", 0) + rep["counts"].get("reject", 0) > 0
+
+
+def test_traced_engine_emits_preempts_on_oversubscribed_pool():
+    cfg, model, params = _setup("qwen2-1.5b")
+    tracer = Tracer()
+    eng = ServeEngine(model, params, max_batch=3, max_len=MAX_LEN, seed=0,
+                      page_size=4, num_pages=10, exhaust_policy="preempt",
+                      tracer=tracer, name="llm")
+    rng = np.random.RandomState(0)
+    for i in range(3):
+        eng.submit(list(rng.randint(5, 60, (8,))), max_new=12)
+    eng.run()
+    rep = validate_events(tracer.events, require=("preempt", "resume"))
+    # a preempted request re-enters the queue: its track shows
+    # running -> preempt -> queued -> resume -> running, still conserved
+    assert rep["counts"]["preempt"] >= 1
+    assert rep["counts"]["submit"] == 3
+
+
+def test_fleet_summarize_identical_traced_vs_not():
+    """Same seeded workload through a traced and an untraced engine on
+    their own virtual clocks: identical completions, identical report —
+    the tracer reads the clock, never advances it."""
+    def run(traced):
+        cfg, model, params = _setup("qwen2-1.5b")
+        clock = VirtualClock()
+        tracer = Tracer(clock=clock) if traced else NULL_TRACER
+        eng = ServeEngine(model, params, max_batch=4, max_len=128, seed=0,
+                          admission="slo", chunked_prefill=16, clock=clock,
+                          tracer=tracer, name="fleet")
+        wl = generate_workload(WorkloadConfig(
+            rate=6.0, horizon=3.0, seed=0, vocab_size=63, prompt_max=64))
+        sim = FleetSimulator(eng, clock, CostModel())
+        comps = sim.run(wl)
+        rep = summarize(comps, clock.now, eng.scheduler.num_preempted,
+                        offered=len(wl))
+        return rep, sim, eng, tracer
+
+    rep0, _, _, _ = run(traced=False)
+    rep1, sim, eng, tracer = run(traced=True)
+    assert rep0 == rep1, "tracing perturbed the fleet simulation"
+    vrep = validate_events(tracer.events, require=("submit", "finish"))
+    assert vrep["requests"] == rep1["completed"]
+
+    # the registry view reconstructs the module-level report exactly
+    reg_rep = sim.summarize(rep1["duration_s"],
+                            num_preempted=eng.scheduler.num_preempted,
+                            offered=rep1["offered"])
+    assert _nan_eq(reg_rep, rep1)
+
+
+def _nan_eq(a, b):
+    if isinstance(a, dict) and isinstance(b, dict):
+        return set(a) == set(b) and all(_nan_eq(a[k], b[k]) for k in a)
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    return a == b
+
+
+# -- stats as registry views -------------------------------------------------
+
+
+def test_runner_stats_are_registry_views():
+    cfg, model, params = _setup("qwen2-1.5b")
+    reg = MetricsRegistry()
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+                      registry=reg, name="llm")
+    eng.submit([1, 2, 3], max_new=4)
+    eng.run()
+    st = eng.stats
+    assert st.decode_tokens > 0
+    assert reg.value("serve_decode_tokens", engine="llm") == st.decode_tokens
+    assert reg.value("serve_prefill_tokens", engine="llm") == st.prefill_tokens
+    assert isinstance(st.decode_steps, int)
+    # engine gauges were refreshed on the last step
+    assert reg.value("engine_active", engine="llm") == 0.0
+    snap = eng.metrics()
+    assert "serve_decode_tokens" in snap and "engine_free_pages" in snap
+
+
+def test_cache_prefix_counters_are_registry_views():
+    cfg, model, params = _setup("qwen2-1.5b")
+    reg = MetricsRegistry()
+    eng = ServeEngine(model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+                      prefix_cache=True, registry=reg, name="llm")
+    shared = list(range(1, 13))
+    for tail in ([20, 21], [22, 23]):
+        eng.submit(shared + tail, max_new=4)
+    eng.run()
+    ps = eng.prefix_stats
+    assert ps["hits"] >= 1
+    assert reg.value("cache_prefix_hits", engine="llm") == ps["hits"]
+    assert reg.value("cache_prefix_lookups", engine="llm") == ps["lookups"]
+
+
+def test_router_stats_dict_matches_summary():
+    from repro.data.synthetic import generate_corpus
+    from repro.data.tokenizer import build_tokenizer
+    from repro.serve import CloudEdgeRouter, EngineSpec, prompt_length_policy
+
+    tok = build_tokenizer(
+        "t", [s.text for s in generate_corpus(20, seed=0)],
+        max_piece=6, budget=64,
+    )
+    cfg = dataclasses.replace(
+        get_arch("qwen2-1.5b").reduced(), vocab_size=tok.vocab_size
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    reg = MetricsRegistry()
+    kw = dict(max_batch=2, max_len=MAX_LEN, seed=0)
+    llm = EngineSpec("llm", ServeEngine(model, params, registry=reg,
+                                        name="llm", **kw), tok)
+    slm = EngineSpec("slm", ServeEngine(model, params, registry=reg,
+                                        name="slm", **kw), tok)
+    router = CloudEdgeRouter(llm, [slm], policy=prompt_length_policy(4),
+                             registry=reg)
+    for toks in ([1, 2], [1, 2, 3, 4, 5, 6], [7, 8]):
+        router.submit(tokens=toks, max_new=3)
+    router.run()
+    d = router.stats_dict()
+    assert set(d) == {"tiers", "overall"}
+    assert set(d["tiers"]) == {"llm", "slm"}
+    total = sum(t["routed"] for t in d["tiers"].values())
+    assert total == 3
+    assert d["overall"]["completed"] == 3
+    assert reg.value("router_requests", tier="slm") == d["tiers"]["slm"]["routed"]
+    # the summary string is a formatter over the dict, nothing more
+    s = router.stats_summary()
+    for name, t in d["tiers"].items():
+        assert f"{name}: prefill {t['prefill_tokens']} tok" in s
+    # every engine's counters live in the one shared registry
+    assert reg.value("serve_decode_tokens", engine="slm") is not None
