@@ -8,7 +8,9 @@ Per arch family (attention / MoE / recurrent):
   every step) — the perf point of the ModelRunner;
 - engine-level TTFT p50/p95 and mean batch occupancy over a request wave
   streaming through a small pool;
-- compiled-program counts (pow2 prompt buckets / lane buckets).
+- compiled-program counts (pow2 prompt buckets / lane buckets);
+- first-request TTFT cold vs after ``ServeEngine.warmup()`` pre-compiled
+  the bucket ladders through the ProgramStore (DESIGN.md §14).
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract and
 writes the full metric set to ``BENCH_serve.json`` so the perf trajectory
@@ -118,6 +120,36 @@ def bench_engine_wave(model, params, cfg, batch, plen, gen, n_req):
     }
 
 
+def bench_first_request_ttft(model, params, cfg, batch, plen, gen, max_len):
+    """First-request TTFT on a cold engine (every compile lands on the
+    request path) vs an engine whose ProgramStore pre-compiled the bucket
+    ladders via ``warmup()`` (DESIGN.md §14) — the cold-start cost AOT
+    warmup removes."""
+    from repro.serve import ServeEngine
+
+    rng = np.random.RandomState(2)
+    prompt = list(rng.randint(1, cfg.vocab_size, (plen,)))
+
+    cold = ServeEngine(model, params, max_batch=batch, max_len=max_len, seed=0)
+    cold.submit(prompt, max_new=gen)
+    t_cold = cold.run()[0].ttft_s
+
+    warm = ServeEngine(model, params, max_batch=batch, max_len=max_len, seed=0)
+    t0 = time.time()
+    built = warm.warmup()
+    warmup_s = time.time() - t0
+    pre = warm.runner.stats.compiles
+    warm.submit(prompt, max_new=gen)
+    t_warm = warm.run()[0].ttft_s
+    return {
+        "first_ttft_cold_ms": t_cold * 1e3,
+        "first_ttft_warmed_ms": t_warm * 1e3,
+        "warmup_s": warmup_s,
+        "warmup_programs": len(built),
+        "warmed_wave_compiles": warm.runner.stats.compiles - pre,
+    }
+
+
 def run_arch(arch: str, b: int, plen: int, gen: int):
     from repro.configs import get_arch
     from repro.models.model import build_model
@@ -138,6 +170,7 @@ def run_arch(arch: str, b: int, plen: int, gen: int):
         model, params, cfg, pool, plen, gen, max_len, gather=False
     )
     wave = bench_engine_wave(model, params, cfg, b, plen, gen, n_req=2 * b)
+    first = bench_first_request_ttft(model, params, cfg, b, plen, gen, max_len)
 
     rows = [
         (f"serve_prefill_fused_{arch}", t_fused * 1e6,
@@ -152,6 +185,12 @@ def run_arch(arch: str, b: int, plen: int, gen: int):
          f"occ {wave['mean_occupancy']:.2f}"),
         (f"serve_ttft_p95_{arch}", wave["ttft_p95_ms"] * 1e3,
          f"{len(wave['prefill_programs'])}buckets"),
+        (f"serve_first_ttft_cold_{arch}", first["first_ttft_cold_ms"] * 1e3,
+         f"{first['warmup_programs']}progs"),
+        (f"serve_first_ttft_warmed_{arch}",
+         first["first_ttft_warmed_ms"] * 1e3,
+         f"{first['first_ttft_cold_ms'] / first['first_ttft_warmed_ms']:.1f}x"
+         if first["first_ttft_warmed_ms"] else "inf"),
     ]
     metrics = {
         "prefill_fused_us": t_fused * 1e6,
@@ -161,6 +200,7 @@ def run_arch(arch: str, b: int, plen: int, gen: int):
         "decode_low_occupancy_dead_tok_s": dead_tps,
         "live_lane_speedup_x": live_tps / dead_tps if dead_tps else 0.0,
         **wave,
+        **first,
     }
     return rows, metrics
 
@@ -197,7 +237,11 @@ def main():
             f"replay; live-lane decode {m['live_lane_speedup_x']:.2f}x over "
             f"dead-lane at 1/8 occupancy; ttft p50/p95 "
             f"{m['ttft_p50_ms']:.0f}/{m['ttft_p95_ms']:.0f}ms; "
-            f"occupancy {m['mean_occupancy']:.2f}",
+            f"occupancy {m['mean_occupancy']:.2f}; first-request ttft "
+            f"{m['first_ttft_cold_ms']:.0f}ms cold -> "
+            f"{m['first_ttft_warmed_ms']:.0f}ms warmed "
+            f"({m['warmup_programs']} programs AOT, "
+            f"{m['warmed_wave_compiles']} compiles in the wave)",
             file=sys.stderr,
         )
     print(f"# wrote {os.path.abspath(args.out)}", file=sys.stderr)

@@ -17,7 +17,6 @@ live on the same device grid with independent sharding rules.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Tuple
 
 import jax
@@ -106,8 +105,11 @@ def saml_pair_losses(
     return total, metrics
 
 
-def make_saml_step(model_p: Model, model_l: Model, optimizer, cfg: SamlConfig):
-    """jit'd SAML pair step: updates both LoRA trees with one program."""
+def make_saml_step(model_p: Model, model_l: Model, optimizer, cfg: SamlConfig,
+                   jit: bool = True):
+    """SAML pair step: updates both LoRA trees with one program.
+    ``jit=False`` returns the raw traceable fn (the (loras, opt_state)
+    donation then belongs to whoever wraps it — the train ProgramStore)."""
 
     def loss_fn(loras, base_p, base_l, adapters_p, batch_p, batch_l, align):
         return saml_pair_losses(
@@ -115,7 +117,6 @@ def make_saml_step(model_p: Model, model_l: Model, optimizer, cfg: SamlConfig):
             adapters_p, batch_p, batch_l, align, cfg,
         )
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(loras, opt_state, base_p, base_l, adapters_p, batch_p, batch_l, align):
         (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             loras, base_p, base_l, adapters_p, batch_p, batch_l, align
@@ -123,21 +124,22 @@ def make_saml_step(model_p: Model, model_l: Model, optimizer, cfg: SamlConfig):
         new_loras, new_opt = optimizer.update(grads, opt_state, loras)
         return new_loras, new_opt, metrics
 
-    return step
+    return jax.jit(step, donate_argnums=(0, 1)) if jit else step
 
 
-def make_dst_step(model_p: Model, optimizer, lora_alpha: float = 16.0):
-    """jit'd DST step (Eq. 5): trains ONLY the domain adapters via SFT."""
+def make_dst_step(model_p: Model, optimizer, lora_alpha: float = 16.0,
+                  jit: bool = True):
+    """DST step (Eq. 5): trains ONLY the domain adapters via SFT.
+    ``jit=False`` returns the raw traceable fn for external wrapping."""
 
     def loss_fn(adapters, base_p, lora_p, batch):
         params = apply_lora(merge_adapters(base_p, adapters), lora_p, lora_alpha)
         logits, _ = model_p.logits(params, batch)
         return cross_entropy(logits, batch["targets"], batch["loss_mask"])
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(adapters, opt_state, base_p, lora_p, batch):
         loss, grads = jax.value_and_grad(loss_fn)(adapters, base_p, lora_p, batch)
         new_adapters, new_opt = optimizer.update(grads, opt_state, adapters)
         return new_adapters, new_opt, loss
 
-    return step
+    return jax.jit(step, donate_argnums=(0, 1)) if jit else step

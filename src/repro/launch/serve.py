@@ -47,6 +47,14 @@ ui.perfetto.dev (the CI observability smoke):
 
   PYTHONPATH=src python -m repro.launch.serve --trace trace.json --gen 8
 
+Warmup mode (DESIGN.md §14) — ProgramStore AOT warmup: pre-compiles the
+whole bucket ladder (prefill/decode, plus draft/verify/commit for a spec
+pair) off the request path through a streaming JSONL trace sink, then
+serves request waves and asserts from the trace that zero compile spans
+started after warmup (the CI warmup smoke):
+
+  PYTHONPATH=src python -m repro.launch.serve --warmup warmup.json --gen 8
+
 Runs the REDUCED configs on CPU; the full configs' serve path is exercised
 by the dry-run. Prompts are admitted through the engine's request queue, so
 more prompts than --batch slots simply stream through the pool.
@@ -497,6 +505,80 @@ def run_trace(args) -> None:
     print("trace smoke OK: schema-valid, full event coverage")
 
 
+def run_warmup(args) -> None:
+    """AOT-warmup smoke (DESIGN.md §14): warm the full bucket ladder off
+    the request path — traced through a streaming JSONL sink — then serve
+    request waves on the warmed engine AND a warmed speculative pair, and
+    assert from the trace that not one compile span began after warmup
+    finished. Exports the Perfetto artifact for CI and demos per-request
+    extraction."""
+    import json
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve import (
+        SpecCoordinator,
+        Tracer,
+        extract_request,
+        load_events,
+        validate_events,
+        write_perfetto,
+    )
+
+    cfg = dataclasses.replace(get_arch(args.arch).reduced(), vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    sink = args.warmup + ".jsonl"
+    rng = np.random.RandomState(0)
+
+    with Tracer(sink=sink) as tracer:
+        eng = ServeEngine(model, params, max_batch=4, max_len=64, seed=0,
+                          tracer=tracer, name="llm", audit=True)
+        spec = SpecCoordinator(model, params, model, params, max_batch=2,
+                               max_len=64, k=3, seed=0, tracer=tracer,
+                               name="spec")
+        built = eng.warmup() + spec.warmup()
+        assert built, "warmup compiled nothing"
+        tracer.flush()
+        with open(sink) as f:
+            mark = sum(1 for _ in f)  # events emitted so far = warmup's
+
+        rids = [eng.submit(list(rng.randint(1, 64, (4 + 3 * i,))),
+                           max_new=args.gen) for i in range(6)]
+        comps = eng.run()
+        for i in range(3):
+            spec.submit(list(rng.randint(1, 64, (6 + i,))), max_new=args.gen)
+        spec.run()
+
+    events = load_events(sink)
+    late = [e for i, e in enumerate(events)
+            if i >= mark and e.name == "compile" and e.ph == "B"]
+    assert not late, (
+        f"{len(late)} compile span(s) started during the request wave "
+        f"after warmup: {late[:3]}"
+    )
+    validate_events(events, require=(
+        "submit", "admit", "prefill_chunk", "decode_step", "compile",
+        "draft", "verify", "finish",
+    ))
+    ttft = {c.rid: c.ttft_s for c in comps}
+    sliced = extract_request(events, rids[0])
+    write_perfetto(sink, args.warmup)
+    with open(args.warmup) as f:
+        assert json.load(f)["traceEvents"], "empty Perfetto export"
+    print(f"warmed {len(built)} programs before the first request: "
+          + ", ".join(sorted({op for op, _ in built})))
+    print(f"request wave paid 0 compiles ({mark} warmup events, "
+          f"{len(events) - mark} serving events); warmed first-request "
+          f"ttft {ttft[rids[0]] * 1e3:.0f}ms")
+    print(f"extract_request(rid={rids[0]}): {len(sliced)} events "
+          f"(lifecycle + overlapping dispatch spans)")
+    print(f"wrote {args.warmup} (+ .jsonl sink, streamed, "
+          f"open at ui.perfetto.dev)")
+    print("warmup smoke OK: zero compile events during the request wave")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -516,6 +598,10 @@ def main() -> None:
     ap.add_argument("--trace", metavar="PATH",
                     help="observability mode: traced prefix+spec run, "
                          "schema validation, Perfetto JSON written to PATH")
+    ap.add_argument("--warmup", metavar="PATH",
+                    help="AOT-warmup mode: pre-compile the bucket ladders, "
+                         "serve a wave, assert zero compile events from the "
+                         "trace, Perfetto JSON written to PATH")
     ap.add_argument("--fleet-rate", type=float, default=8.0,
                     help="offered load (req/virtual-second) for --fleet")
     ap.add_argument("--fleet-horizon", type=float, default=4.0,
@@ -545,6 +631,8 @@ def main() -> None:
         run_sharded(args)
     elif args.trace:
         run_trace(args)
+    elif args.warmup:
+        run_warmup(args)
     else:
         run_single(args)
 

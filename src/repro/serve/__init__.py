@@ -43,10 +43,22 @@ makes the whole stack inspectable without perturbing it: one
 `RunnerStats`, the router's stats, and the fleet report; a ``Tracer``
 stamping typed request-lifecycle events (submit/admit/prefill_chunk/
 decode_step/draft/verify/accept/preempt/compile/...) on the injected
-clock, with ``NullTracer`` as the zero-cost default; ``validate_events``
-checking span balance, per-track monotonicity, and request conservation;
-and ``perfetto_trace``/``write_perfetto`` exporting Chrome trace_event
-JSON loadable at ui.perfetto.dev.
+clock — optionally streamed to a JSONL ``sink`` on disk — with
+``NullTracer`` as the zero-cost default; ``validate_events`` checking
+span balance, per-track monotonicity, and request conservation;
+``extract_request`` slicing one request's lifecycle plus its overlapping
+program dispatches out of a shared timeline; and ``perfetto_trace``/
+``write_perfetto`` exporting Chrome trace_event JSON loadable at
+ui.perfetto.dev.
+
+The program layer (serve/programs.py, DESIGN.md §14): every compiled
+program — serve prefill/decode/verify/draft/commit AND the train-side
+round programs — lives in a ``ProgramStore``, one registry keyed by
+``(op, bucket_key)`` owning jit wrapping, donation, explicit
+``out_shardings`` (pool outputs pinned to the cache placement policy on
+a mesh), compile-span/counter emission, a donation-safety audit
+(``DonationAuditError``), and AOT ``warmup(plan)`` of `WarmupStep`
+ladders so a prewarmed engine never compiles on the request path.
 """
 from repro.serve.cache import BlockCacheManager
 from repro.serve.drafters import PromptLookupDrafter
@@ -62,6 +74,13 @@ from repro.serve.fleet import (
 )
 from repro.serve.metrics import LatencyWindow, min_tail_samples, percentile, percentiles
 from repro.serve.obs import Counter, Gauge, Histogram, MetricsRegistry
+from repro.serve.programs import (
+    DonationAuditError,
+    POOL,
+    ProgramStore,
+    REP,
+    WarmupStep,
+)
 from repro.serve.router import (
     CloudEdgeRouter,
     EngineSpec,
@@ -89,6 +108,8 @@ from repro.serve.trace import (
     NullTracer,
     TraceEvent,
     Tracer,
+    extract_request,
+    load_events,
     perfetto_trace,
     validate_events,
     write_perfetto,
@@ -100,6 +121,7 @@ __all__ = [
     "Completion",
     "CostModel",
     "Counter",
+    "DonationAuditError",
     "EVENT_TYPES",
     "EngineSpec",
     "FleetSimulator",
@@ -110,6 +132,9 @@ __all__ = [
     "NULL_TRACER",
     "NullTracer",
     "ModelRunner",
+    "POOL",
+    "ProgramStore",
+    "REP",
     "PromptLookupDrafter",
     "Request",
     "RouteDecision",
@@ -119,6 +144,7 @@ __all__ = [
     "ServeMesh",
     "SpecCoordinator",
     "TierSpec",
+    "WarmupStep",
     "TraceEvent",
     "Tracer",
     "VirtualClock",
@@ -126,7 +152,9 @@ __all__ = [
     "collaborative_policy",
     "deadline_aware_policy",
     "explicit_tier_policy",
+    "extract_request",
     "generate_workload",
+    "load_events",
     "min_tail_samples",
     "percentile",
     "percentiles",

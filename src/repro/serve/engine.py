@@ -62,7 +62,8 @@ import numpy as np
 from repro.models.model import Model
 from repro.serve.cache import BlockCacheManager
 from repro.serve.obs import MetricsRegistry
-from repro.serve.runner import ModelRunner, RunnerStats
+from repro.serve.programs import WarmupStep
+from repro.serve.runner import _STAT_FIELDS, ModelRunner, RunnerStats
 from repro.serve.scheduler import Completion, Request, Scheduler
 from repro.serve.shard import ServeMesh
 from repro.serve.trace import NULL_TRACER
@@ -186,6 +187,89 @@ def admit_prefill(
     return tok
 
 
+def prefill_warmup_steps(
+    cache: BlockCacheManager,
+    sched: Scheduler,
+    runner: ModelRunner,
+    base_key: jax.Array,
+    chunked_prefill: Optional[int] = None,
+) -> List[WarmupStep]:
+    """`WarmupStep`s covering every prefill-family program this admission
+    config can dispatch (DESIGN.md §14) — which family (fused vs tail)
+    and which buckets mirror exactly how ``admit_prefill`` /
+    ``_admit_chunked`` choose them, so the warmed inventory equals the
+    servable inventory, no more and no less. Each step dispatches through
+    the public runner method against the trash slot and the all-trash
+    block-table row (every write lands on the reserved trash page), so
+    the jit entry sees the exact request-path avals and the junk output
+    is invisible — real admissions always overwrite slot state and pages
+    before reading them."""
+    trash = cache.trash_slot
+    row = np.zeros(cache.geom.pages_per_seq, np.int32)  # all-trash row
+
+    def fused(b):
+        def run():
+            _, cache.paged, cache.slots = runner.prefill(
+                cache.paged, cache.slots, [0], bucket=b, slot=trash,
+                bt_row=row, temperature=0.0, seed=0, base_key=base_key,
+            )
+        return run
+
+    def tail(b):
+        def run():
+            _, cache.paged, cache.slots = runner.prefill_tail(
+                cache.paged, cache.slots, [0], start=0, bucket=b,
+                slot=trash, bt_row=row, temperature=0.0, seed=0,
+                base_key=base_key,
+            )
+        return run
+
+    ladder = sched.prefill_buckets()
+    if chunked_prefill is not None:
+        # chunked admission only ever dispatches prefill_tail, with
+        # bucket_for(c) over chunks c <= chunked_prefill
+        cap = sched.bucket_for(chunked_prefill)
+        return [
+            WarmupStep("prefill_tail", b, tail(b)) for b in ladder if b <= cap
+        ]
+    if not cache.prefix_cache:
+        return [WarmupStep("prefill", b, fused(b)) for b in ladder]
+    if cache.prefix_mode == "chain":
+        # a prefix miss runs fused prefill; a hit runs one bucketed tail
+        # over the uncached remainder — both ladders are reachable
+        return (
+            [WarmupStep("prefill", b, fused(b)) for b in ladder]
+            + [WarmupStep("prefill_tail", b, tail(b)) for b in ladder]
+        )
+    # snapshot mode: the page-size chunk loop is the only prefill path
+    ps = cache.geom.page_size
+    return [WarmupStep("prefill_tail", ps, tail(ps))]
+
+
+def decode_warmup_steps(
+    cache: BlockCacheManager,
+    sched: Scheduler,
+    runner: ModelRunner,
+    base_key: jax.Array,
+) -> List[WarmupStep]:
+    """One `WarmupStep` per decode lane bucket, dispatched with every
+    lane on the trash slot (``n_live=0``: junk tokens, no stream state)."""
+    steps = []
+    trash = cache.trash_slot
+    for b in sched.decode_buckets():
+        def run(b=b):
+            z = np.zeros(b, np.int32)
+            _, cache.paged, cache.slots = runner.decode(
+                cache.paged, cache.slots, token=z, pos=z,
+                block_tables=cache.table_rows([trash] * b),
+                lanes=np.full(b, trash, np.int32),
+                temps=np.zeros(b, np.float32), seeds=z, ngen=z,
+                base_key=base_key, n_live=0,
+            )
+        steps.append(WarmupStep("decode", b, run))
+    return steps
+
+
 @dataclasses.dataclass
 class PartialPrefill:
     """A chunked admission in flight: the request holds its slot and
@@ -225,6 +309,7 @@ class ServeEngine:
         tracer=NULL_TRACER,
         name: str = "engine",
         xla_annotate: bool = False,
+        audit: Optional[bool] = None,
     ):
         if model.cfg.is_encoder_decoder:
             raise ValueError("engine serves decoder-only configs")
@@ -277,7 +362,7 @@ class ServeEngine:
         self.runner = ModelRunner(
             model, params, clock=clock, mesh=mesh,
             registry=self.registry, tracer=self.tracer, name=name,
-            xla_annotate=xla_annotate,
+            xla_annotate=xla_annotate, audit=audit,
         )
         self._g_active = self.registry.gauge("engine_active", engine=name)
         self._g_queued = self.registry.gauge("engine_queued", engine=name)
@@ -401,6 +486,35 @@ class ServeEngine:
                 if fin is not None:
                     done.append(fin)
                     self.cache.release(part.slot)
+
+    # -- AOT warmup (DESIGN.md §14) -----------------------------------------
+
+    def warmup_plan(self) -> List[WarmupStep]:
+        """The bucket ladder this engine's config can dispatch: prefill
+        (fused and/or tail, per prefix/chunking mode) × decode lane
+        buckets."""
+        return prefill_warmup_steps(
+            self.cache, self.scheduler, self.runner, self.base_key,
+            self.chunked_prefill,
+        ) + decode_warmup_steps(
+            self.cache, self.scheduler, self.runner, self.base_key
+        )
+
+    def warmup(self):
+        """Pre-compile every program a request could hit, off the request
+        path, so the first submission never pays a jit compile (asserted
+        from the tracer in the ``--warmup`` CI smoke). Warmup dispatches
+        run against trash pages/slots through the normal dispatch path —
+        they emit compile spans and bump the compile counter, but the
+        throughput stats they would distort are restored."""
+        st = self.runner.stats
+        saved = {
+            f: getattr(st, f) for f in _STAT_FIELDS if f != "compiles"
+        }
+        built = self.runner.store.warmup(self.warmup_plan())
+        for f, v in saved.items():
+            setattr(st, f, v)
+        return built
 
     # -- stepping -----------------------------------------------------------
 

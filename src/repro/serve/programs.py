@@ -1,0 +1,365 @@
+"""ProgramStore: one registry for every compiled program (DESIGN.md §14).
+
+Before this layer existed the serve stack managed compiled programs in
+six independent dicts inside ``ModelRunner`` (prefill / tail / decode /
+verify / draft / commit) and the train stack in a seventh
+(``RoundPrograms``), each with hand-rolled ``donate_argnums``, its own
+compile-span emission, and no ``out_shardings`` — which let GSPMD pick a
+different layout for a program's *output* pools than the placement
+policy the cache manager installed on its *inputs*, silently re-laying
+donated buffers between steps on a ``ServeMesh``.
+
+The store unifies all of it:
+
+- **Registry.** Programs are keyed by ``(op, bucket_key)`` — the op
+  names a *family* (``prefill``, ``decode``, ``verify``, ``dst_scan``,
+  ...) registered once with its builder, ``donate_argnums``, output
+  sharding template, and trace span name; keys are the bucket ladder
+  (prompt buckets, lane counts, ``(lanes, k, mode)`` tuples, train
+  device names). ``inventory()`` is the compile-cache census tests
+  assert against.
+- **Explicit ``out_shardings``.** Families declare a template over their
+  output tuple using the ``REP`` / ``POOL`` sentinels; with a mesh
+  active the template resolves through the pool placement policy
+  (``ServeMesh.pool_shardings`` — the ``common/sharding.py`` rules
+  engine) and is pinned on the jit, so program-output pools match policy
+  exactly (``==``, not the old ``<=``) and donation can always alias.
+- **One emit site.** The compile span (covering trace + compile + first
+  run — the cold-start cost a client actually sees), the dispatch span,
+  the optional ``jax.profiler`` annotation, and the mesh axis-rule
+  context are stacked here, once, instead of at six call sites; fresh
+  builds bump the ``serve_compiles{engine=...}`` registry counter that
+  ``RunnerStats.compiles`` reads, for serve and train alike.
+- **Donation audit** (``audit=True`` or ``REPRO_DONATION_AUDIT=1``): a
+  debug mode that (a) rejects dispatches whose donated argument trees
+  contain already-deleted buffers (use-after-donate), (b) asserts the
+  donated buffers really were consumed (a silent copy fallback means an
+  aliasing/layout mismatch), and (c) asserts pool outputs carry exactly
+  the policy sharding.
+- **AOT warmup.** ``warmup(plan)`` executes a list of `WarmupStep`s —
+  one real dispatch per (op, key) on the bucket ladder, against trash
+  pages/slots — so a prewarmed engine's jit caches are populated with
+  the exact avals the request path uses and no request ever pays a
+  compile (asserted from the tracer in the ``--warmup`` CI smoke).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    Optional,
+    Tuple,
+)
+
+import jax
+
+from repro.serve.obs import MetricsRegistry
+from repro.serve.trace import NULL_TRACER, _Nested
+
+__all__ = [
+    "REP",
+    "POOL",
+    "DonationAuditError",
+    "ProgramFamily",
+    "ProgramStore",
+    "WarmupStep",
+]
+
+
+class _Sentinel:
+    """Output-sharding template marker (repr'd in errors and docs)."""
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self) -> str:
+        return self.name
+
+
+#: Template sentinel: this output (or output subtree) is replicated.
+REP = _Sentinel("REP")
+#: Template sentinel: this output is a paged-pool tree — pin the cache
+#: manager's placement policy on it.
+POOL = _Sentinel("POOL")
+
+
+class DonationAuditError(RuntimeError):
+    """A donation-safety invariant failed (debug audit mode only)."""
+
+
+@dataclasses.dataclass
+class ProgramFamily:
+    """One program family: how to build, donate, shard, and trace it."""
+
+    op: str  # registry/inventory name ("prefill", "verify", "dst_scan")
+    build: Optional[Callable[[Any], Callable]]  # key -> traceable fn
+    donate: Tuple[int, ...]  # donate_argnums for every program of the op
+    out: Optional[Tuple]  # REP/POOL template over the output tuple
+    span: str  # dispatch span name (must be in trace.SPAN_EVENTS)
+
+
+@dataclasses.dataclass
+class WarmupStep:
+    """One warmup dispatch: ``run()`` must call through the public
+    runner method so the warmed jit entry sees the exact request-path
+    avals (dummy operands, trash-page block tables)."""
+
+    op: str
+    key: Any
+    run: Callable[[], None]
+
+
+class _Entry:
+    """A registered program: the jitted callable plus whether its first
+    dispatch (= the XLA compile) has happened yet."""
+
+    __slots__ = ("fn", "called")
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+        self.called = False
+
+
+class ProgramStore:
+    def __init__(
+        self,
+        *,
+        mesh=None,
+        registry: Optional[MetricsRegistry] = None,
+        tracer=NULL_TRACER,
+        engine: str = "engine",
+        xla_annotate: bool = False,
+        audit: Optional[bool] = None,
+    ):
+        self.mesh = mesh  # ServeMesh (or None): .ctx() + .replicated
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        self.engine = engine
+        self._annot = (
+            getattr(jax.profiler, "TraceAnnotation", None) if xla_annotate
+            else None
+        )
+        if audit is None:
+            audit = bool(os.environ.get("REPRO_DONATION_AUDIT"))
+        self.audit = audit
+        self._families: Dict[str, ProgramFamily] = {}
+        self._programs: Dict[Tuple[str, Any], _Entry] = {}
+        self._pool_policy = None  # NamedSharding tree over the paged pools
+        # the same registry series RunnerStats.compiles reads — serve and
+        # train compiles land in one taxonomy, labeled by engine
+        self._compiles = self.registry.counter("serve_compiles", engine=engine)
+
+    # -- registration --------------------------------------------------------
+
+    def family(
+        self,
+        op: str,
+        build: Optional[Callable[[Any], Callable]] = None,
+        *,
+        donate: Tuple[int, ...] = (),
+        out: Optional[Tuple] = None,
+        span: Optional[str] = None,
+    ) -> ProgramFamily:
+        """Declare a program family. ``build(key)`` returns the traceable
+        fn for one bucket key (omit it for ``wrap``-only families)."""
+        if op in self._families:
+            raise ValueError(f"program family {op!r} already registered")
+        fam = ProgramFamily(op, build, tuple(donate), out, span or op)
+        self._families[op] = fam
+        return fam
+
+    def wrap(
+        self,
+        op: str,
+        key: Any,
+        fn: Callable,
+        *,
+        donate: Tuple[int, ...] = (),
+        out: Optional[Tuple] = None,
+        span: Optional[str] = None,
+    ) -> Callable:
+        """Register a pre-built traceable ``fn`` as program ``(op, key)``
+        and return a dispatcher: calls route through the store (compile
+        span + counter, donation audit) exactly like family-built
+        programs. How the train rounds ride the same registry."""
+        if op not in self._families:
+            self.family(op, None, donate=donate, out=out, span=span)
+        fam = self._families[op]
+        self._programs[(op, key)] = _Entry(self._jit(fam, fn))
+
+        def call(*args):
+            return self.dispatch(op, key, args)
+
+        return call
+
+    def set_pool_policy(self, policy) -> None:
+        """Pin the pool placement policy (a NamedSharding tree matching
+        the paged cache). Must be set before the first mesh dispatch of
+        any family with a POOL template — programs built earlier keep
+        GSPMD-chosen output layouts."""
+        self._pool_policy = policy
+
+    @property
+    def has_pool_policy(self) -> bool:
+        return self._pool_policy is not None
+
+    # -- dispatch ------------------------------------------------------------
+
+    def dispatch(self, op: str, key: Any, args: Tuple, **span_args):
+        """Run program ``(op, key)`` on ``args``, building it on first
+        use. The single emit site: compile span (fresh keys), dispatch
+        span, profiler annotation, mesh axis rules."""
+        fam = self._families[op]
+        entry = self._programs.get((op, key))
+        if entry is None:
+            if fam.build is None:
+                raise KeyError(
+                    f"program {op}[{key!r}] was never registered and the "
+                    f"family has no builder"
+                )
+            entry = _Entry(self._jit(fam, fam.build(key)))
+            self._programs[(op, key)] = entry
+        fresh = not entry.called
+        if self.audit:
+            self._audit_pre(fam, op, key, args)
+        with self._ctx(fam, op, key, fresh, span_args):
+            out = entry.fn(*args)
+        if fresh:
+            entry.called = True
+            self._compiles.value += 1
+        if self.audit:
+            self._audit_post(fam, op, key, args, out)
+        return out
+
+    def _ctx(self, fam: ProgramFamily, op, key, fresh: bool, span_args):
+        cms = []
+        if fresh and self.tracer.enabled:
+            cms.append(
+                self.tracer.span(
+                    "compile", track="compile", family=op, key=str(key)
+                )
+            )
+        cms.append(self.tracer.span(fam.span, track="dispatch", **span_args))
+        if self._annot is not None:
+            cms.append(self._annot(f"{op}[{key}]"))
+        if self.mesh is not None:
+            cms.append(self.mesh.ctx())
+        return cms[0] if len(cms) == 1 else _Nested(cms)
+
+    def _jit(self, fam: ProgramFamily, fn: Callable):
+        shardings = self._resolve_out(fam.out)
+        if shardings is None:
+            return jax.jit(fn, donate_argnums=fam.donate)
+        return jax.jit(
+            fn, donate_argnums=fam.donate, out_shardings=shardings
+        )
+
+    def _resolve_out(self, template: Optional[Tuple]):
+        """REP/POOL template -> out_shardings pytree prefix, or None when
+        no mesh is active (single-device: let XLA place everything)."""
+        if template is None or self.mesh is None:
+            return None
+        rep = self.mesh.replicated
+        out = []
+        for t in template:
+            if t is POOL:
+                if self._pool_policy is None:
+                    return None  # not pinned yet; caller pins pre-dispatch
+                out.append(self._pool_policy)
+            elif t is REP:
+                out.append(rep)
+            else:
+                out.append(t)  # explicit sharding / None passthrough
+        return tuple(out)
+
+    # -- donation audit ------------------------------------------------------
+
+    def _audit_pre(self, fam: ProgramFamily, op, key, args: Tuple) -> None:
+        for i in fam.donate:
+            for leaf in jax.tree.leaves(args[i]):
+                if isinstance(leaf, jax.Array) and leaf.is_deleted():
+                    raise DonationAuditError(
+                        f"{op}[{key!r}]: donated argument {i} contains a "
+                        f"deleted buffer — the tree was already donated to "
+                        f"an earlier dispatch and must not be reused"
+                    )
+
+    def _audit_post(self, fam: ProgramFamily, op, key, args, out) -> None:
+        for i in fam.donate:
+            for leaf in jax.tree.leaves(args[i]):
+                if isinstance(leaf, jax.Array) and not leaf.is_deleted():
+                    raise DonationAuditError(
+                        f"{op}[{key!r}]: donated argument {i} survived the "
+                        f"dispatch — donation fell back to a copy "
+                        f"(aliasing/layout mismatch)"
+                    )
+        if (
+            self.mesh is None
+            or fam.out is None
+            or self._pool_policy is None
+        ):
+            return
+        outs = out if isinstance(out, tuple) else (out,)
+        pol_leaves = jax.tree.leaves(self._pool_policy)
+        for t, o in zip(fam.out, outs):
+            if t is not POOL:
+                continue
+            for ol, pl in zip(jax.tree.leaves(o), pol_leaves):
+                if not ol.sharding.is_equivalent_to(pl, ol.ndim):
+                    raise DonationAuditError(
+                        f"{op}[{key!r}]: pool output sharding "
+                        f"{ol.sharding} != placement policy {pl}"
+                    )
+
+    # -- warmup --------------------------------------------------------------
+
+    def warmup(self, plan: Iterable[WarmupStep]) -> List[Tuple[str, Any]]:
+        """Execute every not-yet-compiled step of ``plan`` (steps whose
+        (op, key) already dispatched are skipped) and return the list of
+        (op, key) pairs compiled. Each step's dispatch runs through the
+        normal path, so warmup compiles emit the same compile spans and
+        bump the same counter — they are just off the request path."""
+        built: List[Tuple[str, Any]] = []
+        for step in plan:
+            entry = self._programs.get((step.op, step.key))
+            if entry is not None and entry.called:
+                continue
+            step.run()
+            built.append((step.op, step.key))
+        return built
+
+    # -- introspection -------------------------------------------------------
+
+    def has(self, op: str, key: Any) -> bool:
+        e = self._programs.get((op, key))
+        return e is not None and e.called
+
+    def keys(self, op: str) -> List[Any]:
+        return sorted(k for (o, k) in self._programs if o == op)
+
+    def inventory(self) -> Dict[str, List[Any]]:
+        """The compile-cache census: ``{op: sorted bucket keys}`` for
+        every family with at least one program."""
+        out: Dict[str, List[Any]] = {}
+        for (op, _k) in self._programs:
+            out.setdefault(op, [])
+        for op in out:
+            out[op] = self.keys(op)
+        return dict(sorted(out.items()))
+
+    @property
+    def num_programs(self) -> int:
+        return len(self._programs)
+
+    @property
+    def compiles(self) -> int:
+        """Fresh program builds dispatched through this store (the same
+        number as ``RunnerStats.compiles`` when they share a registry)."""
+        return self._compiles.value

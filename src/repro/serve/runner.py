@@ -23,12 +23,19 @@ not linear (DESIGN.md §7-§8):
   ring undo; commit applies rollback once the verifier's accepted lengths
   are known.
 
+The compiled programs themselves live in a `ProgramStore` (DESIGN.md
+§14): one registry keyed by ``(op, bucket_key)`` that owns jit wrapping,
+``donate_argnums``, explicit ``out_shardings`` (pool outputs pinned to
+the cache placement policy on a `ServeMesh`), compile-span/counter
+emission, and the donation-safety audit. The runner's job is reduced to
+what it was always about: building the traceable fns, marshalling host
+operands into device avals, and booking stats.
+
 The runner holds no request state; the scheduler decides *what* runs and
 the cache manager owns *where* it lives.
 """
 from __future__ import annotations
 
-import contextlib
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -39,12 +46,13 @@ import numpy as np
 from repro.models import paged as PG
 from repro.models.model import Model
 from repro.serve.obs import MetricsRegistry
+from repro.serve.programs import POOL, REP, ProgramStore
 from repro.serve.sampling import (
     sample_tokens_keys,
     sampling_dist,
     speculative_accept,
 )
-from repro.serve.trace import NULL_TRACER, _Nested
+from repro.serve.trace import NULL_TRACER
 
 Params = Dict
 
@@ -66,6 +74,9 @@ _STAT_FIELDS = (
     # throughput is comparable to plain decode_tokens)
     "spec_tokens",
     "spec_s",  # draft + verify + commit wall time
+    # fresh program builds, booked by the ProgramStore (DESIGN.md §14) —
+    # the same `serve_compiles{engine=...}` series for serve and train
+    "compiles",
 )
 
 
@@ -143,6 +154,7 @@ class ModelRunner:
         tracer=NULL_TRACER,
         name: str = "engine",
         xla_annotate: bool = False,
+        audit: Optional[bool] = None,
     ):
         self.model = model
         self.params = params
@@ -150,74 +162,80 @@ class ModelRunner:
         self.mesh = mesh  # ServeMesh: programs trace under its axis rules
         self.stats = RunnerStats(registry, engine=name)
         self.tracer = tracer
-        # Optional XLA-profile alignment: wrap each dispatch in a
-        # jax.profiler.TraceAnnotation so device traces captured with
-        # jax.profiler line up with our spans by name.
-        self._annot = (
-            getattr(jax.profiler, "TraceAnnotation", None) if xla_annotate
-            else None
+        # All compiled programs live in the store (DESIGN.md §14): the
+        # registry + jit wrapping + out_shardings + compile spans +
+        # donation audit, shared with the train-side RoundPrograms.
+        self.store = ProgramStore(
+            mesh=mesh, registry=self.stats.registry, tracer=tracer,
+            engine=name, xla_annotate=xla_annotate, audit=audit,
         )
-        self._prefill_jit: Dict[int, object] = {}  # prompt bucket -> program
-        self._tail_jit: Dict[int, object] = {}  # tail bucket -> program
-        self._decode_jit: Dict[int, object] = {}  # lane bucket -> program
-        self._verify_jit: Dict[Tuple, object] = {}  # (lanes, k, mode) -> prog
-        self._draft_jit: Dict[Tuple, object] = {}  # (lanes, k, sample) -> prog
-        self._commit_jit: Dict[int, object] = {}  # lanes -> program
-
-    def _trace_ctx(self):
-        """Context wrapped around every program call: on a ServeMesh it
-        installs (mesh, SERVE_RULES) so the first call — the trace — sees
-        the logical-axis rules (head-sharded activation constraints, the
-        expert-parallel MoE dispatch). Later calls hit the jit cache and
-        the context is a cheap no-op."""
-        return self.mesh.ctx() if self.mesh is not None else (
-            contextlib.nullcontext()
+        # donation layout per family matches the fn signatures below:
+        # pools/slots donate everywhere they are rewritten; draft keeps
+        # its slot stack undonated (commit scatters it later)
+        self.store.family(
+            "prefill", self._build_prefill, donate=(1, 2),
+            out=(REP, POOL, REP), span="prefill_chunk",
+        )
+        self.store.family(
+            "prefill_tail", self._build_tail, donate=(1, 2),
+            out=(REP, POOL, REP), span="prefill_chunk",
+        )
+        self.store.family(
+            "decode", self._build_decode, donate=(1, 2),
+            out=(REP, POOL, REP), span="decode_step",
+        )
+        self.store.family(
+            "verify", self._build_verify, donate=(1, 2),
+            out=(REP, REP, POOL, REP), span="verify",
+        )
+        self.store.family(
+            "draft", self._build_draft, donate=(1,),
+            out=(REP, REP, POOL, REP, REP), span="draft",
+        )
+        self.store.family(
+            "commit", self._build_commit, donate=(0, 1),
+            out=(POOL, REP), span="commit",
         )
 
-    def _dispatch_ctx(self, op: str, family: str, key, fresh: bool, **args):
-        """The context stack around one program call: a ``compile`` span
-        on its own track when the jit cache misses (the span covers trace
-        + compile + first run — the cold-start cost a client actually
-        sees), the dispatch span, the optional profiler annotation, and
-        the mesh axis-rule context. With the NullTracer, no mesh, and no
-        annotation this degenerates to a single cached no-op context."""
-        cms = []
-        if fresh and self.tracer.enabled:
-            cms.append(
-                self.tracer.span(
-                    "compile", track="compile", family=family, key=str(key)
-                )
+    def _pin(self, paged: Params) -> None:
+        """Resolve the pool placement policy from the first concrete pool
+        tree seen, so every program built afterwards pins its pool
+        outputs to exactly that sharding (``out_shardings``) instead of
+        whatever layout GSPMD would propagate."""
+        if self.mesh is not None and not self.store.has_pool_policy:
+            self.store.set_pool_policy(
+                self.mesh.pool_shardings(self.model, paged)
             )
-        cms.append(self.tracer.span(op, track="dispatch", **args))
-        if self._annot is not None:
-            cms.append(self._annot(f"{family}[{key}]"))
-        if self.mesh is not None:
-            cms.append(self.mesh.ctx())
-        return cms[0] if len(cms) == 1 else _Nested(cms)
 
     # -- compiled-program inventory (asserted in tests) ---------------------
 
     @property
     def prefill_programs(self) -> List[int]:
-        return sorted(self._prefill_jit)
+        return self.store.keys("prefill")
 
     @property
     def tail_programs(self) -> List[int]:
-        return sorted(self._tail_jit)
+        return self.store.keys("prefill_tail")
 
     @property
     def decode_programs(self) -> List[int]:
-        return sorted(self._decode_jit)
+        return self.store.keys("decode")
 
     @property
     def verify_programs(self) -> List[Tuple]:
-        return sorted(self._verify_jit)
+        return self.store.keys("verify")
+
+    @property
+    def draft_programs(self) -> List[Tuple]:
+        return self.store.keys("draft")
+
+    @property
+    def commit_programs(self) -> List[Tuple]:
+        return self.store.keys("commit")
 
     # -- prefill ------------------------------------------------------------
 
-    def _prefill_for(self, bucket: int):
-        if bucket in self._prefill_jit:
-            return self._prefill_jit[bucket]
+    def _build_prefill(self, bucket: int):
         model = self.model
 
         def fn(params, paged, slots, tokens, length, slot, bt_row, temp,
@@ -237,8 +255,7 @@ class ModelRunner:
             tok = sample_tokens_keys(logits, key[None], temp[None])[0]
             return tok, paged, slots
 
-        self._prefill_jit[bucket] = jax.jit(fn, donate_argnums=(1, 2))
-        return self._prefill_jit[bucket]
+        return fn
 
     def prefill(
         self,
@@ -257,17 +274,18 @@ class ModelRunner:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
         t0 = self.clock()
-        fresh = bucket not in self._prefill_jit
-        with self._dispatch_ctx(
-            "prefill_chunk", "prefill", bucket, fresh, bucket=bucket, tokens=s
-        ):
-            tok, paged, slots = self._prefill_for(bucket)(
+        self._pin(paged)
+        tok, paged, slots = self.store.dispatch(
+            "prefill", bucket,
+            (
                 self.params, paged, slots,
                 jnp.asarray(padded), jnp.asarray(s, jnp.int32),
                 jnp.asarray(slot, jnp.int32), jnp.asarray(bt_row),
                 jnp.asarray(temperature, jnp.float32),
                 jnp.asarray(seed, jnp.int32), base_key,
-            )
+            ),
+            bucket=bucket, tokens=s,
+        )
         tok = int(tok)
         self.stats.prefill_s += self.clock() - t0
         self.stats.prefill_tokens += s
@@ -275,9 +293,7 @@ class ModelRunner:
 
     # -- partial prefill (prefix cache, DESIGN.md §9) -----------------------
 
-    def _tail_for(self, bucket: int):
-        if bucket in self._tail_jit:
-            return self._tail_jit[bucket]
+    def _build_tail(self, bucket: int):
         model = self.model
 
         def fn(params, paged, slots, tokens, length, pos, lane, bt_row, temp,
@@ -297,8 +313,7 @@ class ModelRunner:
             tok = sample_tokens_keys(lg[None], key[None], temp[None])[0]
             return tok, paged, slots
 
-        self._tail_jit[bucket] = jax.jit(fn, donate_argnums=(1, 2))
-        return self._tail_jit[bucket]
+        return fn
 
     def prefill_tail(
         self,
@@ -324,19 +339,19 @@ class ModelRunner:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :s] = prompt
         t0 = self.clock()
-        fresh = bucket not in self._tail_jit
-        with self._dispatch_ctx(
-            "prefill_chunk", "prefill_tail", bucket, fresh,
-            bucket=bucket, tokens=s, start=start,
-        ):
-            tok, paged, slots = self._tail_for(bucket)(
+        self._pin(paged)
+        tok, paged, slots = self.store.dispatch(
+            "prefill_tail", bucket,
+            (
                 self.params, paged, slots,
                 jnp.asarray(padded), jnp.asarray(s, jnp.int32),
                 jnp.asarray([start], jnp.int32),
                 jnp.asarray([slot], jnp.int32),
                 jnp.asarray(bt_row), jnp.asarray(temperature, jnp.float32),
                 jnp.asarray(seed, jnp.int32), base_key,
-            )
+            ),
+            bucket=bucket, tokens=s, start=start,
+        )
         tok = int(tok)
         self.stats.prefill_s += self.clock() - t0
         self.stats.prefill_tokens += s
@@ -344,9 +359,7 @@ class ModelRunner:
 
     # -- decode -------------------------------------------------------------
 
-    def _decode_for(self, lanes: int):
-        if lanes in self._decode_jit:
-            return self._decode_jit[lanes]
+    def _build_decode(self, lanes: int):
         model = self.model
 
         def fn(params, paged, slots, token, pos, bt, lane_idx, temps, seeds,
@@ -365,8 +378,7 @@ class ModelRunner:
             toks = sample_tokens_keys(logits, keys, temps)
             return toks, paged, slots
 
-        self._decode_jit[lanes] = jax.jit(fn, donate_argnums=(1, 2))
-        return self._decode_jit[lanes]
+        return fn
 
     def decode(
         self,
@@ -384,19 +396,19 @@ class ModelRunner:
         n_live: int,
     ) -> Tuple[np.ndarray, Params, Params]:
         t0 = self.clock()
-        fresh = len(lanes) not in self._decode_jit
-        with self._dispatch_ctx(
-            "decode_step", "decode", len(lanes), fresh,
-            lanes=len(lanes), live=n_live,
-        ):
-            toks, paged, slots = self._decode_for(len(lanes))(
+        self._pin(paged)
+        toks, paged, slots = self.store.dispatch(
+            "decode", len(lanes),
+            (
                 self.params, paged, slots,
                 jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
                 jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
                 jnp.asarray(temps, jnp.float32),
                 jnp.asarray(seeds, jnp.int32),
                 jnp.asarray(ngen, jnp.int32), base_key,
-            )
+            ),
+            lanes=len(lanes), live=n_live,
+        )
         toks = np.asarray(toks)
         self.stats.decode_s += self.clock() - t0
         self.stats.decode_steps += 1
@@ -421,10 +433,8 @@ class ModelRunner:
 
         return jax.vmap(per_lane)(seeds, ngen)
 
-    def _verify_for(self, lanes: int, k: int, mode: str):
-        key = (lanes, k, mode)
-        if key in self._verify_jit:
-            return self._verify_jit[key]
+    def _build_verify(self, key: Tuple[int, int, str]):
+        lanes, k, mode = key
         model = self.model
 
         def fn(params, paged, slots, tokens, draft_cmp, q, pos, bt, lane_idx,
@@ -447,8 +457,7 @@ class ModelRunner:
                                      lane_idx)
             return out, n_acc, paged, slots
 
-        self._verify_jit[key] = jax.jit(fn, donate_argnums=(1, 2))
-        return self._verify_jit[key]
+        return fn
 
     def verify(
         self,
@@ -476,12 +485,10 @@ class ModelRunner:
         t0 = self.clock()
         if q is None:
             q = jnp.zeros((), jnp.float32)  # unused placeholder operand
-        fresh = (L, k1 - 1, mode) not in self._verify_jit
-        with self._dispatch_ctx(
-            "verify", "verify", (L, k1 - 1, mode), fresh,
-            lanes=L, k=k1 - 1, live=n_live,
-        ):
-            out, n_acc, paged, slots = self._verify_for(L, k1 - 1, mode)(
+        self._pin(paged)
+        out, n_acc, paged, slots = self.store.dispatch(
+            "verify", (L, k1 - 1, mode),
+            (
                 self.params, paged, slots,
                 jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(draft_cmp, jnp.int32),
@@ -490,7 +497,9 @@ class ModelRunner:
                 jnp.asarray(temps, jnp.float32),
                 jnp.asarray(seeds, jnp.int32), jnp.asarray(ngen, jnp.int32),
                 base_key,
-            )
+            ),
+            lanes=L, k=k1 - 1, live=n_live,
+        )
         out, n_acc = np.asarray(out), np.asarray(n_acc)
         self.stats.spec_s += self.clock() - t0
         self.stats.verify_steps += 1
@@ -501,10 +510,8 @@ class ModelRunner:
 
     # -- speculative decoding: drafter side ---------------------------------
 
-    def _draft_for(self, lanes: int, k: int, sample: bool):
-        key = (lanes, k, sample)
-        if key in self._draft_jit:
-            return self._draft_jit[key]
+    def _build_draft(self, key: Tuple[int, int, bool]):
+        lanes, k, sample = key
         model = self.model
 
         def fn(params, paged, slots, token, pos, bt, lane_idx, temps, seeds,
@@ -556,8 +563,7 @@ class ModelRunner:
             }
             return drafts, probs, paged, stacked, undo
 
-        self._draft_jit[key] = jax.jit(fn, donate_argnums=(1,))
-        return self._draft_jit[key]
+        return fn
 
     def draft(
         self,
@@ -581,25 +587,23 @@ class ModelRunner:
         accepted lengths are known. Returns (drafts (L, K), probs, paged,
         stacked per-step state, ring undo)."""
         t0 = self.clock()
-        fresh = (len(lanes), k, sample) not in self._draft_jit
-        with self._dispatch_ctx(
-            "draft", "draft", (len(lanes), k, sample), fresh,
-            lanes=len(lanes), k=k,
-        ):
-            out = self._draft_for(len(lanes), k, sample)(
+        self._pin(paged)
+        out = self.store.dispatch(
+            "draft", (len(lanes), k, sample),
+            (
                 self.params, paged, slots,
                 jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
                 jnp.asarray(block_tables), jnp.asarray(lanes, jnp.int32),
                 jnp.asarray(temps, jnp.float32),
                 jnp.asarray(seeds, jnp.int32),
                 jnp.asarray(ngen, jnp.int32), base_key,
-            )
+            ),
+            lanes=len(lanes), k=k,
+        )
         self.stats.spec_s += self.clock() - t0
         return out
 
-    def _commit_for(self, lanes: int):
-        if lanes in self._commit_jit:
-            return self._commit_jit[lanes]
+    def _build_commit(self, key: Tuple[int, int]):
         model = self.model
 
         def fn(paged, slots, stacked, undo, n_acc, lane_idx):
@@ -608,8 +612,7 @@ class ModelRunner:
                                      lane_idx)
             return paged, slots
 
-        self._commit_jit[lanes] = jax.jit(fn, donate_argnums=(0, 1))
-        return self._commit_jit[lanes]
+        return fn
 
     def commit_draft(
         self,
@@ -620,17 +623,23 @@ class ModelRunner:
         undo: Params,
         n_acc: np.ndarray,
         lanes: np.ndarray,
+        k: int,
     ) -> Tuple[Params, Params]:
         """Roll the drafter back to the verifier's accepted lengths: keep
-        ring writes / recurrent state through step n_acc, restore the rest."""
+        ring writes / recurrent state through step n_acc, restore the rest.
+        Keyed by (lanes, K): the stacked state/undo avals scale with the
+        draft window, so one lane count compiles per K it serves (under
+        ``adaptive_k`` each window size is its own registry entry — the
+        old lanes-only key hid those recompiles from the compile census)."""
         t0 = self.clock()
-        fresh = len(lanes) not in self._commit_jit
-        with self._dispatch_ctx(
-            "commit", "commit", len(lanes), fresh, lanes=len(lanes)
-        ):
-            paged, slots = self._commit_for(len(lanes))(
+        self._pin(paged)
+        paged, slots = self.store.dispatch(
+            "commit", (len(lanes), k),
+            (
                 paged, slots, stacked, undo,
                 jnp.asarray(n_acc, jnp.int32), jnp.asarray(lanes, jnp.int32),
-            )
+            ),
+            lanes=len(lanes), k=k,
+        )
         self.stats.spec_s += self.clock() - t0
         return paged, slots

@@ -274,6 +274,20 @@ class Scheduler:
             )
         return pow2_bucket(prompt_len, self.min_bucket, self.bucket_cap)
 
+    def prefill_buckets(self) -> List[int]:
+        """The full prefill bucket ladder: every value ``bucket_for`` can
+        return, ascending — the prefill half of the AOT warmup plan
+        (DESIGN.md §14) and the exact inventory a full-coverage workload
+        compiles. Doubles from ``min_bucket``; the top entry is the
+        (possibly non-pow2, page-padded) ``bucket_cap``."""
+        ladder: List[int] = []
+        cur = pow2_bucket(1, self.min_bucket, self.bucket_cap)
+        while True:
+            ladder.append(cur)
+            if cur >= self.bucket_cap:
+                return ladder
+            cur = pow2_bucket(cur + 1, self.min_bucket, self.bucket_cap)
+
     def on_admitted(
         self, req: Request, slot: int, first_token: int, now: float
     ) -> Optional[Completion]:
@@ -312,6 +326,22 @@ class Scheduler:
         # program. Pools of one slot have no choice.
         lo = min(2, self.num_slots)
         return pow2_bucket(n_live, lo, 1 << (self.num_slots - 1).bit_length())
+
+    def decode_buckets(self) -> List[int]:
+        """Every live-lane bucket ``decode_bucket`` can return, ascending
+        — the decode half of the warmup plan. One entry (``num_slots``)
+        when live-lane gathering is off."""
+        if not self.gather_live_lanes:
+            return [self.num_slots]
+        lo = min(2, self.num_slots)
+        hi = 1 << (self.num_slots - 1).bit_length()
+        ladder: List[int] = []
+        cur = pow2_bucket(1, lo, hi)
+        while True:
+            ladder.append(cur)
+            if cur >= hi:
+                return ladder
+            cur = pow2_bucket(cur + 1, lo, hi)
 
     def ngen(self, slot: int) -> int:
         return len(self.slot_gen[slot])

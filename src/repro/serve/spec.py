@@ -66,8 +66,13 @@ from repro.core.align import TokenAligner
 from repro.models.model import Model
 from repro.serve.cache import BlockCacheManager
 from repro.serve.drafters import PromptLookupDrafter
-from repro.serve.engine import admit_prefill, ensure_pages
+from repro.serve.engine import (
+    admit_prefill,
+    ensure_pages,
+    prefill_warmup_steps,
+)
 from repro.serve.obs import MetricsRegistry
+from repro.serve.programs import WarmupStep
 from repro.serve.runner import _STAT_FIELDS, ModelRunner, RunnerStats
 from repro.serve.scheduler import Completion, Scheduler
 from repro.serve.shard import ServeMesh
@@ -402,6 +407,108 @@ class SpecCoordinator:
                 int(self.aligner.vocab_a2b[cur]) if self.aligner else cur
             )
 
+    # -- AOT warmup (DESIGN.md §14) ------------------------------------------
+
+    def _spec_round_steps(self, b: int, k: int) -> List[WarmupStep]:
+        """One warm (draft -> verify -> commit) round for lane bucket ``b``
+        and draft window ``k``, all lanes on the trash slot. The three
+        closures share a cell so commit (and rejection-mode verify) reuse
+        the draft dispatch's stacked-state/undo/q outputs — the exact
+        avals the request path threads between the same programs. A
+        needed producer that was warm already (skipped by the store) is
+        re-dispatched inside the consumer's closure: it hits the jit
+        cache, costing a step, not a compile."""
+        sample = self.mode == "rejection"
+        trash = self.cache_v.trash_slot
+        lanes = np.full(b, trash, np.int32)
+        z = np.zeros(b, np.int32)
+        zf = np.zeros(b, np.float32)
+        cell: Dict[str, object] = {}
+
+        def run_draft():
+            _, q, self.cache_d.paged, stacked, undo = self.runner_d.draft(
+                self.cache_d.paged, self.cache_d.slots,
+                token=z, pos=z,
+                block_tables=self.cache_d.table_rows([trash] * b),
+                lanes=lanes, temps=zf, seeds=z, ngen=z,
+                base_key=self.draft_key, k=k, sample=sample,
+            )
+            cell["q"], cell["stacked"], cell["undo"] = q, stacked, undo
+
+        def run_verify():
+            if sample and "q" not in cell:
+                run_draft()  # rejection verify needs the drafter's dists
+            _, n_acc, self.cache_v.paged, self.cache_v.slots = \
+                self.runner_v.verify(
+                    self.cache_v.paged, self.cache_v.slots,
+                    tokens=np.zeros((b, k + 1), np.int32),
+                    draft_cmp=np.full((b, k), -1, np.int32),
+                    q=cell["q"] if sample else None,
+                    pos=z, block_tables=self.cache_v.table_rows([trash] * b),
+                    lanes=lanes, temps=zf, seeds=z, ngen=z,
+                    base_key=self.base_key, mode=self.mode, n_live=0,
+                )
+            cell["n_acc"] = n_acc
+
+        def run_commit():
+            if "stacked" not in cell:
+                run_draft()
+            n_acc = cell.get("n_acc")
+            if n_acc is None:
+                n_acc = np.zeros(b, np.int32)
+            self.cache_d.paged, self.cache_d.slots = self.runner_d.commit_draft(
+                self.cache_d.paged, self.cache_d.slots,
+                stacked=cell["stacked"], undo=cell["undo"], n_acc=n_acc,
+                lanes=lanes, k=k,
+            )
+
+        steps = []
+        if self.runner_d is not None:
+            steps.append(WarmupStep("draft", (b, k, sample), run_draft))
+        steps.append(WarmupStep("verify", (b, k, self.mode), run_verify))
+        if self.runner_d is not None:
+            steps.append(WarmupStep("commit", (b, k), run_commit))
+        return steps
+
+    def warmup(self):
+        """Pre-compile both stacks' bucket ladders off the request path:
+        admission prefill programs on the verifier AND the drafter, then
+        a (draft, verify, commit) round per decode lane bucket × draft
+        window (every window in [k_min, k] under ``adaptive_k``). Steps
+        route to the store that owns their programs; throughput stats are
+        restored afterwards (compile counts stay)."""
+        v_steps = prefill_warmup_steps(
+            self.cache_v, self.scheduler, self.runner_v, self.base_key
+        )
+        d_steps = [] if self.runner_d is None else prefill_warmup_steps(
+            self.cache_d, self.scheduler, self.runner_d, self.draft_key
+        )
+        ks = (
+            range(self.k_min, self.k_max + 1) if self.adaptive_k
+            else [self.k]
+        )
+        for b in self.scheduler.decode_buckets():
+            for k in ks:
+                for step in self._spec_round_steps(b, k):
+                    (v_steps if step.op == "verify" else d_steps).append(step)
+        runners = [
+            r for r in (self.runner_v, self.runner_d) if r is not None
+        ]
+        saved = [
+            {f: getattr(r.stats, f) for f in _STAT_FIELDS if f != "compiles"}
+            for r in runners
+        ]
+        # drafter first: its draft dispatches fill the shared cells the
+        # verifier-side rejection verifies read from
+        built = []
+        if self.runner_d is not None:
+            built += self.runner_d.store.warmup(d_steps)
+        built += self.runner_v.store.warmup(v_steps)
+        for r, sv in zip(runners, saved):
+            for f, v in sv.items():
+                setattr(r.stats, f, v)
+        return built
+
     # -- stepping ------------------------------------------------------------
 
     def step(self) -> List[Completion]:
@@ -477,6 +584,7 @@ class SpecCoordinator:
             self.cache_d.paged, self.cache_d.slots = self.runner_d.commit_draft(
                 self.cache_d.paged, self.cache_d.slots,
                 stacked=stacked, undo=undo, n_acc=n_acc, lanes=lanes_np,
+                k=k,
             )
 
         # per-round adaptive K: track the running acceptance rate and move
@@ -546,6 +654,7 @@ class SpecCoordinator:
             d = self.runner_d.stats
             out.prefill_s += d.prefill_s
             out.spec_s += d.spec_s
+            out.compiles += d.compiles
         return out
 
     def metrics(self) -> Dict[str, Dict]:

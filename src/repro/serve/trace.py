@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import time
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -57,6 +58,8 @@ __all__ = [
     "NullTracer",
     "NULL_TRACER",
     "validate_events",
+    "extract_request",
+    "load_events",
     "perfetto_trace",
     "write_perfetto",
 ]
@@ -86,6 +89,14 @@ SPAN_EVENTS = frozenset(
         "verify",
         "commit",
         "compile",
+        # train-side round dispatches (train/rounds.py through the same
+        # ProgramStore — DESIGN.md §14): one span per federated-round
+        # program call on the ``train/dispatch`` track
+        "dst_step",
+        "saml_step",
+        "dst_scan",
+        "saml_scan",
+        "sft_step",
     }
 )
 EVENT_TYPES = INSTANT_EVENTS | SPAN_EVENTS
@@ -194,13 +205,35 @@ class Tracer:
 
     One tracer is shared by every component of a serve stack (engine,
     spec coordinator, router) so their events interleave on one
-    timeline; components get namespaced views via ``scoped()``."""
+    timeline; components get namespaced views via ``scoped()``.
+
+    ``sink=`` streams events to disk instead of accumulating them: pass
+    a path (opened/truncated) or a writable file-like, and every emit
+    appends one JSONL record while ``self.events`` stays empty — the
+    bounded-memory mode long-lived prod traces need. Read the file back
+    with ``load_events``; ``validate_events`` / ``write_perfetto``
+    accept the loaded list (``write_perfetto`` also takes the path
+    directly). A sinking tracer is a context manager: ``close()`` (or
+    the ``with`` exit) flushes and releases the stream.
+    """
 
     enabled = True
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    def __init__(
+        self,
+        clock: Callable[[], float] = time.monotonic,
+        sink=None,
+    ):
         self.clock = clock
         self.events: List[TraceEvent] = []
+        self._sink = None
+        self._owns_sink = False
+        if sink is not None:
+            if isinstance(sink, (str, os.PathLike)):
+                self._sink = open(sink, "w")
+                self._owns_sink = True
+            else:
+                self._sink = sink  # writable file-like
 
     # The single append point — scoped views resolve tracks then call this.
     def _emit(
@@ -211,7 +244,35 @@ class Tracer:
         rid: Optional[int],
         args: Dict[str, object],
     ) -> None:
+        if self._sink is not None:
+            rec = {"name": name, "ph": ph, "ts": self.clock(), "track": track}
+            if rid is not None:
+                rec["rid"] = rid
+            if args:
+                rec["args"] = args
+            self._sink.write(json.dumps(rec) + "\n")
+            return
         self.events.append(TraceEvent(name, ph, self.clock(), track, rid, args))
+
+    def flush(self) -> None:
+        if self._sink is not None:
+            self._sink.flush()
+
+    def close(self) -> None:
+        """Flush and (for path sinks) close the stream; idempotent."""
+        if self._sink is None:
+            return
+        self._sink.flush()
+        if self._owns_sink:
+            self._sink.close()
+        self._sink = None
+
+    def __enter__(self) -> "Tracer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def instant(self, name: str, *, rid=None, track=None, **args) -> None:
         self._emit(name, "i", _resolve_track("", track, rid), rid, args)
@@ -394,6 +455,87 @@ def validate_events(
 
 
 # --------------------------------------------------------------------------
+# Streaming sink I/O + per-request extraction
+# --------------------------------------------------------------------------
+
+
+def load_events(path) -> List[TraceEvent]:
+    """Read a JSONL trace written by ``Tracer(sink=path)`` back into
+    `TraceEvent`s (same order, same fields) for validation/export."""
+    out: List[TraceEvent] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            out.append(
+                TraceEvent(
+                    rec["name"], rec["ph"], rec["ts"], rec["track"],
+                    rec.get("rid"), rec.get("args", {}),
+                )
+            )
+    return out
+
+
+def _is_program_track(track: str) -> bool:
+    return track.rpartition("/")[2] in ("dispatch", "compile")
+
+
+def extract_request(
+    events: Sequence[TraceEvent], rid: int
+) -> List[TraceEvent]:
+    """Slice one request's trace out of a full run: every event carrying
+    ``rid`` (its lifecycle track, accept/reject instants) plus every
+    dispatch/compile span overlapping one of its residency windows
+    (``queued`` or ``running``) — the single-request debugging view:
+    which prefills, decode steps, verifies, and compiles this stream
+    actually sat in, queueing delay included, so a fat TTFT decomposes
+    into the slices that caused it.
+
+    Events keep their original stream order (NOT re-sorted by timestamp:
+    under a virtual clock many events share a stamp and reordering would
+    break B/E pairing), so the result revalidates and exports on its
+    own. Unfinished requests contribute an open-ended final window."""
+    keep = set()
+    windows: List[Tuple[float, float]] = []
+    open_t: Optional[float] = None
+    for i, ev in enumerate(events):
+        if ev.rid != rid:
+            continue
+        keep.add(i)
+        if ev.name in ("queued", "running"):  # alternate, never nest
+            if ev.ph == "B":
+                open_t = ev.ts
+            elif ev.ph == "E" and open_t is not None:
+                windows.append((open_t, ev.ts))
+                open_t = None
+    if open_t is not None:
+        windows.append((open_t, math.inf))
+
+    def overlaps(t0: float, t1: float) -> bool:
+        return any(t0 <= w1 and t1 >= w0 for (w0, w1) in windows)
+
+    # pair B/E per program track with a stack of begin indices, keeping
+    # both halves of any span that overlaps a running window
+    stacks: Dict[str, List[int]] = {}
+    for i, ev in enumerate(events):
+        if not _is_program_track(ev.track):
+            continue
+        if ev.ph == "B":
+            stacks.setdefault(ev.track, []).append(i)
+        elif ev.ph == "E":
+            st = stacks.get(ev.track)
+            if not st:
+                continue  # unbalanced input; validate_events will say so
+            j = st.pop()
+            if overlaps(events[j].ts, ev.ts):
+                keep.add(j)
+                keep.add(i)
+    return [events[i] for i in sorted(keep)]
+
+
+# --------------------------------------------------------------------------
 # Perfetto export
 # --------------------------------------------------------------------------
 
@@ -453,7 +595,11 @@ def perfetto_trace(
 
 
 def write_perfetto(
-    events: Sequence[TraceEvent], path: str, *, process_name: str = "serve"
+    events, path: str, *, process_name: str = "serve"
 ) -> None:
+    """Export events as a Perfetto JSON file. ``events`` is a TraceEvent
+    sequence or a path to a ``Tracer(sink=...)`` JSONL file."""
+    if isinstance(events, (str, os.PathLike)):
+        events = load_events(events)
     with open(path, "w") as f:
         json.dump(perfetto_trace(events, process_name=process_name), f)

@@ -33,7 +33,6 @@ round a refactor rather than a new algorithm.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -147,17 +146,19 @@ def stack_server_batches(server_samples, server_ds, aligner, tok,
 # scan-compiled inner loops (one program per device round)
 # ---------------------------------------------------------------------------
 
-def make_dst_scan(model_p: Model, optimizer, lora_alpha: float = 16.0):
+def make_dst_scan(model_p: Model, optimizer, lora_alpha: float = 16.0,
+                  jit: bool = True):
     """Compiled DST round (Eq. 5): ``dst_steps`` adapter updates in one
     ``lax.scan`` program. Math is step-for-step the loss/update of
-    ``saml.make_dst_step``; the (adapters, opt_state) carry is donated."""
+    ``saml.make_dst_step``; the (adapters, opt_state) carry is donated.
+    ``jit=False`` returns the raw fn for external wrapping (the train
+    ProgramStore)."""
 
     def loss_fn(adapters, base_p, lora_p, batch):
         params = apply_lora(merge_adapters(base_p, adapters), lora_p, lora_alpha)
         logits, _ = model_p.logits(params, batch)
         return cross_entropy(logits, batch["targets"], batch["loss_mask"])
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def run(adapters, opt_state, base_p, lora_p, batches):
         def body(carry, batch):
             adapters, opt_state = carry
@@ -172,14 +173,16 @@ def make_dst_scan(model_p: Model, optimizer, lora_alpha: float = 16.0):
         )
         return adapters, opt_state, losses
 
-    return run
+    return jax.jit(run, donate_argnums=(0, 1)) if jit else run
 
 
-def make_saml_scan(model_p: Model, model_l: Model, optimizer, cfg: S.SamlConfig):
+def make_saml_scan(model_p: Model, model_l: Model, optimizer, cfg: S.SamlConfig,
+                   jit: bool = True):
     """Compiled SAML round (Eqs. 7-9): ``saml_steps`` joint LoRA updates in
     one ``lax.scan`` program over the stacked batch pairs. Loss is
     ``saml.saml_pair_losses`` verbatim; the (loras, opt_state) carry is
-    donated so the Adam moments live on device for the whole round."""
+    donated so the Adam moments live on device for the whole round.
+    ``jit=False`` returns the raw fn for external wrapping."""
 
     def loss_fn(loras, base_p, base_l, adapters_p, batch_p, batch_l, align):
         return S.saml_pair_losses(
@@ -187,7 +190,6 @@ def make_saml_scan(model_p: Model, model_l: Model, optimizer, cfg: S.SamlConfig)
             adapters_p, batch_p, batch_l, align, cfg,
         )
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def run(loras, opt_state, base_p, base_l, adapters_p, const, xs):
         def body(carry, x):
             loras, opt_state = carry
@@ -207,7 +209,7 @@ def make_saml_scan(model_p: Model, model_l: Model, optimizer, cfg: S.SamlConfig)
         )
         return loras, opt_state, metrics
 
-    return run
+    return jax.jit(run, donate_argnums=(0, 1)) if jit else run
 
 
 # ---------------------------------------------------------------------------
@@ -255,12 +257,18 @@ def run_saml_loop(step_fn, loras, opt_state, base_p, base_l, adapters_p,
 
 @dataclasses.dataclass
 class RoundPrograms:
-    """The jit cache for one participant (a device, or the server pair).
+    """The compiled programs for one participant (a device, or the server
+    pair).
 
     Built once per (DPM, language-model, optimizer, saml-config) tuple and
     keyed by participant name in the trainer — the scan and loop variants
     live side by side so rounds can run either path (tests assert they
-    agree)."""
+    agree). With a ``serve.programs.ProgramStore`` the four programs are
+    registered as ``(op, participant)`` entries — ops ``dst_step`` /
+    ``saml_step`` / ``dst_scan`` / ``saml_scan`` — so train-round compiles
+    share the serve stack's registry counter, compile spans, and
+    inventory census; without one they fall back to plain jit wrapping
+    (same donation, no bookkeeping)."""
 
     dst_step: Optional[object] = None
     saml_step: Optional[object] = None
@@ -269,14 +277,26 @@ class RoundPrograms:
 
     @staticmethod
     def build(model_p: Model, model_l: Optional[Model], optimizer,
-              saml_cfg: S.SamlConfig, lora_alpha: float) -> "RoundPrograms":
+              saml_cfg: S.SamlConfig, lora_alpha: float,
+              store=None, key: str = "train") -> "RoundPrograms":
+        jit = store is None  # with a store, the store owns jit + donation
+
+        def wrap(op, fn):
+            if store is None:
+                return fn
+            return store.wrap(op, key, fn, donate=(0, 1), span=op)
+
         out = RoundPrograms(
-            dst_step=S.make_dst_step(model_p, optimizer, lora_alpha),
-            dst_scan=make_dst_scan(model_p, optimizer, lora_alpha),
+            dst_step=wrap("dst_step", S.make_dst_step(
+                model_p, optimizer, lora_alpha, jit=jit)),
+            dst_scan=wrap("dst_scan", make_dst_scan(
+                model_p, optimizer, lora_alpha, jit=jit)),
         )
         if model_l is not None:
-            out.saml_step = S.make_saml_step(model_p, model_l, optimizer, saml_cfg)
-            out.saml_scan = make_saml_scan(model_p, model_l, optimizer, saml_cfg)
+            out.saml_step = wrap("saml_step", S.make_saml_step(
+                model_p, model_l, optimizer, saml_cfg, jit=jit))
+            out.saml_scan = wrap("saml_scan", make_saml_scan(
+                model_p, model_l, optimizer, saml_cfg, jit=jit))
         return out
 
     def run_dst(self, scan: bool, adapters, opt_state, base_p, lora_p, batches):

@@ -65,6 +65,9 @@ from repro.data.tokenizer import ToyTokenizer, build_tokenizer
 from repro.models.model import Model, build_model
 from repro.models.transformer import cross_entropy
 from repro.optim.adamw import AdamW, OptState
+from repro.serve.obs import MetricsRegistry
+from repro.serve.programs import ProgramStore
+from repro.serve.trace import NULL_TRACER
 from repro.train.rounds import (
     RoundPrograms,
     draw_indices,
@@ -201,10 +204,23 @@ class CoTuneTrainer:
     _programs: Dict[str, RoundPrograms] = dataclasses.field(default_factory=dict)
     _srv_opt: Optional[OptState] = None
     _srv_aligner: Optional[TokenAligner] = None
+    # observability (DESIGN.md §13/§14): train-round programs live in the
+    # same ProgramStore abstraction as the serve stack, so round compiles
+    # land in the shared `serve_compiles{engine="train"}` series and the
+    # same trace taxonomy (dst/saml step + scan spans)
+    registry: Optional[MetricsRegistry] = None
+    tracer: object = NULL_TRACER
+    store: Optional[ProgramStore] = None
 
     def __post_init__(self) -> None:
         if self.opt is None:
             self.opt = AdamW(learning_rate=self.cfg.lr)
+        if self.registry is None:
+            self.registry = MetricsRegistry()
+        if self.store is None:
+            self.store = ProgramStore(
+                registry=self.registry, tracer=self.tracer, engine="train"
+            )
 
     # -- deterministic data construction (shared by build + load) ------
     @staticmethod
@@ -301,7 +317,8 @@ class CoTuneTrainer:
                      model_l: Optional[Model]) -> RoundPrograms:
         if name not in self._programs:
             self._programs[name] = RoundPrograms.build(
-                model_p, model_l, self.opt, self.cfg.saml, self.cfg.lora_alpha
+                model_p, model_l, self.opt, self.cfg.saml,
+                self.cfg.lora_alpha, store=self.store, key=name,
             )
         return self._programs[name]
 

@@ -1,0 +1,229 @@
+"""ProgramStore tests (DESIGN.md §14).
+
+Store unit level:
+1. Registration + dispatch: one compile per (op, key), repeats hit the
+   cache, inventory/keys/compiles book exactly what was built.
+2. wrap(): pre-built fns (the train-round path) route through the same
+   dispatch plumbing and the same compile counter.
+3. Donation audit: dispatching an already-donated buffer raises
+   DonationAuditError (use-after-donate), fresh buffers never trip it.
+4. Compile spans + serve_compiles{engine=} land once per fresh build.
+
+Engine level (the AOT warmup contract):
+5. warmup() compiles exactly the scheduler's bucket ladders — the
+   compile-count regression census — and is idempotent.
+6. A warmed engine serves a full wave with ZERO new compiles, and its
+   generations are byte-identical to a cold engine's.
+7. A fixed workload's inventory is exactly its bucket set; repeating the
+   workload recompiles nothing.
+
+Trace plumbing that rides along:
+8. JSONL sink round-trips through load_events (order, fields, balance)
+   and write_perfetto accepts the path directly.
+9. extract_request slices one request's lifecycle + overlapping program
+   dispatches out of a multi-request trace.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import (
+    DonationAuditError,
+    ProgramStore,
+    ServeEngine,
+    Tracer,
+    extract_request,
+    load_events,
+    validate_events,
+    write_perfetto,
+)
+
+
+def _setup():
+    cfg = get_arch("qwen2-1.5b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    return cfg, model, params
+
+
+# -- store unit level ---------------------------------------------------------
+
+
+def test_store_books_one_compile_per_key():
+    store = ProgramStore(engine="t")
+    store.family("scale", build=lambda key: (lambda x: x * key), span="scale")
+    x = jnp.arange(4.0)
+    for _ in range(3):
+        out = store.dispatch("scale", 2, (x,))
+    np.testing.assert_allclose(np.asarray(out), np.arange(4.0) * 2)
+    store.dispatch("scale", 3, (x,))
+    assert store.compiles == 2
+    assert store.num_programs == 2
+    assert store.keys("scale") == [2, 3]
+    assert store.inventory() == {"scale": [2, 3]}
+    assert store.has("scale", 2) and not store.has("scale", 5)
+
+
+def test_store_rejects_unknown_family_and_duplicate_registration():
+    store = ProgramStore(engine="t")
+    store.family("f", build=lambda key: (lambda x: x), span="f")
+    with pytest.raises(KeyError):
+        store.dispatch("g", 1, (jnp.zeros(2),))
+    with pytest.raises(ValueError):
+        store.family("f", build=lambda key: (lambda x: x), span="f")
+
+
+def test_wrap_routes_prebuilt_fns_through_the_store():
+    store = ProgramStore(engine="train")
+    raw = lambda x, y: x + y  # noqa: E731 — stands in for a train step
+    call = store.wrap("dst_step", "train", raw, span="dst_step")
+    a, b = jnp.arange(3.0), jnp.ones(3)
+    np.testing.assert_allclose(np.asarray(call(a, b)), np.arange(3.0) + 1)
+    call(a, b)
+    assert store.compiles == 1
+    assert store.inventory() == {"dst_step": ["train"]}
+
+
+def test_donation_audit_catches_use_after_donate():
+    store = ProgramStore(engine="t", audit=True)
+    store.family(
+        "axpy", build=lambda key: (lambda x, y: x * key + y),
+        donate=(0,), span="axpy",
+    )
+    x, y = jnp.ones(8), jnp.arange(8.0)
+    store.dispatch("axpy", 2, (x, y))  # donates x
+    assert x.is_deleted()
+    with pytest.raises(DonationAuditError):
+        store.dispatch("axpy", 2, (x, y))
+    # fresh donated buffers never trip the audit
+    for _ in range(3):
+        out = store.dispatch("axpy", 2, (jnp.ones(8), y))
+    np.testing.assert_allclose(np.asarray(out), 2 + np.arange(8.0))
+    assert store.compiles == 1
+
+
+def test_fresh_build_emits_one_compile_span():
+    tr = Tracer(clock=iter(np.arange(0.0, 100.0, 0.5)).__next__)
+    store = ProgramStore(engine="llm", tracer=tr)
+    store.family("scale", build=lambda key: (lambda x: x * key), span="scale")
+    x = jnp.arange(4.0)
+    store.dispatch("scale", 2, (x,))
+    store.dispatch("scale", 2, (x,))
+    compiles = [e for e in tr.events if e.name == "compile" and e.ph == "B"]
+    assert len(compiles) == 1
+    assert compiles[0].args == {"family": "scale", "key": "2"}
+    # every dispatch (fresh or cached) gets a dispatch span
+    assert sum(1 for e in tr.events
+               if e.name == "scale" and e.ph == "B") == 2
+
+
+# -- engine level: AOT warmup -------------------------------------------------
+
+
+def test_warmup_compiles_exactly_the_bucket_ladders():
+    _, model, params = _setup()
+    eng = ServeEngine(model, params, max_batch=4, max_len=64, seed=0)
+    built = eng.warmup()
+    inv = eng.runner.store.inventory()
+    assert inv == {
+        "prefill": eng.scheduler.prefill_buckets(),
+        "decode": eng.scheduler.decode_buckets(),
+    }
+    assert sorted(built) == sorted(
+        [("prefill", b) for b in eng.scheduler.prefill_buckets()]
+        + [("decode", b) for b in eng.scheduler.decode_buckets()]
+    )
+    assert eng.warmup() == []  # idempotent: everything already compiled
+
+
+def test_warmed_engine_serves_with_zero_compiles_byte_identical():
+    cfg, model, params = _setup()
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(1, cfg.vocab_size, (n,)))
+               for n in (3, 9, 17, 30)]
+
+    cold = ServeEngine(model, params, max_batch=2, max_len=48, seed=0)
+    for p in prompts:
+        cold.submit(p, max_new=6)
+    want = {c.rid: c.tokens for c in cold.run()}
+
+    warm = ServeEngine(model, params, max_batch=2, max_len=48, seed=0)
+    warm.warmup()
+    pre = warm.runner.stats.compiles
+    for p in prompts:
+        warm.submit(p, max_new=6)
+    got = {c.rid: c.tokens for c in warm.run()}
+    assert warm.runner.stats.compiles == pre, "request wave paid a compile"
+    assert got == want
+
+
+def test_workload_inventory_is_exactly_its_bucket_set():
+    cfg, model, params = _setup()
+    rng = np.random.RandomState(1)
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, seed=0)
+    # lengths 3 and 10 -> buckets 4 and 16; nothing else may compile
+    for n in (3, 10, 3, 10):
+        eng.submit(list(rng.randint(1, cfg.vocab_size, (n,))), max_new=2)
+    eng.run()
+    inv = eng.runner.store.inventory()
+    assert inv["prefill"] == [
+        eng.scheduler.bucket_for(3), eng.scheduler.bucket_for(10)]
+    assert set(inv["decode"]) <= set(eng.scheduler.decode_buckets())
+    # the same workload again recompiles nothing
+    before = eng.runner.store.compiles
+    for n in (3, 10):
+        eng.submit(list(rng.randint(1, cfg.vocab_size, (n,))), max_new=2)
+    eng.run()
+    assert eng.runner.store.compiles == before
+
+
+# -- trace plumbing -----------------------------------------------------------
+
+
+def test_jsonl_sink_round_trips_and_exports(tmp_path):
+    sink = tmp_path / "trace.jsonl"
+    clock = iter(np.arange(0.0, 100.0, 0.25)).__next__
+    with Tracer(clock=clock, sink=str(sink)) as tr:
+        assert tr.events == []  # streaming mode: nothing accumulates
+        tr.instant("submit", rid=0, track="sched/requests")
+        with tr.span("prefill_chunk", track="llm/prefill", rid=0, bucket=8):
+            pass
+        tr.instant("finish", rid=0, track="sched/requests")
+    events = load_events(str(sink))
+    assert [(e.name, e.ph) for e in events] == [
+        ("submit", "i"), ("prefill_chunk", "B"), ("prefill_chunk", "E"),
+        ("finish", "i"),
+    ]
+    assert events[1].args == {"bucket": 8}
+    assert events[1].rid == 0 and events[1].track == "llm/prefill"
+    assert events[0].ts < events[1].ts < events[2].ts < events[3].ts
+    out = tmp_path / "trace.json"
+    write_perfetto(str(sink), str(out))  # accepts the path directly
+    assert out.stat().st_size > 0
+
+
+def test_extract_request_slices_one_lifecycle(tmp_path):
+    cfg, model, params = _setup()
+    rng = np.random.RandomState(2)
+    sink = tmp_path / "serve.jsonl"
+    with Tracer(sink=str(sink)) as tr:
+        eng = ServeEngine(model, params, max_batch=2, max_len=32, seed=0,
+                          tracer=tr, name="llm")
+        rids = [eng.submit(list(rng.randint(1, cfg.vocab_size, (5 + i,))),
+                           max_new=4) for i in range(3)]
+        eng.run()
+    events = load_events(str(sink))
+    validate_events(events, require=("submit", "finish", "compile"))
+    ex = extract_request(events, rids[1])
+    assert ex, "empty extraction"
+    # every lifecycle event of the target rid survives; no foreign rids
+    for e in ex:
+        assert e.rid in (rids[1], None)
+    mine = [e for e in events if e.rid == rids[1]]
+    assert [e for e in ex if e.rid == rids[1]] == mine
+    # overlapping program work (anonymous dispatch spans) is kept
+    assert any(e.track.rpartition("/")[2] in ("dispatch", "compile")
+               for e in ex)

@@ -184,11 +184,10 @@ def test_sharded_engine_byte_identical(arch, tensor, expert, pseed, kvh):
     paged = eng.cache.paged
     total = sum(leaf.nbytes for leaf in jax.tree.leaves(paged))
     dev = sm.device_pool_bytes(paged)
-    # measured after serving: GSPMD may propagate a FINER layout to the
-    # program-output pools than the placement policy (e.g. the MLA rope
-    # cache riding the latent pool's split on a 2-D mesh) — never a
-    # coarser one, which would break the 1/N memory scaling
-    assert dev <= _expected_device_bytes(sm, model, paged)
+    # measured after serving: the ProgramStore pins out_shardings to the
+    # placement policy (DESIGN.md §14), so program-output pools match it
+    # exactly — GSPMD can no longer propagate a different layout
+    assert dev == _expected_device_bytes(sm, model, paged)
     if arch == "qwen2-1.5b":
         # pure-attn pools shard entirely over kv_heads: exactly 1/tensor
         assert dev * tensor == total
