@@ -1,0 +1,160 @@
+"""Serve-kernel dispatch benchmark (DESIGN.md §15).
+
+Times the Pallas serving kernels against the XLA gather paths they
+replace, at the three hot-path shapes that motivated them:
+
+- paged-attention decode (K1 = 1, one query row per lane),
+- paged-attention K+1 verify (K1 = 4, the speculative verify form),
+- dropless-MoE dispatch on a long-prompt prefill token batch
+  (sort/segment kernel vs the (E, T, d) capacity buffer).
+
+On CPU the kernels run in Pallas *interpret* mode (``kernels/ops.py``
+backend autodetection), which executes the grid as a Python loop — it
+validates semantics, not speed, so kernel-vs-XLA ratios here are
+expected to be >> 1 and nothing is asserted about them. On a TPU
+backend the same script times the Mosaic-compiled kernels; the XLA
+column is the meaningful baseline either way because both paths are
+timed end-to-end through ``block_until_ready``.
+
+Emits ``BENCH_kernels.json``:
+
+- per-case best-of-``--reps`` milliseconds for the XLA path and the
+  kernel path, plus the kernel/XLA ratio,
+- the dispatch-buffer byte counts the MoE rewrite is about: the
+  capacity path's (E, T, d) buffer vs the sort path's padded slots.
+
+  PYTHONPATH=src python benchmarks/kernel_bench.py [--reps 5] \
+      [--out BENCH_kernels.json]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.kernels import ops
+from repro.kernels.ref import ref_paged_attention
+from repro.models.moe import moe_ffn_dense, moe_specs, sorted_dispatch
+from repro.common.module import materialize
+
+
+def best_ms(fn, reps):
+    """Best-of-reps wall time in ms; rep 0 is a discarded compile warmup."""
+    best = float("inf")
+    for rep in range(reps + 1):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) * 1e3
+        if rep:
+            best = min(best, dt)
+    return best
+
+
+def attn_case(name, *, lanes, pages, ps, kv, rep, k1, reps):
+    rng = np.random.RandomState(0)
+    d, h = 32, kv * rep
+    n = 1 + lanes * pages
+    k_pool = jnp.asarray(rng.randn(n, ps, kv, d), jnp.bfloat16)
+    v_pool = jnp.asarray(rng.randn(n, ps, kv, d), jnp.bfloat16)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, n))[: lanes * pages].reshape(lanes, pages),
+        jnp.int32,
+    )
+    pos = jnp.asarray(rng.randint(k1 - 1, pages * ps - k1, lanes), jnp.int32)
+    q = jnp.asarray(rng.randn(lanes, k1, h, d), jnp.float32)
+
+    xla = jax.jit(ref_paged_attention)
+    xla_ms = best_ms(lambda: xla(q, k_pool, v_pool, bt, pos), reps)
+    ker_ms = best_ms(lambda: ops.paged_attention(q, k_pool, v_pool, bt, pos),
+                     reps)
+    return {
+        "case": name,
+        "shape": {"lanes": lanes, "pages": pages, "page_size": ps,
+                  "kv_heads": kv, "q_per_kv": rep, "k1": k1, "head_dim": d},
+        "xla_ms": xla_ms,
+        "kernel_ms": ker_ms,
+        "kernel_over_xla": ker_ms / xla_ms,
+    }
+
+
+def moe_case(name, *, t, reps):
+    """Long-prompt dropless dispatch: capacity buffer vs sort/segment."""
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced(vocab_size=64)
+    p = materialize(moe_specs(cfg), jax.random.key(0), jnp.float32)
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(1, t, cfg.d_model), jnp.float32)
+
+    cap = jax.jit(lambda p, x: moe_ffn_dense(cfg, p, x, dropless=True)[0])
+    srt = jax.jit(lambda p, x: moe_ffn_dense(
+        cfg, p, x, dropless=True, use_kernels=True)[0])
+    xla_ms = best_ms(lambda: cap(p, x), reps)
+    ker_ms = best_ms(lambda: srt(p, x), reps)
+
+    e, k, d = cfg.num_experts, cfg.top_k, cfg.d_model
+    block = 64
+    n_slots = (-(-t * k // block) + e) * block
+    return {
+        "case": name,
+        "shape": {"tokens": t, "experts": e, "top_k": k, "d_model": d},
+        "xla_ms": xla_ms,
+        "kernel_ms": ker_ms,
+        "kernel_over_xla": ker_ms / xla_ms,
+        "dispatch_buffer_floats": {
+            "capacity_e_t_d": e * t * d,
+            "sorted_slots_d": n_slots * d,
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_kernels.json"))
+    args = ap.parse_args()
+
+    interpret = ops._interpret()
+    cases = [
+        attn_case("decode_small", lanes=4, pages=4, ps=16, kv=2, rep=2,
+                  k1=1, reps=args.reps),
+        attn_case("decode_wide", lanes=8, pages=8, ps=8, kv=4, rep=2,
+                  k1=1, reps=args.reps),
+        attn_case("verify_k4", lanes=4, pages=4, ps=16, kv=2, rep=2,
+                  k1=4, reps=args.reps),
+        moe_case("moe_prefill_t256", t=256, reps=args.reps),
+        moe_case("moe_prefill_t512", t=512, reps=args.reps),
+    ]
+
+    print("case,xla_ms,kernel_ms,kernel_over_xla")
+    for c in cases:
+        print(f"{c['case']},{c['xla_ms']:.3f},{c['kernel_ms']:.3f},"
+              f"{c['kernel_over_xla']:.2f}")
+
+    report = {
+        "backend": jax.default_backend(),
+        "pallas_interpret": interpret,
+        "note": ("interpret mode executes the kernel grid as a Python "
+                 "loop — semantics only; ratios are meaningful on a "
+                 "compiled (TPU) backend"),
+        "reps": args.reps,
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    mode = "interpret" if interpret else "compiled"
+    ratios = ", ".join(f"{c['kernel_over_xla']:.1f}" for c in cases)
+    print(f"# {len(cases)} cases on {jax.default_backend()} ({mode} "
+          f"pallas); kernel/xla ratios {ratios}", file=sys.stderr)
+    print(f"# wrote {os.path.abspath(args.out)}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

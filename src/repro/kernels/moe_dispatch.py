@@ -1,0 +1,72 @@
+"""Pallas sort/segment dropless-MoE dispatch (megablocks-style).
+
+The XLA dropless path in `models/moe.py` scatter-adds every (token,
+choice) pair into an (E*cap + 1, d) capacity buffer with cap = T, so the
+expert matmul runs over E*T rows — quadratic in T for long-prompt MoE
+prefill even though only T*k rows are live. The sort/segment form keeps
+the matmul linear: tokens are argsorted by expert (XLA, in
+`moe.sorted_dispatch`), each expert's contiguous segment is padded to a
+tile multiple, and this kernel runs one expert-pure (BLK, d) @ (d, f)
+SwiGLU tile per grid step, picking each tile's expert weights via a
+scalar-prefetched tile -> expert map — the (E, T, d) buffer never exists.
+
+Zero-padded slots ride through the FFN (SwiGLU(0) = 0) and are dropped by
+the gather-back in the caller, which also applies routing weights — the
+kernel is the pure segment FFN.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segment_kernel(
+    te_ref,  # (n_tiles,) scalar-prefetch tile -> expert map
+    x_ref,  # (BLK, d)
+    g_ref,  # (1, d, f) — expert te[t]'s gate
+    u_ref,  # (1, d, f)
+    d_ref,  # (1, f, d)
+    o_ref,  # (BLK, d)
+):
+    x = x_ref[...].astype(jnp.float32)
+    g = x @ g_ref[0].astype(jnp.float32)
+    u = x @ u_ref[0].astype(jnp.float32)
+    h = jax.nn.silu(g) * u
+    o_ref[...] = (h @ d_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def moe_segment_ffn(
+    xs: jax.Array,  # (S, d) expert-sorted tokens, S a multiple of block
+    tile_expert: jax.Array,  # (S // block,) int32
+    gate: jax.Array,  # (E, d, f)
+    up: jax.Array,  # (E, d, f)
+    down: jax.Array,  # (E, f, d)
+    *,
+    block: int,
+    interpret: bool = True,
+) -> jax.Array:
+    s, d = xs.shape
+    e, _, f = gate.shape
+    n_tiles = s // block
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda t, te: (t, 0)),
+            pl.BlockSpec((1, d, f), lambda t, te: (te[t], 0, 0)),
+            pl.BlockSpec((1, d, f), lambda t, te: (te[t], 0, 0)),
+            pl.BlockSpec((1, f, d), lambda t, te: (te[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda t, te: (t, 0)),
+    )
+    return pl.pallas_call(
+        _segment_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, d), xs.dtype),
+        interpret=interpret,
+    )(tile_expert.astype(jnp.int32), xs, gate, up, down)

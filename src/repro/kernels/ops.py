@@ -1,7 +1,11 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On CPU (this container) kernels run in interpret mode; on TPU set
-REPRO_PALLAS_INTERPRET=0 to compile with Mosaic.
+Backend autodetection: kernels compile with Mosaic on TPU and run in
+interpret mode (pure lax ops — jit-traceable, GSPMD-shardable) everywhere
+else, so ``use_kernels=True`` is safe to flip on any backend.
+``REPRO_PALLAS_INTERPRET`` remains the explicit override: a truthy value
+forces interpret mode even on TPU (the CI honesty lane), ``0``/``false``
+forces Mosaic compilation.
 """
 from __future__ import annotations
 
@@ -12,12 +16,18 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.lora_matmul import lora_matmul as _lora_mm
+from repro.kernels.moe_dispatch import moe_segment_ffn as _moe_ffn
+from repro.kernels.paged_attention import paged_attention as _paged_attn
+from repro.kernels.paged_attention import paged_mla_attention as _paged_mla
 from repro.kernels.topk_pool import topk_pool as _topk_pool
 
 
 def _interpret() -> bool:
-    if os.environ.get("REPRO_PALLAS_INTERPRET", "").strip() in ("0", "false"):
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("0", "false", "no", "off"):
         return False
+    if env:
+        return True
     return jax.default_backend() != "tpu"
 
 
@@ -31,3 +41,23 @@ def flash_attention(q, k, v, *, causal: bool = True):
 
 def lora_matmul(x, w, a, b, *, scale: float = 2.0):
     return _lora_mm(x, w, a, b, scale=scale, interpret=_interpret())
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, pos, *, softcap: float = 0.0):
+    return _paged_attn(
+        q, k_pages, v_pages, block_tables, pos,
+        softcap=softcap, interpret=_interpret(),
+    )
+
+
+def paged_mla_attention(q, c_pages, r_pages, block_tables, pos, *, scale: float):
+    return _paged_mla(
+        q, c_pages, r_pages, block_tables, pos,
+        scale=scale, interpret=_interpret(),
+    )
+
+
+def moe_segment_ffn(xs, tile_expert, gate, up, down, *, block: int):
+    return _moe_ffn(
+        xs, tile_expert, gate, up, down, block=block, interpret=_interpret()
+    )

@@ -1,0 +1,265 @@
+"""Pallas paged attention: decode and K+1 verify over block-table pools.
+
+The serving read path (`models/paged.py`) stores KV in global page pools
+``(num_pages, page_size, kv_heads, head_dim)`` addressed through per-lane
+block tables ``(L, pages_per_seq)``. The XLA form materializes the gather
+``pool[bt]`` as an (L, span, KV, D) tensor before attending — O(L * span)
+HBM traffic per layer per step regardless of how much of the span is live.
+This kernel instead gathers pages *inside* the grid (the vLLM
+PagedAttention trick): the K/V BlockSpec index map reads the scalar-
+prefetched block table, so Mosaic DMAs exactly one (page_size, D) tile per
+grid step straight into VMEM and the gathered intermediate never exists.
+
+Grid = (L * KV, P) with pages innermost-sequential; VMEM scratch carries
+flash-style online-softmax state (m, l, acc) per (lane, kv-head). One
+kernel covers both serving forms — decode is the K1 = 1 special case of
+the K+1 verify window:
+
+- queries arrive (L, K1, H, D) and are regrouped per kv-head as
+  (L*KV, K1*rep, D) (``repeat_kv`` is kv-major: q head = kv * rep + r),
+  so each grid row attends its kv-head's pages once for all rep q heads;
+- masking reproduces the XLA contract exactly: key position
+  ``p * ps + offset`` is valid iff <= query position ``pos[lane] + i``
+  (row i // rep of the regrouped block). Trash-page writes and
+  ``write_len`` padding are handled *before* the kernel (pool writes stay
+  in XLA), so out-of-span keys are masked purely by position;
+- logit softcap (gemma-style tanh) is applied pre-mask, matching
+  ``layers.sdpa``.
+
+Page 0 of every block table covers position 0, which is valid for every
+query — so the first grid step always contributes mass and the finite
+NEG_INF init can never produce a spurious exp(0) row.
+
+`paged_mla_attention` is the absorbed-MLA variant: queries are the
+concatenation (q_absorbed, q_rope) against keys (c_kv, k_rope) gathered
+from the two latent pools, values are c_kv itself; the output is the
+latent context (L, K1, H, rank), decompressed by the caller.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    bt_ref,  # (L, P) scalar-prefetch block tables
+    pos_ref,  # (L,) scalar-prefetch query-start positions
+    q_ref,  # (1, K1*rep, D)
+    k_ref,  # (1, ps, 1, D) — page bt[lane, p], kv-head g % KV
+    v_ref,  # (1, ps, 1, D)
+    o_ref,  # (1, K1*rep, D)
+    m_scr,  # (K1*rep, 1) f32
+    l_scr,  # (K1*rep, 1) f32
+    acc_scr,  # (K1*rep, D) f32
+    *,
+    scale: float,
+    softcap: float,
+    kv: int,
+    rep: int,
+    ps: int,
+    n_pages: int,
+):
+    g = pl.program_id(0)
+    pj = pl.program_id(1)
+
+    @pl.when(pj == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = q @ k.T  # (K1*rep, ps)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    # key position of each column; query position of each row (queries are
+    # grouped (K1, rep) row-major, so row i is draft step i // rep)
+    kp = pj * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    qp = pos_ref[g // kv] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // rep
+    s = jnp.where(kp <= qp, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(pj == n_pages - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_attention(
+    q: jax.Array,  # (L, K1, H, D) post-rope queries
+    k_pages: jax.Array,  # (N, ps, KV, D) post-write pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (L, P) int32
+    pos: jax.Array,  # (L,) int32 — position of q[:, 0]
+    *,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    lanes, k1, h, d = q.shape
+    n, ps, kv, _ = k_pages.shape
+    p_per = block_tables.shape[1]
+    rep = h // kv
+    nq = k1 * rep
+    # regroup queries per kv-head: (L, K1, KV, rep, D) -> (L*KV, K1*rep, D)
+    qg = (
+        q.reshape(lanes, k1, kv, rep, d)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(lanes * kv, nq, d)
+    )
+    kernel = functools.partial(
+        _paged_kernel,
+        scale=1.0 / math.sqrt(d),
+        softcap=softcap,
+        kv=kv,
+        rep=rep,
+        ps=ps,
+        n_pages=p_per,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(lanes * kv, p_per),
+        in_specs=[
+            pl.BlockSpec((1, nq, d), lambda g, pj, bt, ps_: (g, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, 1, d), lambda g, pj, bt, ps_: (bt[g // kv, pj], 0, g % kv, 0)
+            ),
+            pl.BlockSpec(
+                (1, ps, 1, d), lambda g, pj, bt, ps_: (bt[g // kv, pj], 0, g % kv, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, nq, d), lambda g, pj, bt, ps_: (g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nq, 1), jnp.float32),
+            pltpu.VMEM((nq, 1), jnp.float32),
+            pltpu.VMEM((nq, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((lanes * kv, nq, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32), qg, k_pages, v_pages)
+    # (L*KV, K1*rep, D) -> (L, K1, H, D), inverting the kv-major regroup
+    return (
+        out.reshape(lanes, kv, k1, rep, d)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(lanes, k1, h, d)
+    )
+
+
+def _mla_kernel(
+    bt_ref,  # (L, P)
+    pos_ref,  # (L,)
+    q_ref,  # (1, K1*H, R) — concat(q_absorbed, q_rope) along R
+    c_ref,  # (1, ps, r) latent page
+    r_ref,  # (1, ps, rope) rope-key page
+    o_ref,  # (1, K1*H, r) latent context
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    heads: int,
+    ps: int,
+    n_pages: int,
+):
+    lane = pl.program_id(0)
+    pj = pl.program_id(1)
+
+    @pl.when(pj == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    c = c_ref[0].astype(jnp.float32)  # (ps, r) — both key prefix and value
+    kr = r_ref[0].astype(jnp.float32)  # (ps, rope)
+    k = jnp.concatenate([c, kr], axis=-1)  # (ps, r + rope)
+    s = q @ k.T  # (K1*H, ps)
+    kp = pj * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    qp = (
+        pos_ref[lane]
+        + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // heads
+    )
+    s = jnp.where(kp <= qp, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ c
+    m_scr[...] = m_new
+
+    @pl.when(pj == n_pages - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_mla_attention(
+    q: jax.Array,  # (L, K1, H, r + rope) — concat(q_absorbed, q_rope)
+    c_pages: jax.Array,  # (N, ps, r) post-write latent pool
+    r_pages: jax.Array,  # (N, ps, rope) post-write rope-key pool
+    block_tables: jax.Array,  # (L, P)
+    pos: jax.Array,  # (L,)
+    *,
+    scale: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """Absorbed-MLA paged attention; returns latent context (L, K1, H, r)."""
+    lanes, k1, h, _ = q.shape
+    n, ps, r = c_pages.shape
+    p_per = block_tables.shape[1]
+    nq = k1 * h
+    qg = q.reshape(lanes, nq, q.shape[-1])
+    kernel = functools.partial(
+        _mla_kernel, scale=scale, heads=h, ps=ps, n_pages=p_per
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(lanes, p_per),
+        in_specs=[
+            pl.BlockSpec((1, nq, q.shape[-1]), lambda l, pj, bt, ps_: (l, 0, 0)),
+            pl.BlockSpec((1, ps, r), lambda l, pj, bt, ps_: (bt[l, pj], 0, 0)),
+            pl.BlockSpec(
+                (1, ps, r_pages.shape[-1]),
+                lambda l, pj, bt, ps_: (bt[l, pj], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, nq, r), lambda l, pj, bt, ps_: (l, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nq, 1), jnp.float32),
+            pltpu.VMEM((nq, 1), jnp.float32),
+            pltpu.VMEM((nq, r), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((lanes, nq, r), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32), qg, c_pages, r_pages)
+    return out.reshape(lanes, k1, h, r)

@@ -39,3 +39,82 @@ def ref_lora_matmul(
     xf = x.astype(jnp.float32)
     y = xf @ w.astype(jnp.float32) + scale * ((xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32))
     return y.astype(x.dtype)
+
+
+def ref_paged_attention(
+    q: jax.Array,  # (L, K1, H, D)
+    k_pages: jax.Array,  # (N, ps, KV, D) post-write pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (L, P)
+    pos: jax.Array,  # (L,)
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """The XLA serving read path verbatim: gather ``pool[bt]``, repeat KV
+    heads kv-major, sdpa with the span mask ``key_pos <= query_pos``."""
+    lanes, k1, h, d = q.shape
+    ps, kv = k_pages.shape[1], k_pages.shape[2]
+    span = block_tables.shape[1] * ps
+    rep = h // kv
+    kk = k_pages[block_tables].reshape(lanes, span, kv, d).astype(q.dtype)
+    vv = v_pages[block_tables].reshape(lanes, span, kv, d).astype(q.dtype)
+    kk = jnp.broadcast_to(
+        kk[:, :, :, None, :], (lanes, span, kv, rep, d)
+    ).reshape(lanes, span, h, d)
+    vv = jnp.broadcast_to(
+        vv[:, :, :, None, :], (lanes, span, kv, rep, d)
+    ).reshape(lanes, span, h, d)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    positions = pos[:, None] + jnp.arange(k1)[None, :]
+    valid = jnp.arange(span)[None, None, :] <= positions[:, :, None]
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+
+
+def ref_paged_mla_attention(
+    q: jax.Array,  # (L, K1, H, r + rope) — concat(q_absorbed, q_rope)
+    c_pages: jax.Array,  # (N, ps, r)
+    r_pages: jax.Array,  # (N, ps, rope)
+    block_tables: jax.Array,
+    pos: jax.Array,
+    *,
+    scale: float,
+) -> jax.Array:
+    """Absorbed-MLA read path: latent context (L, K1, H, r) in fp32 scores."""
+    lanes, k1, h, _ = q.shape
+    ps, r = c_pages.shape[1], c_pages.shape[2]
+    span = block_tables.shape[1] * ps
+    c_kv = c_pages[block_tables].reshape(lanes, span, r).astype(q.dtype)
+    k_rope = r_pages[block_tables].reshape(lanes, span, -1).astype(q.dtype)
+    k = jnp.concatenate([c_kv, k_rope], axis=-1)
+    scores = jnp.einsum("bqhr,bsr->bhqs", q, k).astype(jnp.float32) * scale
+    positions = pos[:, None] + jnp.arange(k1)[None, :]
+    valid = jnp.arange(span)[None, None, None, :] <= positions[:, None, :, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)
+
+
+def ref_moe_dispatch(
+    xt: jax.Array,  # (T, d)
+    weights: jax.Array,  # (T, k) routing weights
+    topi: jax.Array,  # (T, k) expert ids
+    gate: jax.Array,  # (E, d, f)
+    up: jax.Array,
+    down: jax.Array,  # (E, f, d)
+) -> jax.Array:
+    """Dropless combine oracle: every token through every expert, masked by
+    routing weight — equals the capacity-buffer form with cap = T."""
+    e = gate.shape[0]
+    y = jnp.zeros_like(xt)
+    for ei in range(e):
+        g = xt @ gate[ei].astype(xt.dtype)
+        u = xt @ up[ei].astype(xt.dtype)
+        fe = (jax.nn.silu(g) * u) @ down[ei].astype(xt.dtype)
+        w = jnp.sum(weights * (topi == ei), axis=1).astype(xt.dtype)
+        y = y + fe * w[:, None]
+    return y

@@ -431,6 +431,60 @@ def run_sharded(args) -> None:
     print("sharded smoke OK: mesh engines byte-identical, pools split")
 
 
+def run_kernels(args) -> None:
+    """Pallas serve-kernel smoke (DESIGN.md §15): the same engine with
+    ``use_kernels=True`` (paged-attention decode/verify + sorted dropless
+    MoE dispatch) must produce byte-identical greedy tokens to the XLA
+    gather path, per paged family that supports kernels — GQA attention,
+    MLA latent pools, MoE — with both whole-prompt and chunked prefill
+    (the chunked tail drives the K+1 verify form through the kernel)."""
+    import os
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ops import _interpret
+
+    print(f"REPRO_PALLAS_INTERPRET="
+          f"{os.environ.get('REPRO_PALLAS_INTERPRET', '<unset>')} -> "
+          f"interpret={_interpret()} (backend {jax.default_backend()})")
+
+    for arch, chunk in (
+        ("qwen2-1.5b", None),  # GQA attention kernel
+        ("qwen2-1.5b", 8),  # chunked tail: K1>1 verify form
+        ("deepseek-v3-671b", None),  # MLA kernel + sorted MoE dispatch
+        ("phi3.5-moe-42b-a6.6b", 8),  # GQA + sorted MoE, chunked
+    ):
+        cfg = get_arch(arch).reduced()
+        model = build_model(cfg)
+        # fp32 for the byte-identity assertion (same caveat as --prefix)
+        params = model.init(jax.random.key(0), dtype=jnp.float32)
+        rng = np.random.RandomState(3)
+        max_len = args.prompt_len + args.gen
+        prompts = [list(rng.randint(5, cfg.vocab_size, (n,)))
+                   for n in (9, 6, 11)]
+
+        def run(use_kernels):
+            eng = ServeEngine(model, params, max_batch=args.batch,
+                              max_len=max_len, seed=0,
+                              chunked_prefill=chunk,
+                              use_kernels=use_kernels)
+            for p in prompts:
+                eng.submit(p, max_new=args.gen)
+            return {c.rid: c.tokens for c in eng.run()}
+
+        ref = run(False)
+        got = run(True)
+        assert got == ref, (
+            f"{arch} (chunked_prefill={chunk}) kernels diverged from XLA: "
+            f"{got} != {ref}"
+        )
+        print(f"[{arch}] chunked_prefill={chunk}: byte-identical over "
+              f"{len(prompts)} requests x {args.gen} tokens")
+    print("kernel smoke OK: paged-attention + MoE-dispatch kernels "
+          "byte-identical to the XLA path")
+
+
 def run_trace(args) -> None:
     """Observability smoke (DESIGN.md §13): drive one shared Tracer
     through (1) a shared-preamble wave on a prefix-cache engine with an
@@ -595,6 +649,9 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="sharded mode (tensor/expert mesh engines, "
                          "byte-identity vs single-device asserted)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="Pallas kernel mode (paged-attention + MoE "
+                         "dispatch kernels, byte-identity vs XLA asserted)")
     ap.add_argument("--trace", metavar="PATH",
                     help="observability mode: traced prefix+spec run, "
                          "schema validation, Perfetto JSON written to PATH")
@@ -629,6 +686,8 @@ def main() -> None:
         run_fleet(args)
     elif args.sharded:
         run_sharded(args)
+    elif args.kernels:
+        run_kernels(args)
     elif args.trace:
         run_trace(args)
     elif args.warmup:

@@ -36,6 +36,13 @@ class Model(NamedTuple):
     def param_axes(self) -> Params:
         return axes_of(self.specs())
 
+    def with_kernels(self, on: bool = True) -> "Model":
+        """Model whose serve programs route paged attention and dropless
+        MoE dispatch through the Pallas kernels (DESIGN.md §15)."""
+        import dataclasses
+
+        return self._replace(flags=dataclasses.replace(self.flags, use_kernels=on))
+
     # ---- training ----
     def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
         return T.train_loss(self.cfg, params, batch, self.flags)

@@ -82,8 +82,19 @@ def route(cfg: ModelConfig, p: Params, xt: jax.Array):
     return weights, topi, aux
 
 
+def _capacity(t: int, e: int, k: int, factor: float, dropless: bool) -> int:
+    """Per-expert buffer capacity — the ONE formula both the dense and the
+    shard_map paths use (t is global tokens for dense, per-column tokens
+    for sharded), so train and serve can't drift."""
+    return t if dropless else max(int(math.ceil(t / e * factor * k)), k)
+
+
 def moe_ffn(
-    cfg: ModelConfig, p: Params, x: jax.Array, dropless: bool = False
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    dropless: bool = False,
+    use_kernels: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """x (B,S,d) -> (out (B,S,d), aux_loss). Dispatches to the shard_map
     expert-parallel path when a production mesh is active (GSPMD replicates
@@ -113,11 +124,73 @@ def moe_ffn(
                 return moe_ffn_sharded(
                     cfg, p, x, mesh, dropless=dropless, axis=ep_axis
                 )
-    return moe_ffn_dense(cfg, p, x, dropless=dropless)
+    return moe_ffn_dense(cfg, p, x, dropless=dropless, use_kernels=use_kernels)
+
+
+def sorted_dispatch(
+    cfg: ModelConfig,
+    experts: Params,
+    xt: jax.Array,  # (T, d)
+    weights: jax.Array,  # (T, k)
+    topi: jax.Array,  # (T, k)
+    block: int = 64,
+) -> jax.Array:
+    """Dropless dispatch through the sort/segment Pallas kernel
+    (`kernels/moe_dispatch.py`, DESIGN.md §15). The (token, choice) pairs
+    are grouped by expert with the same stable-argsort ranking the
+    capacity path uses, each expert's segment is padded up to a ``block``
+    multiple (static bound: ceil(T*k / block) + E tiles), and the kernel
+    runs one expert-pure SwiGLU tile per grid step — linear in T where
+    the capacity buffer is (E, T, d)."""
+    from repro.kernels import ops
+
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.top_k
+    tk = t * k
+    block = min(block, max(8, 1 << (tk - 1).bit_length()))
+
+    flat_e = topi.reshape(tk)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_key = flat_e[order]
+    starts = jnp.searchsorted(sorted_key, jnp.arange(e + 1))
+    counts = starts[1:] - starts[:-1]
+    pos_sorted = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_key].astype(jnp.int32)
+    pos = jnp.zeros(tk, jnp.int32).at[order].set(pos_sorted)
+
+    # Pad every expert's segment to a block multiple so tiles are
+    # expert-pure; slot count is static (worst case: each expert wastes
+    # one partial tile).
+    padded = -(-counts // block) * block
+    seg_start = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(padded).astype(jnp.int32)]
+    )
+    n_slots = (-(-tk // block) + e) * block
+    dest = seg_start[flat_e] + pos
+    tok_of_choice = jnp.arange(tk, dtype=jnp.int32) // k
+    slot_src = jnp.zeros(n_slots, jnp.int32).at[dest].set(tok_of_choice)
+    slot_valid = jnp.zeros(n_slots, jnp.bool_).at[dest].set(True)
+    xs = xt[slot_src] * slot_valid[:, None].astype(xt.dtype)
+
+    n_tiles = n_slots // block
+    tile_expert = jnp.clip(
+        jnp.searchsorted(seg_start[1:], jnp.arange(n_tiles) * block, side="right"),
+        0, e - 1,
+    ).astype(jnp.int32)
+    ys = ops.moe_segment_ffn(
+        xs, tile_expert, experts["gate"], experts["up"], experts["down"],
+        block=block,
+    )
+    yk = ys[dest]
+    w = weights.reshape(tk).astype(xt.dtype)
+    return jnp.sum((yk * w[:, None]).reshape(t, k, d), axis=1)
 
 
 def moe_ffn_dense(
-    cfg: ModelConfig, p: Params, x: jax.Array, dropless: bool = False
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    dropless: bool = False,
+    use_kernels: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Single-device reference path (CPU tests, smoke configs)."""
     b, s, d = x.shape
@@ -127,32 +200,35 @@ def moe_ffn_dense(
 
     weights, topi, aux = route(cfg, p, xt)
 
-    cap = t if dropless else max(int(math.ceil(t / e * cfg.capacity_factor * k)), k)
+    if use_kernels and dropless:
+        yt = sorted_dispatch(cfg, p["experts"], xt, weights, topi)
+    else:
+        cap = _capacity(t, e, k, cfg.capacity_factor, dropless)
 
-    # Position of each (token, choice) inside its expert's capacity buffer:
-    # cumulative count of prior assignments to the same expert.
-    flat_e = topi.reshape(t * k)  # row-major: all k choices of token 0, ...
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_key = flat_e[order]
-    starts = jnp.searchsorted(sorted_key, jnp.arange(e + 1))
-    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_key]
-    pos = jnp.zeros(t * k, jnp.int32).at[order].set(pos_sorted)
-    keep = pos < cap
-    dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # drop slot at the end
+        # Position of each (token, choice) inside its expert's capacity
+        # buffer: cumulative count of prior assignments to the same expert.
+        flat_e = topi.reshape(t * k)  # row-major: all k choices of token 0, ...
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_key = flat_e[order]
+        starts = jnp.searchsorted(sorted_key, jnp.arange(e + 1))
+        pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_key]
+        pos = jnp.zeros(t * k, jnp.int32).at[order].set(pos_sorted)
+        keep = pos < cap
+        dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # drop slot at the end
 
-    # Scatter tokens into the expert buffer.
-    xk = jnp.repeat(xt, k, axis=0)  # (T*k, d)
-    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(xk)
-    xe = buf[: e * cap].reshape(e, cap, d)
-    xe = logical_constraint(xe, ("experts", None, "d_model"))
+        # Scatter tokens into the expert buffer.
+        xk = jnp.repeat(xt, k, axis=0)  # (T*k, d)
+        buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(xk)
+        xe = buf[: e * cap].reshape(e, cap, d)
+        xe = logical_constraint(xe, ("experts", None, "d_model"))
 
-    ye = expert_ffn(p["experts"], xe)
-    ye = logical_constraint(ye, ("experts", None, "d_model"))
+        ye = expert_ffn(p["experts"], xe)
+        ye = logical_constraint(ye, ("experts", None, "d_model"))
 
-    # Gather back and combine with routing weights.
-    yk = jnp.concatenate([ye.reshape(e * cap, d), jnp.zeros((1, d), ye.dtype)])[dest]
-    w = (weights.reshape(t * k) * keep.astype(weights.dtype)).astype(x.dtype)
-    yt = jnp.sum((yk * w[:, None]).reshape(t, k, d), axis=1)
+        # Gather back and combine with routing weights.
+        yk = jnp.concatenate([ye.reshape(e * cap, d), jnp.zeros((1, d), ye.dtype)])[dest]
+        w = (weights.reshape(t * k) * keep.astype(weights.dtype)).astype(x.dtype)
+        yt = jnp.sum((yk * w[:, None]).reshape(t, k, d), axis=1)
 
     out = yt.reshape(b, s, d)
     if cfg.num_shared_experts:
@@ -205,9 +281,7 @@ def moe_ffn_sharded(
         n_rows = 1
     x_spec = P(batch_axes if batch_axes else None, None, None)
     t_local = (b // n_rows) * s
-    cap = t_local if dropless else max(
-        int(math.ceil(t_local / e * cfg.capacity_factor * k)), k
-    )
+    cap = _capacity(t_local, e, k, cfg.capacity_factor, dropless)
 
     has_shared = bool(cfg.num_shared_experts)
 

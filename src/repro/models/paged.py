@@ -72,6 +72,60 @@ SLOT_MIXERS = ("mlstm", "slstm", "mamba")
 TRASH_PAGE = 0
 
 
+def _attn_kernel_call(cfg: ModelConfig, q, k_pool, v_pool, bt, pos):
+    """Route the paged-attention read through the Pallas kernel
+    (kernels/paged_attention.py). Under a ServeMesh the call is
+    shard_mapped over the 'tensor' axis when the kv heads divide — each
+    column attends its own kv-head group's pages, matching the §12 pool
+    sharding; indivisible head counts are pool-replicated there, so the
+    plain call is correct as-is."""
+    from repro.common.sharding import current_mesh
+    from repro.kernels import ops
+
+    softcap = cfg.logit_softcap
+    mesh = current_mesh()
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        ncols = sizes.get("tensor", 1)
+        if ncols > 1 and k_pool.shape[2] % ncols == 0 and q.shape[2] % ncols == 0:
+            shard_map = getattr(jax, "shard_map", None)
+            if shard_map is None:
+                from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            hs = P(None, None, "tensor", None)
+            fn = shard_map(
+                lambda q_, k_, v_, bt_, pos_: ops.paged_attention(
+                    q_, k_, v_, bt_, pos_, softcap=softcap
+                ),
+                mesh=mesh,
+                in_specs=(hs, hs, hs, P(None, None), P(None)),
+                out_specs=hs,
+                check_rep=False,  # pallas_call has no replication rule
+            )
+            return fn(q, k_pool, v_pool, bt, pos)
+    return ops.paged_attention(q, k_pool, v_pool, bt, pos, softcap=softcap)
+
+
+def _mla_kernel_ok() -> bool:
+    """MLA's latent pools product-shard the rank axis under a ServeMesh
+    (§12 workaround), which the single-device kernel gather can't honor —
+    mesh serving keeps the XLA read."""
+    from repro.common.sharding import current_mesh
+
+    return current_mesh() is None
+
+
+def _mla_kernel_call(q_abs, q_rope, c_pool, r_pool, bt, pos, scale):
+    """Absorbed-MLA read through the Pallas kernel: queries enter as the
+    concat (q_absorbed, q_rope) against keys (c_kv, k_rope); the returned
+    latent context is decompressed (wuv/wo) by the caller."""
+    from repro.kernels import ops
+
+    q_cat = jnp.concatenate([q_abs, q_rope], axis=-1)
+    return ops.paged_mla_attention(q_cat, c_pool, r_pool, bt, pos, scale=scale)
+
+
 def _mixers(cfg: ModelConfig) -> List[str]:
     return [cfg.block_parts(b)[0] for b in cfg.prefix_pattern + cfg.unit_pattern]
 
@@ -271,6 +325,7 @@ def paged_attention_decode(
     sin: jax.Array,
     *,
     window: int = 0,
+    use_kernels: bool = False,
 ) -> Tuple[jax.Array, Params]:
     q, k_new, v_new = L._project_qkv(cfg, p, x, x)
     if cos is not None:
@@ -305,6 +360,15 @@ def paged_attention_decode(
         off = pos % ps
         k = pool["k"].at[page, off].set(k_new[:, 0].astype(pool["k"].dtype))
         v = pool["v"].at[page, off].set(v_new[:, 0].astype(pool["v"].dtype))
+        if use_kernels:
+            # pool writes above stay in XLA (new_pool byte-identical by
+            # construction); only the gather + attention read moves into
+            # the kernel. swa's ring read keeps the XLA form.
+            o = _attn_kernel_call(cfg, q, k, v, bt, pos)
+            return (
+                jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)),
+                {"k": k, "v": v},
+            )
         kk = k[bt].reshape(lanes, span, *k.shape[2:])
         vv = v[bt].reshape(lanes, span, *v.shape[2:])
         valid = jnp.arange(span)[None, :] <= pos[:, None]
@@ -326,6 +390,7 @@ def paged_mla_decode(
     pos: jax.Array,
     cos: jax.Array,
     sin: jax.Array,
+    use_kernels: bool = False,
 ) -> Tuple[jax.Array, Params]:
     """Absorbed-form MLA decode over paged latent pools (same math as
     ``mla.mla_decode``, gathered through the block table)."""
@@ -346,11 +411,16 @@ def paged_mla_decode(
     )
     new_pool = {"c_kv": c_pool, "k_rope": r_pool}
     span = bt.shape[1] * ps
-    c_kv = c_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
-    k_rope = r_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
 
     q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wuk"].astype(x.dtype))
     scale = 1.0 / math.sqrt(nope + rope)
+    if use_kernels and _mla_kernel_ok():
+        ctx_lat = _mla_kernel_call(q_abs, q_rope, c_pool, r_pool, bt, pos, scale)
+        o = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, p["wuv"].astype(x.dtype))
+        return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype)), new_pool
+    c_kv = c_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+    k_rope = r_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+
     scores = (
         jnp.einsum("bqhr,bsr->bhqs", q_abs, c_kv)
         + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope)
@@ -376,15 +446,18 @@ def block_decode_paged(
 ) -> Tuple[jax.Array, Params, Params]:
     mixer, mlpk = cfg.block_parts(block)
     cos, sin = _rope_for(cfg, mixer, ctx)
+    uk = bool(ctx.get("use_kernels", False))
     x = L.apply_norm(cfg, p["norm1"], h)
     if mixer in ("attn", "swa"):
         window = cfg.window if mixer == "swa" else 0
         o, pcache = paged_attention_decode(
-            cfg, p["attn"], x, pcache, bt, pos, cos, sin, window=window
+            cfg, p["attn"], x, pcache, bt, pos, cos, sin, window=window,
+            use_kernels=uk,
         )
         h = h + o
     elif mixer == "mla":
-        o, pcache = paged_mla_decode(cfg, p["attn"], x, pcache, bt, pos, cos, sin)
+        o, pcache = paged_mla_decode(cfg, p["attn"], x, pcache, bt, pos, cos,
+                                     sin, use_kernels=uk)
         h = h + o
     elif mixer == "mlstm":
         o, scache = XL.mlstm_decode(cfg, p["mixer"], x, scache)
@@ -403,7 +476,7 @@ def block_decode_paged(
         from repro.models import moe as MOE
 
         y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h),
-                           dropless=True)
+                           dropless=True, use_kernels=uk)
         h = h + y
     if "adapter" in p:
         from repro.core.adapters import apply_adapter
@@ -430,6 +503,7 @@ def serve_step_paged(
     if cfg.pos_type == "learned":
         h = h + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(h.dtype)
     ctx = _make_ctx(cfg, pos[:, None], batch)
+    ctx["use_kernels"] = flags.use_kernels
 
     new_paged: Params = {}
     new_slots: Params = {}
@@ -483,6 +557,7 @@ def paged_attention_verify(
     *,
     window: int = 0,
     write_len: Optional[jax.Array] = None,
+    use_kernels: bool = False,
 ) -> Tuple[jax.Array, Params]:
     """Multi-token paged attention: write K1 new k/v at positions
     ``pos..pos+K-1``... i.e. ``pos + i``, then attend with a per-query
@@ -546,6 +621,15 @@ def paged_attention_verify(
         off = positions % ps
         k = pool["k"].at[page, off].set(kw)
         v = pool["v"].at[page, off].set(vw)
+        if use_kernels:
+            # writes (incl. write_len trash-page redirects) stay in XLA;
+            # the kernel only replaces the post-write gather + read, whose
+            # mask depends on positions alone.
+            o = _attn_kernel_call(cfg, q, k, v, bt, pos)
+            return (
+                jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)),
+                {"k": k, "v": v},
+            )
         kk = k[bt].reshape(lanes, span, *k.shape[2:]).astype(x.dtype)
         vv = v[bt].reshape(lanes, span, *v.shape[2:]).astype(x.dtype)
         valid = jnp.arange(span)[None, None, :] <= positions[:, :, None]
@@ -567,6 +651,7 @@ def paged_mla_verify(
     cos: jax.Array,
     sin: jax.Array,
     write_len: Optional[jax.Array] = None,
+    use_kernels: bool = False,
 ) -> Tuple[jax.Array, Params]:
     """Absorbed-form MLA over paged latent pools, K1 queries at once.
     ``write_len`` as in ``paged_attention_verify``."""
@@ -591,11 +676,16 @@ def paged_mla_verify(
         kr_new.astype(pool["k_rope"].dtype)
     )
     new_pool = {"c_kv": c_pool, "k_rope": r_pool}
-    c_kv = c_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
-    k_rope = r_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
 
     q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wuk"].astype(x.dtype))
     scale = 1.0 / math.sqrt(nope + rope)
+    if use_kernels and _mla_kernel_ok():
+        ctx_lat = _mla_kernel_call(q_abs, q_rope, c_pool, r_pool, bt, pos, scale)
+        o = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, p["wuv"].astype(x.dtype))
+        return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype)), new_pool
+    c_kv = c_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+    k_rope = r_pool[bt].reshape(lanes, span, -1).astype(x.dtype)
+
     scores = (
         jnp.einsum("bqhr,bsr->bhqs", q_abs, c_kv)
         + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope)
@@ -637,17 +727,18 @@ def block_verify_paged(
     return per-step stacked state (leading K1 axis on every leaf)."""
     mixer, mlpk = cfg.block_parts(block)
     cos, sin = _rope_for(cfg, mixer, ctx)
+    uk = bool(ctx.get("use_kernels", False))
     x = L.apply_norm(cfg, p["norm1"], h)
     if mixer in ("attn", "swa"):
         window = cfg.window if mixer == "swa" else 0
         o, pcache = paged_attention_verify(
             cfg, p["attn"], x, pcache, bt, pos, cos, sin, window=window,
-            write_len=write_len,
+            write_len=write_len, use_kernels=uk,
         )
         h = h + o
     elif mixer == "mla":
         o, pcache = paged_mla_verify(cfg, p["attn"], x, pcache, bt, pos,
-                                     cos, sin, write_len)
+                                     cos, sin, write_len, use_kernels=uk)
         h = h + o
     elif mixer == "mlstm":
         o, scache = _recurrent_verify(
@@ -672,7 +763,7 @@ def block_verify_paged(
         from repro.models import moe as MOE
 
         y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h),
-                           dropless=True)
+                           dropless=True, use_kernels=uk)
         h = h + y
     if "adapter" in p:
         from repro.core.adapters import apply_adapter
@@ -715,6 +806,7 @@ def verify_step_paged(
     if cfg.pos_type == "learned":
         h = h + jnp.take(params["pos_embed"], positions, axis=0).astype(h.dtype)
     ctx = _make_ctx(cfg, positions, batch)
+    ctx["use_kernels"] = flags.use_kernels
 
     new_paged: Params = {}
     new_slots: Params = {}

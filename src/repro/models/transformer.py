@@ -36,6 +36,11 @@ class RuntimeFlags:
     # prefill attention via the Pallas flash kernel (TPU path; the XLA
     # chunked-sdpa fallback is the default so CPU serving stays fast)
     flash_prefill: bool = False
+    # serve hot path via the Pallas kernels (DESIGN.md §15): paged
+    # attention decode/verify with in-kernel block-table gather, and
+    # sort/segment dropless-MoE dispatch. XLA stays the default; interpret
+    # mode makes the flag safe on any backend (kernels/ops.py).
+    use_kernels: bool = False
 
 
 DEFAULT_FLAGS = RuntimeFlags()
@@ -256,7 +261,7 @@ def block_prefill(
         h = h + L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
     elif mlpk == "moe":
         y, _ = MOE.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], h),
-                           dropless=True)
+                           dropless=True, use_kernels=flags.use_kernels)
         h = h + y
     if "adapter" in p:
         from repro.core.adapters import apply_adapter

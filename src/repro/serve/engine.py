@@ -310,6 +310,7 @@ class ServeEngine:
         name: str = "engine",
         xla_annotate: bool = False,
         audit: Optional[bool] = None,
+        use_kernels: bool = False,
     ):
         if model.cfg.is_encoder_decoder:
             raise ValueError("engine serves decoder-only configs")
@@ -362,8 +363,9 @@ class ServeEngine:
         self.runner = ModelRunner(
             model, params, clock=clock, mesh=mesh,
             registry=self.registry, tracer=self.tracer, name=name,
-            xla_annotate=xla_annotate, audit=audit,
+            xla_annotate=xla_annotate, audit=audit, use_kernels=use_kernels,
         )
+        self.use_kernels = use_kernels
         self._g_active = self.registry.gauge("engine_active", engine=name)
         self._g_queued = self.registry.gauge("engine_queued", engine=name)
         self._g_free_pages = self.registry.gauge(

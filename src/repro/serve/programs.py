@@ -137,11 +137,16 @@ class ProgramStore:
         engine: str = "engine",
         xla_annotate: bool = False,
         audit: Optional[bool] = None,
+        variant: str = "xla",
     ):
         self.mesh = mesh  # ServeMesh (or None): .ctx() + .replicated
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = tracer
         self.engine = engine
+        # which lowering the family builders trace through ("xla" or
+        # "kernels", DESIGN.md §15) — stamped on compile spans so A/B
+        # traces of the two paths stay distinguishable after the fact
+        self.variant = variant
         self._annot = (
             getattr(jax.profiler, "TraceAnnotation", None) if xla_annotate
             else None
@@ -243,7 +248,8 @@ class ProgramStore:
         if fresh and self.tracer.enabled:
             cms.append(
                 self.tracer.span(
-                    "compile", track="compile", family=op, key=str(key)
+                    "compile", track="compile", family=op, key=str(key),
+                    variant=self.variant,
                 )
             )
         cms.append(self.tracer.span(fam.span, track="dispatch", **span_args))

@@ -155,7 +155,14 @@ class ModelRunner:
         name: str = "engine",
         xla_annotate: bool = False,
         audit: Optional[bool] = None,
+        use_kernels: bool = False,
     ):
+        if use_kernels:
+            # flip the flag on the model BEFORE the family builders below
+            # close over it: every prefill/decode/verify/tail program then
+            # traces through the Pallas read path (DESIGN.md §15).
+            model = model.with_kernels(True)
+        self.use_kernels = use_kernels
         self.model = model
         self.params = params
         self.clock = clock  # injectable for deterministic simulation
@@ -168,6 +175,7 @@ class ModelRunner:
         self.store = ProgramStore(
             mesh=mesh, registry=self.stats.registry, tracer=tracer,
             engine=name, xla_annotate=xla_annotate, audit=audit,
+            variant="kernels" if use_kernels else "xla",
         )
         # donation layout per family matches the fn signatures below:
         # pools/slots donate everywhere they are rewritten; draft keeps

@@ -125,6 +125,7 @@ class SpecCoordinator:
         registry: Optional[MetricsRegistry] = None,
         tracer=NULL_TRACER,
         name: str = "spec",
+        use_kernels: bool = False,
     ):
         # model-free drafting (serve/drafters.py): no drafter stack at all —
         # drafts come from prompt lookup over the stream's own tokens
@@ -260,12 +261,12 @@ class SpecCoordinator:
         self.runner_v = ModelRunner(
             verifier_model, verifier_params, clock=clock, mesh=mesh,
             registry=self.registry, tracer=self.tracer.scoped("verifier"),
-            name="verifier",
+            name="verifier", use_kernels=use_kernels,
         )
         self.runner_d = None if self.pld is not None else ModelRunner(
             drafter_model, drafter_params, clock=clock,
             registry=self.registry, tracer=self.tracer.scoped("drafter"),
-            name="drafter",
+            name="drafter", use_kernels=use_kernels,
         )
         self.base_key = jax.random.key(seed)
         self.draft_key = jax.random.key(seed + 1)

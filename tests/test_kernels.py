@@ -6,7 +6,14 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops
-from repro.kernels.ref import ref_flash_attention, ref_lora_matmul, ref_topk_pool
+from repro.kernels.ref import (
+    ref_flash_attention,
+    ref_lora_matmul,
+    ref_moe_dispatch,
+    ref_paged_attention,
+    ref_paged_mla_attention,
+    ref_topk_pool,
+)
 
 RNG = np.random.RandomState(42)
 
@@ -100,3 +107,155 @@ def test_lora_matmul_equals_merged_weights():
     y = ops.lora_matmul(x, w, a, b, scale=scale)
     merged = w + scale * (a @ b)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ merged), rtol=2e-4, atol=6e-3)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (serve decode / K+1 verify read path, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def _paged_setup(lanes, pages, ps, kv, d, seed=0, dtype=jnp.float32):
+    """Pool + permuted block tables; page 0 is the trash page, unreferenced
+    by real positions but present in the pool (its garbage must not leak)."""
+    rng = np.random.RandomState(seed)
+    n = 1 + lanes * pages
+    k_pool = jnp.asarray(rng.randn(n, ps, kv, d), dtype)
+    v_pool = jnp.asarray(rng.randn(n, ps, kv, d), dtype)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, n))[: lanes * pages].reshape(lanes, pages),
+        jnp.int32,
+    )
+    return k_pool, v_pool, bt
+
+
+@pytest.mark.parametrize("ps,pages", [(8, 4), (16, 2), (4, 7)])
+@pytest.mark.parametrize("kv,rep", [(1, 4), (2, 3), (4, 1)])
+@pytest.mark.parametrize("k1", [1, 4])
+def test_paged_attention_matches_ref(ps, pages, kv, rep, k1):
+    """Page-geometry sweep: decode (k1=1) and verify (k1=4) forms, ragged
+    last page (positions not page-aligned), permuted tables."""
+    lanes, d = 3, 16
+    h = kv * rep
+    k_pool, v_pool, bt = _paged_setup(lanes, pages, ps, kv, d)
+    span = pages * ps
+    # ragged positions: first page only, mid-page, near the end of span
+    pos = jnp.asarray([1, span // 2 + ps // 2, span - k1], jnp.int32)
+    q = jnp.asarray(RNG.randn(lanes, k1, h, d), jnp.float32)
+    got = ops.paged_attention(q, k_pool, v_pool, bt, pos)
+    want = ref_paged_attention(q, k_pool, v_pool, bt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_softcap():
+    lanes, pages, ps, kv, rep, d, k1 = 2, 3, 8, 2, 2, 16, 4
+    k_pool, v_pool, bt = _paged_setup(lanes, pages, ps, kv, d, seed=1)
+    pos = jnp.asarray([5, 13], jnp.int32)
+    q = jnp.asarray(RNG.randn(lanes, k1, kv * rep, d), jnp.float32)
+    got = ops.paged_attention(q, k_pool, v_pool, bt, pos, softcap=30.0)
+    want = ref_paged_attention(q, k_pool, v_pool, bt, pos, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_bf16_pool():
+    """Serving pools are bf16 even with fp32 activations; the kernel must
+    upcast pool tiles exactly like the XLA gather + astype."""
+    lanes, pages, ps, kv, rep, d = 2, 4, 8, 2, 2, 16
+    k_pool, v_pool, bt = _paged_setup(lanes, pages, ps, kv, d, seed=2,
+                                      dtype=jnp.bfloat16)
+    pos = jnp.asarray([9, 27], jnp.int32)
+    q = jnp.asarray(RNG.randn(lanes, 1, kv * rep, d), jnp.float32)
+    got = ops.paged_attention(q, k_pool, v_pool, bt, pos)
+    want = ref_paged_attention(q, k_pool, v_pool, bt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_paged_attention_trash_page_convention():
+    """Unallocated table entries point at page 0 (the trash page). They sit
+    beyond every lane's valid span, so poisoning the trash page must not
+    change the output — the position mask alone keeps queries off them."""
+    lanes, pages, ps, kv, rep, d = 2, 4, 8, 2, 2, 16
+    k_pool, v_pool, bt = _paged_setup(lanes, pages, ps, kv, d, seed=3)
+    # lanes sit early in their span; later table entries are unallocated
+    bt = np.array(bt)
+    bt[:, 2:] = 0  # vLLM convention: unbacked entries -> trash page
+    bt = jnp.asarray(bt)
+    pos = jnp.asarray([3, 11], jnp.int32)
+    q = jnp.asarray(RNG.randn(lanes, 2, kv * rep, d), jnp.float32)
+    base = ops.paged_attention(q, k_pool, v_pool, bt, pos)
+    poisoned_k = k_pool.at[0].set(1e4)
+    poisoned_v = v_pool.at[0].set(-1e4)
+    got = ops.paged_attention(q, poisoned_k, poisoned_v, bt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("ps,pages,r,rope", [(8, 4, 12, 8), (4, 6, 16, 4)])
+@pytest.mark.parametrize("k1", [1, 3])
+def test_paged_mla_attention_matches_ref(ps, pages, r, rope, k1):
+    lanes, h = 2, 4
+    rng = np.random.RandomState(7)
+    n = 1 + lanes * pages
+    c_pool = jnp.asarray(rng.randn(n, ps, r), jnp.float32)
+    r_pool = jnp.asarray(rng.randn(n, ps, rope), jnp.float32)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, n))[: lanes * pages].reshape(lanes, pages),
+        jnp.int32,
+    )
+    span = pages * ps
+    pos = jnp.asarray([2, span - k1], jnp.int32)
+    q = jnp.asarray(RNG.randn(lanes, k1, h, r + rope), jnp.float32)
+    scale = 1.0 / np.sqrt(float(r + rope))
+    got = ops.paged_mla_attention(q, c_pool, r_pool, bt, pos, scale=scale)
+    want = ref_paged_mla_attention(q, c_pool, r_pool, bt, pos, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Sort/segment dropless-MoE dispatch (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,e,k", [(16, 4, 1), (16, 4, 2), (33, 8, 2), (5, 4, 2)])
+def test_sorted_dispatch_matches_capacity_oracle(t, e, k):
+    """The sort/segment kernel path equals the dropless capacity-buffer
+    oracle for top-1 and top-2 routing, including skewed assignments."""
+    from repro.configs import get_arch
+    from repro.models.moe import sorted_dispatch
+
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced(num_experts=e, top_k=k)
+    rng = np.random.RandomState(t * 10 + e + k)
+    d, f = 8, 16
+    xt = jnp.asarray(rng.randn(t, d), jnp.float32)
+    experts = {
+        "gate": jnp.asarray(rng.randn(e, d, f) * 0.1, jnp.float32),
+        "up": jnp.asarray(rng.randn(e, d, f) * 0.1, jnp.float32),
+        "down": jnp.asarray(rng.randn(e, f, d) * 0.1, jnp.float32),
+    }
+    # skewed routing: expert 0 takes most tokens, some experts get none
+    topi = jnp.asarray(
+        np.sort(rng.choice(e, (t, k), p=[0.6] + [0.4 / (e - 1)] * (e - 1)),
+                axis=1),
+        jnp.int32,
+    )
+    weights = jnp.asarray(rng.rand(t, k), jnp.float32)
+    got = sorted_dispatch(cfg, experts, xt, weights, topi)
+    want = ref_moe_dispatch(xt, weights, topi, experts["gate"], experts["up"],
+                            experts["down"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_ffn_dense_kernel_path_matches_xla():
+    """moe_ffn_dense(use_kernels=True) == the XLA capacity path on the
+    full layer (routing + shared experts included)."""
+    from repro.configs import get_arch
+    from repro.models.moe import moe_ffn_dense, moe_specs
+    from repro.common.module import materialize
+
+    for arch in ("phi3.5-moe-42b-a6.6b", "deepseek-v3-671b"):
+        cfg = get_arch(arch).reduced()
+        p = materialize(moe_specs(cfg), jax.random.key(0), jnp.float32)
+        rng = np.random.RandomState(5)
+        x = jnp.asarray(rng.randn(2, 9, cfg.d_model), jnp.float32)
+        base, aux0 = moe_ffn_dense(cfg, p, x, dropless=True)
+        got, aux1 = moe_ffn_dense(cfg, p, x, dropless=True, use_kernels=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(aux1), np.asarray(aux0),
+                                   rtol=1e-6, atol=1e-6)

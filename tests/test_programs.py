@@ -114,7 +114,8 @@ def test_fresh_build_emits_one_compile_span():
     store.dispatch("scale", 2, (x,))
     compiles = [e for e in tr.events if e.name == "compile" and e.ph == "B"]
     assert len(compiles) == 1
-    assert compiles[0].args == {"family": "scale", "key": "2"}
+    assert compiles[0].args == {"family": "scale", "key": "2",
+                                "variant": "xla"}
     # every dispatch (fresh or cached) gets a dispatch span
     assert sum(1 for e in tr.events
                if e.name == "scale" and e.ph == "B") == 2

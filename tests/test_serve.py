@@ -233,6 +233,36 @@ def test_engine_matches_raw_model_reference(arch):
     assert c.tokens == ref
 
 
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "qwen2-1.5b",  # GQA paged attention kernel
+        "deepseek-v3-671b",  # MLA latent-pool kernel + sorted MoE dispatch
+        "phi3.5-moe-42b-a6.6b",  # GQA kernel + sorted MoE dispatch
+    ],
+)
+@pytest.mark.parametrize("chunk", [None, 8])
+def test_engine_kernels_byte_identical(arch, chunk):
+    """use_kernels=True must generate byte-identical greedy tokens to the
+    XLA path, per paged cache family that supports kernels (attn / MLA),
+    both whole-prompt prefill and chunked prefill (the chunked tail runs
+    the K1>1 verify form through the kernel). DESIGN.md §15."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.RandomState(11)
+    prompts = [list(rng.randint(5, cfg.vocab_size, (n,))) for n in (9, 13)]
+
+    def run(use_kernels):
+        eng = ServeEngine(
+            model, params, max_batch=2, max_len=MAX_LEN, seed=0,
+            chunked_prefill=chunk, use_kernels=use_kernels,
+        )
+        for p in prompts:
+            eng.submit(p, max_new=6)
+        return {c.rid: c.tokens for c in eng.run()}
+
+    assert run(True) == run(False)
+
+
 def test_vector_pos_matches_scalar_pos():
     cfg, model, params = _setup("qwen2-1.5b")
     rng = np.random.RandomState(0)
